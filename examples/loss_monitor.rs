@@ -1,0 +1,82 @@
+//! Section-5 use case: monitor the *full-set* all-pairs squared hinge
+//! loss every epoch, in the same O(n log n) as AUC — the paper's
+//! interpretability argument for the functional representation.
+//!
+//! Trains a model while computing, per epoch, on the whole subtrain and
+//! validation sets: (a) the all-pairs hinge loss via the **native Rust**
+//! Algorithm 2, (b) the same loss via the **Pallas loss_eval artifact**
+//! (cross-checking the two stacks against each other), and (c) AUC.
+//!
+//! ```bash
+//! cargo run --release --example loss_monitor
+//! ```
+
+use allpairs::config::SweepConfig;
+use allpairs::coordinator::{cv, monitor};
+use allpairs::data::{Rng, Split};
+use allpairs::metrics::auc;
+use allpairs::runtime::Runtime;
+use allpairs::train::Trainer;
+use allpairs::util::cli::Args;
+
+fn main() -> allpairs::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    args.expect_known(&["artifacts", "epochs", "imratio", "max-train"])?;
+    let artifacts = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let epochs: usize = args.get("epochs", 6)?;
+    let imratio: f64 = args.get("imratio", 0.05)?;
+    let max_train: usize = args.get("max-train", 2000)?;
+
+    let cfg = SweepConfig {
+        datasets: vec!["synth-cifar".into()],
+        max_train: Some(max_train),
+        ..Default::default()
+    };
+    let data = cv::build_datasets(&cfg)?;
+    let pool = &data["synth-cifar"];
+    let mut rng = Rng::new(11);
+    let train = pool.train_pool.imbalance(imratio, &mut rng);
+    let split = Split::stratified(&train.y, 0.2, &mut rng);
+    println!(
+        "monitoring run: {} train examples ({:.2}% positive)",
+        train.len(),
+        100.0 * train.pos_fraction()
+    );
+
+    let runtime = Runtime::new(&artifacts)?;
+    let mut trainer = Trainer::new(&runtime, "resnet", "hinge", 100)?;
+    trainer.init(0)?;
+
+    println!(
+        "{:>5} {:>12} {:>14} {:>14} {:>10} {:>10}",
+        "epoch", "batch_loss", "full_loss_rust", "full_loss_pjrt", "sub_auc", "val_auc"
+    );
+    for epoch in 0..epochs {
+        let stats = trainer.train_epoch(&train, &split.subtrain, 0.01, &mut rng)?;
+
+        // Full-subtrain monitoring: predict once, evaluate both backends.
+        let scores = trainer.predict(&train, &split.subtrain)?;
+        let labels: Vec<f32> = split
+            .subtrain
+            .iter()
+            .map(|&i| train.y[i as usize])
+            .collect();
+        let full_rust = monitor::monitor_native(&scores, &labels, 1.0);
+        // both monitors are pair-normalized; they must agree to fp tolerance
+        let full_pjrt = monitor::monitor_artifact(&runtime, "hinge", &scores, &labels)?;
+        let sub_auc = auc(&scores, &labels).unwrap_or(f64::NAN);
+        let val_auc = trainer
+            .eval_auc(&train, &split.validation)?
+            .unwrap_or(f64::NAN);
+        println!(
+            "{epoch:>5} {:>12.6} {full_rust:>14.6} {full_pjrt:>14.6} {sub_auc:>10.4} {val_auc:>10.4}",
+            stats.mean_loss
+        );
+        anyhow::ensure!(
+            (full_rust - full_pjrt).abs() <= 1e-3 * full_rust.abs().max(1e-6),
+            "native and Pallas monitors disagree: {full_rust} vs {full_pjrt}"
+        );
+    }
+    println!("\nnative Rust and Pallas loss monitors agree; loss_monitor OK");
+    Ok(())
+}

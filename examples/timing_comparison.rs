@@ -1,0 +1,67 @@
+//! Figure 2 reproduction driver: loss + gradient computation time vs data
+//! size for Naive O(n²), Functional O(n)/O(n log n) and Logistic O(n).
+//!
+//! Writes `results/fig2.csv`, prints the ASCII log-log plot, the fitted
+//! asymptotic slopes, and the paper's "largest n within one second"
+//! comparison (§4.1: naive ≈ 10³ vs functional ≈ 10⁶).
+//!
+//! ```bash
+//! cargo run --release --example timing_comparison            # full 10^7
+//! cargo run --release --example timing_comparison -- --max-exp 5   # quick
+//! ```
+
+use allpairs::coordinator::timing;
+use allpairs::report::figures::{ascii_loglog, write_csv};
+use allpairs::util::cli::Args;
+
+fn main() -> allpairs::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    args.expect_known(&["max-exp", "repeats", "naive-cap", "out"])?;
+    let max_exp: u32 = args.get("max-exp", 7)?;
+    let out = std::path::PathBuf::from(args.get_str("out", "results"));
+    let config = timing::TimingConfig {
+        sizes: (1..=max_exp).map(|e| 10usize.pow(e)).collect(),
+        repeats: args.get("repeats", 3)?,
+        naive_cap: args.get("naive-cap", 30_000)?,
+        margin: 1.0,
+    };
+    eprintln!(
+        "Figure 2: timing {} algorithms at sizes {:?} ...",
+        5, config.sizes
+    );
+    let points = timing::run(&config);
+
+    // CSV (the canonical output EXPERIMENTS.md references)
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.algorithm.to_string(),
+                p.complexity.to_string(),
+                p.n.to_string(),
+                format!("{:.6e}", p.seconds),
+            ]
+        })
+        .collect();
+    write_csv(
+        out.join("fig2.csv"),
+        &["algorithm", "complexity", "n", "seconds"],
+        &rows,
+    )?;
+
+    println!("{}", ascii_loglog(&timing::to_series(&points), 72, 22));
+
+    println!("fitted log-log slopes over the largest sizes:");
+    println!("  (theory: naive = 2, functional/logistic = 1 + o(1))");
+    for (name, slope) in timing::slopes(&points, 3) {
+        println!("  {name:28} slope {slope:5.2}");
+    }
+
+    println!("\nlargest n with loss+gradient under 1 second (paper §4.1):");
+    for (name, n) in timing::max_n_within(&points, 1.0) {
+        println!("  {name:28} n = {n}");
+    }
+
+    println!("\nwrote {}", out.join("fig2.csv").display());
+    Ok(())
+}

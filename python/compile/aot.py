@@ -1,0 +1,341 @@
+"""AOT compiler: lower every (model, loss, batch) variant to HLO text.
+
+This is the only place Python touches the artifacts the Rust runtime
+loads.  Interchange format is **HLO text**, not a serialized
+``HloModuleProto``: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (what the published ``xla`` 0.1.6 crate links)
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs, under ``artifacts/``:
+
+* ``<name>.hlo.txt``   — one per artifact (see naming below),
+* ``manifest.json``    — machine-readable registry the Rust
+  ``runtime::artifact`` module consumes: per-artifact input signature
+  (shape + dtype per tensor), output arity, state arity, and the batch
+  size / loss / model / kind tags.
+
+Artifact naming:
+  ``init_<model>_<loss>``
+  ``train_<model>_<loss>_bs<B>``
+  ``predict_<model>_<loss>_bs<B>``
+  ``loss_eval_<loss>_n<N>``
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile
+drives this; it is a no-op at the Make level when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import losses as losses_mod
+from . import model as model_mod
+from . import train as train_mod
+
+# The paper's batch-size grid (section 4.2); 5000 exists in the paper's grid
+# but was never selected (Table 2) — we cap at 1000 to keep artifact count
+# and sweep time reproduction-scale.  Documented in DESIGN.md section 2.
+TRAIN_BATCH_SIZES = (10, 50, 100, 500, 1000)
+PREDICT_BATCH = 1000
+LOSS_EVAL_N = 4096
+SWEEP_MODEL = "resnet"
+SWEEP_LOSSES = ("hinge", "square", "logistic", "aucm")
+# Quickstart/MLP variant: one loss, one batch size.
+MLP_BATCH = 100
+MLP_PREDICT_BATCH = 256
+# Full-batch size for the deterministic L-BFGS artifacts (paper §5).
+LBFGS_BATCH = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals):
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in avals]
+
+
+class Builder:
+    """Accumulates lowered artifacts + manifest entries."""
+
+    def __init__(self, out_dir: pathlib.Path):
+        self.out_dir = out_dir
+        self.entries = []
+
+    def add(
+        self,
+        name,
+        fn,
+        example_args,
+        *,
+        kind,
+        model,
+        loss,
+        batch,
+        n_state,
+        n_outputs,
+        state_indices=None,
+    ):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = self.out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        flat, _ = jax.tree_util.tree_flatten(example_args)
+        entry = {
+            "name": name,
+            "file": path.name,
+            "kind": kind,
+            "model": model,
+            "loss": loss,
+            "batch": batch,
+            "n_state": n_state,
+            "inputs": _sig(flat),
+            "n_outputs": n_outputs,
+        }
+        if state_indices is not None:
+            # which full-state slots this artifact consumes (predict only)
+            entry["state_indices"] = state_indices
+        self.entries.append(entry)
+        print(
+            f"  {name:34s} {len(text)/1024:9.1f} KiB  {time.time()-t0:5.1f}s",
+            flush=True,
+        )
+
+    def write_manifest(self):
+        manifest = {
+            "format_version": 1,
+            "margin": train_mod.MARGIN,
+            "artifacts": self.entries,
+        }
+        (self.out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+
+def _flat_state_fns(model, loss_spec):
+    """Wrap pytree-level init/train/predict as flat-tensor functions.
+
+    The flat order is ``jax.tree_util.tree_flatten`` order of the state
+    pytree ``(params, opt_state)`` — deterministic (sorted dict keys), and
+    recorded implicitly by the manifest input signatures.
+    """
+    init = train_mod.make_init(model, loss_spec)
+    step = train_mod.make_train_step(model, loss_spec)
+    predict = train_mod.make_predict(model)
+
+    # Build the state treedef once from an abstract init evaluation.
+    state0 = jax.eval_shape(init, jnp.uint32(0))
+    flat0, treedef = jax.tree_util.tree_flatten(state0)
+    n_state = len(flat0)
+
+    def init_flat(seed):
+        state = init(seed)
+        return tuple(jax.tree_util.tree_leaves(state))
+
+    def train_flat(*args):
+        state_flat, rest = args[:n_state], args[n_state:]
+        x, is_pos, is_neg, lr = rest
+        state = jax.tree_util.tree_unflatten(treedef, list(state_flat))
+        new_state, loss, scores = step(state, x, is_pos, is_neg, lr)
+        return (*jax.tree_util.tree_leaves(new_state), loss, scores)
+
+    # predict uses only the model parameters: XLA prunes unused entry
+    # parameters at compile time, so lowering predict over the *full*
+    # state would produce an executable whose input arity silently
+    # disagrees with the manifest.  Instead we lower it over exactly the
+    # leaves `model.apply` reads (model params, excluding AUCM's aux) and
+    # record their positions within the full flat state in the manifest
+    # (`state_indices`) so the Rust runtime can select them.
+    params0, _opt0 = state0
+    params_flat, params_treedef = jax.tree_util.tree_flatten(params0)
+    paths = jax.tree_util.tree_flatten_with_path(params0)[0]
+    aux_positions = {
+        i
+        for i, (path, _) in enumerate(paths)
+        if any(getattr(e, "key", None) == "aucm_aux" for e in path)
+    }
+    # params occupy the first len(params_flat) slots of the flat state
+    predict_indices = [i for i in range(len(params_flat)) if i not in aux_positions]
+
+    def predict_flat(*args):
+        sel, (x,) = args[: len(predict_indices)], args[len(predict_indices) :]
+        sel_iter = iter(sel)
+        leaves = [
+            jnp.zeros(params_flat[i].shape, params_flat[i].dtype)
+            if i in aux_positions
+            else next(sel_iter)
+            for i in range(len(params_flat))
+        ]
+        params = jax.tree_util.tree_unflatten(params_treedef, leaves)
+        return (model.apply(params, x),)
+
+    state_avals = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat0]
+    predict_avals = [state_avals[i] for i in predict_indices]
+    return (
+        init_flat,
+        train_flat,
+        predict_flat,
+        state_avals,
+        n_state,
+        predict_avals,
+        predict_indices,
+    )
+
+
+def build_model_loss(b: Builder, model, loss_name, batch_sizes, predict_batch):
+    loss_spec = losses_mod.LOSSES[loss_name]
+    (
+        init_flat,
+        train_flat,
+        predict_flat,
+        state_avals,
+        n_state,
+        predict_avals,
+        predict_indices,
+    ) = _flat_state_fns(model, loss_spec)
+    f32 = jnp.float32
+    seed = jax.ShapeDtypeStruct((), jnp.uint32)
+    b.add(
+        f"init_{model.name}_{loss_name}",
+        init_flat,
+        (seed,),
+        kind="init",
+        model=model.name,
+        loss=loss_name,
+        batch=0,
+        n_state=n_state,
+        n_outputs=n_state,
+    )
+    for bs in batch_sizes:
+        x = jax.ShapeDtypeStruct((bs, *model.input_shape), f32)
+        mask = jax.ShapeDtypeStruct((bs,), f32)
+        lr = jax.ShapeDtypeStruct((), f32)
+        b.add(
+            f"train_{model.name}_{loss_name}_bs{bs}",
+            train_flat,
+            (*state_avals, x, mask, mask, lr),
+            kind="train",
+            model=model.name,
+            loss=loss_name,
+            batch=bs,
+            n_state=n_state,
+            n_outputs=n_state + 2,
+        )
+    xp = jax.ShapeDtypeStruct((predict_batch, *model.input_shape), f32)
+    b.add(
+        f"predict_{model.name}_{loss_name}_bs{predict_batch}",
+        predict_flat,
+        (*predict_avals, xp),
+        kind="predict",
+        model=model.name,
+        loss=loss_name,
+        batch=predict_batch,
+        n_state=len(predict_indices),
+        n_outputs=1,
+        state_indices=predict_indices,
+    )
+
+
+def build_param_grad(b: Builder, model, loss_name, n):
+    """Full-batch ``grad_<model>_<loss>_n<N>`` artifact for L-BFGS.
+
+    Inputs: (params..., x[N,...], is_pos[N], is_neg[N]);
+    outputs: (loss, grads...) with grads in the params' flat order.
+    """
+    loss_spec = losses_mod.LOSSES[loss_name]
+    fn = train_mod.make_loss_and_param_grad(model, loss_spec)
+    params0 = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    flat0, treedef = jax.tree_util.tree_flatten(params0)
+    n_params = len(flat0)
+
+    def grad_flat(*args):
+        params_flat, (x, is_pos, is_neg) = args[:n_params], args[n_params:]
+        params = jax.tree_util.tree_unflatten(treedef, list(params_flat))
+        loss, grads = fn(params, x, is_pos, is_neg)
+        return (loss, *jax.tree_util.tree_leaves(grads))
+
+    f32 = jnp.float32
+    param_avals = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat0]
+    x = jax.ShapeDtypeStruct((n, *model.input_shape), f32)
+    mask = jax.ShapeDtypeStruct((n,), f32)
+    b.add(
+        f"grad_{model.name}_{loss_name}_n{n}",
+        grad_flat,
+        (*param_avals, x, mask, mask),
+        kind="grad",
+        model=model.name,
+        loss=loss_name,
+        batch=n,
+        n_state=n_params,
+        n_outputs=1 + n_params,
+    )
+
+
+def build_loss_eval(b: Builder, loss_name, n):
+    loss_spec = losses_mod.LOSSES[loss_name]
+    fn = train_mod.make_loss_eval(loss_spec)
+    f32 = jnp.float32
+    vec = jax.ShapeDtypeStruct((n,), f32)
+    b.add(
+        f"loss_eval_{loss_name}_n{n}",
+        lambda s, p, q: (fn(s, p, q),),
+        (vec, vec, vec),
+        kind="loss_eval",
+        model="",
+        loss=loss_name,
+        batch=n,
+        n_state=0,
+        n_outputs=1,
+    )
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--quick",
+        action="store_true",
+        help="only the MLP quickstart artifacts (fast smoke build)",
+    )
+    args = parser.parse_args(argv)
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    b = Builder(out_dir)
+    t0 = time.time()
+    print("== MLP quickstart artifacts", flush=True)
+    mlp = model_mod.MODELS["mlp"]
+    build_model_loss(b, mlp, "hinge", (MLP_BATCH,), MLP_PREDICT_BATCH)
+    # full-batch gradient artifacts for the L-BFGS extension (paper §5)
+    for loss_name in ("hinge", "logistic"):
+        build_param_grad(b, mlp, loss_name, LBFGS_BATCH)
+    if not args.quick:
+        print("== ResNet sweep artifacts", flush=True)
+        resnet = model_mod.MODELS["resnet"]
+        for loss_name in SWEEP_LOSSES:
+            build_model_loss(b, resnet, loss_name, TRAIN_BATCH_SIZES, PREDICT_BATCH)
+        print("== loss_eval monitors", flush=True)
+        for loss_name in ("hinge", "square", "logistic"):
+            build_loss_eval(b, loss_name, LOSS_EVAL_N)
+    b.write_manifest()
+    print(
+        f"wrote {len(b.entries)} artifacts + manifest to {out_dir} "
+        f"in {time.time()-t0:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""Kernel ablation bench: Pallas block size × input size.
+
+Interpret-mode wallclock is CPU-numpy time, NOT a TPU proxy (DESIGN.md
+§7) — the point of this ablation is *structural*: it verifies the
+block-grid decomposition scales linearly in grid steps and that the
+carry adds O(1) per block, and it documents the VMEM footprint per
+configuration for the real-TPU estimate.
+
+Run: ``python -m compile.bench_kernels [--out ../results/bench_kernels.csv]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import allpairs_hinge
+
+
+def vmem_bytes(block: int) -> int:
+    """Working-set estimate per grid step: 3 in + 2 out f32 blocks + carry."""
+    return (3 + 2) * block * 4 + 8 * 4
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../results/bench_kernels.csv")
+    parser.add_argument("--sizes", default="4096,16384,65536")
+    parser.add_argument("--blocks", default="128,512,1024,4096")
+    parser.add_argument("--repeats", type=int, default=3)
+    args = parser.parse_args(argv)
+
+    sizes = [int(s) for s in args.sizes.split(",")]
+    blocks = [int(b) for b in args.blocks.split(",")]
+    rng = np.random.default_rng(0)
+    rows = ["n,block,grid_steps,vmem_bytes,median_seconds"]
+    for n in sizes:
+        s = jnp.asarray(rng.normal(0, 1, n).astype(np.float32))
+        y = jnp.asarray((rng.random(n) < 0.3).astype(np.float32))
+        for block in blocks:
+            if block > n:
+                continue
+            fn = jax.jit(
+                lambda s_, p_, q_, block=block: allpairs_hinge.hinge_loss_and_grad(
+                    s_, p_, q_, 1.0, block=block
+                )[0]
+            )
+            fn(s, y, 1 - y).block_until_ready()  # compile
+            times = []
+            for _ in range(args.repeats):
+                t0 = time.perf_counter()
+                fn(s, y, 1 - y).block_until_ready()
+                times.append(time.perf_counter() - t0)
+            med = sorted(times)[len(times) // 2]
+            grid = -(-n // block)
+            rows.append(f"{n},{block},{grid},{vmem_bytes(block)},{med:.6f}")
+            print(rows[-1], flush=True)
+    out = args.out
+    import pathlib
+
+    pathlib.Path(out).parent.mkdir(parents=True, exist_ok=True)
+    pathlib.Path(out).write_text("\n".join(rows) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

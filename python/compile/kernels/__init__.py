@@ -1,0 +1,15 @@
+"""L1 Pallas kernels: the paper's compute hot-spot.
+
+``allpairs_hinge`` — Algorithm 2 sweep (O(n log n) squared hinge loss +
+gradient); ``allpairs_square`` — Algorithm 1 reductions (O(n) square loss +
+gradient); ``ref`` — pure-jnp oracles (naive O(n^2) + vectorized
+functional) that the kernels are tested against.
+"""
+
+from . import ref  # noqa: F401
+from .allpairs_hinge import (  # noqa: F401
+    DEFAULT_BLOCK,
+    hinge_loss,
+    hinge_loss_and_grad,
+)
+from .allpairs_square import square_loss, square_loss_and_grad  # noqa: F401

@@ -1,0 +1,108 @@
+"""Pallas kernels for the all-pairs square loss (paper Algorithm 1).
+
+The square loss needs no sort: three global coefficients over the positives
+(paper eqs. 11-13) plus three mirrored sums over the negatives fully
+determine both the loss and its gradient.  We compute the six sums with a
+block-grid *reduction* kernel (revisited accumulator, same pattern as the
+hinge sweep), then emit per-element gradients with a second, embarrassingly
+parallel map kernel.  Total O(n) work, two kernel launches.
+
+Reduction layout (``sums`` output, shape (8,), 6 used):
+  [0] n+            count of positives
+  [1] b+ = sum 2(m - yhat_j)        over positives   (eq. 12)
+  [2] c+ = sum (m - yhat_j)^2       over positives   (eq. 13)
+  [3] n-            count of negatives
+  [4] S- = sum yhat_k               over negatives
+  [5] Q- = sum yhat_k^2             over negatives
+from which  L = n+ * Q- + b+ * S- + c+ * n-           (eq. 15/16)
+  grad_k =  2 n+ yhat_k + b+                           (negatives)
+  grad_j = -2 [ n- (m - yhat_j) + S- ]                 (positives)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .allpairs_hinge import DEFAULT_BLOCK, _pad_to_block
+
+__all__ = ["square_loss_and_grad", "square_loss"]
+
+
+def _reduce_kernel(s_ref, p_ref, q_ref, sums_ref, *, margin):
+    """Accumulate the six global sums across the sequential grid."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+
+    s = s_ref[...]
+    p = p_ref[...]
+    q = q_ref[...]
+    z = margin - s
+    sums_ref[0] += jnp.sum(p)
+    sums_ref[1] += jnp.sum(p * 2.0 * z)
+    sums_ref[2] += jnp.sum(p * z * z)
+    sums_ref[3] += jnp.sum(q)
+    sums_ref[4] += jnp.sum(q * s)
+    sums_ref[5] += jnp.sum(q * s * s)
+
+
+def _grad_kernel(s_ref, p_ref, q_ref, sums_ref, g_ref, *, margin):
+    """Elementwise map: closed-form gradient given the global sums."""
+    s = s_ref[...]
+    p = p_ref[...]
+    q = q_ref[...]
+    n_pos = sums_ref[0]
+    b = sums_ref[1]
+    n_neg = sums_ref[3]
+    s_neg = sums_ref[4]
+    g_neg = q * (2.0 * n_pos * s + b)
+    g_pos = p * (-2.0) * (n_neg * (margin - s) + s_neg)
+    g_ref[...] = g_neg + g_pos
+
+
+def square_loss_and_grad(scores, is_pos, is_neg, margin=1.0, block=DEFAULT_BLOCK):
+    """All-pairs square loss and gradient in O(n) (no sort).
+
+    Same masked-input convention as the hinge kernel; see module docstring
+    for the coefficient algebra.
+    """
+    n = scores.shape[0]
+    block = min(block, max(8, n))
+    (s, p, q), n0 = _pad_to_block((scores, is_pos, is_neg), block)
+    np_ = s.shape[0]
+    grid = np_ // block
+    sums = pl.pallas_call(
+        functools.partial(_reduce_kernel, margin=margin),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 3,
+        out_specs=pl.BlockSpec((8,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((8,), s.dtype),
+        interpret=True,
+    )(s, p, q)
+    loss = sums[0] * sums[5] + sums[1] * sums[4] + sums[2] * sums[3]
+    grad_padded = pl.pallas_call(
+        functools.partial(_grad_kernel, margin=margin),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), s.dtype),
+        interpret=True,
+    )(s, p, q, sums)
+    return loss, grad_padded[:n0]
+
+
+def square_loss(scores, is_pos, is_neg, margin=1.0, block=DEFAULT_BLOCK):
+    """Loss-only entry point (reduction kernel only)."""
+    loss, _ = square_loss_and_grad(scores, is_pos, is_neg, margin, block)
+    return loss

@@ -1,0 +1,208 @@
+"""Pure-jnp reference oracles for the all-pairs losses.
+
+This module is the correctness anchor of the whole stack.  Everything here
+is written for clarity, not speed:
+
+* ``naive_*`` implement the paper's equation (2) literally as an
+  O(n^2) double sum over the outer-difference matrix.  They are the ground
+  truth the Pallas kernels (and the Rust implementations, transitively via
+  the AOT artifacts) are validated against, and they are also the "Naive"
+  baseline of the paper's Figure 2 timing study.
+* ``functional_*`` implement Algorithms 1 and 2 of the paper with plain
+  ``jnp`` sort + cumsum (no Pallas).  They are a second, independently
+  derived oracle: pytest asserts ``naive == functional == pallas``.
+
+All functions use the masked convention: instead of a label vector
+``y in {-1, +1}`` they take two float mask vectors ``is_pos`` and
+``is_neg`` (each 0.0 or 1.0, never both 1 for the same element).  An
+element with both masks zero is padding and contributes nothing — this is
+what makes fixed-shape AOT artifacts exact for ragged final batches.
+
+Notation matches the paper: ``m`` is the margin, positives are indexed by
+``j``, negatives by ``k``, and the pairwise loss is
+
+    L = sum_{j in I+} sum_{k in I-} ell(yhat_j - yhat_k)
+
+with ``ell(z) = (m - z)^2`` (square) or ``(m - z)_+^2`` (squared hinge).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "naive_square",
+    "naive_squared_hinge",
+    "naive_square_grad",
+    "naive_squared_hinge_grad",
+    "functional_square",
+    "functional_square_grad",
+    "functional_squared_hinge",
+    "functional_squared_hinge_grad",
+    "logistic_loss",
+    "logistic_grad",
+    "pair_count",
+]
+
+
+def pair_count(is_pos, is_neg):
+    """Number of (positive, negative) pairs — the normalizer ``n+ * n-``."""
+    return jnp.sum(is_pos) * jnp.sum(is_neg)
+
+
+# ---------------------------------------------------------------------------
+# Naive O(n^2): the paper's equation (2), literally.
+# ---------------------------------------------------------------------------
+
+
+def _pair_matrix(scores, margin):
+    """``D[j, k] = m - yhat_j + yhat_k`` for every ordered pair (j, k)."""
+    return margin - scores[:, None] + scores[None, :]
+
+
+def naive_square(scores, is_pos, is_neg, margin=1.0):
+    """All-pairs square loss, O(n^2) time and memory."""
+    d = _pair_matrix(scores, margin)
+    w = is_pos[:, None] * is_neg[None, :]
+    return jnp.sum(w * d * d)
+
+
+def naive_squared_hinge(scores, is_pos, is_neg, margin=1.0):
+    """All-pairs squared hinge loss, O(n^2) time and memory."""
+    d = jnp.maximum(_pair_matrix(scores, margin), 0.0)
+    w = is_pos[:, None] * is_neg[None, :]
+    return jnp.sum(w * d * d)
+
+
+def naive_square_grad(scores, is_pos, is_neg, margin=1.0):
+    """Gradient of :func:`naive_square` w.r.t. ``scores`` (closed form).
+
+    d L / d yhat_j = sum_k -2 (m - yhat_j + yhat_k)   for positives j
+    d L / d yhat_k = sum_j  2 (m - yhat_j + yhat_k)   for negatives k
+    """
+    d = _pair_matrix(scores, margin)
+    w = is_pos[:, None] * is_neg[None, :]
+    g_pos = -2.0 * jnp.sum(w * d, axis=1)  # row j: sum over k
+    g_neg = 2.0 * jnp.sum(w * d, axis=0)  # col k: sum over j
+    return g_pos + g_neg
+
+
+def naive_squared_hinge_grad(scores, is_pos, is_neg, margin=1.0):
+    """Gradient of :func:`naive_squared_hinge` w.r.t. ``scores``."""
+    d = jnp.maximum(_pair_matrix(scores, margin), 0.0)
+    w = is_pos[:, None] * is_neg[None, :]
+    g_pos = -2.0 * jnp.sum(w * d, axis=1)
+    g_neg = 2.0 * jnp.sum(w * d, axis=0)
+    return g_pos + g_neg
+
+
+# ---------------------------------------------------------------------------
+# Functional O(n) square loss: the paper's Algorithm 1.
+# ---------------------------------------------------------------------------
+
+
+def functional_square(scores, is_pos, is_neg, margin=1.0):
+    """Algorithm 1: three coefficients, then one evaluation per negative.
+
+    a+ = n+, b+ = sum_j 2(m - yhat_j), c+ = sum_j (m - yhat_j)^2 and
+    L = sum_k a+ yhat_k^2 + b+ yhat_k + c+.  Linear time, no sort.
+    """
+    z = margin - scores
+    a = jnp.sum(is_pos)
+    b = jnp.sum(is_pos * 2.0 * z)
+    c = jnp.sum(is_pos * z * z)
+    return jnp.sum(is_neg * (a * scores * scores + b * scores + c))
+
+
+def functional_square_grad(scores, is_pos, is_neg, margin=1.0):
+    """Closed-form gradient of the all-pairs square loss in O(n).
+
+    For a negative k:  2 a+ yhat_k + b+.
+    For a positive j:  -2 [ n- (m - yhat_j) + sum_k yhat_k ].
+    """
+    z = margin - scores
+    a = jnp.sum(is_pos)
+    b = jnp.sum(is_pos * 2.0 * z)
+    n_neg = jnp.sum(is_neg)
+    sum_neg = jnp.sum(is_neg * scores)
+    g_neg = is_neg * (2.0 * a * scores + b)
+    g_pos = is_pos * (-2.0) * (n_neg * z + sum_neg)
+    return g_neg + g_pos
+
+
+# ---------------------------------------------------------------------------
+# Functional O(n log n) squared hinge loss: the paper's Algorithm 2,
+# vectorized with sort + cumsum (this is exactly what the Pallas kernel
+# computes block-wise with a carried (a, b, c, t) state).
+# ---------------------------------------------------------------------------
+
+
+def _sorted_views(scores, is_pos, is_neg, margin):
+    """Sort by augmented value v_i = yhat_i + m * I[y_i = -1] (ascending).
+
+    Ties between a positive j and a negative k at equal v contribute exactly
+    zero loss and zero gradient ((m - yhat_j + yhat_k) = v_k - v_j = 0), so
+    any tie-break order is correct.
+    """
+    v = scores + margin * is_neg
+    order = jnp.argsort(v)
+    return order, scores[order], is_pos[order], is_neg[order]
+
+
+def functional_squared_hinge(scores, is_pos, is_neg, margin=1.0):
+    """Algorithm 2: sort by augmented value, sweep, evaluate on negatives."""
+    _, s, p, q = _sorted_views(scores, is_pos, is_neg, margin)
+    z = margin - s
+    a = jnp.cumsum(p)  # eq. (22): running count of positives
+    b = jnp.cumsum(p * 2.0 * z)  # eq. (23)
+    c = jnp.cumsum(p * z * z)  # eq. (24)
+    return jnp.sum(q * (a * s * s + b * s + c))  # eq. (25)
+
+
+def functional_squared_hinge_grad(scores, is_pos, is_neg, margin=1.0):
+    """Closed-form gradient of the all-pairs squared hinge loss, O(n log n).
+
+    Two sweeps over the sort order (see DESIGN.md section 3):
+
+    * ascending (the loss sweep) yields, for each negative k,
+      ``2 [ a_k (m + yhat_k) - t_k ]`` where ``a_k``/``t_k`` are the running
+      count / running sum of positive predictions below ``v_k``;
+    * descending yields, for each positive j,
+      ``-2 [ N_j (m - yhat_j) + T_j ]`` where ``N_j``/``T_j`` are the count /
+      sum of negative predictions with ``v_k > yhat_j``.
+    """
+    order, s, p, q = _sorted_views(scores, is_pos, is_neg, margin)
+    # Ascending sweep: coefficients over positives.
+    a = jnp.cumsum(p)
+    t = jnp.cumsum(p * s)
+    g_neg = q * 2.0 * (a * (margin + s) - t)
+    # Descending sweep: suffix sums over negatives (inclusive suffix is
+    # correct — self terms and equal-v terms contribute zero).
+    n_suf = jnp.cumsum(q[::-1])[::-1]
+    t_suf = jnp.cumsum((q * s)[::-1])[::-1]
+    g_pos = p * (-2.0) * (n_suf * (margin - s) + t_suf)
+    g_sorted = g_neg + g_pos
+    return jnp.zeros_like(scores).at[order].set(g_sorted)
+
+
+# ---------------------------------------------------------------------------
+# Logistic (binary cross-entropy) baseline: linear time, sums over examples.
+# ---------------------------------------------------------------------------
+
+
+def logistic_loss(scores, is_pos, is_neg):
+    """Per-example logistic loss on sigmoid outputs ``scores in (0, 1)``.
+
+    This is the paper's "Logistic" baseline: standard unweighted BCE, which
+    is how most binary classifiers are trained with no imbalance handling.
+    Scores are probabilities (the model's last activation is a sigmoid), so
+    we clamp for numerical safety.
+    """
+    s = jnp.clip(scores, 1e-7, 1.0 - 1e-7)
+    return -jnp.sum(is_pos * jnp.log(s) + is_neg * jnp.log1p(-s))
+
+
+def logistic_grad(scores, is_pos, is_neg):
+    """Closed-form gradient of :func:`logistic_loss` w.r.t. ``scores``."""
+    s = jnp.clip(scores, 1e-7, 1.0 - 1e-7)
+    return -is_pos / s + is_neg / (1.0 - s)

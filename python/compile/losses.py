@@ -1,0 +1,198 @@
+"""L2 training losses: differentiable wrappers over the L1 kernels.
+
+Each pairwise loss is exposed as a ``jax.custom_vjp`` whose forward pass
+runs the fused Pallas loss+gradient kernel and whose backward pass reuses
+the gradient computed in the forward sweep (the closed form derived in
+DESIGN.md section 3).  This keeps the O(n^2) pairwise matrix out of every
+training artifact — a structural property asserted by
+``python/tests/test_aot.py``.
+
+Loss registry
+-------------
+``LOSSES`` maps the names used throughout the repo (and by the Rust
+coordinator's manifest) to ``LossSpec`` entries:
+
+* ``hinge``    — all-pairs squared hinge (the paper's contribution),
+* ``square``   — all-pairs square loss (Algorithm 1),
+* ``logistic`` — per-example BCE (the paper's "Logistic" baseline),
+* ``aucm``     — LIBAUC's AUCM min-max loss (Yuan et al. 2020 baseline).
+
+All take ``(scores, is_pos, is_neg)`` with {0,1} float masks (padding =
+both zero) and return a scalar normalized by the number of pairs (or
+examples), so learning rates are comparable across batch sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import allpairs_hinge, allpairs_square, ref
+
+__all__ = [
+    "allpairs_squared_hinge",
+    "allpairs_square_loss",
+    "logistic",
+    "aucm",
+    "aucm_init_aux",
+    "naive_squared_hinge",
+    "naive_square",
+    "LossSpec",
+    "LOSSES",
+]
+
+_EPS = 1.0  # pair_count floor: avoids 0/0 on single-class batches
+
+
+def _norm_pairs(is_pos, is_neg):
+    return jnp.maximum(ref.pair_count(is_pos, is_neg), _EPS)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-backed pairwise losses with custom VJP.
+# ---------------------------------------------------------------------------
+
+
+# ``margin`` is a nondiff static argument: it must stay a concrete Python
+# float all the way into the Pallas kernel closure (a traced margin would be
+# a captured constant, which pallas_call rejects).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _hinge_raw(scores, is_pos, is_neg, margin):
+    loss, _ = allpairs_hinge.hinge_loss_and_grad(scores, is_pos, is_neg, margin)
+    return loss
+
+
+def _hinge_fwd(scores, is_pos, is_neg, margin):
+    loss, grad = allpairs_hinge.hinge_loss_and_grad(scores, is_pos, is_neg, margin)
+    return loss, grad
+
+
+def _hinge_bwd(margin, grad, g):
+    return (g * grad, None, None)
+
+
+_hinge_raw.defvjp(_hinge_fwd, _hinge_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _square_raw(scores, is_pos, is_neg, margin):
+    loss, _ = allpairs_square.square_loss_and_grad(scores, is_pos, is_neg, margin)
+    return loss
+
+
+def _square_fwd(scores, is_pos, is_neg, margin):
+    loss, grad = allpairs_square.square_loss_and_grad(scores, is_pos, is_neg, margin)
+    return loss, grad
+
+
+def _square_bwd(margin, grad, g):
+    return (g * grad, None, None)
+
+
+_square_raw.defvjp(_square_fwd, _square_bwd)
+
+
+def allpairs_squared_hinge(scores, is_pos, is_neg, margin=1.0):
+    """Normalized all-pairs squared hinge loss (Pallas, O(n log n))."""
+    return _hinge_raw(scores, is_pos, is_neg, margin) / _norm_pairs(is_pos, is_neg)
+
+
+def allpairs_square_loss(scores, is_pos, is_neg, margin=1.0):
+    """Normalized all-pairs square loss (Pallas, O(n))."""
+    return _square_raw(scores, is_pos, is_neg, margin) / _norm_pairs(is_pos, is_neg)
+
+
+# ---------------------------------------------------------------------------
+# Naive O(n^2) variants — for Figure 2 baselines only, never in artifacts.
+# ---------------------------------------------------------------------------
+
+
+def naive_squared_hinge(scores, is_pos, is_neg, margin=1.0):
+    """O(n^2) squared hinge via the pairwise matrix (autodiff gradient)."""
+    return ref.naive_squared_hinge(scores, is_pos, is_neg, margin) / _norm_pairs(
+        is_pos, is_neg
+    )
+
+
+def naive_square(scores, is_pos, is_neg, margin=1.0):
+    """O(n^2) square loss via the pairwise matrix (autodiff gradient)."""
+    return ref.naive_square(scores, is_pos, is_neg, margin) / _norm_pairs(
+        is_pos, is_neg
+    )
+
+
+# ---------------------------------------------------------------------------
+# Logistic baseline (linear time, sums over examples).
+# ---------------------------------------------------------------------------
+
+
+def logistic(scores, is_pos, is_neg):
+    """Mean per-example BCE over non-padding elements."""
+    n = jnp.maximum(jnp.sum(is_pos) + jnp.sum(is_neg), _EPS)
+    return ref.logistic_loss(scores, is_pos, is_neg) / n
+
+
+# ---------------------------------------------------------------------------
+# AUCM min-max loss (LIBAUC baseline, Yuan et al. 2020).
+# ---------------------------------------------------------------------------
+
+
+def aucm_init_aux():
+    """Initial auxiliary variables (a, b, alpha) for the AUCM loss."""
+    return jnp.zeros((3,), jnp.float32)
+
+
+def aucm(scores, is_pos, is_neg, aux, margin=1.0):
+    """AUCM loss of Yuan et al. 2020 (masked, mean-normalized).
+
+    L(w, a, b, alpha) = E+[(h - a)^2] + E-[(h - b)^2]
+                        + 2 alpha (m + E-[h] - E+[h]) - alpha^2
+
+    ``aux = [a, b, alpha]``.  The saddle point is found by descending in
+    (w, a, b) and *ascending* in alpha — the PESG optimizer in ``optim.py``
+    flips the sign of the alpha gradient, so this function just returns the
+    scalar objective.
+    """
+    a, b, alpha = aux[0], aux[1], aux[2]
+    n_pos = jnp.maximum(jnp.sum(is_pos), _EPS)
+    n_neg = jnp.maximum(jnp.sum(is_neg), _EPS)
+    mean_pos = jnp.sum(is_pos * scores) / n_pos
+    mean_neg = jnp.sum(is_neg * scores) / n_neg
+    var_pos = jnp.sum(is_pos * (scores - a) ** 2) / n_pos
+    var_neg = jnp.sum(is_neg * (scores - b) ** 2) / n_neg
+    return var_pos + var_neg + 2.0 * alpha * (margin + mean_neg - mean_pos) - alpha**2
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LossSpec:
+    """A named training loss.
+
+    Attributes:
+      name: registry key (also used in artifact file names / manifest).
+      fn: ``fn(scores, is_pos, is_neg) -> scalar`` (margin bound at m=1;
+        AUCM additionally closes over the aux variables via ``train.py``).
+      pairwise: True if the loss sums over (pos, neg) pairs.
+      needs_aux: True if the optimizer state carries (a, b, alpha) + PESG.
+    """
+
+    name: str
+    fn: Callable
+    pairwise: bool
+    needs_aux: bool = False
+
+
+LOSSES = {
+    "hinge": LossSpec("hinge", allpairs_squared_hinge, pairwise=True),
+    "square": LossSpec("square", allpairs_square_loss, pairwise=True),
+    "logistic": LossSpec("logistic", logistic, pairwise=False),
+    "aucm": LossSpec("aucm", aucm, pairwise=True, needs_aux=True),
+}

@@ -1,0 +1,190 @@
+"""L2 models: pure-JAX pytree networks with a sigmoid last activation.
+
+The paper trains a PyTorch ResNet20 (He et al. 2015) with a sigmoid last
+activation (following the LIBAUC recommendation).  Our reproduction-scale
+stand-in is :class:`MiniResNet` — the same architecture family (3x3 conv
+stem, three residual stages, global average pooling, dense head, sigmoid)
+sized so that a full hyper-parameter sweep finishes on one CPU (~80k
+parameters at the default widths).  :class:`MLP` is a small feature-vector
+model used by the quickstart example and tests.
+
+Design choices (documented substitutions):
+
+* **Norm layers**: ResNet20 uses BatchNorm; batch statistics are training
+  state that would have to round-trip through the AOT artifacts.  We use a
+  stateless per-channel RMS normalization with learned scale instead —
+  same conditioning role, no running stats, exactly reproducible from the
+  parameter pytree alone.
+* Parameters are plain nested dicts; ``jax.tree_util`` flattening order is
+  deterministic (sorted dict keys), which is what the AOT manifest and the
+  Rust runtime rely on.
+
+Both models expose ``init(key) -> params`` and ``apply(params, x) ->
+scores`` with ``scores in (0, 1)`` of shape ``(batch,)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["MLP", "MiniResNet", "MODELS", "param_count"]
+
+
+def param_count(params) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def _he_normal(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _rms_norm(x, scale):
+    """Stateless per-channel RMS norm (axis = channels, last)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * lax.rsqrt(ms + 1e-6) * scale
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP:
+    """Fully-connected net: ``in_dim -> hidden... -> 1``, sigmoid output."""
+
+    in_dim: int = 64
+    hidden: Tuple[int, ...] = (64, 32)
+
+    @property
+    def name(self) -> str:
+        return "mlp"
+
+    @property
+    def input_shape(self) -> Tuple[int, ...]:
+        return (self.in_dim,)
+
+    def init(self, key):
+        dims = (self.in_dim, *self.hidden, 1)
+        params = {}
+        for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+            key, sub = jax.random.split(key)
+            params[f"dense{i}"] = {
+                "w": _he_normal(sub, (d_in, d_out), d_in),
+                "b": jnp.zeros((d_out,), jnp.float32),
+            }
+        return params
+
+    def apply(self, params, x):
+        h = x
+        n_layers = len(self.hidden) + 1
+        for i in range(n_layers):
+            layer = params[f"dense{i}"]
+            h = h @ layer["w"] + layer["b"]
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return jax.nn.sigmoid(h[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# MiniResNet
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, stride=1):
+    """3x3 (or 1x1) NHWC conv, SAME padding."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class MiniResNet:
+    """Residual CNN for ``(H, W, 3)`` images, sigmoid head.
+
+    stem conv -> [stage(width, blocks) for width in widths] -> GAP ->
+    dense(1) -> sigmoid.  The first block of every stage after the first
+    downsamples by 2 with a 1x1-conv shortcut projection.
+    """
+
+    image_hw: int = 16
+    widths: Tuple[int, ...] = (8, 16, 32)
+    blocks_per_stage: int = 2
+
+    @property
+    def name(self) -> str:
+        return "resnet"
+
+    @property
+    def input_shape(self) -> Tuple[int, ...]:
+        return (self.image_hw, self.image_hw, 3)
+
+    def init(self, key):
+        params = {}
+        key, sub = jax.random.split(key)
+        c0 = self.widths[0]
+        params["stem"] = {
+            "w": _he_normal(sub, (3, 3, 3, c0), 3 * 9),
+            "scale": jnp.ones((c0,), jnp.float32),
+        }
+        c_in = c0
+        for si, c_out in enumerate(self.widths):
+            for bi in range(self.blocks_per_stage):
+                name = f"stage{si}_block{bi}"
+                key, k1, k2, k3 = jax.random.split(key, 4)
+                block = {
+                    "w1": _he_normal(k1, (3, 3, c_in, c_out), c_in * 9),
+                    "s1": jnp.ones((c_out,), jnp.float32),
+                    "w2": _he_normal(k2, (3, 3, c_out, c_out), c_out * 9),
+                    "s2": jnp.ones((c_out,), jnp.float32),
+                }
+                if c_in != c_out:
+                    block["proj"] = _he_normal(k3, (1, 1, c_in, c_out), c_in)
+                params[name] = block
+                c_in = c_out
+        key, sub = jax.random.split(key)
+        params["head"] = {
+            "w": _he_normal(sub, (c_in, 1), c_in),
+            "b": jnp.zeros((1,), jnp.float32),
+        }
+        return params
+
+    def apply(self, params, x):
+        h = _conv(x, params["stem"]["w"])
+        h = jax.nn.relu(_rms_norm(h, params["stem"]["scale"]))
+        c_in = self.widths[0]
+        for si, c_out in enumerate(self.widths):
+            for bi in range(self.blocks_per_stage):
+                block = params[f"stage{si}_block{bi}"]
+                # Downsample at the first block of stages > 0.
+                stride = 2 if (bi == 0 and si > 0) else 1
+                shortcut = h
+                if "proj" in block:
+                    shortcut = _conv(h, block["proj"], stride=stride)
+                elif stride != 1:
+                    shortcut = h[:, ::stride, ::stride, :]
+                y = _conv(h, block["w1"], stride=stride)
+                y = jax.nn.relu(_rms_norm(y, block["s1"]))
+                y = _conv(y, block["w2"])
+                y = _rms_norm(y, block["s2"])
+                h = jax.nn.relu(y + shortcut)
+                c_in = c_out
+        pooled = jnp.mean(h, axis=(1, 2))  # global average pool
+        logits = pooled @ params["head"]["w"] + params["head"]["b"]
+        return jax.nn.sigmoid(logits[:, 0])
+
+
+MODELS = {
+    "mlp": MLP(),
+    "resnet": MiniResNet(),
+}

@@ -1,0 +1,90 @@
+"""L2 optimizers as pure pytree transforms.
+
+Two optimizers, matching the paper's experimental setup:
+
+* :class:`SGDMomentum` — plain SGD with heavy-ball momentum, used with the
+  pairwise hinge/square losses and the logistic baseline.
+* :class:`PESG` — the Proximal Epoch Stochastic Gradient method of
+  Guo et al. 2020, the optimizer LIBAUC pairs with the AUCM min-max loss:
+  descent on (w, a, b), *ascent* on alpha, plus an L2 "proximal" pull of
+  the weights toward a reference point (we use weight decay toward zero,
+  the stateless variant, so artifacts stay stateless beyond momentum).
+
+Both expose ``init(params) -> state`` and
+``update(grads, state, params, lr) -> (new_params, new_state)`` and are
+fully jittable, so a whole train step lowers into a single HLO module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SGDMomentum", "PESG"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDMomentum:
+    """Heavy-ball SGD: ``v <- mu v + g;  p <- p - lr v``."""
+
+    momentum: float = 0.9
+
+    def init(self, params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(self, grads, state, params, lr):
+        new_state = jax.tree_util.tree_map(
+            lambda v, g: self.momentum * v + g, state, grads
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, v: p - lr * v, params, new_state
+        )
+        return new_params, new_state
+
+
+@dataclasses.dataclass(frozen=True)
+class PESG:
+    """PESG for the AUCM min-max objective (Guo et al. 2020).
+
+    The caller packs the AUCM auxiliary variables into the params pytree
+    under the key ``"aucm_aux"`` as ``[a, b, alpha]``.  PESG descends in
+    everything except ``alpha``, which it *ascends* (gradient ascent on the
+    dual variable), clipping ``alpha >= 0``.  ``gamma`` is the proximal
+    weight-decay coefficient on the primal weights.
+    """
+
+    momentum: float = 0.9
+    gamma: float = 2e-3
+    aux_key: str = "aucm_aux"
+
+    def init(self, params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(self, grads, state, params, lr):
+        # Heavy-ball on everything (same buffer for aux; sign handled below).
+        new_state = jax.tree_util.tree_map(
+            lambda v, g: self.momentum * v + g, state, grads
+        )
+
+        def step(path_is_aux, p, v):
+            if path_is_aux:
+                # aux = [a, b, alpha]: descend a, b; ascend alpha; alpha >= 0.
+                sign = jnp.array([1.0, 1.0, -1.0], p.dtype)
+                out = p - lr * sign * v
+                return out.at[2].set(jnp.maximum(out[2], 0.0))
+            return p - lr * (v + self.gamma * p)
+
+        flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+        flat_v = jax.tree_util.tree_leaves(new_state)
+        new_leaves = []
+        for (path, p), v in zip(flat_p, flat_v):
+            is_aux = any(
+                getattr(entry, "key", None) == self.aux_key for entry in path
+            )
+            new_leaves.append(step(is_aux, p, v))
+        new_params = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(params), new_leaves
+        )
+        return new_params, new_state

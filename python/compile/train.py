@@ -1,0 +1,139 @@
+"""L2 train-step factories: model + loss + optimizer fused into one jit.
+
+A *training state* is the pytree ``(params, opt_state)``.  For the AUCM
+loss, ``params`` additionally carries the auxiliary variables under
+``params["aucm_aux"] = [a, b, alpha]`` and the optimizer is PESG; for all
+other losses the optimizer is SGD with momentum.  The whole step —
+forward, loss (Pallas kernels for the pairwise losses), backward, update —
+lowers into a single HLO module per (model, loss, batch-size) variant, so
+the Rust runtime performs exactly one PJRT execution per training step.
+
+Calling conventions (what the AOT artifacts expose, see ``aot.py``):
+
+* ``init(seed: u32[]) -> state...``                       (flat tensors)
+* ``train(state..., x, is_pos, is_neg, lr) -> (state..., loss, scores)``
+* ``predict(state..., x) -> scores``
+* ``loss_eval(scores, is_pos, is_neg) -> loss``           (the section-5
+  monitoring use case: full-set loss in O(n log n))
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import losses as losses_mod
+from . import model as model_mod
+from . import optim as optim_mod
+
+__all__ = [
+    "make_optimizer",
+    "make_init",
+    "make_train_step",
+    "make_predict",
+    "make_loss_eval",
+    "MARGIN",
+]
+
+# The paper keeps the margin at its default m = 1 for all experiments.
+MARGIN = 1.0
+
+
+def make_optimizer(loss_spec):
+    """PESG for the AUCM min-max loss, SGD+momentum for everything else."""
+    if loss_spec.needs_aux:
+        return optim_mod.PESG()
+    return optim_mod.SGDMomentum()
+
+
+def _batch_loss(loss_spec, params, scores, is_pos, is_neg):
+    if loss_spec.needs_aux:
+        return losses_mod.aucm(scores, is_pos, is_neg, params["aucm_aux"], MARGIN)
+    if loss_spec.pairwise:
+        return loss_spec.fn(scores, is_pos, is_neg, MARGIN)
+    return loss_spec.fn(scores, is_pos, is_neg)
+
+
+def make_init(model, loss_spec):
+    """``init(seed) -> (params, opt_state)`` pytree."""
+    optimizer = make_optimizer(loss_spec)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        params = model.init(key)
+        if loss_spec.needs_aux:
+            params["aucm_aux"] = losses_mod.aucm_init_aux()
+        opt_state = optimizer.init(params)
+        return params, opt_state
+
+    return init
+
+
+def make_train_step(model, loss_spec):
+    """One fused SGD/PESG step over a masked batch.
+
+    ``step(state, x, is_pos, is_neg, lr) -> (state', loss, scores)``.
+    """
+    optimizer = make_optimizer(loss_spec)
+
+    def step(state, x, is_pos, is_neg, lr):
+        params, opt_state = state
+
+        def objective(p):
+            scores = model.apply(p, x)
+            return _batch_loss(loss_spec, p, scores, is_pos, is_neg), scores
+
+        (loss, scores), grads = jax.value_and_grad(objective, has_aux=True)(params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+        return (new_params, new_opt), loss, scores
+
+    return step
+
+
+def make_predict(model):
+    """``predict(state, x) -> scores`` (ignores the optimizer half)."""
+
+    def predict(state, x):
+        params, _ = state
+        return model.apply(params, x)
+
+    return predict
+
+
+def make_loss_and_param_grad(model, loss_spec):
+    """Full-batch loss + gradient w.r.t. the *model parameters*.
+
+    The building block for deterministic full-batch optimizers (the
+    paper's §5 proposes LBFGS with full batches): no optimizer state, no
+    update rule — just ``(params, x, is_pos, is_neg) -> (loss, grads)``.
+    The Rust L-BFGS driver (rust/src/train/lbfgs.rs) consumes the
+    ``grad_*`` artifacts lowered from this.
+    """
+    if loss_spec.needs_aux:
+        raise ValueError("param-grad artifacts support params-only losses")
+
+    def loss_and_grad(params, x, is_pos, is_neg):
+        def objective(p):
+            scores = model.apply(p, x)
+            return _batch_loss(loss_spec, p, scores, is_pos, is_neg)
+
+        return jax.value_and_grad(objective)(params)
+
+    return loss_and_grad
+
+
+def make_loss_eval(loss_spec):
+    """Full-set loss monitor on raw scores (paper section 5).
+
+    Not defined for AUCM (its value depends on aux variables, not only on
+    the score distribution).
+    """
+    if loss_spec.needs_aux:
+        raise ValueError("loss_eval is not defined for the AUCM loss")
+
+    def loss_eval(scores, is_pos, is_neg):
+        if loss_spec.pairwise:
+            return loss_spec.fn(scores, is_pos, is_neg, MARGIN)
+        return loss_spec.fn(scores, is_pos, is_neg)
+
+    return loss_eval

@@ -1,0 +1,180 @@
+"""AOT artifact structure: lowering, manifest integrity, no-O(n^2) check.
+
+These tests lower a *small* subset of artifacts in-process (fast) and, when
+``artifacts/manifest.json`` exists from a full `make artifacts` run, audit
+the manifest against the builder's naming and signature rules.
+"""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, losses, model as mm, train
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_hlo_text_lowering_roundtrip():
+    """to_hlo_text output parses back through xla_client (id-safe path)."""
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+def test_mlp_train_artifact_structure():
+    """Flat wrapper: arity and shapes agree with the state pytree."""
+    mlp = mm.MODELS["mlp"]
+    spec = losses.LOSSES["hinge"]
+    (
+        init_flat,
+        train_flat,
+        predict_flat,
+        state_avals,
+        n_state,
+        predict_avals,
+        predict_indices,
+    ) = aot._flat_state_fns(mlp, spec)
+    state = init_flat(jnp.uint32(0))
+    assert len(state) == n_state
+    x = jnp.zeros((8, 64), jnp.float32)
+    mask = jnp.zeros((8,), jnp.float32).at[:4].set(1.0)
+    out = train_flat(*state, x, mask, 1.0 - mask, jnp.float32(0.1))
+    assert len(out) == n_state + 2
+    loss, scores = out[-2], out[-1]
+    assert loss.shape == ()
+    assert scores.shape == (8,)
+    # predict consumes only the model-parameter slots
+    sel = [state[i] for i in predict_indices]
+    (pred,) = predict_flat(*sel, x)
+    assert pred.shape == (8,)
+    assert len(predict_avals) == len(predict_indices)
+
+
+def test_predict_indices_select_model_params():
+    """predict_indices: first half of state (params), aux excluded."""
+    mlp = mm.MODELS["mlp"]
+    # plain loss: params are state[:n_state//2], all of them selected
+    out = aot._flat_state_fns(mlp, losses.LOSSES["hinge"])
+    n_state, indices = out[4], out[6]
+    assert indices == list(range(n_state // 2))
+    # aucm: the aux leaf (sorted first: "aucm_aux" < "dense0") is excluded
+    out = aot._flat_state_fns(mlp, losses.LOSSES["aucm"])
+    n_state_aucm, indices_aucm = out[4], out[6]
+    assert 0 not in indices_aucm
+    assert len(indices_aucm) == n_state_aucm // 2 - 1
+
+
+def test_aucm_predict_matches_full_apply():
+    """predict through selected leaves == model.apply on the full params."""
+    mlp = mm.MODELS["mlp"]
+    spec = losses.LOSSES["aucm"]
+    out = aot._flat_state_fns(mlp, spec)
+    init_flat, predict_flat, indices = out[0], out[2], out[6]
+    state = init_flat(jnp.uint32(3))
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    sel = [state[i] for i in indices]
+    (pred,) = predict_flat(*sel, x)
+    # reference: rebuild the params pytree and apply directly
+    full_state = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(
+            jax.eval_shape(aot.train_mod.make_init(mlp, spec), jnp.uint32(0))
+        ),
+        list(state),
+    )
+    ref = mlp.apply(full_state[0], x)
+    np.testing.assert_allclose(pred, ref, rtol=1e-6)
+
+
+def test_flat_state_roundtrip_is_identity():
+    """init -> train with lr=0 returns identical parameters."""
+    mlp = mm.MODELS["mlp"]
+    spec = losses.LOSSES["logistic"]
+    out = aot._flat_state_fns(mlp, spec)
+    init_flat, train_flat, n_state = out[0], out[1], out[4]
+    state = init_flat(jnp.uint32(7))
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    mask = jnp.ones((8,), jnp.float32).at[4:].set(0.0)
+    out = train_flat(*state, x, mask, 1.0 - mask, jnp.float32(0.0))
+    for a, b in zip(state, out[:n_state]):
+        if a.shape == b.shape:
+            # momentum buffers change (they accumulate grads); params with
+            # lr=0 must not.
+            pass
+    # params are the first half of the flat state (params, opt_state)
+    n_params = n_state // 2
+    for a, b in zip(state[:n_params], out[:n_params]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_no_quadratic_pair_matrix_in_hinge_artifact():
+    """Structural perf guarantee: the lowered hinge train step contains no
+    O(batch^2) intermediate (the naive formulation would materialize a
+    [bs, bs] array)."""
+    mlp = mm.MODELS["mlp"]
+    spec = losses.LOSSES["hinge"]
+    out = aot._flat_state_fns(mlp, spec)
+    train_flat, state_avals = out[1], out[3]
+    bs = 100
+    x = jax.ShapeDtypeStruct((bs, 64), jnp.float32)
+    mask = jax.ShapeDtypeStruct((bs,), jnp.float32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(train_flat).lower(*state_avals, x, mask, mask, lr)
+    text = aot.to_hlo_text(lowered)
+    assert f"f32[{bs},{bs}]" not in text, "quadratic pair matrix leaked into HLO"
+
+
+@pytest.mark.skipif(
+    not (ARTIFACTS / "manifest.json").exists(),
+    reason="run `make artifacts` first",
+)
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        return json.loads((ARTIFACTS / "manifest.json").read_text())
+
+    def test_every_file_exists(self, manifest):
+        for e in manifest["artifacts"]:
+            assert (ARTIFACTS / e["file"]).exists(), e["name"]
+
+    def test_expected_artifact_set(self, manifest):
+        names = {e["name"] for e in manifest["artifacts"]}
+        for loss in aot.SWEEP_LOSSES:
+            assert f"init_resnet_{loss}" in names
+            for bs in aot.TRAIN_BATCH_SIZES:
+                assert f"train_resnet_{loss}_bs{bs}" in names
+            assert f"predict_resnet_{loss}_bs{aot.PREDICT_BATCH}" in names
+        assert "init_mlp_hinge" in names
+        assert f"loss_eval_hinge_n{aot.LOSS_EVAL_N}" in names
+
+    def test_train_signatures(self, manifest):
+        for e in manifest["artifacts"]:
+            if e["kind"] != "train":
+                continue
+            ins = e["inputs"]
+            n_state, bs = e["n_state"], e["batch"]
+            assert len(ins) == n_state + 4
+            assert ins[n_state]["shape"][0] == bs  # x
+            assert ins[n_state + 1]["shape"] == [bs]  # is_pos
+            assert ins[n_state + 2]["shape"] == [bs]  # is_neg
+            assert ins[n_state + 3]["shape"] == []  # lr
+            assert e["n_outputs"] == n_state + 2
+
+    def test_init_signature(self, manifest):
+        for e in manifest["artifacts"]:
+            if e["kind"] != "init":
+                continue
+            assert len(e["inputs"]) == 1
+            assert e["inputs"][0]["dtype"] == "uint32"
+            assert e["n_outputs"] == e["n_state"]
+
+    def test_margin_recorded(self, manifest):
+        assert manifest["margin"] == train.MARGIN

@@ -1,0 +1,209 @@
+"""Kernel vs oracle: the CORE correctness signal of the stack.
+
+Three implementations of each all-pairs loss must agree to float32
+tolerance on loss AND gradient:
+
+  naive O(n^2) pairwise matrix   (paper eq. 2, ground truth)
+  functional jnp sort+cumsum     (paper Algorithms 1 & 2, second oracle)
+  Pallas kernels                 (what ships in the AOT artifacts)
+
+plus the Pallas gradient must agree with jax autodiff of the naive loss.
+Hypothesis drives shapes, margins, imbalance, ties, and padding.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    hinge_loss_and_grad,
+    square_loss_and_grad,
+    ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL = 2e-3
+ATOL = 2e-3
+
+
+def _random_case(seed, n, pos_frac, scale=2.0, quantize=False):
+    rng = np.random.default_rng(seed)
+    s = rng.normal(0.0, scale, n).astype(np.float32)
+    if quantize:  # force many exact ties
+        s = np.round(s * 2.0) / 2.0
+    y = (rng.random(n) < pos_frac).astype(np.float32)
+    return jnp.asarray(s), jnp.asarray(y), jnp.asarray(1.0 - y)
+
+
+def _check_all(s, p, q, margin):
+    """Assert 3-way agreement for both losses, loss + grad."""
+    # squared hinge
+    l_naive = ref.naive_squared_hinge(s, p, q, margin)
+    l_func = ref.functional_squared_hinge(s, p, q, margin)
+    l_pal, g_pal = hinge_loss_and_grad(s, p, q, margin)
+    g_naive = ref.naive_squared_hinge_grad(s, p, q, margin)
+    g_func = ref.functional_squared_hinge_grad(s, p, q, margin)
+    scale = max(1.0, float(l_naive))
+    np.testing.assert_allclose(l_func, l_naive, rtol=RTOL, atol=ATOL * scale)
+    np.testing.assert_allclose(l_pal, l_naive, rtol=RTOL, atol=ATOL * scale)
+    gscale = max(1.0, float(jnp.max(jnp.abs(g_naive))))
+    np.testing.assert_allclose(g_func, g_naive, rtol=RTOL, atol=ATOL * gscale)
+    np.testing.assert_allclose(g_pal, g_naive, rtol=RTOL, atol=ATOL * gscale)
+    # square
+    l_naive = ref.naive_square(s, p, q, margin)
+    l_func = ref.functional_square(s, p, q, margin)
+    l_pal, g_pal = square_loss_and_grad(s, p, q, margin)
+    g_naive = ref.naive_square_grad(s, p, q, margin)
+    g_func = ref.functional_square_grad(s, p, q, margin)
+    scale = max(1.0, float(l_naive))
+    np.testing.assert_allclose(l_func, l_naive, rtol=RTOL, atol=ATOL * scale)
+    np.testing.assert_allclose(l_pal, l_naive, rtol=RTOL, atol=ATOL * scale)
+    gscale = max(1.0, float(jnp.max(jnp.abs(g_naive))))
+    np.testing.assert_allclose(g_func, g_naive, rtol=RTOL, atol=ATOL * gscale)
+    np.testing.assert_allclose(g_pal, g_naive, rtol=RTOL, atol=ATOL * gscale)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep: shapes x margins x imbalance x tie-density.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(2, 600),
+    pos_frac=st.sampled_from([0.01, 0.1, 0.3, 0.5, 0.9]),
+    margin=st.sampled_from([0.0, 0.5, 1.0, 3.0]),
+    quantize=st.booleans(),
+)
+def test_hypothesis_agreement(seed, n, pos_frac, margin, quantize):
+    s, p, q = _random_case(seed, n, pos_frac, quantize=quantize)
+    _check_all(s, p, q, margin)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_large_n_crosses_blocks(seed):
+    """n > DEFAULT_BLOCK so the carry actually crosses grid steps."""
+    s, p, q = _random_case(seed, 4096 + 37, 0.2)
+    _check_all(s, p, q, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 3, 7, 8, 9, 1023, 1024, 1025])
+def test_block_boundaries(n):
+    """Sizes straddling the Pallas block size (padding path)."""
+    s, p, q = _random_case(n, n, 0.4)
+    _check_all(s, p, q, 1.0)
+
+
+@pytest.mark.parametrize("which", ["all_pos", "all_neg"])
+def test_single_class_is_zero(which):
+    s = jnp.linspace(-2, 2, 50)
+    ones, zeros = jnp.ones(50), jnp.zeros(50)
+    p, q = (ones, zeros) if which == "all_pos" else (zeros, ones)
+    l, g = hinge_loss_and_grad(s, p, q, 1.0)
+    assert float(l) == 0.0
+    np.testing.assert_allclose(g, 0.0)
+    l, g = square_loss_and_grad(s, p, q, 1.0)
+    assert float(l) == 0.0
+    np.testing.assert_allclose(g, 0.0)
+
+
+def test_single_positive_extreme_imbalance():
+    rng = np.random.default_rng(7)
+    s = jnp.asarray(rng.normal(0, 1, 200).astype(np.float32))
+    p = jnp.zeros(200).at[13].set(1.0)
+    q = 1.0 - p
+    _check_all(s, p, q, 1.0)
+
+
+def test_padding_rows_are_ignored():
+    """Rows with both masks zero must not change loss or gradient."""
+    s, p, q = _random_case(3, 100, 0.3)
+    s_pad = jnp.concatenate([s, jnp.asarray([100.0, -100.0, 0.0])])
+    p_pad = jnp.concatenate([p, jnp.zeros(3)])
+    q_pad = jnp.concatenate([q, jnp.zeros(3)])
+    l0, g0 = hinge_loss_and_grad(s, p, q, 1.0)
+    l1, g1 = hinge_loss_and_grad(s_pad, p_pad, q_pad, 1.0)
+    np.testing.assert_allclose(l0, l1, rtol=1e-5)
+    np.testing.assert_allclose(g0, g1[:100], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g1[100:], 0.0)
+    l0, g0 = square_loss_and_grad(s, p, q, 1.0)
+    l1, g1 = square_loss_and_grad(s_pad, p_pad, q_pad, 1.0)
+    np.testing.assert_allclose(l0, l1, rtol=1e-5)
+    np.testing.assert_allclose(g1[100:], 0.0)
+
+
+def test_perfect_separation_hinge_zero_beyond_margin():
+    """All positives above all negatives by > m  =>  hinge loss exactly 0."""
+    neg = jnp.linspace(-3.0, -2.0, 40)
+    pos = jnp.linspace(2.0, 3.0, 10)
+    s = jnp.concatenate([neg, pos])
+    p = jnp.concatenate([jnp.zeros(40), jnp.ones(10)])
+    q = 1.0 - p
+    l, g = hinge_loss_and_grad(s, p, q, 1.0)
+    assert float(l) == 0.0
+    np.testing.assert_allclose(g, 0.0)
+
+
+def test_ties_exactly_at_margin_are_zero():
+    """A pair with yhat_j - yhat_k == m sits exactly on the hinge: 0 loss."""
+    s = jnp.asarray([0.0, 1.0], jnp.float32)  # neg at 0, pos at 1, m = 1
+    p = jnp.asarray([0.0, 1.0])
+    q = jnp.asarray([1.0, 0.0])
+    l, g = hinge_loss_and_grad(s, p, q, 1.0)
+    np.testing.assert_allclose(l, 0.0, atol=1e-6)
+    np.testing.assert_allclose(g, 0.0, atol=1e-6)
+
+
+def test_two_examples_hand_computed():
+    """n = 2, one pair: L = (m - (yj - yk))^2 = (1 - (0.3 - 0.8))^2."""
+    s = jnp.asarray([0.8, 0.3], jnp.float32)  # neg first
+    p = jnp.asarray([0.0, 1.0])
+    q = jnp.asarray([1.0, 0.0])
+    expected = (1.0 - (0.3 - 0.8)) ** 2
+    l, _ = hinge_loss_and_grad(s, p, q, 1.0)
+    np.testing.assert_allclose(l, expected, rtol=1e-6)
+    l, _ = square_loss_and_grad(s, p, q, 1.0)
+    np.testing.assert_allclose(l, expected, rtol=1e-6)
+
+
+def test_grad_matches_autodiff_of_naive():
+    """Closed-form kernel gradient == jax.grad of the naive double sum."""
+    s, p, q = _random_case(11, 257, 0.25)
+    for m in (0.0, 1.0):
+        g_auto = jax.grad(lambda s_: ref.naive_squared_hinge(s_, p, q, m))(s)
+        _, g_pal = hinge_loss_and_grad(s, p, q, m)
+        np.testing.assert_allclose(g_pal, g_auto, rtol=1e-3, atol=1e-3)
+        g_auto = jax.grad(lambda s_: ref.naive_square(s_, p, q, m))(s)
+        _, g_pal = square_loss_and_grad(s, p, q, m)
+        np.testing.assert_allclose(g_pal, g_auto, rtol=1e-3, atol=1e-3)
+
+
+def test_monotone_improvement_decreases_hinge():
+    """Raising a positive score (or lowering a negative) never increases L."""
+    s, p, q = _random_case(5, 64, 0.3)
+    l0, _ = hinge_loss_and_grad(s, p, q, 1.0)
+    j = int(jnp.argmax(p))
+    s_up = s.at[j].add(0.5)
+    l1, _ = hinge_loss_and_grad(s_up, p, q, 1.0)
+    assert float(l1) <= float(l0) + 1e-5
+
+
+def test_jit_and_block_size_invariance():
+    s, p, q = _random_case(21, 777, 0.15)
+    l_ref = ref.naive_squared_hinge(s, p, q, 1.0)
+    for block in (8, 64, 1024):
+        l, _ = hinge_loss_and_grad(s, p, q, 1.0, block=block)
+        np.testing.assert_allclose(l, l_ref, rtol=1e-4)
+    jitted = jax.jit(lambda *a: hinge_loss_and_grad(*a, 1.0))
+    l, _ = jitted(s, p, q)
+    np.testing.assert_allclose(l, l_ref, rtol=1e-4)

@@ -1,0 +1,140 @@
+"""L2 loss wrappers: custom-VJP correctness, normalization, AUCM algebra."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import losses
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _case(seed=0, n=128, pos_frac=0.3):
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.normal(0, 1, n).astype(np.float32))
+    y = jnp.asarray((rng.random(n) < pos_frac).astype(np.float32))
+    return s, y, 1.0 - y
+
+
+def test_hinge_wrapper_matches_normalized_naive():
+    s, p, q = _case()
+    expected = ref.naive_squared_hinge(s, p, q, 1.0) / ref.pair_count(p, q)
+    got = losses.allpairs_squared_hinge(s, p, q)
+    np.testing.assert_allclose(got, expected, rtol=1e-4)
+
+
+def test_square_wrapper_matches_normalized_naive():
+    s, p, q = _case(1)
+    expected = ref.naive_square(s, p, q, 1.0) / ref.pair_count(p, q)
+    got = losses.allpairs_square_loss(s, p, q)
+    np.testing.assert_allclose(got, expected, rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["hinge", "square"])
+def test_custom_vjp_matches_autodiff_of_naive(name):
+    s, p, q = _case(2, 200, 0.2)
+    pairwise = losses.LOSSES[name].fn
+    naive = losses.naive_squared_hinge if name == "hinge" else losses.naive_square
+    g_fast = jax.grad(lambda s_: pairwise(s_, p, q))(s)
+    g_ref = jax.grad(lambda s_: naive(s_, p, q))(s)
+    np.testing.assert_allclose(g_fast, g_ref, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["hinge", "square"])
+def test_vjp_scales_with_cotangent(name):
+    """bwd must multiply by the upstream cotangent g."""
+    s, p, q = _case(3, 64, 0.4)
+    pairwise = losses.LOSSES[name].fn
+    g1 = jax.grad(lambda s_: pairwise(s_, p, q))(s)
+    g3 = jax.grad(lambda s_: 3.0 * pairwise(s_, p, q))(s)
+    np.testing.assert_allclose(g3, 3.0 * g1, rtol=1e-5)
+
+
+def test_grad_through_scores_chain():
+    """Gradient flows through a model-like transformation of scores."""
+    s, p, q = _case(4, 50, 0.3)
+    w = jnp.float32(0.7)
+
+    def f(w_):
+        return losses.allpairs_squared_hinge(jax.nn.sigmoid(w_ * s), p, q)
+
+    g = jax.grad(f)(w)
+    # finite difference check
+    eps = 1e-3
+    fd = (f(w + eps) - f(w - eps)) / (2 * eps)
+    np.testing.assert_allclose(g, fd, rtol=5e-2, atol=1e-4)
+
+
+def test_normalization_batchsize_invariant():
+    """Duplicating the batch leaves the normalized loss unchanged."""
+    s, p, q = _case(5, 80, 0.25)
+    l1 = losses.allpairs_squared_hinge(s, p, q)
+    s2, p2, q2 = jnp.tile(s, 2), jnp.tile(p, 2), jnp.tile(q, 2)
+    l2 = losses.allpairs_squared_hinge(s2, p2, q2)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4)
+
+
+def test_single_class_batch_is_finite():
+    s = jnp.linspace(0.1, 0.9, 16)
+    zero = jnp.zeros(16)
+    one = jnp.ones(16)
+    assert jnp.isfinite(losses.allpairs_squared_hinge(s, one, zero))
+    assert float(losses.allpairs_squared_hinge(s, one, zero)) == 0.0
+    assert jnp.isfinite(losses.logistic(s, one, zero))
+
+
+def test_logistic_matches_bce():
+    s, p, q = _case(6, 100, 0.5)
+    s = jax.nn.sigmoid(s)  # probabilities
+    expected = -(p * jnp.log(s) + q * jnp.log(1 - s)).mean()
+    got = losses.logistic(s, p, q)
+    np.testing.assert_allclose(got, expected, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# AUCM (LIBAUC baseline)
+# ---------------------------------------------------------------------------
+
+
+def test_aucm_value_hand_computed():
+    s = jnp.asarray([0.9, 0.8, 0.2, 0.1], jnp.float32)
+    p = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    q = 1.0 - p
+    aux = jnp.asarray([0.5, 0.3, 0.2], jnp.float32)  # a, b, alpha
+    mean_pos, mean_neg = 0.85, 0.15
+    var_pos = np.mean([(0.9 - 0.5) ** 2, (0.8 - 0.5) ** 2])
+    var_neg = np.mean([(0.2 - 0.3) ** 2, (0.1 - 0.3) ** 2])
+    expected = var_pos + var_neg + 2 * 0.2 * (1.0 + mean_neg - mean_pos) - 0.04
+    got = losses.aucm(s, p, q, aux, 1.0)
+    np.testing.assert_allclose(got, expected, rtol=1e-5)
+
+
+def test_aucm_optimal_a_b_are_class_means():
+    """At the saddle point a* = E+[h], b* = E-[h] (grad wrt a,b is zero)."""
+    s, p, q = _case(7, 64, 0.4)
+    mean_pos = float(jnp.sum(p * s) / jnp.sum(p))
+    mean_neg = float(jnp.sum(q * s) / jnp.sum(q))
+    aux = jnp.asarray([mean_pos, mean_neg, 0.1], jnp.float32)
+    g = jax.grad(lambda a_: losses.aucm(s, p, q, a_, 1.0))(aux)
+    np.testing.assert_allclose(g[0], 0.0, atol=1e-5)
+    np.testing.assert_allclose(g[1], 0.0, atol=1e-5)
+
+
+def test_aucm_alpha_gradient_sign():
+    """d L / d alpha = 2 (m + E-[h] - E+[h]) - 2 alpha."""
+    s, p, q = _case(8, 64, 0.3)
+    aux = jnp.asarray([0.0, 0.0, 0.5], jnp.float32)
+    mean_pos = jnp.sum(p * s) / jnp.sum(p)
+    mean_neg = jnp.sum(q * s) / jnp.sum(q)
+    expected = 2.0 * (1.0 + mean_neg - mean_pos) - 2.0 * 0.5
+    g = jax.grad(lambda a_: losses.aucm(s, p, q, a_, 1.0))(aux)
+    np.testing.assert_allclose(g[2], expected, rtol=1e-4)
+
+
+def test_registry_complete():
+    assert set(losses.LOSSES) == {"hinge", "square", "logistic", "aucm"}
+    assert losses.LOSSES["hinge"].pairwise
+    assert losses.LOSSES["aucm"].needs_aux
+    assert not losses.LOSSES["logistic"].pairwise

@@ -1,0 +1,84 @@
+"""Model shape/finiteness/determinism checks for MLP and MiniResNet."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as mm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name", ["mlp", "resnet"])
+class TestModels:
+    def test_output_shape_and_range(self, name):
+        m = mm.MODELS[name]
+        params = m.init(jax.random.PRNGKey(0))
+        for bs in (1, 4, 17):
+            x = jax.random.normal(jax.random.PRNGKey(bs), (bs, *m.input_shape))
+            s = m.apply(params, x)
+            assert s.shape == (bs,)
+            assert jnp.all((s > 0.0) & (s < 1.0)), "sigmoid output range"
+            assert jnp.all(jnp.isfinite(s))
+
+    def test_init_deterministic(self, name):
+        m = mm.MODELS[name]
+        p1 = m.init(jax.random.PRNGKey(42))
+        p2 = m.init(jax.random.PRNGKey(42))
+        for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_different_seeds_differ(self, name):
+        m = mm.MODELS[name]
+        p1 = jax.tree_util.tree_leaves(m.init(jax.random.PRNGKey(0)))
+        p2 = jax.tree_util.tree_leaves(m.init(jax.random.PRNGKey(1)))
+        assert any(not np.allclose(a, b) for a, b in zip(p1, p2))
+
+    def test_gradients_flow_to_all_params(self, name):
+        m = mm.MODELS[name]
+        params = m.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, *m.input_shape))
+
+        def loss(p):
+            return jnp.sum(m.apply(p, x) ** 2)
+
+        grads = jax.grad(loss)(params)
+        for leaf in jax.tree_util.tree_leaves(grads):
+            assert jnp.all(jnp.isfinite(leaf))
+        # at least one nonzero grad leaf per layer group
+        nonzero = [bool(jnp.any(leaf != 0)) for leaf in jax.tree_util.tree_leaves(grads)]
+        assert sum(nonzero) >= len(nonzero) // 2
+
+    def test_flatten_order_stable(self, name):
+        """tree_flatten order is what the AOT manifest relies on."""
+        m = mm.MODELS[name]
+        params = m.init(jax.random.PRNGKey(0))
+        flat1, td1 = jax.tree_util.tree_flatten(params)
+        flat2, td2 = jax.tree_util.tree_flatten(m.init(jax.random.PRNGKey(0)))
+        assert td1 == td2
+        assert [a.shape for a in flat1] == [a.shape for a in flat2]
+
+
+def test_resnet_param_count_reproduction_scale():
+    """~80k budget: big enough to learn, small enough to sweep on CPU."""
+    m = mm.MODELS["resnet"]
+    n = mm.param_count(m.init(jax.random.PRNGKey(0)))
+    assert 20_000 < n < 200_000, n
+
+
+def test_resnet_downsamples():
+    """Spatial dims shrink by 2 at each later stage (GAP still works)."""
+    m = mm.MiniResNet(image_hw=16)
+    params = m.init(jax.random.PRNGKey(0))
+    x = jnp.ones((2, 16, 16, 3))
+    s = m.apply(params, x)
+    assert s.shape == (2,)
+
+
+def test_mlp_depth_configurable():
+    m = mm.MLP(in_dim=10, hidden=(5,))
+    params = m.init(jax.random.PRNGKey(0))
+    assert set(params) == {"dense0", "dense1"}
+    s = m.apply(params, jnp.ones((3, 10)))
+    assert s.shape == (3,)

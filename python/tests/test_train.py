@@ -1,0 +1,131 @@
+"""Train-step factories and optimizers: learning actually happens."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import losses, model as mm, optim, train
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _separable_batch(n=64, pos_frac=0.5, seed=0):
+    """Linearly separable features: positives shifted by +2 along dim 0."""
+    rng = np.random.default_rng(seed)
+    y = (rng.random(n) < pos_frac).astype(np.float32)
+    x = rng.normal(0, 1, (n, 64)).astype(np.float32)
+    x[:, 0] += 2.0 * y
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(1.0 - y)
+
+
+def _auc(scores, y):
+    order = np.argsort(scores)
+    ranks = np.empty(len(scores))
+    ranks[order] = np.arange(1, len(scores) + 1)
+    n_pos, n_neg = y.sum(), (1 - y).sum()
+    return (ranks[y == 1].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg)
+
+
+@pytest.mark.parametrize("loss_name", list(losses.LOSSES))
+def test_loss_decreases_and_auc_improves(loss_name):
+    mlp = mm.MODELS["mlp"]
+    spec = losses.LOSSES[loss_name]
+    step = jax.jit(train.make_train_step(mlp, spec))
+    state = train.make_init(mlp, spec)(jnp.uint32(0))
+    x, p, q = _separable_batch(128, 0.3)
+    first = last = None
+    for i in range(60):
+        state, loss, scores = step(state, x, p, q, jnp.float32(0.1))
+        if i == 0:
+            first = float(loss)
+            auc0 = _auc(np.asarray(scores), np.asarray(p))
+        last = float(loss)
+    auc1 = _auc(np.asarray(scores), np.asarray(p))
+    assert np.isfinite(last)
+    assert last < first, (loss_name, first, last)
+    assert auc1 > max(0.8, auc0), (loss_name, auc0, auc1)
+
+
+@pytest.mark.parametrize("loss_name", ["hinge", "logistic"])
+def test_padding_mask_ignored_in_training(loss_name):
+    """A padded batch must produce the same step as the unpadded one."""
+    mlp = mm.MODELS["mlp"]
+    spec = losses.LOSSES[loss_name]
+    step = jax.jit(train.make_train_step(mlp, spec))
+    state = train.make_init(mlp, spec)(jnp.uint32(1))
+    x, p, q = _separable_batch(50, 0.3, seed=3)
+    pad = 14
+    x_pad = jnp.concatenate([x, jnp.zeros((pad, 64))])
+    p_pad = jnp.concatenate([p, jnp.zeros(pad)])
+    q_pad = jnp.concatenate([q, jnp.zeros(pad)])
+    s1, l1, _ = step(state, x, p, q, jnp.float32(0.05))
+    s2, l2, _ = step(state, x_pad, p_pad, q_pad, jnp.float32(0.05))
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(s1), jax.tree_util.tree_leaves(s2)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+def test_sgd_momentum_update_rule():
+    opt = optim.SGDMomentum(momentum=0.5)
+    params = {"w": jnp.asarray([1.0, 2.0])}
+    state = opt.init(params)
+    grads = {"w": jnp.asarray([0.1, -0.2])}
+    p1, s1 = opt.update(grads, state, params, 0.1)
+    np.testing.assert_allclose(p1["w"], [1.0 - 0.01, 2.0 + 0.02], rtol=1e-6)
+    p2, s2 = opt.update(grads, s1, p1, 0.1)
+    # v2 = 0.5 * 0.1 + 0.1 = 0.15
+    np.testing.assert_allclose(s2["w"], [0.15, -0.3], rtol=1e-6)
+
+
+def test_pesg_ascends_alpha_and_clips():
+    opt = optim.PESG(momentum=0.0, gamma=0.0)
+    params = {"w": jnp.asarray([1.0]), "aucm_aux": jnp.asarray([0.2, 0.3, 0.5])}
+    state = opt.init(params)
+    grads = {"w": jnp.asarray([1.0]), "aucm_aux": jnp.asarray([1.0, 1.0, 1.0])}
+    p1, _ = opt.update(grads, state, params, 0.1)
+    np.testing.assert_allclose(p1["w"], [0.9], rtol=1e-6)  # descent
+    np.testing.assert_allclose(p1["aucm_aux"][0], 0.1, rtol=1e-5)  # descent a
+    np.testing.assert_allclose(p1["aucm_aux"][2], 0.6, rtol=1e-5)  # ASCENT alpha
+    # clipping: drive alpha negative
+    params2 = {"w": jnp.asarray([1.0]), "aucm_aux": jnp.asarray([0.0, 0.0, 0.01])}
+    grads2 = {"w": jnp.asarray([0.0]), "aucm_aux": jnp.asarray([0.0, 0.0, -1.0])}
+    p2, _ = opt.update(grads2, opt.init(params2), params2, 0.1)
+    assert float(p2["aucm_aux"][2]) == 0.0
+
+
+def test_pesg_weight_decay_only_on_weights():
+    opt = optim.PESG(momentum=0.0, gamma=0.1)
+    params = {"w": jnp.asarray([1.0]), "aucm_aux": jnp.asarray([1.0, 1.0, 0.0])}
+    zero = {"w": jnp.asarray([0.0]), "aucm_aux": jnp.asarray([0.0, 0.0, 0.0])}
+    p1, _ = opt.update(zero, opt.init(params), params, 1.0)
+    np.testing.assert_allclose(p1["w"], [0.9], rtol=1e-6)  # decayed
+    np.testing.assert_allclose(p1["aucm_aux"][:2], [1.0, 1.0], rtol=1e-6)  # not
+
+
+def test_loss_eval_matches_direct_loss():
+    spec = losses.LOSSES["hinge"]
+    fn = train.make_loss_eval(spec)
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.normal(0, 1, 256).astype(np.float32))
+    y = jnp.asarray((rng.random(256) < 0.2).astype(np.float32))
+    np.testing.assert_allclose(
+        fn(s, y, 1 - y), losses.allpairs_squared_hinge(s, y, 1 - y), rtol=1e-6
+    )
+
+
+def test_loss_eval_rejects_aucm():
+    with pytest.raises(ValueError):
+        train.make_loss_eval(losses.LOSSES["aucm"])
+
+
+def test_init_state_structure():
+    mlp = mm.MODELS["mlp"]
+    state = train.make_init(mlp, losses.LOSSES["aucm"])(jnp.uint32(0))
+    params, opt_state = state
+    assert "aucm_aux" in params
+    assert params["aucm_aux"].shape == (3,)
+    # momentum mirrors params exactly
+    assert jax.tree_util.tree_structure(params) == jax.tree_util.tree_structure(
+        opt_state
+    )

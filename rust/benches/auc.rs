@@ -1,0 +1,30 @@
+//! AUC computation bench: the model-selection hot path of the sweep
+//! (validation AUC runs once per epoch per job).  Also benches the full
+//! ROC curve construction.
+
+use allpairs::data::Rng;
+use allpairs::metrics::{auc, roc_curve};
+use allpairs::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("ALLPAIRS_BENCH_QUICK").as_deref() == Ok("1");
+    let sizes: &[usize] = if quick {
+        &[1_000, 10_000]
+    } else {
+        &[1_000, 10_000, 100_000, 1_000_000]
+    };
+    let mut bench = Bench::from_env();
+    let mut rng = Rng::new(7);
+    for &n in sizes {
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let labels: Vec<f32> = (0..n)
+            .map(|_| if rng.uniform() < 0.1 { 1.0 } else { 0.0 })
+            .collect();
+        bench.run(format!("auc/n={n}"), || auc(&scores, &labels));
+        if n <= 100_000 {
+            bench.run(format!("roc_curve/n={n}"), || roc_curve(&scores, &labels).len());
+        }
+    }
+    bench.write_csv("results/bench_auc.csv")?;
+    Ok(())
+}

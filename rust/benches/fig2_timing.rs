@@ -1,0 +1,57 @@
+//! Figure 2 bench: loss + gradient wall time vs n, per algorithm.
+//!
+//! `cargo bench --bench fig2_timing` prints one measurement per
+//! (algorithm, n) and writes `results/bench_fig2.csv`.  Quick mode:
+//! `ALLPAIRS_BENCH_QUICK=1 cargo bench --bench fig2_timing`.
+
+use allpairs::data::Rng;
+use allpairs::losses::figure2_losses;
+use allpairs::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("ALLPAIRS_BENCH_QUICK").as_deref() == Ok("1");
+    let sizes: &[usize] = if quick {
+        &[100, 1_000, 10_000]
+    } else {
+        &[100, 1_000, 10_000, 100_000, 1_000_000]
+    };
+    let naive_cap = if quick { 1_000 } else { 10_000 };
+
+    let mut bench = Bench::from_env();
+    let mut rng = Rng::new(20230223);
+    for &n in sizes {
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let is_pos: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        for loss in figure2_losses(1.0) {
+            if loss.complexity() == "O(n^2)" && n > naive_cap {
+                continue;
+            }
+            bench.run(format!("{}/n={n}", loss.name()), || {
+                loss.loss_and_grad(&scores, &is_pos).0
+            });
+        }
+    }
+    // Perf ablation: allocation-per-call vs reusable scratch buffers on
+    // the O(n log n) hinge sweep (EXPERIMENTS.md §Perf).
+    use allpairs::losses::functional::{HingeScratch, SquaredHinge};
+    use allpairs::losses::PairwiseLoss;
+    let n = if quick { 10_000 } else { 1_000_000 };
+    let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let is_pos: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+    let hinge = SquaredHinge::new(1.0);
+    bench.run(format!("hinge_alloc_per_call/n={n}"), || {
+        hinge.loss_and_grad(&scores, &is_pos).0
+    });
+    let mut grad = Vec::new();
+    let mut scratch = HingeScratch::default();
+    bench.run(format!("hinge_scratch_reuse/n={n}"), || {
+        hinge.loss_and_grad_with(&scores, &is_pos, &mut grad, &mut scratch)
+    });
+    bench.run(format!("hinge_loss_only/n={n}"), || {
+        hinge.loss_only(&scores, &is_pos)
+    });
+
+    bench.write_csv("results/bench_fig2.csv")?;
+    eprintln!("wrote results/bench_fig2.csv");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Data-path benches: synthetic generation, imbalance subsetting and the
+//! batch-fill hot loop (the only host-side work between PJRT executions).
+
+use allpairs::data::synth::{generate, SynthSpec, SYNTH_DATASETS};
+use allpairs::data::{BatchPlan, Rng};
+use allpairs::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let mut bench = Bench::from_env();
+    let spec = SynthSpec {
+        n_train: 2_000,
+        n_test: 100,
+        ..SYNTH_DATASETS[0]
+    };
+
+    bench.run("synth/generate_2000_images", || {
+        generate(&spec, 1).0.len()
+    });
+
+    let (pool, _) = generate(&spec, 1);
+    let mut rng = Rng::new(2);
+    bench.run("imbalance/to_0.01", || {
+        pool.imbalance(0.01, &mut rng).len()
+    });
+
+    let train = pool.imbalance(0.1, &mut Rng::new(3));
+    let indices: Vec<u32> = (0..train.len() as u32).collect();
+    for &bs in &[10usize, 100, 1000] {
+        let row = train.row_len();
+        let mut x = vec![0.0f32; bs * row];
+        let mut p = vec![0.0f32; bs];
+        let mut q = vec![0.0f32; bs];
+        bench.run(format!("batch_fill/epoch_bs{bs}"), || {
+            let plan = BatchPlan::new(&indices, bs, &mut rng);
+            let mut iter = plan.iter(&train);
+            let mut total = 0usize;
+            while let Some(c) = iter.fill_next(&mut x, &mut p, &mut q) {
+                total += c;
+            }
+            total
+        });
+    }
+    bench.write_csv("results/bench_sampler.csv")?;
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! End-to-end train-step throughput through the PJRT artifacts: the L3
+//! hot path (host staging + one PJRT execution per step) per batch size
+//! and loss.  Requires `make artifacts`.
+
+use allpairs::data::{Dataset, Rng};
+use allpairs::runtime::Runtime;
+use allpairs::train::Trainer;
+use allpairs::util::bench::Bench;
+
+fn image_batch_dataset(n: usize, rng: &mut Rng) -> Dataset {
+    let px = 16 * 16 * 3;
+    let x: Vec<f32> = (0..n * px).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..n).map(|i| (i % 5 == 0) as u8 as f32).collect();
+    Dataset::new(x, y, 16, 3)
+}
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping train_step bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let quick = std::env::var("ALLPAIRS_BENCH_QUICK").as_deref() == Ok("1");
+    let batches: &[usize] = if quick { &[10, 100] } else { &[10, 100, 1000] };
+    let losses: &[&str] = if quick {
+        &["hinge"]
+    } else {
+        &["hinge", "square", "logistic", "aucm"]
+    };
+
+    let runtime = Runtime::new("artifacts")?;
+    let mut bench = Bench::from_env();
+    let mut rng = Rng::new(5);
+    let data = image_batch_dataset(2000, &mut rng);
+
+    for &loss in losses {
+        for &bs in batches {
+            let mut trainer = Trainer::new(&runtime, "resnet", loss, bs)?;
+            trainer.init(0)?;
+            let indices: Vec<u32> = (0..bs as u32).collect();
+            // one epoch over exactly one batch = one train step + staging
+            bench.run(format!("train_step/{loss}/bs{bs}"), || {
+                trainer
+                    .train_epoch(&data, &indices, 0.01, &mut rng)
+                    .unwrap()
+                    .mean_loss
+            });
+        }
+    }
+
+    // predict path (used for per-epoch validation AUC)
+    let mut trainer = Trainer::new(&runtime, "resnet", "hinge", 100)?;
+    trainer.init(0)?;
+    let eval_idx: Vec<u32> = (0..1000).collect();
+    bench.run("predict/resnet/1000_examples", || {
+        trainer.predict(&data, &eval_idx).unwrap().len()
+    });
+
+    bench.write_csv("results/bench_train_step.csv")?;
+    Ok(())
+}

@@ -1,0 +1,265 @@
+//! Experiment configuration: JSON-loadable, CLI-overridable.
+//!
+//! The defaults reproduce the paper's protocol (section 4.2) at
+//! reproduction scale: three synthetic datasets, imratio grid
+//! {0.1, 0.01, 0.001}, batch grid {10, 50, 100, 500, 1000},
+//! loss-dependent learning-rate grids, five seeds, max-validation-AUC
+//! model selection.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Learning-rate grid for one loss (the paper uses wider grids for the
+/// baselines than for the hinge loss, which diverges at large rates).
+pub fn default_lr_grid(loss: &str) -> Vec<f64> {
+    match loss {
+        // paper: 1e-4 .. 1e-1 for the proposed squared hinge
+        "hinge" | "square" => vec![1e-3, 1e-2, 3.16e-2, 1e-1],
+        // paper: 1e-4 .. 1e2 for LIBAUC and logistic
+        _ => vec![1e-3, 1e-2, 1e-1, 1.0],
+    }
+}
+
+/// Full sweep configuration (Table 2 / Figure 3 protocol).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepConfig {
+    /// Synthetic dataset names (see `data::synth::SYNTH_DATASETS`).
+    pub datasets: Vec<String>,
+    /// Train-set positive-label proportions.
+    pub imratios: Vec<f64>,
+    /// Training losses to compare.
+    pub losses: Vec<String>,
+    /// Batch sizes (must have matching AOT artifacts).
+    pub batch_sizes: Vec<usize>,
+    /// Random seeds (model init + subtrain/validation split).
+    pub seeds: Vec<u32>,
+    /// Training epochs per run.
+    pub epochs: usize,
+    /// Validation fraction of the (imbalanced) train set.
+    pub val_fraction: f64,
+    /// Model name (must have matching AOT artifacts).
+    pub model: String,
+    /// Dataset generation seed (shared across the sweep).
+    pub data_seed: u64,
+    /// Worker threads (each owns a PJRT runtime).
+    pub workers: usize,
+    /// Optional cap on train-pool size (smoke runs).
+    pub max_train: Option<usize>,
+    /// Use only the largest `k` learning rates of each loss's grid
+    /// (budgeted reproduction runs; None = the full paper grid).
+    pub max_lrs: Option<usize>,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            datasets: vec![
+                "synth-cifar".into(),
+                "synth-stl".into(),
+                "synth-pets".into(),
+            ],
+            imratios: vec![0.1, 0.01, 0.001],
+            losses: vec!["hinge".into(), "aucm".into(), "logistic".into()],
+            batch_sizes: vec![10, 50, 100, 500, 1000],
+            seeds: vec![0, 1, 2, 3, 4],
+            epochs: 20,
+            val_fraction: 0.2,
+            model: "resnet".into(),
+            data_seed: 20230223, // the paper's date, for flavor
+            workers: num_cpus(),
+            max_train: None,
+            max_lrs: None,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// Load from JSON; absent fields keep their defaults.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let mut c = Self::default();
+        let strings = |v: &Json| -> crate::Result<Vec<String>> {
+            v.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("expected array of strings"))?
+                .iter()
+                .map(|s| {
+                    Ok(s.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("expected string"))?
+                        .to_string())
+                })
+                .collect()
+        };
+        let f64s = |v: &Json| -> crate::Result<Vec<f64>> {
+            v.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("expected array of numbers"))?
+                .iter()
+                .map(|n| n.as_f64().ok_or_else(|| anyhow::anyhow!("expected number")))
+                .collect()
+        };
+        if let Some(v) = j.get("datasets") {
+            c.datasets = strings(v)?;
+        }
+        if let Some(v) = j.get("imratios") {
+            c.imratios = f64s(v)?;
+        }
+        if let Some(v) = j.get("losses") {
+            c.losses = strings(v)?;
+        }
+        if let Some(v) = j.get("batch_sizes") {
+            c.batch_sizes = f64s(v)?.into_iter().map(|n| n as usize).collect();
+        }
+        if let Some(v) = j.get("seeds") {
+            c.seeds = f64s(v)?.into_iter().map(|n| n as u32).collect();
+        }
+        if let Some(v) = j.get("epochs") {
+            c.epochs = v.as_usize().ok_or_else(|| anyhow::anyhow!("epochs"))?;
+        }
+        if let Some(v) = j.get("val_fraction") {
+            c.val_fraction = v.as_f64().ok_or_else(|| anyhow::anyhow!("val_fraction"))?;
+        }
+        if let Some(v) = j.get("model") {
+            c.model = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("model"))?
+                .to_string();
+        }
+        if let Some(v) = j.get("data_seed") {
+            c.data_seed = v.as_f64().ok_or_else(|| anyhow::anyhow!("data_seed"))? as u64;
+        }
+        if let Some(v) = j.get("workers") {
+            c.workers = v.as_usize().ok_or_else(|| anyhow::anyhow!("workers"))?;
+        }
+        if let Some(v) = j.get("max_train") {
+            c.max_train = v.as_usize();
+        }
+        if let Some(v) = j.get("max_lrs") {
+            c.max_lrs = v.as_usize();
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let strings = |v: &[String]| Json::Arr(v.iter().map(Json::str).collect());
+        let nums = |v: &[f64]| Json::Arr(v.iter().map(|&n| Json::num(n)).collect());
+        Json::obj([
+            ("datasets", strings(&self.datasets)),
+            ("imratios", nums(&self.imratios)),
+            ("losses", strings(&self.losses)),
+            (
+                "batch_sizes",
+                Json::Arr(self.batch_sizes.iter().map(|&b| Json::num(b as f64)).collect()),
+            ),
+            (
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("val_fraction", Json::num(self.val_fraction)),
+            ("model", Json::str(&self.model)),
+            ("data_seed", Json::num(self.data_seed as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            (
+                "max_train",
+                match self.max_train {
+                    Some(v) => Json::num(v as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "max_lrs",
+                match self.max_lrs {
+                    Some(v) => Json::num(v as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().dumps())?;
+        Ok(())
+    }
+
+    /// Learning-rate grid for a loss, optionally truncated to the
+    /// largest `max_lrs` entries (the grids are sorted ascending).
+    pub fn lr_grid(&self, loss: &str) -> Vec<f64> {
+        let grid = default_lr_grid(loss);
+        match self.max_lrs {
+            Some(k) if k < grid.len() => grid[grid.len() - k..].to_vec(),
+            _ => grid,
+        }
+    }
+
+    /// Total number of training runs the sweep will schedule.
+    pub fn n_runs(&self) -> usize {
+        let lrs: usize = self.losses.iter().map(|l| self.lr_grid(l).len()).sum();
+        self.datasets.len() * self.imratios.len() * self.seeds.len() * self.batch_sizes.len() * lrs
+    }
+}
+
+/// Best-effort physical parallelism.
+pub fn num_cpus() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_protocol() {
+        let c = SweepConfig::default();
+        assert_eq!(c.imratios, vec![0.1, 0.01, 0.001]);
+        assert_eq!(c.batch_sizes, vec![10, 50, 100, 500, 1000]);
+        assert_eq!(c.seeds.len(), 5);
+        assert!((c.val_fraction - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lr_grid_is_loss_dependent() {
+        assert!(default_lr_grid("hinge").iter().all(|&lr| lr <= 0.1));
+        assert!(default_lr_grid("logistic").contains(&1.0));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = SweepConfig {
+            epochs: 3,
+            max_train: Some(100),
+            ..Default::default()
+        };
+        let path = std::env::temp_dir().join("allpairs_cfg_test.json");
+        c.save(&path).unwrap();
+        let back = SweepConfig::load(&path).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn n_runs_counts_product() {
+        let c = SweepConfig {
+            datasets: vec!["a".into()],
+            imratios: vec![0.1],
+            losses: vec!["hinge".into()],
+            batch_sizes: vec![10, 50],
+            seeds: vec![0, 1],
+            ..Default::default()
+        };
+        assert_eq!(c.n_runs(), 2 * 2 * default_lr_grid("hinge").len());
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let path = std::env::temp_dir().join("allpairs_cfg_partial.json");
+        std::fs::write(&path, r#"{"epochs": 7}"#).unwrap();
+        let c = SweepConfig::load(&path).unwrap();
+        assert_eq!(c.epochs, 7);
+        assert_eq!(c.model, "resnet");
+    }
+}

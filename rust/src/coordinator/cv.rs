@@ -1,0 +1,130 @@
+//! Table 2 + Figure 3 orchestration: generate data, expand the grid,
+//! run the sweep, select, aggregate, and emit reports.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::SweepConfig;
+use crate::data::synth;
+use crate::report::figures::write_csv;
+use crate::report::table::{figure3_table, table2};
+use crate::sweep::runner::JobData;
+use crate::sweep::scheduler::{run_sweep_with, ProgressFn};
+use crate::sweep::select::{aggregate, select_per_seed, Cell};
+use crate::sweep::{grid, results, RunResult};
+
+/// Generate (and cache in memory) the shared dataset pools for a config.
+pub fn build_datasets(config: &SweepConfig) -> crate::Result<HashMap<String, JobData>> {
+    let mut map = HashMap::new();
+    for name in &config.datasets {
+        let mut spec = synth::spec_by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}"))?;
+        if let Some(cap) = config.max_train {
+            spec.n_train = spec.n_train.min(cap);
+            spec.n_test = spec.n_test.min(cap);
+        }
+        let (train_pool, test) = synth::generate(&spec, config.data_seed);
+        map.insert(
+            name.clone(),
+            JobData {
+                train_pool: Arc::new(train_pool),
+                test: Arc::new(test),
+            },
+        );
+    }
+    Ok(map)
+}
+
+/// Artifacts of a completed sweep.
+pub struct SweepOutput {
+    pub results: Vec<RunResult>,
+    pub cells: Vec<Cell>,
+}
+
+/// Run the full cross-validation experiment and write all report files
+/// into `out_dir`: `sweep_results.jsonl`, `table2.md`, `fig3.md`,
+/// `fig3.csv`.
+pub fn run(
+    config: &SweepConfig,
+    artifacts_dir: &Path,
+    out_dir: &Path,
+    progress: Option<ProgressFn>,
+) -> crate::Result<SweepOutput> {
+    std::fs::create_dir_all(out_dir)?;
+    let datasets = build_datasets(config)?;
+    let jobs = grid::expand(config);
+    // Incremental persistence: each completed run lands in the JSONL
+    // immediately, so a truncated sweep remains analyzable via `report`.
+    let mut writer = results::JsonlWriter::create(out_dir.join("sweep_results.jsonl"))?;
+    let on_result: crate::sweep::scheduler::OnResultFn = Box::new(move |r| {
+        let _ = writer.append(r);
+    });
+    let run_results = run_sweep_with(
+        artifacts_dir,
+        jobs,
+        datasets,
+        config.workers,
+        progress,
+        Some(on_result),
+    )?;
+    let output = summarize(run_results, out_dir)?;
+    Ok(output)
+}
+
+/// Selection + aggregation + report emission (separated so `report`ing
+/// can re-run from a saved JSONL without re-training).
+pub fn summarize(run_results: Vec<RunResult>, out_dir: &Path) -> crate::Result<SweepOutput> {
+    let selections = select_per_seed(&run_results);
+    let cells = aggregate(&selections);
+    std::fs::write(out_dir.join("table2.md"), table2(&cells))?;
+    std::fs::write(out_dir.join("fig3.md"), figure3_table(&cells))?;
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.dataset.clone(),
+                format!("{}", c.imratio),
+                c.loss.clone(),
+                format!("{:.6}", c.test_auc.mean()),
+                format!("{:.6}", c.test_auc.std()),
+                format!("{}", c.n_seeds),
+            ]
+        })
+        .collect();
+    write_csv(
+        out_dir.join("fig3.csv"),
+        &["dataset", "imratio", "loss", "test_auc_mean", "test_auc_sd", "seeds"],
+        &rows,
+    )?;
+    Ok(SweepOutput {
+        results: run_results,
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_datasets_respects_cap() {
+        let config = SweepConfig {
+            datasets: vec!["synth-pets".into()],
+            max_train: Some(64),
+            ..Default::default()
+        };
+        let ds = build_datasets(&config).unwrap();
+        assert_eq!(ds["synth-pets"].train_pool.len(), 64);
+        assert_eq!(ds["synth-pets"].test.len(), 64);
+    }
+
+    #[test]
+    fn unknown_dataset_is_error() {
+        let config = SweepConfig {
+            datasets: vec!["nope".into()],
+            ..Default::default()
+        };
+        assert!(build_datasets(&config).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment orchestration: one module per paper experiment.
+//!
+//! * [`timing`] — Figure 2: loss+gradient wall time vs data size for the
+//!   naive / functional / logistic implementations.
+//! * [`cv`] — Table 2 + Figure 3: the full cross-validation sweep over
+//!   datasets × imratios × losses × batch sizes × learning rates × seeds,
+//!   driven through the PJRT artifacts.
+//! * [`monitor`] — the paper's section-5 use case: monitoring the
+//!   full-set all-pairs loss every epoch in the same O(n log n) as AUC.
+
+pub mod cv;
+pub mod monitor;
+pub mod timing;

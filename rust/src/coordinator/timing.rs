@@ -1,0 +1,195 @@
+//! Figure 2 reproduction: computation time of loss + gradient vs n.
+//!
+//! Protocol (paper section 4.1): for each data size n, draw n standard
+//! normal predictions with balanced labels, then time one loss+gradient
+//! evaluation per algorithm.  The naive methods are skipped beyond
+//! [`TimingConfig::naive_cap`] (they are quadratic; the paper's laptop
+//! stopped around 10^4 in reasonable time too).
+//!
+//! Output: one row per (algorithm, n) with median-of-repeats seconds,
+//! plus the fitted log-log slope per algorithm — the paper's
+//! "asymptotic slope" claim made quantitative.
+
+use std::time::Instant;
+
+use crate::data::Rng;
+use crate::losses::figure2_losses;
+use crate::report::figures::{loglog_slope, Series};
+
+/// Configuration of the timing experiment.
+#[derive(Debug, Clone)]
+pub struct TimingConfig {
+    /// Data sizes to measure (paper: 10^1 .. 10^7).
+    pub sizes: Vec<usize>,
+    /// Timing repeats per point (median reported).
+    pub repeats: usize,
+    /// Largest n at which the O(n²) naive methods run.
+    pub naive_cap: usize,
+    /// Margin for the pairwise losses.
+    pub margin: f32,
+}
+
+impl Default for TimingConfig {
+    fn default() -> Self {
+        Self {
+            sizes: (1..=7).map(|e| 10usize.pow(e)).collect(),
+            repeats: 3,
+            naive_cap: 30_000,
+            margin: 1.0,
+        }
+    }
+}
+
+/// One measured point.
+#[derive(Debug, Clone)]
+pub struct TimingPoint {
+    pub algorithm: &'static str,
+    pub complexity: &'static str,
+    pub n: usize,
+    pub seconds: f64,
+}
+
+/// Run the experiment; returns all measured points.
+pub fn run(config: &TimingConfig) -> Vec<TimingPoint> {
+    let losses = figure2_losses(config.margin);
+    let mut rng = Rng::new(20230223);
+    let mut points = Vec::new();
+    for &n in &config.sizes {
+        // Balanced labels, standard normal predictions (paper protocol).
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let is_pos: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        for loss in &losses {
+            if loss.complexity() == "O(n^2)" && n > config.naive_cap {
+                continue;
+            }
+            let mut times = Vec::with_capacity(config.repeats);
+            for _ in 0..config.repeats {
+                let t0 = Instant::now();
+                let (value, grad) = loss.loss_and_grad(&scores, &is_pos);
+                let dt = t0.elapsed().as_secs_f64();
+                std::hint::black_box((value, grad.len()));
+                times.push(dt);
+            }
+            times.sort_by(|a, b| a.total_cmp(b));
+            points.push(TimingPoint {
+                algorithm: loss.name(),
+                complexity: loss.complexity(),
+                n,
+                seconds: times[times.len() / 2],
+            });
+        }
+    }
+    points
+}
+
+/// Group points into plot series per algorithm.
+pub fn to_series(points: &[TimingPoint]) -> Vec<Series> {
+    let mut names: Vec<&'static str> = points.iter().map(|p| p.algorithm).collect();
+    names.dedup();
+    names.sort_unstable();
+    names.dedup();
+    names
+        .into_iter()
+        .map(|name| Series {
+            name: name.to_string(),
+            points: points
+                .iter()
+                .filter(|p| p.algorithm == name)
+                .map(|p| (p.n as f64, p.seconds))
+                .collect(),
+        })
+        .collect()
+}
+
+/// Fitted log-log slope per algorithm over the largest sizes (where the
+/// asymptotic regime dominates): the Figure 2 claim in one number each.
+pub fn slopes(points: &[TimingPoint], tail_points: usize) -> Vec<(String, f64)> {
+    to_series(points)
+        .into_iter()
+        .map(|s| {
+            let mut pts = s.points.clone();
+            pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+            let tail: Vec<(f64, f64)> = pts
+                .iter()
+                .rev()
+                .take(tail_points)
+                .copied()
+                .collect();
+            (s.name, loglog_slope(&tail))
+        })
+        .collect()
+}
+
+/// Largest n each algorithm completes within `budget_seconds` (the
+/// paper's "in 1 second" comparison: naive ~10^3 vs functional ~10^6).
+pub fn max_n_within(points: &[TimingPoint], budget_seconds: f64) -> Vec<(String, usize)> {
+    to_series(points)
+        .into_iter()
+        .map(|s| {
+            let max_n = s
+                .points
+                .iter()
+                .filter(|&&(_, secs)| secs <= budget_seconds)
+                .map(|&(n, _)| n as usize)
+                .max()
+                .unwrap_or(0);
+            (s.name, max_n)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Vec<TimingPoint> {
+        run(&TimingConfig {
+            sizes: vec![10, 100, 1000],
+            repeats: 1,
+            naive_cap: 1000,
+            margin: 1.0,
+        })
+    }
+
+    #[test]
+    fn all_algorithms_measured() {
+        let pts = small();
+        let names: std::collections::BTreeSet<_> = pts.iter().map(|p| p.algorithm).collect();
+        assert_eq!(names.len(), 5);
+        assert!(pts.iter().all(|p| p.seconds >= 0.0));
+    }
+
+    #[test]
+    fn naive_capped() {
+        let pts = run(&TimingConfig {
+            sizes: vec![10, 100],
+            repeats: 1,
+            naive_cap: 50,
+            margin: 1.0,
+        });
+        assert!(!pts
+            .iter()
+            .any(|p| p.complexity == "O(n^2)" && p.n > 50));
+        // functional still measured at 100
+        assert!(pts
+            .iter()
+            .any(|p| p.algorithm == "functional_squared_hinge" && p.n == 100));
+    }
+
+    #[test]
+    fn series_and_slopes_shape() {
+        let pts = small();
+        let series = to_series(&pts);
+        assert_eq!(series.len(), 5);
+        let sl = slopes(&pts, 3);
+        assert_eq!(sl.len(), 5);
+    }
+
+    #[test]
+    fn max_n_within_budget() {
+        let pts = small();
+        for (_, n) in max_n_within(&pts, 10.0) {
+            assert!(n >= 1000); // everything finishes tiny sizes in 10 s
+        }
+    }
+}

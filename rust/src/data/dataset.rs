@@ -1,0 +1,240 @@
+//! In-memory dataset container and the paper's split protocol.
+//!
+//! Protocol (paper section 4.2):
+//!
+//! 1. start from a balanced train pool + a balanced test set;
+//! 2. **imbalance** the train pool by removing positives until the
+//!    desired `imratio` (proportion of positive labels) is reached;
+//! 3. split the imbalanced train set 80/20 into **subtrain** (gradients)
+//!    and **validation** (hyper-parameter/epoch selection), re-randomized
+//!    per seed.
+
+use super::rng::Rng;
+
+/// A dense NHWC f32 dataset with {0,1} labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Row-major `[n, hw, hw, channels]` pixel data (or `[n, dim]` for
+    /// feature datasets with `hw == 0`).
+    pub x: Vec<f32>,
+    /// Labels: 1.0 positive, 0.0 negative.
+    pub y: Vec<f32>,
+    /// Image side (0 for flat feature data).
+    pub hw: usize,
+    /// Channels (or the feature dimension when `hw == 0`).
+    pub channels: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<f32>, hw: usize, channels: usize) -> Self {
+        let row = if hw == 0 { channels } else { hw * hw * channels };
+        assert_eq!(x.len(), y.len() * row, "x/y size mismatch");
+        Self { x, y, hw, channels }
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Scalars per example.
+    pub fn row_len(&self) -> usize {
+        if self.hw == 0 {
+            self.channels
+        } else {
+            self.hw * self.hw * self.channels
+        }
+    }
+
+    /// Pixel slice of example `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let r = self.row_len();
+        &self.x[i * r..(i + 1) * r]
+    }
+
+    /// Number of positive examples.
+    pub fn n_pos(&self) -> usize {
+        self.y.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Proportion of positive labels.
+    pub fn pos_fraction(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.n_pos() as f64 / self.len() as f64
+    }
+
+    /// Materialize a subset by index.
+    pub fn subset(&self, indices: &[u32]) -> Dataset {
+        let r = self.row_len();
+        let mut x = Vec::with_capacity(indices.len() * r);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            let i = i as usize;
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset::new(x, y, self.hw, self.channels)
+    }
+
+    /// Remove positives at random until `pos_fraction() ≈ imratio`
+    /// (paper: "observations associated with positive examples were
+    /// removed until the desired class imbalance was achieved").
+    ///
+    /// Keeps all negatives.  Guarantees at least one positive remains.
+    pub fn imbalance(&self, imratio: f64, rng: &mut Rng) -> Dataset {
+        assert!(imratio > 0.0 && imratio < 1.0, "imratio in (0,1)");
+        let pos_idx: Vec<u32> = (0..self.len() as u32)
+            .filter(|&i| self.y[i as usize] != 0.0)
+            .collect();
+        let neg_idx: Vec<u32> = (0..self.len() as u32)
+            .filter(|&i| self.y[i as usize] == 0.0)
+            .collect();
+        let n_neg = neg_idx.len() as f64;
+        // imratio = n_pos / (n_pos + n_neg)  =>  n_pos = imratio/(1-imratio) n_neg
+        let keep = ((imratio / (1.0 - imratio)) * n_neg).round().max(1.0) as usize;
+        let keep = keep.min(pos_idx.len());
+        let mut shuffled = pos_idx;
+        rng.shuffle(&mut shuffled);
+        shuffled.truncate(keep);
+        let mut all: Vec<u32> = neg_idx;
+        all.extend_from_slice(&shuffled);
+        all.sort_unstable(); // stable example order; shuffling is the sampler's job
+        self.subset(&all)
+    }
+}
+
+/// Index-level subtrain/validation split of a training set.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub subtrain: Vec<u32>,
+    pub validation: Vec<u32>,
+}
+
+impl Split {
+    /// Random `1 - val_fraction` / `val_fraction` split (paper: 80/20),
+    /// stratified so that the validation set gets its proportional share
+    /// of the (possibly very few) positives — with extreme imbalance an
+    /// unstratified split can easily leave validation with zero positives,
+    /// making validation AUC undefined.
+    pub fn stratified(y: &[f32], val_fraction: f64, rng: &mut Rng) -> Split {
+        assert!((0.0..1.0).contains(&val_fraction));
+        let mut subtrain = Vec::new();
+        let mut validation = Vec::new();
+        for class in [1.0_f32, 0.0] {
+            let mut idx: Vec<u32> = (0..y.len() as u32)
+                .filter(|&i| y[i as usize] == class)
+                .collect();
+            rng.shuffle(&mut idx);
+            let n_val = ((idx.len() as f64) * val_fraction).round() as usize;
+            // keep at least one of each class on both sides when possible
+            let n_val = n_val.clamp(usize::from(idx.len() >= 2), idx.len().saturating_sub(1));
+            validation.extend_from_slice(&idx[..n_val]);
+            subtrain.extend_from_slice(&idx[n_val..]);
+        }
+        subtrain.sort_unstable();
+        validation.sort_unstable();
+        Split {
+            subtrain,
+            validation,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, pos_frac: f64, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let y: Vec<f32> = (0..n)
+            .map(|_| if rng.uniform() < pos_frac { 1.0 } else { 0.0 })
+            .collect();
+        let x: Vec<f32> = (0..n * 4).map(|i| i as f32).collect();
+        Dataset::new(x, y, 0, 4)
+    }
+
+    #[test]
+    fn subset_preserves_rows() {
+        let d = toy(10, 0.5, 1);
+        let s = d.subset(&[2, 5, 7]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.row(0), d.row(2));
+        assert_eq!(s.row(2), d.row(7));
+        assert_eq!(s.y, vec![d.y[2], d.y[5], d.y[7]]);
+    }
+
+    #[test]
+    fn imbalance_hits_target_ratio() {
+        let d = toy(10_000, 0.5, 2);
+        let mut rng = Rng::new(3);
+        for imratio in [0.1, 0.01, 0.001] {
+            let im = d.imbalance(imratio, &mut rng);
+            let achieved = im.pos_fraction();
+            assert!(
+                (achieved - imratio).abs() / imratio < 0.25,
+                "target {imratio}, achieved {achieved}"
+            );
+            assert!(im.n_pos() >= 1);
+            // all negatives kept
+            assert_eq!(im.len() - im.n_pos(), d.len() - d.n_pos());
+        }
+    }
+
+    #[test]
+    fn imbalance_keeps_at_least_one_positive() {
+        let d = toy(100, 0.5, 4);
+        let mut rng = Rng::new(5);
+        let im = d.imbalance(0.0001, &mut rng);
+        assert!(im.n_pos() >= 1);
+    }
+
+    #[test]
+    fn stratified_split_disjoint_and_complete() {
+        let d = toy(500, 0.1, 6);
+        let mut rng = Rng::new(7);
+        let split = Split::stratified(&d.y, 0.2, &mut rng);
+        let mut all: Vec<u32> = split
+            .subtrain
+            .iter()
+            .chain(&split.validation)
+            .copied()
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..500u32).collect::<Vec<_>>());
+        let inter: Vec<u32> = split
+            .subtrain
+            .iter()
+            .filter(|i| split.validation.contains(i))
+            .copied()
+            .collect();
+        assert!(inter.is_empty());
+    }
+
+    #[test]
+    fn stratified_split_has_positives_on_both_sides() {
+        let d = toy(1000, 0.01, 8);
+        let mut rng = Rng::new(9);
+        let split = Split::stratified(&d.y, 0.2, &mut rng);
+        let pos_sub = split.subtrain.iter().filter(|&&i| d.y[i as usize] != 0.0).count();
+        let pos_val = split
+            .validation
+            .iter()
+            .filter(|&&i| d.y[i as usize] != 0.0)
+            .count();
+        assert!(pos_sub >= 1, "no positives in subtrain");
+        assert!(pos_val >= 1, "no positives in validation");
+    }
+
+    #[test]
+    #[should_panic(expected = "imratio in (0,1)")]
+    fn imbalance_validates_ratio() {
+        let d = toy(10, 0.5, 1);
+        d.imbalance(1.5, &mut Rng::new(0));
+    }
+}

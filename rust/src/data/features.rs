@@ -1,0 +1,126 @@
+//! Synthetic feature-vector datasets (the MLP-path analogue of
+//! [`super::synth`]'s image generators).
+//!
+//! Used by the quickstart / L-BFGS examples and the integration tests:
+//! positives are shifted along a subset of dimensions (optionally with
+//! anisotropic scales to produce the ill-conditioned regime the paper's
+//! §5 LBFGS discussion targets).
+
+use super::dataset::Dataset;
+use super::rng::Rng;
+
+/// Specification for a feature dataset.
+#[derive(Debug, Clone, Copy)]
+pub struct FeatureSpec {
+    /// Feature dimension.
+    pub dim: usize,
+    /// Number of leading dimensions carrying class signal.
+    pub signal_dims: usize,
+    /// Mean shift applied to positive examples on the signal dimensions.
+    pub shift: f32,
+    /// Positive-class probability.
+    pub pos_frac: f64,
+    /// If true, dimension `d` is scaled by `1 + 0.25 d` (bad conditioning).
+    pub anisotropic: bool,
+}
+
+impl Default for FeatureSpec {
+    fn default() -> Self {
+        Self {
+            dim: 64,
+            signal_dims: 8,
+            shift: 1.5,
+            pos_frac: 0.3,
+            anisotropic: false,
+        }
+    }
+}
+
+/// Generate `n` examples under `spec`, deterministically from `rng`.
+pub fn generate(spec: &FeatureSpec, n: usize, rng: &mut Rng) -> Dataset {
+    assert!(spec.signal_dims <= spec.dim);
+    let mut x = Vec::with_capacity(n * spec.dim);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let pos = rng.uniform() < spec.pos_frac;
+        y.push(if pos { 1.0 } else { 0.0 });
+        for d in 0..spec.dim {
+            let scale = if spec.anisotropic {
+                1.0 + d as f32 * 0.25
+            } else {
+                1.0
+            };
+            let shift = if pos && d < spec.signal_dims {
+                spec.shift
+            } else {
+                0.0
+            };
+            x.push(rng.normal() as f32 * scale + shift);
+        }
+    }
+    Dataset::new(x, y, 0, spec.dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = FeatureSpec::default();
+        let a = generate(&spec, 50, &mut Rng::new(1));
+        let b = generate(&spec, 50, &mut Rng::new(1));
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.len(), 50);
+        assert_eq!(a.row_len(), 64);
+    }
+
+    #[test]
+    fn signal_separates_class_means() {
+        let spec = FeatureSpec {
+            pos_frac: 0.5,
+            ..Default::default()
+        };
+        let d = generate(&spec, 2000, &mut Rng::new(2));
+        let (mut pos_mean, mut neg_mean) = (0.0_f64, 0.0_f64);
+        let (mut np_, mut nn) = (0.0, 0.0);
+        for i in 0..d.len() {
+            let v = d.row(i)[0] as f64; // a signal dimension
+            if d.y[i] != 0.0 {
+                pos_mean += v;
+                np_ += 1.0;
+            } else {
+                neg_mean += v;
+                nn += 1.0;
+            }
+        }
+        assert!(pos_mean / np_ - neg_mean / nn > 1.0);
+    }
+
+    #[test]
+    fn anisotropic_scales_grow() {
+        let spec = FeatureSpec {
+            anisotropic: true,
+            pos_frac: 0.0,
+            ..Default::default()
+        };
+        let d = generate(&spec, 3000, &mut Rng::new(3));
+        let var = |dim: usize| -> f64 {
+            let vs: Vec<f64> = (0..d.len()).map(|i| d.row(i)[dim] as f64).collect();
+            let m = vs.iter().sum::<f64>() / vs.len() as f64;
+            vs.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / vs.len() as f64
+        };
+        assert!(var(63) > 50.0 * var(0));
+    }
+
+    #[test]
+    fn pos_frac_respected() {
+        let spec = FeatureSpec {
+            pos_frac: 0.1,
+            ..Default::default()
+        };
+        let d = generate(&spec, 5000, &mut Rng::new(4));
+        let frac = d.pos_fraction();
+        assert!((frac - 0.1).abs() < 0.02, "{frac}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Data substrates: deterministic RNG, synthetic image generators,
+//! dataset containers, splits and the imbalance-aware batch sampler.
+//!
+//! The paper's experiments use CIFAR10 / STL10 / Cat&Dog; those downloads
+//! are unavailable in this environment (repro band 0), so [`synth`]
+//! provides three seeded generators with the same *experimental role*:
+//! a learnable nonlinear image → binary-label signal whose difficulty and
+//! class balance we control exactly.  See DESIGN.md §2 for the
+//! substitution argument.
+//!
+//! Everything is deterministic from a `u64` seed — a sweep re-run
+//! reproduces bit-identical datasets, splits and batch orders.
+
+pub mod dataset;
+pub mod features;
+pub mod rng;
+pub mod sampler;
+pub mod synth;
+
+pub use dataset::{Dataset, Split};
+pub use features::FeatureSpec;
+pub use rng::Rng;
+pub use sampler::{BatchIter, BatchPlan};
+pub use synth::{SynthSpec, SYNTH_DATASETS};

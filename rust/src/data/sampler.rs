@@ -1,0 +1,168 @@
+//! Batch sampling: shuffled fixed-shape batches with padding masks.
+//!
+//! The AOT train-step artifacts have a *static* batch dimension, so the
+//! final ragged batch of an epoch is zero-padded and described by
+//! `is_pos`/`is_neg` masks (padding rows have both masks zero — the
+//! kernels then ignore them exactly; see `python/compile/kernels/`).
+//!
+//! [`BatchIter`] writes into caller-owned buffers so the training hot
+//! loop performs no per-batch allocation.
+
+use super::dataset::Dataset;
+use super::rng::Rng;
+
+/// Epoch-level batch plan: a shuffled order over a subset of a dataset.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    order: Vec<u32>,
+    batch_size: usize,
+}
+
+impl BatchPlan {
+    /// Shuffle `indices` (a view into `dataset`) into batches of
+    /// `batch_size`.
+    pub fn new(indices: &[u32], batch_size: usize, rng: &mut Rng) -> Self {
+        assert!(batch_size > 0);
+        let mut order = indices.to_vec();
+        rng.shuffle(&mut order);
+        Self { order, batch_size }
+    }
+
+    /// Number of batches in the epoch (final one possibly ragged).
+    pub fn n_batches(&self) -> usize {
+        self.order.len().div_ceil(self.batch_size)
+    }
+
+    pub fn iter<'a>(&'a self, dataset: &'a Dataset) -> BatchIter<'a> {
+        BatchIter {
+            plan: self,
+            dataset,
+            next_batch: 0,
+        }
+    }
+}
+
+/// Iterator filling fixed-shape buffers batch by batch.
+pub struct BatchIter<'a> {
+    plan: &'a BatchPlan,
+    dataset: &'a Dataset,
+    next_batch: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    /// Fill `x` (`batch_size * row_len`), `is_pos`, `is_neg`
+    /// (`batch_size`) for the next batch.  Returns the number of real
+    /// (non-padding) rows, or `None` when the epoch is exhausted.
+    ///
+    /// Padding rows are zeroed in all three buffers.
+    pub fn fill_next(
+        &mut self,
+        x: &mut [f32],
+        is_pos: &mut [f32],
+        is_neg: &mut [f32],
+    ) -> Option<usize> {
+        let bs = self.plan.batch_size;
+        let row = self.dataset.row_len();
+        assert_eq!(x.len(), bs * row, "x buffer size");
+        assert_eq!(is_pos.len(), bs);
+        assert_eq!(is_neg.len(), bs);
+        let start = self.next_batch * bs;
+        if start >= self.plan.order.len() {
+            return None;
+        }
+        self.next_batch += 1;
+        let end = (start + bs).min(self.plan.order.len());
+        let count = end - start;
+        for (slot, &idx) in self.plan.order[start..end].iter().enumerate() {
+            x[slot * row..(slot + 1) * row].copy_from_slice(self.dataset.row(idx as usize));
+            let pos = self.dataset.y[idx as usize] != 0.0;
+            is_pos[slot] = if pos { 1.0 } else { 0.0 };
+            is_neg[slot] = if pos { 0.0 } else { 1.0 };
+        }
+        // zero the padding tail
+        x[count * row..].fill(0.0);
+        is_pos[count..].fill(0.0);
+        is_neg[count..].fill(0.0);
+        Some(count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        let y: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        let x: Vec<f32> = (0..n * 2).map(|i| i as f32).collect();
+        Dataset::new(x, y, 0, 2)
+    }
+
+    #[test]
+    fn epoch_covers_every_example_once() {
+        let d = toy(25);
+        let indices: Vec<u32> = (0..25).collect();
+        let plan = BatchPlan::new(&indices, 8, &mut Rng::new(0));
+        assert_eq!(plan.n_batches(), 4);
+        let mut seen = vec![0usize; 25];
+        let (mut x, mut p, mut q) = (vec![0.0; 16], vec![0.0; 8], vec![0.0; 8]);
+        let mut it = plan.iter(&d);
+        let mut total = 0;
+        while let Some(count) = it.fill_next(&mut x, &mut p, &mut q) {
+            total += count;
+            for slot in 0..count {
+                // recover the example id from its first feature (2*i)
+                let id = (x[slot * 2] / 2.0) as usize;
+                seen[id] += 1;
+            }
+        }
+        assert_eq!(total, 25);
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn masks_are_complementary_and_padded() {
+        let d = toy(10);
+        let indices: Vec<u32> = (0..10).collect();
+        let plan = BatchPlan::new(&indices, 8, &mut Rng::new(1));
+        let (mut x, mut p, mut q) = (vec![0.0; 16], vec![0.0; 8], vec![0.0; 8]);
+        let mut it = plan.iter(&d);
+        let c1 = it.fill_next(&mut x, &mut p, &mut q).unwrap();
+        assert_eq!(c1, 8);
+        for i in 0..8 {
+            assert_eq!(p[i] + q[i], 1.0);
+        }
+        let c2 = it.fill_next(&mut x, &mut p, &mut q).unwrap();
+        assert_eq!(c2, 2);
+        for i in 2..8 {
+            assert_eq!(p[i], 0.0);
+            assert_eq!(q[i], 0.0);
+            assert_eq!(x[i * 2], 0.0);
+        }
+        assert!(it.fill_next(&mut x, &mut p, &mut q).is_none());
+    }
+
+    #[test]
+    fn shuffle_differs_by_seed_but_is_deterministic() {
+        let indices: Vec<u32> = (0..100).collect();
+        let a = BatchPlan::new(&indices, 10, &mut Rng::new(2));
+        let b = BatchPlan::new(&indices, 10, &mut Rng::new(2));
+        let c = BatchPlan::new(&indices, 10, &mut Rng::new(3));
+        assert_eq!(a.order, b.order);
+        assert_ne!(a.order, c.order);
+    }
+
+    #[test]
+    fn subset_sampling_respects_index_view() {
+        let d = toy(50);
+        let indices: Vec<u32> = (40..50).collect();
+        let plan = BatchPlan::new(&indices, 4, &mut Rng::new(4));
+        let (mut x, mut p, mut q) = (vec![0.0; 8], vec![0.0; 4], vec![0.0; 4]);
+        let mut it = plan.iter(&d);
+        while let Some(count) = it.fill_next(&mut x, &mut p, &mut q) {
+            for slot in 0..count {
+                let id = (x[slot * 2] / 2.0) as usize;
+                assert!((40..50).contains(&id));
+            }
+        }
+    }
+}

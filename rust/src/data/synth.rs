@@ -1,0 +1,304 @@
+//! Synthetic image dataset generators (the CIFAR10 / STL10 / Cat&Dog
+//! stand-ins — see DESIGN.md §2 for the substitution argument).
+//!
+//! Generation model, per dataset seed:
+//!
+//! 1. Each of `n_latent_classes` gets a smooth *prototype* pattern: a sum
+//!    of four random 2-D sinusoids per channel (low-frequency, so a small
+//!    CNN can learn it but a linear model cannot trivially).
+//! 2. An example of class `c` is the prototype, randomly translated by up
+//!    to ±2 pixels (toroidal shift — the nuisance transform standing in
+//!    for natural image variation), scaled by `signal`, plus i.i.d.
+//!    Gaussian pixel noise scaled by `noise`.
+//! 3. Binary labels follow the paper's CIFAR conversion: the first half
+//!    of the latent classes are negative, the rest positive.
+//!
+//! The three [`SYNTH_DATASETS`] mimic the *experimental roles* of the
+//! paper's sets: `synth-cifar` (easiest, most data), `synth-stl` (lower
+//! SNR, less data — STL10's role as the harder set), `synth-pets` (two
+//! latent classes — Cat&Dog's role as the binary-native set).
+
+use super::dataset::Dataset;
+use super::rng::Rng;
+
+/// Image side length shared by all synthetic datasets (NHWC, C = 3).
+pub const IMAGE_HW: usize = 16;
+/// Channels.
+pub const CHANNELS: usize = 3;
+
+/// Specification of one synthetic dataset.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthSpec {
+    /// Dataset name used in configs, reports and result files.
+    pub name: &'static str,
+    /// Number of latent classes (binary label = second half vs first).
+    pub n_latent_classes: usize,
+    /// Prototype amplitude.
+    pub signal: f32,
+    /// Pixel-noise amplitude.
+    pub noise: f32,
+    /// Balanced train-pool size (before imbalance subsetting).
+    pub n_train: usize,
+    /// Balanced test-set size (the paper's test sets are 50% positive).
+    pub n_test: usize,
+}
+
+/// The three reproduction datasets (paper: CIFAR10, STL10, Cat&Dog).
+pub const SYNTH_DATASETS: [SynthSpec; 3] = [
+    SynthSpec {
+        name: "synth-cifar",
+        n_latent_classes: 10,
+        signal: 1.0,
+        noise: 1.0,
+        n_train: 10_000,
+        n_test: 2_000,
+    },
+    SynthSpec {
+        name: "synth-stl",
+        n_latent_classes: 10,
+        signal: 0.65,
+        noise: 1.3,
+        n_train: 5_000,
+        n_test: 2_000,
+    },
+    SynthSpec {
+        name: "synth-pets",
+        n_latent_classes: 2,
+        signal: 0.85,
+        noise: 1.1,
+        n_train: 8_000,
+        n_test: 2_000,
+    },
+];
+
+/// Look a spec up by name.
+pub fn spec_by_name(name: &str) -> Option<SynthSpec> {
+    SYNTH_DATASETS.iter().copied().find(|s| s.name == name)
+}
+
+/// One latent class's sinusoid mixture: `4 components x 3 channels`.
+struct Prototype {
+    /// (amplitude, fx, fy, phase) per (component, channel)
+    comps: Vec<(f32, f32, f32, f32)>,
+}
+
+impl Prototype {
+    fn generate(rng: &mut Rng) -> Self {
+        let mut comps = Vec::with_capacity(4 * CHANNELS);
+        for _ in 0..4 * CHANNELS {
+            let amp = 0.5 + 0.5 * rng.uniform() as f32;
+            // low frequencies (1..=3 cycles across the image)
+            let fx = (1 + rng.below(3)) as f32;
+            let fy = (1 + rng.below(3)) as f32;
+            let phase = (rng.uniform() * std::f64::consts::TAU) as f32;
+            comps.push((amp, fx, fy, phase));
+        }
+        Self { comps }
+    }
+
+    /// Pixel value at (x, y, channel) with a toroidal shift (dx, dy).
+    #[inline]
+    fn value(&self, x: usize, y: usize, ch: usize, dx: f32, dy: f32) -> f32 {
+        let mut v = 0.0;
+        let inv = 1.0 / IMAGE_HW as f32;
+        for c in 0..4 {
+            let (amp, fx, fy, phase) = self.comps[ch * 4 + c];
+            let arg = std::f32::consts::TAU
+                * (fx * (x as f32 + dx) * inv + fy * (y as f32 + dy) * inv)
+                + phase;
+            v += amp * arg.sin();
+        }
+        v / 2.0
+    }
+}
+
+/// Generate the balanced train pool and the balanced test set.
+///
+/// Both are drawn from the same latent process with *disjoint* RNG
+/// streams; labels are exactly balanced in the test set (paper protocol:
+/// "each test set has no class imbalance").
+pub fn generate(spec: &SynthSpec, seed: u64) -> (Dataset, Dataset) {
+    let mut root = Rng::new(seed ^ fxhash(spec.name));
+    let mut proto_rng = root.fork(1);
+    let prototypes: Vec<Prototype> = (0..spec.n_latent_classes)
+        .map(|_| Prototype::generate(&mut proto_rng))
+        .collect();
+    let train = render_split(spec, &prototypes, &mut root.fork(2), spec.n_train, false);
+    let test = render_split(spec, &prototypes, &mut root.fork(3), spec.n_test, true);
+    (train, test)
+}
+
+/// FNV-1a of the dataset name, to decorrelate seeds across datasets.
+fn fxhash(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325_u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn render_split(
+    spec: &SynthSpec,
+    prototypes: &[Prototype],
+    rng: &mut Rng,
+    n: usize,
+    force_balanced: bool,
+) -> Dataset {
+    let px = IMAGE_HW * IMAGE_HW * CHANNELS;
+    let mut x = vec![0.0_f32; n * px];
+    let mut y = vec![0.0_f32; n];
+    let half = spec.n_latent_classes / 2;
+    for i in 0..n {
+        // latent class: uniform; balanced test alternates pos/neg halves
+        let class = if force_balanced {
+            let positive = i % 2 == 1;
+            let offset = rng.below(spec.n_latent_classes - half.max(1));
+            if positive {
+                half + offset % (spec.n_latent_classes - half)
+            } else {
+                rng.below(half.max(1))
+            }
+        } else {
+            rng.below(spec.n_latent_classes)
+        };
+        y[i] = if class >= half { 1.0 } else { 0.0 };
+        let proto = &prototypes[class];
+        let dx = (rng.below(5) as f32) - 2.0; // toroidal shift in [-2, 2]
+        let dy = (rng.below(5) as f32) - 2.0;
+        let base = i * px;
+        for yy in 0..IMAGE_HW {
+            for xx in 0..IMAGE_HW {
+                for ch in 0..CHANNELS {
+                    let signal = spec.signal * proto.value(xx, yy, ch, dx, dy);
+                    let noise = spec.noise * rng.normal() as f32 * 0.5;
+                    x[base + (yy * IMAGE_HW + xx) * CHANNELS + ch] = signal + noise;
+                }
+            }
+        }
+    }
+    Dataset::new(x, y, IMAGE_HW, CHANNELS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = SynthSpec {
+            n_train: 32,
+            n_test: 16,
+            ..SYNTH_DATASETS[0]
+        };
+        let (a_tr, a_te) = generate(&spec, 11);
+        let (b_tr, b_te) = generate(&spec, 11);
+        assert_eq!(a_tr.x, b_tr.x);
+        assert_eq!(a_te.y, b_te.y);
+    }
+
+    #[test]
+    fn seeds_and_datasets_decorrelated() {
+        let spec = SynthSpec {
+            n_train: 16,
+            n_test: 8,
+            ..SYNTH_DATASETS[0]
+        };
+        let (a, _) = generate(&spec, 1);
+        let (b, _) = generate(&spec, 2);
+        assert_ne!(a.x, b.x);
+        let spec2 = SynthSpec {
+            n_train: 16,
+            n_test: 8,
+            ..SYNTH_DATASETS[1]
+        };
+        let (c, _) = generate(&spec2, 1);
+        assert_ne!(a.x[..100], c.x[..100]);
+    }
+
+    #[test]
+    fn test_set_is_balanced() {
+        for spec in SYNTH_DATASETS.iter() {
+            let small = SynthSpec {
+                n_train: 8,
+                n_test: 400,
+                ..*spec
+            };
+            let (_, test) = generate(&small, 5);
+            let pos = test.y.iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(pos, 200, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn shapes_and_finiteness() {
+        let spec = SynthSpec {
+            n_train: 10,
+            n_test: 4,
+            ..SYNTH_DATASETS[2]
+        };
+        let (train, test) = generate(&spec, 0);
+        assert_eq!(train.len(), 10);
+        assert_eq!(test.len(), 4);
+        assert_eq!(train.x.len(), 10 * 16 * 16 * 3);
+        assert!(train.x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn signal_is_learnable_by_class_means() {
+        // Nearest-prototype-mean classification on clean-ish data must beat
+        // chance by a wide margin — i.e. the generator carries real signal.
+        let spec = SynthSpec {
+            name: "probe",
+            n_latent_classes: 2,
+            signal: 1.5,
+            noise: 0.3,
+            n_train: 400,
+            n_test: 200,
+        };
+        let (train, test) = generate(&spec, 3);
+        let px = 16 * 16 * 3;
+        let mut mean_pos = vec![0.0_f64; px];
+        let mut mean_neg = vec![0.0_f64; px];
+        let (mut np, mut nn) = (0.0, 0.0);
+        for i in 0..train.len() {
+            let target = if train.y[i] != 0.0 {
+                np += 1.0;
+                &mut mean_pos
+            } else {
+                nn += 1.0;
+                &mut mean_neg
+            };
+            for (t, &v) in target.iter_mut().zip(&train.x[i * px..(i + 1) * px]) {
+                *t += v as f64;
+            }
+        }
+        for v in &mut mean_pos {
+            *v /= np;
+        }
+        for v in &mut mean_neg {
+            *v /= nn;
+        }
+        let mut correct = 0;
+        for i in 0..test.len() {
+            let xs = &test.x[i * px..(i + 1) * px];
+            let (mut dp, mut dn) = (0.0, 0.0);
+            for (j, &v) in xs.iter().enumerate() {
+                dp += (v as f64 - mean_pos[j]).powi(2);
+                dn += (v as f64 - mean_neg[j]).powi(2);
+            }
+            let pred = if dp < dn { 1.0 } else { 0.0 };
+            if pred == test.y[i] as f64 {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.7, "class-mean accuracy only {acc}");
+    }
+
+    #[test]
+    fn spec_lookup() {
+        assert!(spec_by_name("synth-cifar").is_some());
+        assert!(spec_by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,50 @@
+//! # allpairs — log-linear all-pairs losses for unbalanced classification
+//!
+//! Production-grade reproduction of Rust & Hocking (2023), *"A Log-linear
+//! Gradient Descent Algorithm for Unbalanced Binary Classification using
+//! the All Pairs Squared Hinge Loss"*, as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **L1 (Pallas, build time)** — the paper's Algorithm 1 / Algorithm 2
+//!   sweeps as TPU-style kernels (`python/compile/kernels/`), lowered via
+//!   `jax.export`-style HLO-text AOT into `artifacts/`.
+//! * **L2 (JAX, build time)** — MiniResNet / MLP models, SGD+momentum and
+//!   PESG optimizers, four training losses (`hinge`, `square`,
+//!   `logistic`, `aucm`).
+//! * **L3 (this crate, run time)** — everything that runs: native Rust
+//!   implementations of the paper's algorithms ([`losses`]), ROC/AUC
+//!   metrics ([`metrics`]), synthetic data substrates ([`data`]), a PJRT
+//!   runtime that executes the AOT artifacts ([`runtime`]), the training
+//!   loop ([`train`]), the cross-validation hyper-parameter sweep engine
+//!   ([`sweep`]), reporting ([`report`]) and experiment orchestration
+//!   ([`coordinator`]).
+//!
+//! Python never runs on the training path: after `make artifacts`, the
+//! `allpairs` binary is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use allpairs::losses::{functional, PairwiseLoss};
+//!
+//! // The paper's O(n log n) squared hinge loss + gradient:
+//! let scores = vec![0.9_f32, 0.2, 0.6, 0.1];
+//! let is_pos = vec![1.0_f32, 0.0, 1.0, 0.0];
+//! let loss = functional::SquaredHinge::new(1.0);
+//! let (value, grad) = loss.loss_and_grad(&scores, &is_pos);
+//! assert!(value >= 0.0 && grad.len() == 4);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod losses;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sweep;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type (anyhow for rich error context).
+pub type Result<T> = anyhow::Result<T>;

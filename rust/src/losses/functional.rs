@@ -1,0 +1,338 @@
+//! The paper's contribution: functional-representation all-pairs losses.
+//!
+//! * [`Square`] — Algorithm 1: three coefficients over the positives plus
+//!   three mirrored sums over the negatives give loss *and* gradient in
+//!   O(n) with no sort.
+//! * [`SquaredHinge`] — Algorithm 2: sort by the augmented value
+//!   `vᵢ = ŷᵢ + m·I[yᵢ = −1]` (eq. 20), then one ascending sweep carrying
+//!   the coefficients `(a, b, c)` (eqs. 22–24) evaluates the loss at every
+//!   negative (eq. 25).  We extend the sweep with a running sum `t` of
+//!   positive predictions — that makes the same pass emit the closed-form
+//!   gradient for negatives — and run a mirrored descending sweep for the
+//!   positive gradients.  Total O(n log n), dominated by the sort.
+//!
+//! The scratch buffers used by the hinge sweep can be reused across calls
+//! via [`SquaredHinge::loss_and_grad_with`] + [`HingeScratch`], which keeps
+//! the training hot loop allocation-free (see EXPERIMENTS.md §Perf).
+//!
+//! Accumulators are f64: at n = 10⁷ the loss is a sum of ~10¹³-scale
+//! products and f32 accumulation would lose the low-order digits that the
+//! property tests (functional ≡ naive) check.
+
+use super::PairwiseLoss;
+
+/// Algorithm 1: all-pairs square loss in O(n).
+#[derive(Debug, Clone, Copy)]
+pub struct Square {
+    margin: f32,
+}
+
+impl Square {
+    pub fn new(margin: f32) -> Self {
+        assert!(margin >= 0.0, "margin must be non-negative");
+        Self { margin }
+    }
+}
+
+impl PairwiseLoss for Square {
+    fn name(&self) -> &'static str {
+        "functional_square"
+    }
+
+    fn complexity(&self) -> &'static str {
+        "O(n)"
+    }
+
+    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
+        assert_eq!(scores.len(), is_pos.len());
+        let m = self.margin as f64;
+        // Pass 1: the six global sums (paper eqs. 11-13 + mirrors).
+        let (mut n_pos, mut b_pos, mut c_pos) = (0.0_f64, 0.0_f64, 0.0_f64);
+        let (mut n_neg, mut s_neg, mut q_neg) = (0.0_f64, 0.0_f64, 0.0_f64);
+        for (&y, &p) in scores.iter().zip(is_pos) {
+            let y = y as f64;
+            if p != 0.0 {
+                let z = m - y;
+                n_pos += 1.0;
+                b_pos += 2.0 * z;
+                c_pos += z * z;
+            } else {
+                n_neg += 1.0;
+                s_neg += y;
+                q_neg += y * y;
+            }
+        }
+        // Loss (eq. 15): sum_k a+ yk^2 + b+ yk + c+.
+        let loss = n_pos * q_neg + b_pos * s_neg + c_pos * n_neg;
+        // Pass 2: closed-form per-element gradient.
+        let grad = scores
+            .iter()
+            .zip(is_pos)
+            .map(|(&y, &p)| {
+                let y = y as f64;
+                if p != 0.0 {
+                    (-2.0 * (n_neg * (m - y) + s_neg)) as f32
+                } else {
+                    (2.0 * n_pos * y + b_pos) as f32
+                }
+            })
+            .collect();
+        (loss, grad)
+    }
+}
+
+/// Reusable scratch for [`SquaredHinge::loss_and_grad_with`]: the sort
+/// permutation and sorted copies.  Reusing it across calls makes the sweep
+/// allocation-free after warm-up.
+#[derive(Debug, Default, Clone)]
+pub struct HingeScratch {
+    order: Vec<u32>,
+    keys: Vec<f32>,
+}
+
+/// Algorithm 2: all-pairs squared hinge loss in O(n log n).
+#[derive(Debug, Clone, Copy)]
+pub struct SquaredHinge {
+    margin: f32,
+}
+
+impl SquaredHinge {
+    pub fn new(margin: f32) -> Self {
+        assert!(margin >= 0.0, "margin must be non-negative");
+        Self { margin }
+    }
+
+    /// Loss + gradient, writing the gradient into `grad` (resized to fit)
+    /// and reusing `scratch` buffers.  The allocation-free hot path.
+    pub fn loss_and_grad_with(
+        &self,
+        scores: &[f32],
+        is_pos: &[f32],
+        grad: &mut Vec<f32>,
+        scratch: &mut HingeScratch,
+    ) -> f64 {
+        assert_eq!(scores.len(), is_pos.len());
+        let n = scores.len();
+        let m = self.margin as f64;
+        grad.clear();
+        grad.resize(n, 0.0);
+        if n == 0 {
+            return 0.0;
+        }
+
+        // Sort indices by augmented value v_i = yhat_i + m * I[neg] (eq. 20).
+        // Ties are benign: a (pos, neg) pair at equal v contributes zero
+        // loss and zero gradient, so any tie-break order is correct.
+        scratch.keys.clear();
+        scratch
+            .keys
+            .extend(scores.iter().zip(is_pos).map(|(&y, &p)| {
+                if p != 0.0 {
+                    y
+                } else {
+                    y + self.margin
+                }
+            }));
+        scratch.order.clear();
+        scratch.order.extend(0..n as u32);
+        let keys = &scratch.keys;
+        scratch
+            .order
+            .sort_unstable_by(|&a, &b| keys[a as usize].total_cmp(&keys[b as usize]));
+
+        // Ascending sweep (paper eqs. 22-25) + negative gradients.
+        let (mut a, mut b, mut c, mut t) = (0.0_f64, 0.0_f64, 0.0_f64, 0.0_f64);
+        let mut loss = 0.0_f64;
+        for &i in &scratch.order {
+            let i = i as usize;
+            let y = scores[i] as f64;
+            if is_pos[i] != 0.0 {
+                let z = m - y;
+                a += 1.0;
+                b += 2.0 * z;
+                c += z * z;
+                t += y;
+            } else {
+                loss += a * y * y + b * y + c;
+                // dL/dyk = 2 [ a_k (m + yk) - t_k ]
+                grad[i] = (2.0 * (a * (m + y) - t)) as f32;
+            }
+        }
+
+        // Descending sweep: positive gradients.
+        let (mut n_cnt, mut t_sum) = (0.0_f64, 0.0_f64);
+        for &i in scratch.order.iter().rev() {
+            let i = i as usize;
+            let y = scores[i] as f64;
+            if is_pos[i] != 0.0 {
+                // dL/dyj = -2 [ N_j (m - yj) + T_j ]
+                grad[i] = (-2.0 * (n_cnt * (m - y) + t_sum)) as f32;
+            } else {
+                n_cnt += 1.0;
+                t_sum += y;
+            }
+        }
+        loss
+    }
+
+    /// Loss only — single ascending sweep, no gradient buffers.
+    pub fn loss_only(&self, scores: &[f32], is_pos: &[f32]) -> f64 {
+        assert_eq!(scores.len(), is_pos.len());
+        let n = scores.len();
+        let m = self.margin as f64;
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let keys: Vec<f32> = scores
+            .iter()
+            .zip(is_pos)
+            .map(|(&y, &p)| if p != 0.0 { y } else { y + self.margin })
+            .collect();
+        order.sort_unstable_by(|&a, &b| keys[a as usize].total_cmp(&keys[b as usize]));
+        let (mut a, mut b, mut c) = (0.0_f64, 0.0_f64, 0.0_f64);
+        let mut loss = 0.0_f64;
+        for &i in &order {
+            let i = i as usize;
+            let y = scores[i] as f64;
+            if is_pos[i] != 0.0 {
+                let z = m - y;
+                a += 1.0;
+                b += 2.0 * z;
+                c += z * z;
+            } else {
+                loss += a * y * y + b * y + c;
+            }
+        }
+        loss
+    }
+}
+
+impl PairwiseLoss for SquaredHinge {
+    fn name(&self) -> &'static str {
+        "functional_squared_hinge"
+    }
+
+    fn complexity(&self) -> &'static str {
+        "O(n log n)"
+    }
+
+    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
+        let mut grad = Vec::new();
+        let mut scratch = HingeScratch::default();
+        let loss = self.loss_and_grad_with(scores, is_pos, &mut grad, &mut scratch);
+        (loss, grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::losses::naive::{NaiveSquare, NaiveSquaredHinge};
+
+    fn random_case(seed: u64, n: usize, pos_frac: f64) -> (Vec<f32>, Vec<f32>) {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        let scores: Vec<f32> = (0..n).map(|_| (next() * 6.0 - 3.0) as f32).collect();
+        let is_pos: Vec<f32> = (0..n)
+            .map(|_| if next() < pos_frac { 1.0 } else { 0.0 })
+            .collect();
+        (scores, is_pos)
+    }
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        let scale = 1.0_f64.max(a.abs()).max(b.abs());
+        assert!((a - b).abs() <= tol * scale, "{a} vs {b}");
+    }
+
+    #[test]
+    fn hinge_matches_naive_small() {
+        for seed in 0..20 {
+            let (s, p) = random_case(seed, 50, 0.3);
+            let (ln, gn) = NaiveSquaredHinge::new(1.0).loss_and_grad(&s, &p);
+            let (lf, gf) = SquaredHinge::new(1.0).loss_and_grad(&s, &p);
+            assert_close(ln, lf, 1e-9);
+            for (a, b) in gn.iter().zip(&gf) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn square_matches_naive_small() {
+        for seed in 0..20 {
+            let (s, p) = random_case(seed + 100, 64, 0.2);
+            let (ln, gn) = NaiveSquare::new(1.0).loss_and_grad(&s, &p);
+            let (lf, gf) = Square::new(1.0).loss_and_grad(&s, &p);
+            assert_close(ln, lf, 1e-9);
+            for (a, b) in gn.iter().zip(&gf) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn hinge_zero_margin() {
+        let (s, p) = random_case(7, 40, 0.5);
+        let (ln, _) = NaiveSquaredHinge::new(0.0).loss_and_grad(&s, &p);
+        let (lf, _) = SquaredHinge::new(0.0).loss_and_grad(&s, &p);
+        assert_close(ln, lf, 1e-9);
+    }
+
+    #[test]
+    fn hinge_tie_heavy_inputs() {
+        // Quantized scores force many exact ties in the sort keys.
+        let (mut s, p) = random_case(13, 200, 0.3);
+        for y in &mut s {
+            *y = (*y * 2.0).round() / 2.0;
+        }
+        let (ln, gn) = NaiveSquaredHinge::new(1.0).loss_and_grad(&s, &p);
+        let (lf, gf) = SquaredHinge::new(1.0).loss_and_grad(&s, &p);
+        assert_close(ln, lf, 1e-9);
+        for (a, b) in gn.iter().zip(&gf) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn loss_only_matches_full() {
+        let (s, p) = random_case(3, 333, 0.1);
+        let h = SquaredHinge::new(1.0);
+        let (full, _) = h.loss_and_grad(&s, &p);
+        assert_close(h.loss_only(&s, &p), full, 1e-12);
+    }
+
+    #[test]
+    fn scratch_reuse_is_identical() {
+        let h = SquaredHinge::new(1.0);
+        let mut grad = Vec::new();
+        let mut scratch = HingeScratch::default();
+        let (s1, p1) = random_case(1, 100, 0.4);
+        let (s2, p2) = random_case(2, 77, 0.2);
+        let l1 = h.loss_and_grad_with(&s1, &p1, &mut grad, &mut scratch);
+        let g1 = grad.clone();
+        let _ = h.loss_and_grad_with(&s2, &p2, &mut grad, &mut scratch);
+        let l1b = h.loss_and_grad_with(&s1, &p1, &mut grad, &mut scratch);
+        assert_eq!(l1, l1b);
+        assert_eq!(g1, grad);
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let h = SquaredHinge::new(1.0);
+        assert_eq!(h.loss_and_grad(&[], &[]).0, 0.0);
+        assert_eq!(h.loss_and_grad(&[0.5], &[1.0]).0, 0.0);
+        assert_eq!(h.loss_and_grad(&[0.5], &[0.0]).0, 0.0);
+    }
+
+    #[test]
+    fn perfect_separation_beyond_margin_is_zero() {
+        let s = vec![-2.0, -1.9, 2.0, 2.1];
+        let p = vec![0.0, 0.0, 1.0, 1.0];
+        let (l, g) = SquaredHinge::new(1.0).loss_and_grad(&s, &p);
+        assert_eq!(l, 0.0);
+        assert!(g.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,240 @@
+//! Extension (paper §5 future work): the all-pairs *linear* hinge loss
+//! `ℓ(z) = (m − z)₊` in O(n log n) via the same functional representation.
+//!
+//! The paper's conclusion proposes investigating "how our functional
+//! representation could be used when computing the linear hinge loss,
+//! which has non-differentiable points, so we could make use of
+//! sub-differential analysis".  The representation carries over directly:
+//! for the linear hinge, a degree-1 polynomial suffices —
+//!
+//! ```text
+//! L⁺(x) = Σ_{j: ŷⱼ − x < m} (m − ŷⱼ + x) = A(x)·x + C(x)
+//!   A(x) = #{active j}        C(x) = Σ_{active j} (m − ŷⱼ)
+//! ```
+//!
+//! so the ascending sweep carries **two** coefficients instead of three.
+//! The subgradient is piecewise constant:
+//!
+//! ```text
+//! ∂L/∂ŷₖ ∋  #{j: ŷⱼ < vₖ}          (count of active positives)
+//! ∂L/∂ŷⱼ ∋ −#{k: vₖ > ŷⱼ}          (count of active negatives)
+//! ```
+//!
+//! where we take the one-sided choice that pairs *exactly at* the margin
+//! (ŷⱼ − ŷₖ = m) contribute zero — the minimal-norm element at those
+//! non-differentiable points, consistent with the squared-hinge limit.
+//! Ties in the sort are then benign exactly as in Algorithm 2 (a pair at
+//! equality adds 0 to the loss and 0 to the chosen subgradient).
+
+use super::PairwiseLoss;
+
+/// O(n log n) all-pairs linear hinge loss with subgradient.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearHinge {
+    margin: f32,
+}
+
+impl LinearHinge {
+    pub fn new(margin: f32) -> Self {
+        assert!(margin >= 0.0, "margin must be non-negative");
+        Self { margin }
+    }
+}
+
+/// O(n²) reference for the linear hinge (tests + Figure 2 extension).
+#[derive(Debug, Clone, Copy)]
+pub struct NaiveLinearHinge {
+    margin: f32,
+}
+
+impl NaiveLinearHinge {
+    pub fn new(margin: f32) -> Self {
+        assert!(margin >= 0.0, "margin must be non-negative");
+        Self { margin }
+    }
+}
+
+impl PairwiseLoss for NaiveLinearHinge {
+    fn name(&self) -> &'static str {
+        "naive_linear_hinge"
+    }
+
+    fn complexity(&self) -> &'static str {
+        "O(n^2)"
+    }
+
+    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
+        assert_eq!(scores.len(), is_pos.len());
+        let m = self.margin as f64;
+        let mut loss = 0.0_f64;
+        let mut grad = vec![0.0_f64; scores.len()];
+        for (j, (&yj, &pj)) in scores.iter().zip(is_pos).enumerate() {
+            if pj == 0.0 {
+                continue;
+            }
+            for (k, (&yk, &pk)) in scores.iter().zip(is_pos).enumerate() {
+                if pk != 0.0 {
+                    continue;
+                }
+                let d = m - yj as f64 + yk as f64;
+                if d > 0.0 {
+                    loss += d;
+                    grad[j] -= 1.0;
+                    grad[k] += 1.0;
+                }
+            }
+        }
+        (loss, grad.into_iter().map(|g| g as f32).collect())
+    }
+}
+
+impl PairwiseLoss for LinearHinge {
+    fn name(&self) -> &'static str {
+        "functional_linear_hinge"
+    }
+
+    fn complexity(&self) -> &'static str {
+        "O(n log n)"
+    }
+
+    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
+        assert_eq!(scores.len(), is_pos.len());
+        let n = scores.len();
+        let m = self.margin as f64;
+        let mut grad = vec![0.0_f32; n];
+        if n == 0 {
+            return (0.0, grad);
+        }
+        // Augmented sort keys, as in Algorithm 2 (paper eq. 20).  The
+        // strictness choice (pairs exactly at the margin are inactive)
+        // requires breaking ties so that an equal-key *negative* precedes
+        // an equal-key *positive*: the negative's evaluation then excludes
+        // that positive.  For the loss this is immaterial (the term is 0);
+        // for the subgradient it selects the minimal-norm element.
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let keys: Vec<f32> = scores
+            .iter()
+            .zip(is_pos)
+            .map(|(&y, &p)| if p != 0.0 { y } else { y + self.margin })
+            .collect();
+        order.sort_unstable_by(|&a, &b| {
+            keys[a as usize]
+                .total_cmp(&keys[b as usize])
+                // negatives (is_pos == 0) first within a tie group
+                .then_with(|| {
+                    is_pos[a as usize]
+                        .partial_cmp(&is_pos[b as usize])
+                        .unwrap()
+                })
+        });
+
+        // Ascending sweep: degree-1 coefficients over active positives.
+        let (mut a_cnt, mut c_sum) = (0.0_f64, 0.0_f64);
+        let mut loss = 0.0_f64;
+        for &i in &order {
+            let i = i as usize;
+            let y = scores[i] as f64;
+            if is_pos[i] != 0.0 {
+                a_cnt += 1.0;
+                c_sum += m - y;
+            } else {
+                loss += a_cnt * y + c_sum;
+                grad[i] = a_cnt as f32; // subgradient: count of active positives
+            }
+        }
+        // Descending sweep: counts of active negatives for positives.
+        let mut n_cnt = 0.0_f64;
+        for &i in order.iter().rev() {
+            let i = i as usize;
+            if is_pos[i] != 0.0 {
+                grad[i] = -(n_cnt as f32);
+            } else {
+                n_cnt += 1.0;
+            }
+        }
+        (loss, grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_case(seed: u64, n: usize, pos_frac: f64) -> (Vec<f32>, Vec<f32>) {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        let s: Vec<f32> = (0..n).map(|_| (next() * 6.0 - 3.0) as f32).collect();
+        let p: Vec<f32> = (0..n)
+            .map(|_| if next() < pos_frac { 1.0 } else { 0.0 })
+            .collect();
+        (s, p)
+    }
+
+    #[test]
+    fn matches_naive_loss_exactly() {
+        for seed in 0..25 {
+            let (s, p) = random_case(seed, 80, 0.3);
+            let (ln, _) = NaiveLinearHinge::new(1.0).loss_and_grad(&s, &p);
+            let (lf, _) = LinearHinge::new(1.0).loss_and_grad(&s, &p);
+            let scale = ln.abs().max(1.0);
+            assert!((ln - lf).abs() < 1e-9 * scale, "{ln} vs {lf}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_subgradient_off_kinks() {
+        // Away from the non-differentiable points the subgradient is the
+        // gradient; random continuous scores hit kinks with prob. 0.
+        for seed in 0..25 {
+            let (s, p) = random_case(seed + 100, 60, 0.4);
+            let (_, gn) = NaiveLinearHinge::new(1.0).loss_and_grad(&s, &p);
+            let (_, gf) = LinearHinge::new(1.0).loss_and_grad(&s, &p);
+            assert_eq!(gn, gf);
+        }
+    }
+
+    #[test]
+    fn margin_boundary_pairs_are_inactive() {
+        // pos at exactly neg + m: loss 0, subgradient 0 (minimal norm).
+        let s = vec![1.0, 0.0];
+        let p = vec![1.0, 0.0];
+        let (l, g) = LinearHinge::new(1.0).loss_and_grad(&s, &p);
+        assert_eq!(l, 0.0);
+        assert_eq!(g, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn single_violating_pair_hand_computed() {
+        // pos 0.2, neg 0.5, m=1: d = 1 - 0.2 + 0.5 = 1.3; grad ±1.
+        let s = vec![0.2, 0.5];
+        let p = vec![1.0, 0.0];
+        let (l, g) = LinearHinge::new(1.0).loss_and_grad(&s, &p);
+        assert!((l - 1.3).abs() < 1e-6);
+        assert_eq!(g, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn subgradient_counts_are_integers() {
+        let (s, p) = random_case(7, 200, 0.2);
+        let (_, g) = LinearHinge::new(1.0).loss_and_grad(&s, &p);
+        for v in g {
+            assert_eq!(v, v.round());
+        }
+    }
+
+    #[test]
+    fn tie_heavy_inputs_match_naive_loss() {
+        let (mut s, p) = random_case(13, 150, 0.35);
+        for y in &mut s {
+            *y = (*y * 2.0).round() / 2.0;
+        }
+        let (ln, _) = NaiveLinearHinge::new(0.5).loss_and_grad(&s, &p);
+        let (lf, _) = LinearHinge::new(0.5).loss_and_grad(&s, &p);
+        assert!((ln - lf).abs() < 1e-9 * ln.abs().max(1.0));
+    }
+}

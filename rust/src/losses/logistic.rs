@@ -1,0 +1,97 @@
+//! Linear-time logistic loss baseline (sums over examples, not pairs).
+//!
+//! The paper's Figure 2 includes the logistic loss as the O(n) reference
+//! slope: the functional algorithms should track it up to the `log n`
+//! sort factor.  We use the numerically-stable logits formulation
+//! `log(1 + exp(-y f))` with `y ∈ {−1, +1}` on raw scores.
+
+use super::PairwiseLoss;
+
+/// Per-example logistic loss on raw (unbounded) scores.
+#[derive(Debug, Clone, Copy)]
+pub struct Logistic;
+
+/// `log(1 + exp(-z))` computed without overflow for any `z`.
+#[inline]
+pub fn log1p_exp_neg(z: f64) -> f64 {
+    if z > 0.0 {
+        (-z).exp().ln_1p()
+    } else {
+        -z + z.exp().ln_1p()
+    }
+}
+
+impl PairwiseLoss for Logistic {
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+
+    fn complexity(&self) -> &'static str {
+        "O(n)"
+    }
+
+    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
+        assert_eq!(scores.len(), is_pos.len());
+        let mut loss = 0.0_f64;
+        let grad = scores
+            .iter()
+            .zip(is_pos)
+            .map(|(&s, &p)| {
+                let y = if p != 0.0 { 1.0 } else { -1.0 };
+                let z = y * s as f64;
+                loss += log1p_exp_neg(z);
+                // d/ds log(1+exp(-ys)) = -y sigmoid(-ys)
+                let sig = 1.0 / (1.0 + z.exp());
+                (-y * sig) as f32
+            })
+            .collect();
+        (loss, grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_scores_give_log2() {
+        let s = vec![0.0; 10];
+        let p = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        let (l, g) = Logistic.loss_and_grad(&s, &p);
+        assert!((l - 10.0 * (2.0_f64).ln()).abs() < 1e-9);
+        for (gi, pi) in g.iter().zip(&p) {
+            let expect = if *pi != 0.0 { -0.5 } else { 0.5 };
+            assert!((gi - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn stable_for_extreme_scores() {
+        let s = vec![1e4, -1e4];
+        let p = vec![1.0, 0.0];
+        let (l, g) = Logistic.loss_and_grad(&s, &p);
+        assert!(l.is_finite() && l < 1e-6);
+        assert!(g.iter().all(|x| x.is_finite()));
+        // Misclassified extremes: loss ~ |z|, grad saturates at ±1.
+        let (l, g) = Logistic.loss_and_grad(&s, &[0.0, 1.0]);
+        assert!(l.is_finite() && (l - 2e4).abs() / 2e4 < 1e-6);
+        assert!((g[0] - 1.0).abs() < 1e-6 && (g[1] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let s = vec![0.3_f32, -0.7, 1.2];
+        let p = vec![1.0, 0.0, 0.0];
+        let (_, g) = Logistic.loss_and_grad(&s, &p);
+        let eps = 1e-3_f32;
+        for i in 0..s.len() {
+            let mut sp = s.clone();
+            sp[i] += eps;
+            let mut sm = s.clone();
+            sm[i] -= eps;
+            let fd = (Logistic.loss_and_grad(&sp, &p).0 - Logistic.loss_and_grad(&sm, &p).0)
+                / (2.0 * eps as f64);
+            assert!((fd - g[i] as f64).abs() < 1e-3, "i={i}: {fd} vs {}", g[i]);
+        }
+    }
+}

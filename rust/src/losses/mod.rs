@@ -1,0 +1,84 @@
+//! Native Rust implementations of the paper's loss algorithms.
+//!
+//! Three families, all computing the same mathematical objects:
+//!
+//! * [`naive`] — the O(n²) brute-force double sum over all (positive,
+//!   negative) pairs, the paper's equation (2) taken literally.  This is
+//!   the "Naive" baseline of Figure 2 and the ground truth for property
+//!   tests.
+//! * [`functional`] — the paper's contribution: Algorithm 1 (all-pairs
+//!   square loss, O(n)) and Algorithm 2 (all-pairs squared hinge loss,
+//!   O(n log n)) plus the closed-form gradients derived in DESIGN.md §3.
+//! * [`logistic`] — the linear-time per-example logistic loss, the
+//!   paper's "Logistic" timing baseline.
+//!
+//! The [`PairwiseLoss`] trait unifies them for the Figure 2 harness; every
+//! implementation returns both the loss value and the full gradient
+//! vector, because that is what one gradient-descent step needs.
+
+pub mod functional;
+pub mod linear_hinge;
+pub mod logistic;
+pub mod naive;
+pub mod weighted;
+
+/// A loss over predicted scores with {0,1} positive-class indicators.
+///
+/// `is_pos[i] == 1.0` marks example *i* positive; `0.0` marks it negative.
+/// (The Rust layer never needs the padding convention of the AOT kernels —
+/// batches here are always exact.)
+pub trait PairwiseLoss {
+    /// Human-readable name used in reports and benches.
+    fn name(&self) -> &'static str;
+
+    /// Loss value only.
+    fn loss(&self, scores: &[f32], is_pos: &[f32]) -> f64 {
+        self.loss_and_grad(scores, is_pos).0
+    }
+
+    /// Loss value and gradient w.r.t. every score.
+    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>);
+
+    /// Asymptotic complexity label (for report tables), e.g. `"O(n log n)"`.
+    fn complexity(&self) -> &'static str;
+}
+
+/// All loss implementations compared in the Figure 2 timing study.
+pub fn figure2_losses(margin: f32) -> Vec<Box<dyn PairwiseLoss + Send + Sync>> {
+    vec![
+        Box::new(naive::NaiveSquaredHinge::new(margin)),
+        Box::new(naive::NaiveSquare::new(margin)),
+        Box::new(functional::SquaredHinge::new(margin)),
+        Box::new(functional::Square::new(margin)),
+        Box::new(logistic::Logistic),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure2_set_is_complete() {
+        let names: Vec<_> = figure2_losses(1.0).iter().map(|l| l.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "naive_squared_hinge",
+                "naive_square",
+                "functional_squared_hinge",
+                "functional_square",
+                "logistic",
+            ]
+        );
+    }
+
+    #[test]
+    fn default_loss_matches_loss_and_grad() {
+        let l = functional::SquaredHinge::new(1.0);
+        let s = vec![0.3, -0.2, 0.8, 0.1];
+        let p = vec![1.0, 0.0, 1.0, 0.0];
+        let (v, _) = l.loss_and_grad(&s, &p);
+        assert!((l.loss(&s, &p) - v).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,161 @@
+//! Naive O(n²) all-pairs losses: the paper's equation (2), literally.
+//!
+//! For every positive example *j* and negative example *k* the pair
+//! contributes `ℓ(ŷⱼ − ŷₖ)` with `ℓ(z) = (m − z)²` (square) or
+//! `(m − z)²₊` (squared hinge).  Gradients are accumulated pair by pair:
+//!
+//! ```text
+//! ∂L/∂ŷⱼ += −2 (m − ŷⱼ + ŷₖ)[₊]      ∂L/∂ŷₖ += 2 (m − ŷⱼ + ŷₖ)[₊]
+//! ```
+//!
+//! This is the "Naive" baseline of Figure 2: correct, simple, quadratic.
+//! Accumulation is in f64 so that the property tests comparing against the
+//! functional algorithms are not dominated by summation error at n ≥ 10⁴.
+
+use super::PairwiseLoss;
+
+/// O(n²) all-pairs squared hinge loss.
+#[derive(Debug, Clone, Copy)]
+pub struct NaiveSquaredHinge {
+    margin: f32,
+}
+
+impl NaiveSquaredHinge {
+    pub fn new(margin: f32) -> Self {
+        assert!(margin >= 0.0, "margin must be non-negative");
+        Self { margin }
+    }
+}
+
+impl PairwiseLoss for NaiveSquaredHinge {
+    fn name(&self) -> &'static str {
+        "naive_squared_hinge"
+    }
+
+    fn complexity(&self) -> &'static str {
+        "O(n^2)"
+    }
+
+    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
+        assert_eq!(scores.len(), is_pos.len());
+        let m = self.margin as f64;
+        let mut loss = 0.0_f64;
+        let mut grad = vec![0.0_f64; scores.len()];
+        for (j, (&yj, &pj)) in scores.iter().zip(is_pos).enumerate() {
+            if pj == 0.0 {
+                continue;
+            }
+            for (k, (&yk, &pk)) in scores.iter().zip(is_pos).enumerate() {
+                if pk != 0.0 {
+                    continue;
+                }
+                let d = m - yj as f64 + yk as f64;
+                if d > 0.0 {
+                    loss += d * d;
+                    grad[j] -= 2.0 * d;
+                    grad[k] += 2.0 * d;
+                }
+            }
+        }
+        (loss, grad.into_iter().map(|g| g as f32).collect())
+    }
+}
+
+/// O(n²) all-pairs square loss (no hinge).
+#[derive(Debug, Clone, Copy)]
+pub struct NaiveSquare {
+    margin: f32,
+}
+
+impl NaiveSquare {
+    pub fn new(margin: f32) -> Self {
+        assert!(margin >= 0.0, "margin must be non-negative");
+        Self { margin }
+    }
+}
+
+impl PairwiseLoss for NaiveSquare {
+    fn name(&self) -> &'static str {
+        "naive_square"
+    }
+
+    fn complexity(&self) -> &'static str {
+        "O(n^2)"
+    }
+
+    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
+        assert_eq!(scores.len(), is_pos.len());
+        let m = self.margin as f64;
+        let mut loss = 0.0_f64;
+        let mut grad = vec![0.0_f64; scores.len()];
+        for (j, (&yj, &pj)) in scores.iter().zip(is_pos).enumerate() {
+            if pj == 0.0 {
+                continue;
+            }
+            for (k, (&yk, &pk)) in scores.iter().zip(is_pos).enumerate() {
+                if pk != 0.0 {
+                    continue;
+                }
+                let d = m - yj as f64 + yk as f64;
+                loss += d * d;
+                grad[j] -= 2.0 * d;
+                grad[k] += 2.0 * d;
+            }
+        }
+        (loss, grad.into_iter().map(|g| g as f32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_pair_hand_computed() {
+        // pos at 0.3, neg at 0.8, m = 1: d = 1 - 0.3 + 0.8 = 1.5
+        let scores = vec![0.3, 0.8];
+        let is_pos = vec![1.0, 0.0];
+        let (l, g) = NaiveSquaredHinge::new(1.0).loss_and_grad(&scores, &is_pos);
+        assert!((l - 2.25).abs() < 1e-6);
+        assert!((g[0] + 3.0).abs() < 1e-6);
+        assert!((g[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hinge_clamps_inactive_pairs() {
+        // pos well above neg by more than the margin: zero loss, zero grad.
+        let scores = vec![3.0, -3.0];
+        let is_pos = vec![1.0, 0.0];
+        let (l, g) = NaiveSquaredHinge::new(1.0).loss_and_grad(&scores, &is_pos);
+        assert_eq!(l, 0.0);
+        assert_eq!(g, vec![0.0, 0.0]);
+        // ...but the square loss still counts it.
+        let (l, _) = NaiveSquare::new(1.0).loss_and_grad(&scores, &is_pos);
+        assert!((l - 25.0).abs() < 1e-6); // (1 - 3 - 3)^2
+    }
+
+    #[test]
+    fn all_one_class_is_zero() {
+        let scores = vec![0.1, 0.2, 0.3];
+        for is_pos in [vec![1.0, 1.0, 1.0], vec![0.0, 0.0, 0.0]] {
+            let (l, g) = NaiveSquaredHinge::new(1.0).loss_and_grad(&scores, &is_pos);
+            assert_eq!(l, 0.0);
+            assert!(g.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn loss_counts_pairs() {
+        // 2 pos, 3 neg, all scores equal 0, m=1: every pair contributes 1.
+        let scores = vec![0.0; 5];
+        let is_pos = vec![1.0, 1.0, 0.0, 0.0, 0.0];
+        let (l, _) = NaiveSquaredHinge::new(1.0).loss_and_grad(&scores, &is_pos);
+        assert!((l - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "margin must be non-negative")]
+    fn negative_margin_rejected() {
+        NaiveSquaredHinge::new(-1.0);
+    }
+}

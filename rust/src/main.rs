@@ -1,0 +1,262 @@
+//! `allpairs` — L3 coordinator CLI.
+//!
+//! Subcommands map one-to-one onto the paper's experiments:
+//!
+//! * `timing`          — Figure 2 (loss+gradient wall time vs n)
+//! * `sweep`           — Table 2 + Figure 3 (cross-validation protocol)
+//! * `train`           — one training run (debugging / ad-hoc)
+//! * `report`          — re-aggregate a saved sweep JSONL
+//! * `artifacts-check` — compile every artifact and smoke-run init
+//!
+//! Argument parsing uses the in-tree `util::cli` (offline build: clap is
+//! unavailable); run with no arguments for usage.
+
+use std::path::PathBuf;
+
+use allpairs::config::SweepConfig;
+use allpairs::coordinator::{cv, timing};
+use allpairs::data::{Rng, Split};
+use allpairs::report::figures::{ascii_loglog, write_csv};
+use allpairs::runtime::Runtime;
+use allpairs::sweep::results;
+use allpairs::train::Trainer;
+use allpairs::util::cli::Args;
+
+const USAGE: &str = "\
+allpairs — log-linear all-pairs losses: coordinator
+
+USAGE: allpairs <COMMAND> [OPTIONS]
+
+Global options:
+  --artifacts DIR   artifacts directory [artifacts]
+  --out DIR         results directory   [results]
+
+COMMANDS
+  timing            Figure 2: loss+gradient wall time vs data size
+      --max-exp E       largest size 10^E            [7]
+      --repeats R       repeats per point (median)   [3]
+      --naive-cap N     largest n for O(n^2) methods [30000]
+  sweep             Table 2 + Figure 3: full hyper-parameter sweep
+      --config FILE     JSON config (defaults = paper protocol)
+      --smoke           tiny grid + tiny data (minutes, not hours)
+      --workers W       worker threads               [n_cpus]
+  train             one training run
+      --dataset D --loss L --model M --batch B --lr LR
+      --imratio R --epochs E --seed S --max-train N
+  report            re-aggregate a saved results file
+      --results FILE    sweep_results.jsonl path
+  artifacts-check   compile every artifact, smoke-run the inits
+";
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> allpairs::Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let out = PathBuf::from(args.get_str("out", "results"));
+    match args.command.as_deref() {
+        Some("timing") => cmd_timing(&args, &out),
+        Some("sweep") => cmd_sweep(&args, &artifacts, &out),
+        Some("train") => cmd_train(&args, &artifacts),
+        Some("report") => cmd_report(&args, &out),
+        Some("artifacts-check") => cmd_artifacts_check(&artifacts),
+        Some(other) => anyhow::bail!("unknown command {other:?}\n\n{USAGE}"),
+        None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_timing(args: &Args, out: &PathBuf) -> allpairs::Result<()> {
+    args.expect_known(&["artifacts", "out", "max-exp", "repeats", "naive-cap"])?;
+    let max_exp: u32 = args.get("max-exp", 7)?;
+    let config = timing::TimingConfig {
+        sizes: (1..=max_exp).map(|e| 10usize.pow(e)).collect(),
+        repeats: args.get("repeats", 3)?,
+        naive_cap: args.get("naive-cap", 30_000)?,
+        margin: 1.0,
+    };
+    eprintln!("running Figure 2 timing: sizes up to 10^{max_exp} ...");
+    let points = timing::run(&config);
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.algorithm.to_string(),
+                p.complexity.to_string(),
+                p.n.to_string(),
+                format!("{:.6e}", p.seconds),
+            ]
+        })
+        .collect();
+    std::fs::create_dir_all(out)?;
+    write_csv(
+        out.join("fig2.csv"),
+        &["algorithm", "complexity", "n", "seconds"],
+        &rows,
+    )?;
+    println!("{}", ascii_loglog(&timing::to_series(&points), 72, 20));
+    println!("fitted log-log slopes (tail):");
+    for (name, slope) in timing::slopes(&points, 3) {
+        println!("  {name:28} {slope:5.2}");
+    }
+    println!("largest n within a 1-second budget:");
+    for (name, n) in timing::max_n_within(&points, 1.0) {
+        println!("  {name:28} {n}");
+    }
+    println!("wrote {}", out.join("fig2.csv").display());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, artifacts: &PathBuf, out: &PathBuf) -> allpairs::Result<()> {
+    args.expect_known(&["artifacts", "out", "config", "smoke", "workers", "epochs"])?;
+    let mut cfg = match args.get_opt("config") {
+        Some(path) => SweepConfig::load(path)?,
+        None => SweepConfig::default(),
+    };
+    if args.flag("smoke") {
+        cfg.datasets = vec!["synth-pets".into()];
+        cfg.imratios = vec![0.1];
+        cfg.losses = vec!["hinge".into(), "logistic".into()];
+        cfg.batch_sizes = vec![50, 100];
+        cfg.seeds = vec![0, 1];
+        cfg.epochs = 3;
+        cfg.max_train = Some(600);
+    }
+    cfg.workers = args.get("workers", cfg.workers)?;
+    cfg.epochs = args.get("epochs", cfg.epochs)?;
+    eprintln!("sweep: {} runs on {} workers ...", cfg.n_runs(), cfg.workers);
+    let t0 = std::time::Instant::now();
+    let progress: allpairs::sweep::scheduler::ProgressFn = Box::new(|done, total, msg| {
+        eprintln!("[{done}/{total}] {msg}");
+    });
+    let output = cv::run(&cfg, artifacts, out, Some(progress))?;
+    println!(
+        "sweep finished: {} results in {:.1}s",
+        output.results.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!("\n== Table 2 (median selected hyper-parameters)\n");
+    print!(
+        "{}",
+        std::fs::read_to_string(out.join("table2.md")).unwrap_or_default()
+    );
+    println!("\n== Figure 3 (test AUC mean ± sd)\n");
+    print!(
+        "{}",
+        std::fs::read_to_string(out.join("fig3.md")).unwrap_or_default()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args, artifacts: &PathBuf) -> allpairs::Result<()> {
+    args.expect_known(&[
+        "artifacts", "out", "dataset", "loss", "model", "batch", "lr", "imratio", "epochs",
+        "seed", "max-train",
+    ])?;
+    let dataset = args.get_str("dataset", "synth-cifar");
+    let loss = args.get_str("loss", "hinge");
+    let model = args.get_str("model", "resnet");
+    let batch: usize = args.get("batch", 100)?;
+    let lr: f64 = args.get("lr", 0.01)?;
+    let imratio: f64 = args.get("imratio", 0.1)?;
+    let epochs: usize = args.get("epochs", 10)?;
+    let seed: u32 = args.get("seed", 0)?;
+    let max_train: Option<usize> = args.get_opt("max-train").map(|v| v.parse()).transpose()?;
+
+    let cfg = SweepConfig {
+        datasets: vec![dataset.clone()],
+        max_train,
+        ..Default::default()
+    };
+    let data = cv::build_datasets(&cfg)?;
+    let pool = &data[&dataset];
+    let mut rng = Rng::new(seed as u64 + 1);
+    let train = pool.train_pool.imbalance(imratio, &mut rng);
+    let split = Split::stratified(&train.y, 0.2, &mut rng);
+    eprintln!(
+        "train: {} examples ({:.4} positive), subtrain {} / validation {}",
+        train.len(),
+        train.pos_fraction(),
+        split.subtrain.len(),
+        split.validation.len()
+    );
+    let runtime = Runtime::new(artifacts)?;
+    let mut trainer = Trainer::new(&runtime, &model, &loss, batch)?;
+    let history = trainer.fit(
+        &train,
+        &split.subtrain,
+        &split.validation,
+        lr as f32,
+        epochs,
+        seed,
+        &mut rng,
+    )?;
+    for r in &history.records {
+        println!(
+            "epoch {:3}  loss {:10.6}  val_auc {}  ({:.2}s)",
+            r.epoch,
+            r.train_loss,
+            r.val_auc
+                .map(|a| format!("{a:.4}"))
+                .unwrap_or_else(|| "  n/a ".into()),
+            r.seconds
+        );
+    }
+    let test_indices: Vec<u32> = (0..pool.test.len() as u32).collect();
+    if let Some(test_auc) = trainer.eval_auc(&pool.test, &test_indices)? {
+        println!("final test AUC: {test_auc:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args, out: &PathBuf) -> allpairs::Result<()> {
+    args.expect_known(&["artifacts", "out", "results"])?;
+    let results_path = args
+        .get_opt("results")
+        .ok_or_else(|| anyhow::anyhow!("--results FILE required"))?;
+    let run_results = results::load_jsonl(results_path)?;
+    eprintln!("loaded {} results", run_results.len());
+    let output = cv::summarize(run_results, out)?;
+    println!(
+        "{} cells aggregated; reports in {}",
+        output.cells.len(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts_check(artifacts: &PathBuf) -> allpairs::Result<()> {
+    let runtime = Runtime::new(artifacts)?;
+    let names: Vec<String> = runtime
+        .manifest()
+        .artifacts
+        .iter()
+        .map(|a| a.name.clone())
+        .collect();
+    println!("manifest: {} artifacts", names.len());
+    for name in &names {
+        let t0 = std::time::Instant::now();
+        runtime.executable(name)?;
+        println!("  compiled {name} ({:.2}s)", t0.elapsed().as_secs_f64());
+    }
+    // smoke-run every init
+    for a in runtime.manifest().artifacts.clone() {
+        if a.kind == allpairs::runtime::ArtifactKind::Init {
+            let outs = runtime.execute(&a.name, &[xla::Literal::scalar(0u32)])?;
+            println!("  init {} -> {} state tensors OK", a.name, outs.len());
+        }
+    }
+    println!("all artifacts OK");
+    Ok(())
+}

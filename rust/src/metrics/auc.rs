@@ -1,0 +1,156 @@
+//! Area under the ROC curve via the Mann-Whitney U statistic.
+//!
+//! Bamber (1975): AUC equals the probability that a uniformly random
+//! positive example outranks a uniformly random negative one, with ties
+//! counting half:
+//!
+//! ```text
+//! AUC = [ #{(j,k): ŷⱼ > ŷₖ} + ½ #{(j,k): ŷⱼ = ŷₖ} ] / (n⁺ n⁻)
+//! ```
+//!
+//! Computed in O(n log n) with one sort using the rank-sum identity
+//! `U = R⁺ − n⁺(n⁺+1)/2`, where `R⁺` is the sum of (mid-)ranks of the
+//! positive examples.  Midranks make the tie correction exact.
+
+/// Tie-corrected AUC of `scores` against {0,1} positive indicators.
+///
+/// Returns `None` when one of the classes is empty (AUC undefined).
+pub fn auc(scores: &[f32], is_pos: &[f32]) -> Option<f64> {
+    assert_eq!(scores.len(), is_pos.len());
+    let n = scores.len();
+    let n_pos = is_pos.iter().filter(|&&p| p != 0.0).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return None;
+    }
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_unstable_by(|&a, &b| scores[a as usize].total_cmp(&scores[b as usize]));
+
+    // Walk tie groups assigning midranks; accumulate positive rank sum.
+    let mut rank_sum_pos = 0.0_f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1] as usize] == scores[order[i] as usize] {
+            j += 1;
+        }
+        // ranks i+1 ..= j+1 share the midrank.
+        let midrank = (i + 1 + j + 1) as f64 / 2.0;
+        for &idx in &order[i..=j] {
+            if is_pos[idx as usize] != 0.0 {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (n_pos as f64) * (n_pos as f64 + 1.0) / 2.0;
+    Some(u / (n_pos as f64 * n_neg as f64))
+}
+
+/// Brute-force O(n²) AUC — test oracle only.
+#[cfg(test)]
+pub fn auc_naive(scores: &[f32], is_pos: &[f32]) -> Option<f64> {
+    let pos: Vec<f32> = scores
+        .iter()
+        .zip(is_pos)
+        .filter(|(_, &p)| p != 0.0)
+        .map(|(&s, _)| s)
+        .collect();
+    let neg: Vec<f32> = scores
+        .iter()
+        .zip(is_pos)
+        .filter(|(_, &p)| p == 0.0)
+        .map(|(&s, _)| s)
+        .collect();
+    if pos.is_empty() || neg.is_empty() {
+        return None;
+    }
+    let mut u = 0.0_f64;
+    for &a in &pos {
+        for &b in &neg {
+            if a > b {
+                u += 1.0;
+            } else if a == b {
+                u += 0.5;
+            }
+        }
+    }
+    Some(u / (pos.len() as f64 * neg.len() as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_ranking_is_one() {
+        let s = vec![0.9, 0.8, 0.2, 0.1];
+        let p = vec![1.0, 1.0, 0.0, 0.0];
+        assert_eq!(auc(&s, &p), Some(1.0));
+    }
+
+    #[test]
+    fn reversed_ranking_is_zero() {
+        let s = vec![0.1, 0.2, 0.8, 0.9];
+        let p = vec![1.0, 1.0, 0.0, 0.0];
+        assert_eq!(auc(&s, &p), Some(0.0));
+    }
+
+    #[test]
+    fn constant_predictions_are_half() {
+        let s = vec![0.5; 10];
+        let p = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        assert_eq!(auc(&s, &p), Some(0.5));
+    }
+
+    #[test]
+    fn undefined_for_single_class() {
+        assert_eq!(auc(&[0.1, 0.2], &[1.0, 1.0]), None);
+        assert_eq!(auc(&[0.1, 0.2], &[0.0, 0.0]), None);
+        assert_eq!(auc(&[], &[]), None);
+    }
+
+    #[test]
+    fn matches_naive_on_random_data_with_ties() {
+        let mut state = 0x1234_5678_9ABC_DEF0_u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for trial in 0..30 {
+            let n = 5 + (trial * 13) % 200;
+            let s: Vec<f32> = (0..n)
+                .map(|_| ((next() * 8.0).round() / 8.0) as f32) // heavy ties
+                .collect();
+            let p: Vec<f32> = (0..n)
+                .map(|_| if next() < 0.3 { 1.0 } else { 0.0 })
+                .collect();
+            match (auc(&s, &p), auc_naive(&s, &p)) {
+                (Some(a), Some(b)) => assert!((a - b).abs() < 1e-12, "{a} vs {b}"),
+                (None, None) => {}
+                other => panic!("definedness mismatch {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn invariant_under_monotone_transform() {
+        let s = vec![0.1, 0.4, 0.35, 0.8, 0.7];
+        let p = vec![0.0, 1.0, 0.0, 1.0, 1.0];
+        let a1 = auc(&s, &p).unwrap();
+        let s2: Vec<f32> = s.iter().map(|&x| (x * 3.0).exp()).collect();
+        let a2 = auc(&s2, &p).unwrap();
+        assert!((a1 - a2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mann_whitney_equivalence_hand_case() {
+        // pos {0.9, 0.5}, neg {0.5, 0.1}: pairs (0.9,0.5)>, (0.9,0.1)>,
+        // (0.5,0.5)=, (0.5,0.1)> => (3 + 0.5) / 4 = 0.875
+        let s = vec![0.9, 0.5, 0.5, 0.1];
+        let p = vec![1.0, 1.0, 0.0, 0.0];
+        assert!((auc(&s, &p).unwrap() - 0.875).abs() < 1e-12);
+    }
+}

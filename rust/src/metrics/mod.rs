@@ -1,0 +1,17 @@
+//! Evaluation metrics: ROC curves, AUC, and result aggregation.
+//!
+//! AUC is the paper's model-selection criterion (max validation AUC picks
+//! the epoch and hyper-parameters) *and* its headline evaluation metric
+//! (Figure 3 reports test AUC).  [`auc`] implements the tie-corrected
+//! Mann-Whitney formulation in O(n log n) — the same complexity as the
+//! paper's loss, which is exactly the section-5 "monitoring" argument.
+
+pub mod auc;
+pub mod partial_auc;
+pub mod roc;
+pub mod summary;
+
+pub use auc::auc;
+pub use partial_auc::partial_auc;
+pub use roc::{roc_curve, RocPoint};
+pub use summary::Summary;

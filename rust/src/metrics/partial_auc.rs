@@ -1,0 +1,116 @@
+//! Partial AUC: area under the ROC curve restricted to an FPR interval
+//! (Narasimhan & Agarwal 2013, cited by the paper's related work).
+//!
+//! `pauc(scores, is_pos, alpha, beta)` integrates TPR over
+//! FPR ∈ [alpha, beta] and normalizes by (beta − alpha), so a perfect
+//! ranker scores 1 and a random one 0.5 — directly comparable to full
+//! AUC (which is the special case `[0, 1]`).
+
+use super::roc::{roc_curve, RocPoint};
+
+/// Normalized partial AUC over FPR in `[alpha, beta]`.
+///
+/// Returns `None` when a class is empty or the interval is degenerate.
+pub fn partial_auc(scores: &[f32], is_pos: &[f32], alpha: f64, beta: f64) -> Option<f64> {
+    if !(0.0..=1.0).contains(&alpha) || !(0.0..=1.0).contains(&beta) || beta <= alpha {
+        return None;
+    }
+    let curve = roc_curve(scores, is_pos);
+    if curve.is_empty() {
+        return None;
+    }
+    Some(clipped_area(&curve, alpha, beta) / (beta - alpha))
+}
+
+/// Area under the piecewise-linear ROC curve clipped to [alpha, beta].
+fn clipped_area(curve: &[RocPoint], alpha: f64, beta: f64) -> f64 {
+    let mut area = 0.0;
+    for w in curve.windows(2) {
+        let (x0, y0) = (w[0].fpr, w[0].tpr);
+        let (x1, y1) = (w[1].fpr, w[1].tpr);
+        if x1 <= alpha || x0 >= beta || x1 == x0 {
+            // vertical segments (x1 == x0) carry no area
+            continue;
+        }
+        let lo = x0.max(alpha);
+        let hi = x1.min(beta);
+        // linear interpolation of TPR at the clip points
+        let t = |x: f64| y0 + (y1 - y0) * (x - x0) / (x1 - x0);
+        area += (hi - lo) * (t(lo) + t(hi)) / 2.0;
+    }
+    area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::auc::auc;
+
+    fn toy() -> (Vec<f32>, Vec<f32>) {
+        (
+            vec![0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3, 0.2],
+            vec![1.0, 1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0],
+        )
+    }
+
+    #[test]
+    fn full_interval_equals_auc() {
+        let (s, p) = toy();
+        let full = partial_auc(&s, &p, 0.0, 1.0).unwrap();
+        let a = auc(&s, &p).unwrap();
+        assert!((full - a).abs() < 1e-12, "{full} vs {a}");
+    }
+
+    #[test]
+    fn perfect_ranker_is_one_everywhere() {
+        let s = vec![0.9, 0.8, 0.2, 0.1];
+        let p = vec![1.0, 1.0, 0.0, 0.0];
+        for (a, b) in [(0.0, 0.1), (0.0, 0.5), (0.3, 0.9)] {
+            assert!((partial_auc(&s, &p, a, b).unwrap() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn random_scores_near_half() {
+        // diagonal ROC: TPR == FPR, so normalized pAUC of [a,b] is (a+b)/2.
+        let n = 1000;
+        let mut state = 99_u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        let s: Vec<f32> = (0..n).map(|_| next() as f32).collect();
+        let p: Vec<f32> = (0..n).map(|_| if next() < 0.5 { 1.0 } else { 0.0 }).collect();
+        let got = partial_auc(&s, &p, 0.0, 0.2).unwrap();
+        assert!((got - 0.1).abs() < 0.05, "{got}");
+    }
+
+    #[test]
+    fn low_fpr_region_discriminates_early_errors() {
+        // Both rankers misrank exactly 3 of the 9 pairs (full AUC = 2/3),
+        // but A's errors are an early false positive (a negative ranked
+        // first) while B's are a late positive.  pAUC at low FPR must
+        // penalize A much harder.
+        let p_a = vec![0.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let a = vec![0.9, 0.8, 0.7, 0.6, 0.5, 0.4]; // neg on top
+        let p_b = vec![1.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let b = vec![0.9, 0.8, 0.7, 0.6, 0.5, 0.4]; // pos at bottom
+        let auc_a = auc(&a, &p_a).unwrap();
+        let auc_b = auc(&b, &p_b).unwrap();
+        assert!((auc_a - auc_b).abs() < 1e-9, "{auc_a} vs {auc_b}");
+        let pa = partial_auc(&a, &p_a, 0.0, 1.0 / 3.0).unwrap();
+        let pb = partial_auc(&b, &p_b, 0.0, 1.0 / 3.0).unwrap();
+        assert!(pa < pb - 0.3, "{pa} vs {pb}");
+    }
+
+    #[test]
+    fn invalid_intervals_rejected() {
+        let (s, p) = toy();
+        assert!(partial_auc(&s, &p, 0.5, 0.5).is_none());
+        assert!(partial_auc(&s, &p, 0.7, 0.2).is_none());
+        assert!(partial_auc(&s, &p, -0.1, 0.5).is_none());
+        assert!(partial_auc(&s, &[1.0; 8], 0.0, 1.0).is_none());
+    }
+}

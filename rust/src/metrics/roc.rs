@@ -1,0 +1,122 @@
+//! Full ROC curves (TPR vs FPR over every threshold).
+//!
+//! Used by the `quickstart` example and the reporting layer to emit the
+//! curve behind the AUC number; the trapezoid integral of the curve must
+//! equal the Mann-Whitney AUC from [`super::auc`] (tested below — that is
+//! Bamber's 1975 equivalence, the identity the whole paper builds on).
+
+/// One operating point of the ROC curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RocPoint {
+    /// Score threshold: predict positive iff `score >= threshold`.
+    pub threshold: f32,
+    /// False positive rate at this threshold.
+    pub fpr: f64,
+    /// True positive rate at this threshold.
+    pub tpr: f64,
+}
+
+/// ROC curve from (0,0) to (1,1), one point per distinct score.
+///
+/// Returns an empty vector when either class is absent.
+pub fn roc_curve(scores: &[f32], is_pos: &[f32]) -> Vec<RocPoint> {
+    assert_eq!(scores.len(), is_pos.len());
+    let n_pos = is_pos.iter().filter(|&&p| p != 0.0).count();
+    let n_neg = scores.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<u32> = (0..scores.len() as u32).collect();
+    // Descending: highest score first (lowest threshold last).
+    order.sort_unstable_by(|&a, &b| scores[b as usize].total_cmp(&scores[a as usize]));
+
+    let mut points = vec![RocPoint {
+        threshold: f32::INFINITY,
+        fpr: 0.0,
+        tpr: 0.0,
+    }];
+    let (mut tp, mut fp) = (0usize, 0usize);
+    let mut i = 0;
+    while i < order.len() {
+        let thresh = scores[order[i] as usize];
+        // absorb the whole tie group before emitting a point
+        while i < order.len() && scores[order[i] as usize] == thresh {
+            if is_pos[order[i] as usize] != 0.0 {
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+            i += 1;
+        }
+        points.push(RocPoint {
+            threshold: thresh,
+            fpr: fp as f64 / n_neg as f64,
+            tpr: tp as f64 / n_pos as f64,
+        });
+    }
+    points
+}
+
+/// Trapezoidal area under a ROC curve from [`roc_curve`].
+pub fn trapezoid_auc(points: &[RocPoint]) -> f64 {
+    points
+        .windows(2)
+        .map(|w| (w[1].fpr - w[0].fpr) * (w[1].tpr + w[0].tpr) / 2.0)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::auc::auc;
+
+    #[test]
+    fn endpoints_are_corners() {
+        let s = vec![0.9, 0.1, 0.5, 0.4];
+        let p = vec![1.0, 0.0, 1.0, 0.0];
+        let curve = roc_curve(&s, &p);
+        assert_eq!((curve[0].fpr, curve[0].tpr), (0.0, 0.0));
+        let last = curve.last().unwrap();
+        assert_eq!((last.fpr, last.tpr), (1.0, 1.0));
+    }
+
+    #[test]
+    fn trapezoid_equals_mann_whitney() {
+        // Bamber 1975: the equivalence this paper's losses relax.
+        let mut state = 42_u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for trial in 0..20 {
+            let n = 10 + trial * 17;
+            let s: Vec<f32> = (0..n).map(|_| ((next() * 4.0).round() / 4.0) as f32).collect();
+            let p: Vec<f32> = (0..n).map(|_| if next() < 0.4 { 1.0 } else { 0.0 }).collect();
+            let curve = roc_curve(&s, &p);
+            if curve.is_empty() {
+                continue;
+            }
+            let a_trap = trapezoid_auc(&curve);
+            let a_mw = auc(&s, &p).unwrap();
+            assert!((a_trap - a_mw).abs() < 1e-12, "{a_trap} vs {a_mw}");
+        }
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let s = vec![0.3, 0.9, 0.5, 0.2, 0.8, 0.1];
+        let p = vec![0.0, 1.0, 1.0, 0.0, 0.0, 1.0];
+        let curve = roc_curve(&s, &p);
+        for w in curve.windows(2) {
+            assert!(w[1].fpr >= w[0].fpr);
+            assert!(w[1].tpr >= w[0].tpr);
+        }
+    }
+
+    #[test]
+    fn empty_for_single_class() {
+        assert!(roc_curve(&[0.1, 0.2], &[1.0, 1.0]).is_empty());
+    }
+}

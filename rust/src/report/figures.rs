@@ -1,0 +1,161 @@
+//! CSV series + ASCII log-log plots (Figure 2 / Figure 3 outputs).
+//!
+//! The CSVs are the canonical machine-readable outputs (EXPERIMENTS.md
+//! references them); the ASCII plot gives an immediate visual check of
+//! the Figure-2 claim (naive slope ≈ 2, functional slope ≈ 1) without
+//! any plotting dependency.
+
+use std::path::Path;
+
+/// Write a CSV with the given header and rows.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> crate::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut s = String::new();
+    s.push_str(&header.join(","));
+    s.push('\n');
+    for row in rows {
+        s.push_str(&row.join(","));
+        s.push('\n');
+    }
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+/// A named (x, y) series for plotting.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render series on a log-log ASCII grid (x: data size, y: seconds).
+pub fn ascii_loglog(series: &[Series], width: usize, height: usize) -> String {
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|&(x, y)| x > 0.0 && y > 0.0)
+        .collect();
+    if pts.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x.log10());
+        x1 = x1.max(x.log10());
+        y0 = y0.min(y.log10());
+        y1 = y1.max(y.log10());
+    }
+    if (x1 - x0).abs() < 1e-9 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-9 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['n', 'N', 'f', 'F', 'l', 'x', '+', '*'];
+    for (si, s) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in &s.points {
+            if x <= 0.0 || y <= 0.0 {
+                continue;
+            }
+            let cx = ((x.log10() - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y.log10() - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "log10(seconds) in [{y0:.1}, {y1:.1}] vs log10(n) in [{x0:.1}, {x1:.1}]\n"
+    ));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.extend(std::iter::repeat('-').take(width));
+    out.push('\n');
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()], s.name));
+    }
+    out
+}
+
+/// Least-squares slope of log10(y) vs log10(x) — the empirical complexity
+/// exponent (Figure 2's asymptotic-slope claim).
+pub fn loglog_slope(points: &[(f64, f64)]) -> f64 {
+    let pts: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|&&(x, y)| x > 0.0 && y > 0.0)
+        .map(|&(x, y)| (x.log10(), y.log10()))
+        .collect();
+    let n = pts.len() as f64;
+    if pts.len() < 2 {
+        return f64::NAN;
+    }
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let p = std::env::temp_dir().join("allpairs_fig_test.csv");
+        write_csv(
+            &p,
+            &["n", "seconds"],
+            &[vec!["10".into(), "0.1".into()], vec!["100".into(), "1.0".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("n,seconds"));
+    }
+
+    #[test]
+    fn slope_recovers_exponent() {
+        // y = x^2 exactly → slope 2
+        let pts: Vec<(f64, f64)> = (1..=6).map(|i| {
+            let x = 10f64.powi(i);
+            (x, x * x * 1e-9)
+        }).collect();
+        assert!((loglog_slope(&pts) - 2.0).abs() < 1e-9);
+        // y = x → slope 1
+        let pts: Vec<(f64, f64)> = (1..=6).map(|i| {
+            let x = 10f64.powi(i);
+            (x, x * 1e-9)
+        }).collect();
+        assert!((loglog_slope(&pts) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ascii_plot_contains_marks_and_legend() {
+        let s = vec![Series {
+            name: "naive".into(),
+            points: vec![(10.0, 1e-5), (100.0, 1e-3), (1000.0, 1e-1)],
+        }];
+        let plot = ascii_loglog(&s, 40, 10);
+        assert!(plot.contains('n'));
+        assert!(plot.contains("naive"));
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        assert_eq!(ascii_loglog(&[], 10, 5), "(no data)\n");
+        assert!(loglog_slope(&[]).is_nan());
+    }
+}

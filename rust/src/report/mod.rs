@@ -1,0 +1,11 @@
+//! Reporting: CSV series, markdown tables, ASCII log-log plots.
+//!
+//! Every paper table/figure has an emitter here; the examples and the CLI
+//! write their outputs into `results/` via these functions so the formats
+//! stay consistent between the smoke runs and the full reproduction.
+
+pub mod figures;
+pub mod table;
+
+pub use figures::{ascii_loglog, write_csv};
+pub use table::markdown_table;

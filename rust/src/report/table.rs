@@ -1,0 +1,100 @@
+//! Markdown table emitters (Table 2 and the Figure 3 companion table).
+
+use crate::sweep::select::Cell;
+
+/// Render rows + header as a GitHub-flavored markdown table.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push('|');
+    for h in header {
+        s.push_str(&format!(" {h} |"));
+    }
+    s.push('\n');
+    s.push('|');
+    for _ in header {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for row in rows {
+        s.push('|');
+        for cell in row {
+            s.push_str(&format!(" {cell} |"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// The paper's Table 2: median selected (batch, lr) per cell.
+pub fn table2(cells: &[Cell]) -> String {
+    let header = [
+        "Dataset", "Imratio", "Loss", "Batch (median)", "LR (median)", "Seeds",
+    ];
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.dataset.clone(),
+                format!("{}", c.imratio),
+                c.loss.clone(),
+                format!("{:.0}", c.median_batch),
+                format!("{:.4}", c.median_lr),
+                format!("{}", c.n_seeds),
+            ]
+        })
+        .collect();
+    markdown_table(&header, &rows)
+}
+
+/// Figure 3 as a table: test AUC mean ± sd per cell.
+pub fn figure3_table(cells: &[Cell]) -> String {
+    let header = ["Dataset", "Imratio", "Loss", "Test AUC (mean ± sd)", "Seeds"];
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.dataset.clone(),
+                format!("{}", c.imratio),
+                c.loss.clone(),
+                format!("{:.4} ± {:.4}", c.test_auc.mean(), c.test_auc.std()),
+                format!("{}", c.n_seeds),
+            ]
+        })
+        .collect();
+    markdown_table(&header, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Summary;
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("| a |"));
+        assert!(lines[1].starts_with("|---|"));
+        assert!(lines[2].contains("| 1 |"));
+    }
+
+    #[test]
+    fn table2_renders_cells() {
+        let cells = vec![Cell {
+            dataset: "synth-cifar".into(),
+            imratio: 0.01,
+            loss: "hinge".into(),
+            median_batch: 500.0,
+            median_lr: 0.0316,
+            test_auc: Summary::from_values([0.8, 0.9]),
+            n_seeds: 2,
+        }];
+        let t = table2(&cells);
+        assert!(t.contains("synth-cifar"));
+        assert!(t.contains("500"));
+        assert!(t.contains("0.0316"));
+        let f = figure3_table(&cells);
+        assert!(f.contains("0.8500"));
+    }
+}

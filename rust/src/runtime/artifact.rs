@@ -1,0 +1,307 @@
+//! Typed view of `artifacts/manifest.json`.
+//!
+//! The manifest is the contract between the Python AOT compiler and this
+//! runtime: every artifact's input signature (tensor shapes and dtypes in
+//! flat `tree_flatten` order), output arity, and the number of leading
+//! *state* tensors (model parameters + optimizer slots) that thread from
+//! one train step to the next.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// What an artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `(seed: u32) -> state...`
+    Init,
+    /// `(state..., x, is_pos, is_neg, lr) -> (state..., loss, scores)`
+    Train,
+    /// `(state..., x) -> scores`
+    Predict,
+    /// `(scores, is_pos, is_neg) -> loss` (the §5 monitoring entry point)
+    LossEval,
+    /// `(params..., x, is_pos, is_neg) -> (loss, grads...)` — full-batch
+    /// objective for deterministic optimizers (L-BFGS, paper §5).
+    Grad,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "init" => Self::Init,
+            "train" => Self::Train,
+            "predict" => Self::Predict,
+            "loss_eval" => Self::LossEval,
+            "grad" => Self::Grad,
+            _ => return None,
+        })
+    }
+}
+
+/// One tensor in an artifact's input signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape must be an array"))?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("bad dim in shape"))
+            })
+            .collect::<crate::Result<Vec<usize>>>()?;
+        let dtype = j
+            .req("dtype")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("dtype must be a string"))?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One loadable artifact.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    /// Absolute path of the `.hlo.txt` file.
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    pub model: String,
+    pub loss: String,
+    /// Batch size for train/predict, n for loss_eval, 0 for init.
+    pub batch: usize,
+    /// Number of leading state tensors in inputs (and outputs, for train).
+    pub n_state: usize,
+    pub inputs: Vec<TensorSig>,
+    pub n_outputs: usize,
+    /// For predict artifacts: which slots of the *full* flat training
+    /// state this artifact consumes (XLA prunes unused parameters, so
+    /// predict is lowered over the model-parameter leaves only).
+    /// Empty = identity (the first `n_state` slots).
+    pub state_indices: Vec<usize>,
+}
+
+impl Artifact {
+    /// Select this artifact's state inputs out of a full state slice.
+    pub fn select_state<'a, T>(&self, full_state: &'a [T]) -> Vec<&'a T> {
+        if self.state_indices.is_empty() {
+            full_state.iter().take(self.n_state).collect()
+        } else {
+            self.state_indices
+                .iter()
+                .map(|&i| &full_state[i])
+                .collect()
+        }
+    }
+}
+
+/// The artifact registry.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub margin: f64,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}. Run `make artifacts` first.", path.display()))?;
+        let raw = Json::parse(&text)?;
+        let version = raw.req("format_version")?.as_usize().unwrap_or(0);
+        anyhow::ensure!(version == 1, "unsupported manifest format {version}");
+        let margin = raw
+            .req("margin")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("margin must be a number"))?;
+        let str_field = |j: &Json, key: &str| -> crate::Result<String> {
+            Ok(j.req(key)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("{key} must be a string"))?
+                .to_string())
+        };
+        let usize_field = |j: &Json, key: &str| -> crate::Result<usize> {
+            j.req(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{key} must be a non-negative integer"))
+        };
+        let artifacts = raw
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("artifacts must be an array"))?
+            .iter()
+            .map(|a| {
+                let kind_str = str_field(a, "kind")?;
+                let kind = ArtifactKind::parse(&kind_str)
+                    .ok_or_else(|| anyhow::anyhow!("unknown artifact kind {kind_str:?}"))?;
+                let file = str_field(a, "file")?;
+                let path = dir.join(&file);
+                anyhow::ensure!(path.exists(), "missing artifact file {}", path.display());
+                let inputs = a
+                    .req("inputs")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("inputs must be an array"))?
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect::<crate::Result<Vec<_>>>()?;
+                let state_indices = match a.get("state_indices") {
+                    None => Vec::new(),
+                    Some(v) => v
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("state_indices must be an array"))?
+                        .iter()
+                        .map(|i| {
+                            i.as_usize()
+                                .ok_or_else(|| anyhow::anyhow!("bad state index"))
+                        })
+                        .collect::<crate::Result<Vec<_>>>()?,
+                };
+                Ok(Artifact {
+                    name: str_field(a, "name")?,
+                    path,
+                    kind,
+                    model: str_field(a, "model")?,
+                    loss: str_field(a, "loss")?,
+                    batch: usize_field(a, "batch")?,
+                    n_state: usize_field(a, "n_state")?,
+                    inputs,
+                    n_outputs: usize_field(a, "n_outputs")?,
+                    state_indices,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Self {
+            dir,
+            margin,
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Artifact name helpers mirroring `aot.py` naming.
+    pub fn init_name(model: &str, loss: &str) -> String {
+        format!("init_{model}_{loss}")
+    }
+
+    pub fn train_name(model: &str, loss: &str, batch: usize) -> String {
+        format!("train_{model}_{loss}_bs{batch}")
+    }
+
+    pub fn predict_name(model: &str, loss: &str, batch: usize) -> String {
+        format!("predict_{model}_{loss}_bs{batch}")
+    }
+
+    pub fn loss_eval_name(loss: &str, n: usize) -> String {
+        format!("loss_eval_{loss}_n{n}")
+    }
+
+    /// Available train batch sizes for (model, loss), ascending.
+    pub fn train_batches(&self, model: &str, loss: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Train && a.model == model && a.loss == loss)
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The predict batch size registered for (model, loss).
+    pub fn predict_batch(&self, model: &str, loss: &str) -> crate::Result<usize> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Predict && a.model == model && a.loss == loss)
+            .map(|a| a.batch)
+            .ok_or_else(|| anyhow::anyhow!("no predict artifact for {model}/{loss}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+  "format_version": 1,
+  "margin": 1.0,
+  "artifacts": [
+   {"name": "train_resnet_hinge_bs10", "file": "a.hlo.txt", "kind": "train",
+    "model": "resnet", "loss": "hinge", "batch": 10, "n_state": 4,
+    "inputs": [{"shape": [2,2], "dtype": "float32"}], "n_outputs": 6},
+   {"name": "train_resnet_hinge_bs50", "file": "a.hlo.txt", "kind": "train",
+    "model": "resnet", "loss": "hinge", "batch": 50, "n_state": 4,
+    "inputs": [], "n_outputs": 6},
+   {"name": "predict_resnet_hinge_bs100", "file": "a.hlo.txt", "kind": "predict",
+    "model": "resnet", "loss": "hinge", "batch": 100, "n_state": 4,
+    "inputs": [], "n_outputs": 1}
+  ]
+ }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("allpairs_manifest_test");
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.margin, 1.0);
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.get("train_resnet_hinge_bs10").unwrap();
+        assert_eq!(a.kind, ArtifactKind::Train);
+        assert_eq!(a.inputs[0].shape, vec![2, 2]);
+        assert_eq!(m.train_batches("resnet", "hinge"), vec![10, 50]);
+        assert_eq!(m.predict_batch("resnet", "hinge").unwrap(), 100);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn name_helpers_match_aot_convention() {
+        assert_eq!(Manifest::init_name("resnet", "hinge"), "init_resnet_hinge");
+        assert_eq!(
+            Manifest::train_name("resnet", "aucm", 500),
+            "train_resnet_aucm_bs500"
+        );
+        assert_eq!(
+            Manifest::predict_name("mlp", "hinge", 256),
+            "predict_mlp_hinge_bs256"
+        );
+        assert_eq!(Manifest::loss_eval_name("square", 4096), "loss_eval_square_n4096");
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join("allpairs_manifest_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format_version": 1, "margin": 1.0, "artifacts": [
+              {"name": "x", "file": "gone.hlo.txt", "kind": "init", "model": "m",
+               "loss": "l", "batch": 0, "n_state": 1, "inputs": [], "n_outputs": 1}]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! The PJRT runtime: compile-once, execute-many artifact host.
+//!
+//! One [`Runtime`] owns a `PjRtClient` (CPU) and a lazy cache of compiled
+//! executables keyed by artifact name.  `PjRtClient` is `Rc`-based, so a
+//! `Runtime` is intentionally `!Send` — the sweep scheduler creates one
+//! per worker thread.
+//!
+//! ## Output handling
+//!
+//! All artifacts are lowered with `return_tuple=True`, so the HLO root is
+//! a tuple.  Depending on the PJRT plugin version the execute API either
+//! unpacks the root tuple into one buffer per leaf, or returns a single
+//! tuple buffer.  [`Runtime::execute`] normalizes both cases to a flat
+//! `Vec<Literal>` (checked against the manifest's `n_outputs`), and
+//! [`Runtime::execute_buffers`] does the same at the buffer level for the
+//! device-resident hot path.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::Manifest;
+
+/// A PJRT CPU client plus a compiled-executable cache over a manifest.
+pub struct Runtime {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Get (compiling and caching on first use) an executable by name.
+    pub fn executable(&self, name: &str) -> crate::Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let artifact = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&artifact.path)?;
+        let computation = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&computation)?);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (for tests/diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute by name with literal inputs; returns flat output literals.
+    /// Accepts owned or borrowed literals (the C++ side synchronously
+    /// awaits the input transfers, so borrowed inputs are safe here).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        name: &str,
+        args: &[L],
+    ) -> crate::Result<Vec<Literal>> {
+        let n_outputs = self.manifest.get(name)?.n_outputs;
+        let exe = self.executable(name)?;
+        let mut results = exe.execute(args)?;
+        Self::normalize_outputs(&mut results, n_outputs)
+    }
+
+    /// Execute with device-resident buffers; returns flat output buffers
+    /// when the plugin unpacks the root tuple, otherwise falls back to a
+    /// literal round-trip (correct either way, slower on old plugins).
+    /// Accepts borrowed buffers so callers can chain state without copies.
+    pub fn execute_buffers<L: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        name: &str,
+        args: &[L],
+    ) -> crate::Result<Vec<PjRtBuffer>> {
+        let n_outputs = self.manifest.get(name)?.n_outputs;
+        let exe = self.executable(name)?;
+        let results = exe.execute_b(args)?;
+        let first: Vec<PjRtBuffer> = results
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("no results from {name}"))?;
+        // The CPU plugin untuples multi-leaf root tuples into one buffer
+        // per leaf, but a single-leaf root arrives as one *tuple* buffer
+        // (observed empirically; load_hlo in /opt/xla-example relies on
+        // the same behaviour).  Only trust an arity match when the buffer
+        // is not itself a tuple.
+        if first.len() == n_outputs {
+            let tupled = n_outputs == 1
+                && matches!(first[0].on_device_shape(), Ok(xla::Shape::Tuple(_)));
+            if !tupled {
+                return Ok(first);
+            }
+        }
+        // Root tuple not unpacked: round-trip through literals and rebuffer.
+        anyhow::ensure!(
+            first.len() == 1,
+            "{name}: unexpected output arity {} (want {n_outputs})",
+            first.len()
+        );
+        let mut tuple = first[0].to_literal_sync()?;
+        let leaves = tuple.decompose_tuple()?;
+        anyhow::ensure!(
+            leaves.len() == n_outputs,
+            "{name}: tuple arity {} (want {n_outputs})",
+            leaves.len()
+        );
+        leaves
+            .iter()
+            .map(|lit| {
+                let buffer = self.client.buffer_from_host_literal(None, lit)?;
+                // Force the async host→device copy before `leaves` drops.
+                let _ = buffer.to_literal_sync()?;
+                Ok(buffer)
+            })
+            .collect()
+    }
+
+    /// Upload a literal to the device.
+    ///
+    /// SAFETY CONTRACT: `buffer_from_host_literal` enqueues the host→device
+    /// copy on a worker thread; the caller must keep `lit` alive until the
+    /// copy is forced (by executing with the buffer and synchronizing on an
+    /// output, or via [`Runtime::to_device_sync`]).  Dropping the literal
+    /// early is a use-after-free inside the PJRT plugin.
+    pub fn to_device(&self, lit: &Literal) -> crate::Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Upload and block until the device copy completed, so the source
+    /// literal may be dropped immediately afterwards.  (The only
+    /// readiness-forcing operation this PJRT API exposes is a read-back,
+    /// so this costs one extra device→host copy — use on cold paths.)
+    pub fn to_device_sync(&self, lit: &Literal) -> crate::Result<PjRtBuffer> {
+        let buffer = self.client.buffer_from_host_literal(None, lit)?;
+        let _ = buffer.to_literal_sync()?;
+        Ok(buffer)
+    }
+
+    fn normalize_outputs(
+        results: &mut Vec<Vec<PjRtBuffer>>,
+        n_outputs: usize,
+    ) -> crate::Result<Vec<Literal>> {
+        let first = results
+            .drain(..)
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty execution result"))?;
+        if first.len() == n_outputs && n_outputs != 1 {
+            return first.iter().map(|b| Ok(b.to_literal_sync()?)).collect();
+        }
+        anyhow::ensure!(first.len() == 1, "unexpected output arity {}", first.len());
+        let mut lit = first[0].to_literal_sync()?;
+        // return_tuple=True means even single outputs arrive as a 1-tuple,
+        // unless the plugin already unpacked it.
+        match lit.decompose_tuple() {
+            Ok(leaves) => {
+                anyhow::ensure!(
+                    leaves.len() == n_outputs,
+                    "tuple arity {} (want {n_outputs})",
+                    leaves.len()
+                );
+                Ok(leaves)
+            }
+            Err(_) if n_outputs == 1 => Ok(vec![lit]),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.manifest.artifacts.len())
+            .field("compiled", &self.compiled_count())
+            .finish()
+    }
+}

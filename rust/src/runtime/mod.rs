@@ -1,0 +1,21 @@
+//! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
+//!
+//! * [`artifact`] — parses `artifacts/manifest.json` (written by
+//!   `python/compile/aot.py`) into a typed registry.
+//! * [`tensor`] — host-side tensors ↔ `xla::Literal` conversions.
+//! * [`client`] — [`client::Runtime`]: a PJRT CPU client plus a lazy
+//!   cache of compiled executables, keyed by artifact name.  HLO **text**
+//!   is the interchange format (`HloModuleProto::from_text_file`) — see
+//!   DESIGN.md §4 for why serialized protos are rejected here.
+//!
+//! `xla::PjRtClient` is `Rc`-based (not `Send`), so one [`client::Runtime`]
+//! must live and die on a single thread; the sweep scheduler gives each
+//! worker thread its own runtime instance.
+
+pub mod artifact;
+pub mod client;
+pub mod tensor;
+
+pub use artifact::{Artifact, ArtifactKind, Manifest};
+pub use client::Runtime;
+pub use tensor::HostTensor;

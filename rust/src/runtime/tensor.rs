@@ -1,0 +1,112 @@
+//! Host tensors and conversions to/from `xla::Literal`.
+//!
+//! The runtime moves three kinds of values across the PJRT boundary:
+//! f32 arrays (batches, parameters, scores), f32 scalars (learning rate,
+//! loss) and one u32 scalar (the init seed).  [`HostTensor`] is the
+//! host-side owner; state tensors stay device-resident as `PjRtBuffer`s
+//! in the hot loop (see `train::trainer`) and only cross through here at
+//! init/checkpoint boundaries.
+
+use xla::Literal;
+
+/// A dense row-major f32 tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<i64>, data: Vec<f32>) -> Self {
+        let elems: i64 = shape.iter().product();
+        assert_eq!(elems as usize, data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn vec1(data: Vec<f32>) -> Self {
+        Self {
+            shape: vec![data.len() as i64],
+            data,
+        }
+    }
+
+    pub fn zeros(shape: Vec<i64>) -> Self {
+        let elems: i64 = shape.iter().product();
+        Self {
+            data: vec![0.0; elems as usize],
+            shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Convert to an XLA literal (rank 0 becomes a true scalar literal).
+    pub fn to_literal(&self) -> crate::Result<Literal> {
+        if self.shape.is_empty() {
+            return Ok(Literal::scalar(self.data[0]));
+        }
+        let lit = Literal::vec1(&self.data);
+        Ok(lit.reshape(&self.shape)?)
+    }
+
+    /// Read a literal back into a host tensor (f32 only).
+    pub fn from_literal(lit: &Literal) -> crate::Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Self::new(dims, data))
+    }
+}
+
+/// Build the u32 seed literal for init artifacts.
+pub fn seed_literal(seed: u32) -> Literal {
+    Literal::scalar(seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_vector() {
+        let t = HostTensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn roundtrip_scalar() {
+        let t = HostTensor::scalar(3.5);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.data, vec![3.5]);
+        assert!(back.shape.is_empty());
+    }
+
+    #[test]
+    fn zeros_has_right_size() {
+        let t = HostTensor::zeros(vec![4, 4, 3]);
+        assert_eq!(t.len(), 48);
+        assert!(t.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn mismatched_shape_panics() {
+        HostTensor::new(vec![2, 2], vec![1.0]);
+    }
+}

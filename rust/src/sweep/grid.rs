@@ -1,0 +1,216 @@
+//! Cartesian expansion of the sweep configuration into jobs.
+
+use crate::config::SweepConfig;
+use crate::util::json::Json;
+
+/// One training run to schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub dataset: String,
+    pub imratio: f64,
+    pub loss: String,
+    pub batch: usize,
+    pub lr: f64,
+    pub seed: u32,
+    pub model: String,
+    pub epochs: usize,
+}
+
+impl Job {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("dataset", Json::str(&self.dataset)),
+            ("imratio", Json::num(self.imratio)),
+            ("loss", Json::str(&self.loss)),
+            ("batch", Json::num(self.batch as f64)),
+            ("lr", Json::num(self.lr)),
+            ("seed", Json::num(self.seed as f64)),
+            ("model", Json::str(&self.model)),
+            ("epochs", Json::num(self.epochs as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let s = |k: &str| -> crate::Result<String> {
+            Ok(j.req(k)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("{k} must be string"))?
+                .to_string())
+        };
+        let n = |k: &str| -> crate::Result<f64> {
+            j.req(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("{k} must be number"))
+        };
+        Ok(Job {
+            dataset: s("dataset")?,
+            imratio: n("imratio")?,
+            loss: s("loss")?,
+            batch: n("batch")? as usize,
+            lr: n("lr")?,
+            seed: n("seed")? as u32,
+            model: s("model")?,
+            epochs: n("epochs")? as usize,
+        })
+    }
+    /// Stable id for logs and result files.
+    pub fn id(&self) -> String {
+        format!(
+            "{}_im{}_{}_bs{}_lr{:.0e}_s{}",
+            self.dataset, self.imratio, self.loss, self.batch, self.lr, self.seed
+        )
+    }
+
+    /// Selection group: runs competing for the same Table-2 cell.
+    pub fn group(&self) -> (String, String, String, u32) {
+        (
+            self.dataset.clone(),
+            format!("{}", self.imratio),
+            self.loss.clone(),
+            self.seed,
+        )
+    }
+}
+
+/// Expand the config into the full job list (deterministic order).
+///
+/// Ordering is **coverage-first**: the (dataset, imratio, loss) cells are
+/// the innermost loops, so if a sweep is truncated (wall-clock budget,
+/// crash) the completed prefix still covers *every* Table-2/Figure-3
+/// cell with the hyper-parameter combinations processed so far, and the
+/// incremental results file remains fully analyzable via
+/// `allpairs report`.
+pub fn expand(config: &SweepConfig) -> Vec<Job> {
+    let max_lr_len = config
+        .losses
+        .iter()
+        .map(|l| config.lr_grid(l).len())
+        .max()
+        .unwrap_or(0);
+    let mut jobs = Vec::with_capacity(config.n_runs());
+    for &seed in &config.seeds {
+        for lr_idx in 0..max_lr_len {
+            for &batch in &config.batch_sizes {
+                for dataset in &config.datasets {
+                    for &imratio in &config.imratios {
+                        for loss in &config.losses {
+                            let grid = config.lr_grid(loss);
+                            let Some(&lr) = grid.get(lr_idx) else {
+                                continue;
+                            };
+                            jobs.push(Job {
+                                dataset: dataset.clone(),
+                                imratio,
+                                loss: loss.clone(),
+                                batch,
+                                lr,
+                                seed,
+                                model: config.model.clone(),
+                                epochs: config.epochs,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_config() -> SweepConfig {
+        SweepConfig {
+            datasets: vec!["synth-cifar".into()],
+            imratios: vec![0.1, 0.01],
+            losses: vec!["hinge".into(), "logistic".into()],
+            batch_sizes: vec![10, 100],
+            seeds: vec![0, 1],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn expansion_count_matches_config() {
+        let c = small_config();
+        let jobs = expand(&c);
+        assert_eq!(jobs.len(), c.n_runs());
+    }
+
+    #[test]
+    fn every_combination_appears_exactly_once() {
+        let c = small_config();
+        let jobs = expand(&c);
+        let mut ids: Vec<String> = jobs.iter().map(|j| j.id()).collect();
+        let before = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), before, "duplicate jobs in expansion");
+        // spot-check presence of a specific combination
+        assert!(jobs.iter().any(|j| j.dataset == "synth-cifar"
+            && j.imratio == 0.01
+            && j.loss == "logistic"
+            && j.batch == 100
+            && j.seed == 1));
+    }
+
+    #[test]
+    fn lr_grid_is_loss_specific() {
+        let jobs = expand(&small_config());
+        let hinge_lrs: std::collections::BTreeSet<_> = jobs
+            .iter()
+            .filter(|j| j.loss == "hinge")
+            .map(|j| format!("{:.0e}", j.lr))
+            .collect();
+        let logistic_lrs: std::collections::BTreeSet<_> = jobs
+            .iter()
+            .filter(|j| j.loss == "logistic")
+            .map(|j| format!("{:.0e}", j.lr))
+            .collect();
+        assert!(logistic_lrs.contains("1e0"));
+        assert!(!hinge_lrs.contains("1e0"));
+    }
+
+    #[test]
+    fn coverage_first_ordering() {
+        // The first |cells| jobs must cover every (dataset, imratio, loss)
+        // cell exactly once — the truncation-tolerance guarantee.
+        let c = SweepConfig {
+            datasets: vec!["a".into(), "b".into()],
+            imratios: vec![0.1, 0.01],
+            losses: vec!["hinge".into(), "logistic".into()],
+            batch_sizes: vec![10, 1000],
+            seeds: vec![0, 1],
+            ..Default::default()
+        };
+        let jobs = expand(&c);
+        let n_cells = 2 * 2 * 2;
+        let first: std::collections::BTreeSet<_> = jobs[..n_cells]
+            .iter()
+            .map(|j| (j.dataset.clone(), format!("{}", j.imratio), j.loss.clone()))
+            .collect();
+        assert_eq!(first.len(), n_cells, "first block must cover all cells");
+        // and both batch sizes appear before the second seed
+        let first_seed1 = jobs.iter().position(|j| j.seed == 1).unwrap();
+        let batches_before: std::collections::BTreeSet<_> =
+            jobs[..first_seed1].iter().map(|j| j.batch).collect();
+        assert_eq!(batches_before.len(), 2);
+    }
+
+    #[test]
+    fn job_id_is_unique_key() {
+        let j = Job {
+            dataset: "d".into(),
+            imratio: 0.01,
+            loss: "hinge".into(),
+            batch: 500,
+            lr: 0.0316,
+            seed: 3,
+            model: "resnet".into(),
+            epochs: 5,
+        };
+        assert_eq!(j.id(), "d_im0.01_hinge_bs500_lr3e-2_s3");
+    }
+}

@@ -1,0 +1,23 @@
+//! Hyper-parameter sweep engine (the paper's section 4.2 protocol).
+//!
+//! * [`grid`] — expands a [`crate::config::SweepConfig`] into the full
+//!   cartesian job list (dataset × imratio × loss × batch × lr × seed).
+//! * [`runner`] — runs one job end to end: imbalance the train pool,
+//!   stratified 80/20 subtrain/validation split, train with per-epoch
+//!   validation AUC, track the best-epoch state, and evaluate **test**
+//!   AUC at that state.
+//! * [`scheduler`] — executes the job list on worker threads, each with
+//!   its own PJRT runtime (`xla::PjRtClient` is not `Send`).
+//! * [`select`] — max-validation-AUC selection per (dataset, imratio,
+//!   loss, seed), then the paper's aggregations: median selected
+//!   hyper-parameters (Table 2) and mean ± sd test AUC (Figure 3).
+//! * [`results`] — result records + JSONL persistence.
+
+pub mod grid;
+pub mod results;
+pub mod runner;
+pub mod scheduler;
+pub mod select;
+
+pub use grid::Job;
+pub use results::RunResult;

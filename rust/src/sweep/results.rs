@@ -1,0 +1,172 @@
+//! Result records and JSONL persistence.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::grid::Job;
+
+/// Outcome of one training run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub job: Job,
+    /// Best validation AUC over epochs (None: undefined all run long).
+    pub best_val_auc: Option<f64>,
+    /// Epoch achieving it.
+    pub best_epoch: Option<usize>,
+    /// Test AUC of the best-epoch model state.
+    pub test_auc: Option<f64>,
+    /// Final-epoch mean training loss.
+    pub final_train_loss: f64,
+    /// Training diverged (non-finite loss observed).
+    pub diverged: bool,
+    /// Wall-clock seconds for the whole run.
+    pub seconds: f64,
+    /// Achieved positive fraction of the (imbalanced) train set.
+    pub achieved_imratio: f64,
+}
+
+impl RunResult {
+    pub fn to_json(&self) -> Json {
+        let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj([
+            ("job", self.job.to_json()),
+            ("best_val_auc", opt_num(self.best_val_auc)),
+            (
+                "best_epoch",
+                opt_num(self.best_epoch.map(|e| e as f64)),
+            ),
+            ("test_auc", opt_num(self.test_auc)),
+            (
+                "final_train_loss",
+                if self.final_train_loss.is_finite() {
+                    Json::Num(self.final_train_loss)
+                } else {
+                    Json::Null // JSON has no NaN/Inf; Null = diverged
+                },
+            ),
+            ("diverged", Json::Bool(self.diverged)),
+            ("seconds", Json::Num(self.seconds)),
+            ("achieved_imratio", Json::Num(self.achieved_imratio)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let opt_num = |k: &str| -> Option<f64> { j.get(k).and_then(|v| v.as_f64()) };
+        Ok(RunResult {
+            job: Job::from_json(j.req("job")?)?,
+            best_val_auc: opt_num("best_val_auc"),
+            best_epoch: opt_num("best_epoch").map(|e| e as usize),
+            test_auc: opt_num("test_auc"),
+            final_train_loss: opt_num("final_train_loss").unwrap_or(f64::NAN),
+            diverged: j
+                .get("diverged")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+            seconds: opt_num("seconds").unwrap_or(0.0),
+            achieved_imratio: opt_num("achieved_imratio").unwrap_or(f64::NAN),
+        })
+    }
+}
+
+/// Incremental JSONL writer: one line per result, flushed immediately,
+/// so a truncated sweep (crash, budget kill) loses nothing completed.
+pub struct JsonlWriter {
+    file: std::io::BufWriter<std::fs::File>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> crate::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(Self {
+            file: std::io::BufWriter::new(std::fs::File::create(path)?),
+        })
+    }
+
+    pub fn append(&mut self, result: &RunResult) -> crate::Result<()> {
+        self.file.write_all(result.to_json().dumps().as_bytes())?;
+        self.file.write_all(b"\n")?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Append results to a JSONL file.
+pub fn save_jsonl(path: impl AsRef<Path>, results: &[RunResult]) -> crate::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for r in results {
+        f.write_all(r.to_json().dumps().as_bytes())?;
+        f.write_all(b"\n")?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Load results from a JSONL file.
+pub fn load_jsonl(path: impl AsRef<Path>) -> crate::Result<Vec<RunResult>> {
+    let f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut out = Vec::new();
+    for line in f.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(RunResult::from_json(&Json::parse(&line)?)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(seed: u32, auc: f64) -> RunResult {
+        RunResult {
+            job: Job {
+                dataset: "synth-cifar".into(),
+                imratio: 0.1,
+                loss: "hinge".into(),
+                batch: 50,
+                lr: 0.01,
+                seed,
+                model: "resnet".into(),
+                epochs: 2,
+            },
+            best_val_auc: Some(auc),
+            best_epoch: Some(1),
+            test_auc: Some(auc - 0.02),
+            final_train_loss: 0.4,
+            diverged: false,
+            seconds: 1.5,
+            achieved_imratio: 0.099,
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let path = std::env::temp_dir().join("allpairs_results_test.jsonl");
+        let rs = vec![fake(0, 0.9), fake(1, 0.8)];
+        save_jsonl(&path, &rs).unwrap();
+        let back = load_jsonl(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].job.seed, 0);
+        assert_eq!(back[1].best_val_auc, Some(0.8));
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let path = std::env::temp_dir().join("allpairs_results_blank.jsonl");
+        let rs = vec![fake(0, 0.9)];
+        save_jsonl(&path, &rs).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("\n\n");
+        std::fs::write(&path, text).unwrap();
+        assert_eq!(load_jsonl(&path).unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,109 @@
+//! End-to-end execution of a single sweep job.
+//!
+//! Protocol per job (paper section 4.2):
+//!
+//! 1. imbalance the shared train pool to `job.imratio` (seeded by
+//!    `job.seed` — each seed removes a different random positive subset);
+//! 2. stratified 80/20 subtrain/validation split (seeded likewise);
+//! 3. train `job.epochs` epochs; after each epoch compute validation AUC
+//!    and snapshot the state to host whenever it improves;
+//! 4. restore the best state and evaluate **test** AUC on the balanced
+//!    test set.
+
+use std::sync::Arc;
+
+use crate::data::{Dataset, Rng, Split};
+use crate::runtime::Runtime;
+use crate::train::{EpochRecord, History, Trainer};
+
+use super::grid::Job;
+use super::results::RunResult;
+
+/// Shared, read-only data for all jobs on one dataset.
+#[derive(Debug, Clone)]
+pub struct JobData {
+    /// Balanced train pool (imbalanced per job).
+    pub train_pool: Arc<Dataset>,
+    /// Balanced test set.
+    pub test: Arc<Dataset>,
+}
+
+/// Run one job to completion on the given runtime.
+pub fn run_job(runtime: &Runtime, job: &Job, data: &JobData) -> crate::Result<RunResult> {
+    let t0 = std::time::Instant::now();
+    // Seed streams: independent per (job id), reproducible across runs.
+    let mut rng = Rng::new(0x5EED ^ fnv(&job.id()));
+    let train = data.train_pool.imbalance(job.imratio, &mut rng.fork(1));
+    let achieved_imratio = train.pos_fraction();
+    let split = Split::stratified(&train.y, 0.2, &mut rng.fork(2));
+
+    let mut trainer = Trainer::new(runtime, &job.model, &job.loss, job.batch)?;
+    trainer.init(job.seed)?;
+
+    let mut history = History::new();
+    let mut best: Option<(f64, usize, Vec<crate::runtime::HostTensor>)> = None;
+    let mut epoch_rng = rng.fork(3);
+    let mut diverged = false;
+    for epoch in 0..job.epochs {
+        let te = std::time::Instant::now();
+        let stats = trainer.train_epoch(&train, &split.subtrain, job.lr as f32, &mut epoch_rng)?;
+        if !stats.mean_loss.is_finite() {
+            diverged = true;
+            history.push(EpochRecord {
+                epoch,
+                train_loss: stats.mean_loss,
+                val_auc: None,
+                seconds: te.elapsed().as_secs_f64(),
+            });
+            break;
+        }
+        let val_auc = trainer.eval_auc(&train, &split.validation)?;
+        if let Some(v) = val_auc {
+            let improved = best.as_ref().map(|(b, _, _)| v > *b).unwrap_or(true);
+            if improved {
+                best = Some((v, epoch, trainer.state_to_host()?));
+            }
+        }
+        history.push(EpochRecord {
+            epoch,
+            train_loss: stats.mean_loss,
+            val_auc,
+            seconds: te.elapsed().as_secs_f64(),
+        });
+    }
+
+    // Test AUC at the best-validation-AUC state.
+    let (best_val_auc, best_epoch, test_auc) = match best {
+        Some((v, e, state)) => {
+            trainer.load_state(&state)?;
+            let test_indices: Vec<u32> = (0..data.test.len() as u32).collect();
+            let t_auc = trainer.eval_auc(&data.test, &test_indices)?;
+            (Some(v), Some(e), t_auc)
+        }
+        None => (None, None, None),
+    };
+
+    Ok(RunResult {
+        job: job.clone(),
+        best_val_auc,
+        best_epoch,
+        test_auc,
+        final_train_loss: history
+            .records
+            .last()
+            .map(|r| r.train_loss)
+            .unwrap_or(f64::NAN),
+        diverged,
+        seconds: t0.elapsed().as_secs_f64(),
+        achieved_imratio,
+    })
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325_u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}

@@ -1,0 +1,148 @@
+//! Multi-threaded sweep execution.
+//!
+//! `xla::PjRtClient` is `Rc`-based (not `Send`), so parallelism is at the
+//! *job* level with one full [`Runtime`] per worker thread.  Jobs are
+//! pulled from a shared queue; results stream back over a channel so the
+//! caller can persist incrementally and print progress.
+//!
+//! Memory note: the train pools are shared read-only via `Arc`; each
+//! worker's executable cache holds only the (model, loss, batch) variants
+//! its jobs actually touch.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use super::grid::Job;
+use super::results::RunResult;
+use super::runner::{run_job, JobData};
+use crate::runtime::Runtime;
+
+/// Progress callback: (finished, total, last result or error message).
+pub type ProgressFn = Box<dyn FnMut(usize, usize, &str) + Send>;
+
+/// Per-result callback (e.g. incremental JSONL persistence).
+pub type OnResultFn = Box<dyn FnMut(&RunResult) + Send>;
+
+/// Execute `jobs` on `workers` threads.  `datasets` maps dataset name →
+/// shared data.  Failed jobs are reported (not retried) and skipped.
+pub fn run_sweep(
+    artifacts_dir: &std::path::Path,
+    jobs: Vec<Job>,
+    datasets: HashMap<String, JobData>,
+    workers: usize,
+    progress: Option<ProgressFn>,
+) -> crate::Result<Vec<RunResult>> {
+    run_sweep_with(artifacts_dir, jobs, datasets, workers, progress, None)
+}
+
+/// [`run_sweep`] with an additional per-result hook, invoked on the
+/// collector thread in completion order.
+pub fn run_sweep_with(
+    artifacts_dir: &std::path::Path,
+    jobs: Vec<Job>,
+    datasets: HashMap<String, JobData>,
+    workers: usize,
+    mut progress: Option<ProgressFn>,
+    mut on_result: Option<OnResultFn>,
+) -> crate::Result<Vec<RunResult>> {
+    let total = jobs.len();
+    let queue = Arc::new(Mutex::new(std::collections::VecDeque::from(jobs)));
+    let datasets = Arc::new(datasets);
+    let (tx, rx) = mpsc::channel::<Result<RunResult, String>>();
+    let done = Arc::new(AtomicUsize::new(0));
+    let workers = workers.max(1).min(total.max(1));
+
+    let mut handles = Vec::with_capacity(workers);
+    for worker_id in 0..workers {
+        let queue = queue.clone();
+        let datasets = datasets.clone();
+        let tx = tx.clone();
+        let dir = artifacts_dir.to_path_buf();
+        let done = done.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("sweep-{worker_id}"))
+                .spawn(move || {
+                    // One PJRT runtime per worker thread.
+                    let runtime = match Runtime::new(&dir) {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            let _ = tx.send(Err(format!("worker {worker_id}: {e}")));
+                            return;
+                        }
+                    };
+                    loop {
+                        let job = {
+                            let mut q = queue.lock().unwrap();
+                            match q.pop_front() {
+                                Some(j) => j,
+                                None => break,
+                            }
+                        };
+                        let outcome = match datasets.get(&job.dataset) {
+                            None => Err(format!("{}: unknown dataset", job.id())),
+                            Some(data) => run_job(&runtime, &job, data)
+                                .map_err(|e| format!("{}: {e}", job.id())),
+                        };
+                        done.fetch_add(1, Ordering::Relaxed);
+                        if tx.send(outcome).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn sweep worker"),
+        );
+    }
+    drop(tx);
+
+    let mut results = Vec::with_capacity(total);
+    let mut errors = Vec::new();
+    for outcome in rx {
+        let finished = done.load(Ordering::Relaxed);
+        match outcome {
+            Ok(r) => {
+                if let Some(h) = on_result.as_mut() {
+                    h(&r);
+                }
+                if let Some(p) = progress.as_mut() {
+                    let msg = format!(
+                        "{} val_auc={:.4} test_auc={:.4}",
+                        r.job.id(),
+                        r.best_val_auc.unwrap_or(f64::NAN),
+                        r.test_auc.unwrap_or(f64::NAN)
+                    );
+                    p(finished, total, &msg);
+                }
+                results.push(r);
+            }
+            Err(msg) => {
+                if let Some(p) = progress.as_mut() {
+                    p(finished, total, &format!("FAILED {msg}"));
+                }
+                errors.push(msg);
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    if !errors.is_empty() && results.is_empty() {
+        anyhow::bail!("all {} jobs failed; first error: {}", errors.len(), errors[0]);
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    // The scheduler's queue/channel mechanics are covered by the
+    // integration test (rust/tests/integration_sweep.rs) which needs real
+    // artifacts; here we only test the pure helpers.
+
+    #[test]
+    fn worker_count_clamped() {
+        // covered implicitly: run_sweep with 0 workers must still work via
+        // the .max(1); compile-time presence test.
+        assert_eq!(0usize.max(1).min(5), 1);
+    }
+}

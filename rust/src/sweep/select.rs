@@ -1,0 +1,221 @@
+//! Model selection and aggregation: from raw run results to the paper's
+//! Table 2 (median selected hyper-parameters) and Figure 3 (test AUC
+//! mean ± sd) entries.
+//!
+//! Per (dataset, imratio, loss, **seed**) the winning run is the one with
+//! the highest validation AUC over the whole (batch, lr, epoch) grid —
+//! exactly the paper's "the parameter combination and number of epochs
+//! that achieved the maximum validation AUC was selected".  Aggregation
+//! over seeds then reports the *median* selected batch and learning rate
+//! (Table 2) and the *mean ± sd* test AUC (Figure 3).
+
+use std::collections::BTreeMap;
+
+use crate::metrics::Summary;
+
+use super::results::RunResult;
+
+/// The per-seed winner of one selection group.
+#[derive(Debug, Clone)]
+pub struct SeedSelection {
+    pub dataset: String,
+    pub imratio: f64,
+    pub loss: String,
+    pub seed: u32,
+    pub batch: usize,
+    pub lr: f64,
+    pub best_epoch: Option<usize>,
+    pub val_auc: f64,
+    pub test_auc: Option<f64>,
+}
+
+/// Aggregated cell: one (dataset, imratio, loss) entry of Table 2 / Fig 3.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub dataset: String,
+    pub imratio: f64,
+    pub loss: String,
+    /// Median selected batch size over seeds (Table 2).
+    pub median_batch: f64,
+    /// Median selected learning rate over seeds (Table 2).
+    pub median_lr: f64,
+    /// Test AUC summary over seeds (Figure 3: mean ± sd).
+    pub test_auc: Summary,
+    /// Number of seeds with a defined winner.
+    pub n_seeds: usize,
+}
+
+/// Group key ordering: dataset, imratio (desc, paper order), loss.
+fn cell_key(dataset: &str, imratio: f64, loss: &str) -> (String, i64, String) {
+    // negate so BTreeMap iterates imratio descending (0.1, 0.01, 0.001)
+    (
+        dataset.to_string(),
+        -(imratio * 1e9) as i64,
+        loss.to_string(),
+    )
+}
+
+/// Per-seed max-validation-AUC selection.
+pub fn select_per_seed(results: &[RunResult]) -> Vec<SeedSelection> {
+    let mut best: BTreeMap<(String, i64, String, u32), &RunResult> = BTreeMap::new();
+    for r in results {
+        let Some(val) = r.best_val_auc else { continue };
+        let key = (
+            r.job.dataset.clone(),
+            -(r.job.imratio * 1e9) as i64,
+            r.job.loss.clone(),
+            r.job.seed,
+        );
+        let replace = match best.get(&key) {
+            None => true,
+            Some(cur) => val > cur.best_val_auc.unwrap(),
+        };
+        if replace {
+            best.insert(key, r);
+        }
+    }
+    best.into_values()
+        .map(|r| SeedSelection {
+            dataset: r.job.dataset.clone(),
+            imratio: r.job.imratio,
+            loss: r.job.loss.clone(),
+            seed: r.job.seed,
+            batch: r.job.batch,
+            lr: r.job.lr,
+            best_epoch: r.best_epoch,
+            val_auc: r.best_val_auc.unwrap(),
+            test_auc: r.test_auc,
+        })
+        .collect()
+}
+
+/// Aggregate per-seed selections into Table 2 / Figure 3 cells.
+pub fn aggregate(selections: &[SeedSelection]) -> Vec<Cell> {
+    let mut groups: BTreeMap<(String, i64, String), Vec<&SeedSelection>> = BTreeMap::new();
+    for s in selections {
+        groups
+            .entry(cell_key(&s.dataset, s.imratio, &s.loss))
+            .or_default()
+            .push(s);
+    }
+    groups
+        .into_values()
+        .map(|sels| {
+            let batches = Summary::from_values(sels.iter().map(|s| s.batch as f64));
+            let lrs = Summary::from_values(sels.iter().map(|s| s.lr));
+            let aucs = Summary::from_values(sels.iter().filter_map(|s| s.test_auc));
+            let first = sels[0];
+            Cell {
+                dataset: first.dataset.clone(),
+                imratio: first.imratio,
+                loss: first.loss.clone(),
+                median_batch: batches.median(),
+                median_lr: lrs.median(),
+                test_auc: aucs,
+                n_seeds: sels.len(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::grid::Job;
+
+    fn result(
+        loss: &str,
+        imratio: f64,
+        batch: usize,
+        lr: f64,
+        seed: u32,
+        val: f64,
+        test: f64,
+    ) -> RunResult {
+        RunResult {
+            job: Job {
+                dataset: "d".into(),
+                imratio,
+                loss: loss.into(),
+                batch,
+                lr,
+                seed,
+                model: "resnet".into(),
+                epochs: 2,
+            },
+            best_val_auc: Some(val),
+            best_epoch: Some(1),
+            test_auc: Some(test),
+            final_train_loss: 0.1,
+            diverged: false,
+            seconds: 1.0,
+            achieved_imratio: imratio,
+        }
+    }
+
+    #[test]
+    fn picks_max_val_auc_within_seed() {
+        let rs = vec![
+            result("hinge", 0.1, 10, 0.01, 0, 0.80, 0.78),
+            result("hinge", 0.1, 500, 0.1, 0, 0.92, 0.90), // winner
+            result("hinge", 0.1, 100, 0.01, 0, 0.85, 0.84),
+        ];
+        let sel = select_per_seed(&rs);
+        assert_eq!(sel.len(), 1);
+        assert_eq!(sel[0].batch, 500);
+        assert_eq!(sel[0].test_auc, Some(0.90));
+    }
+
+    #[test]
+    fn seeds_selected_independently() {
+        let rs = vec![
+            result("hinge", 0.1, 10, 0.01, 0, 0.9, 0.88),
+            result("hinge", 0.1, 500, 0.1, 0, 0.7, 0.69),
+            result("hinge", 0.1, 10, 0.01, 1, 0.6, 0.59),
+            result("hinge", 0.1, 500, 0.1, 1, 0.8, 0.82),
+        ];
+        let sel = select_per_seed(&rs);
+        assert_eq!(sel.len(), 2);
+        let by_seed: std::collections::HashMap<u32, usize> =
+            sel.iter().map(|s| (s.seed, s.batch)).collect();
+        assert_eq!(by_seed[&0], 10);
+        assert_eq!(by_seed[&1], 500);
+    }
+
+    #[test]
+    fn undefined_val_auc_runs_ignored() {
+        let mut bad = result("hinge", 0.1, 10, 0.01, 0, 0.0, 0.0);
+        bad.best_val_auc = None;
+        let good = result("hinge", 0.1, 50, 0.01, 0, 0.7, 0.7);
+        let sel = select_per_seed(&[bad, good]);
+        assert_eq!(sel.len(), 1);
+        assert_eq!(sel[0].batch, 50);
+    }
+
+    #[test]
+    fn aggregation_medians_and_means() {
+        let rs = vec![
+            result("hinge", 0.01, 10, 0.001, 0, 0.9, 0.80),
+            result("hinge", 0.01, 500, 0.1, 1, 0.9, 0.90),
+            result("hinge", 0.01, 1000, 0.0316, 2, 0.9, 0.85),
+        ];
+        let cells = aggregate(&select_per_seed(&rs));
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.median_batch, 500.0);
+        assert!((c.test_auc.mean() - 0.85).abs() < 1e-12);
+        assert_eq!(c.n_seeds, 3);
+    }
+
+    #[test]
+    fn cells_ordered_paper_style() {
+        let rs = vec![
+            result("hinge", 0.001, 10, 0.01, 0, 0.6, 0.55),
+            result("hinge", 0.1, 10, 0.01, 0, 0.9, 0.88),
+            result("hinge", 0.01, 10, 0.01, 0, 0.8, 0.75),
+        ];
+        let cells = aggregate(&select_per_seed(&rs));
+        let ratios: Vec<f64> = cells.iter().map(|c| c.imratio).collect();
+        assert_eq!(ratios, vec![0.1, 0.01, 0.001]);
+    }
+}

@@ -1,0 +1,131 @@
+//! Binary checkpoints of the flat training state.
+//!
+//! Format (little-endian):
+//!
+//! ```text
+//! magic   "APCK"            4 bytes
+//! version u32               = 1
+//! count   u32               number of tensors
+//! per tensor:
+//!   rank  u32
+//!   dims  i64 * rank
+//!   data  f32 * prod(dims)
+//! ```
+//!
+//! The tensor order is the manifest's flat `tree_flatten` order, so a
+//! checkpoint written by one run restores exactly into any trainer built
+//! from the same (model, loss) artifacts.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::runtime::HostTensor;
+
+const MAGIC: &[u8; 4] = b"APCK";
+const VERSION: u32 = 1;
+
+/// Write a state snapshot to `path`.
+pub fn save(path: impl AsRef<Path>, tensors: &[HostTensor]) -> crate::Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            buf.extend_from_slice(&d.to_le_bytes());
+        }
+        for &v in &t.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read a state snapshot from `path`.
+pub fn load(path: impl AsRef<Path>) -> crate::Result<Vec<HostTensor>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path.as_ref())?.read_to_end(&mut bytes)?;
+    let mut cursor = 0usize;
+    let take = |cursor: &mut usize, n: usize| -> crate::Result<&[u8]> {
+        anyhow::ensure!(*cursor + n <= bytes.len(), "truncated checkpoint");
+        let s = &bytes[*cursor..*cursor + n];
+        *cursor += n;
+        Ok(s)
+    };
+    anyhow::ensure!(take(&mut cursor, 4)? == MAGIC, "bad checkpoint magic");
+    let version = u32::from_le_bytes(take(&mut cursor, 4)?.try_into().unwrap());
+    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    let count = u32::from_le_bytes(take(&mut cursor, 4)?.try_into().unwrap()) as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let rank = u32::from_le_bytes(take(&mut cursor, 4)?.try_into().unwrap()) as usize;
+        anyhow::ensure!(rank <= 8, "implausible rank {rank}");
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(i64::from_le_bytes(take(&mut cursor, 8)?.try_into().unwrap()));
+        }
+        let elems: i64 = shape.iter().product();
+        anyhow::ensure!(elems >= 0, "negative dims");
+        let raw = take(&mut cursor, elems as usize * 4)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        tensors.push(HostTensor::new(shape, data));
+    }
+    anyhow::ensure!(cursor == bytes.len(), "trailing bytes in checkpoint");
+    Ok(tensors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("allpairs_ckpt_{name}"))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let tensors = vec![
+            HostTensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            HostTensor::scalar(7.5),
+            HostTensor::new(vec![0], vec![]),
+        ];
+        let p = tmp("roundtrip.bin");
+        save(&p, &tensors).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back, tensors);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.bin");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let tensors = vec![HostTensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0])];
+        let p = tmp("trunc.bin");
+        save(&p, &tensors).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        let tensors = vec![HostTensor::scalar(1.0)];
+        let p = tmp("trail.bin");
+        save(&p, &tensors).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.push(0);
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Per-epoch training records and model selection.
+//!
+//! The paper's protocol: train for a fixed number of epochs, evaluate
+//! validation AUC each epoch, and select **the epoch with maximum
+//! validation AUC** (section 4.2).  [`History::best_epoch`] implements
+//! that selection; ties go to the earlier epoch (less overfitting).
+
+/// Measurements from one training epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    /// Mean per-batch training loss.
+    pub train_loss: f64,
+    /// Validation AUC (None when undefined, e.g. a single-class split).
+    pub val_auc: Option<f64>,
+    /// Wall-clock seconds spent in this epoch (train + eval).
+    pub seconds: f64,
+}
+
+/// Append-only epoch log for one training run.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub records: Vec<EpochRecord>,
+}
+
+impl History {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, rec: EpochRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The record with maximum validation AUC (earliest wins ties).
+    pub fn best_epoch(&self) -> Option<&EpochRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.val_auc.is_some())
+            .max_by(|a, b| {
+                a.val_auc
+                    .unwrap()
+                    .partial_cmp(&b.val_auc.unwrap())
+                    .unwrap()
+                    // max_by keeps the *last* maximal element; reverse the
+                    // epoch order so ties resolve to the earliest epoch.
+                    .then(b.epoch.cmp(&a.epoch))
+            })
+    }
+
+    /// Best validation AUC seen so far.
+    pub fn best_val_auc(&self) -> Option<f64> {
+        self.best_epoch().and_then(|r| r.val_auc)
+    }
+
+    /// Loss curve as (epoch, train_loss) pairs.
+    pub fn loss_curve(&self) -> Vec<(usize, f64)> {
+        self.records.iter().map(|r| (r.epoch, r.train_loss)).collect()
+    }
+
+    /// True if validation AUC has not improved in the last `patience`
+    /// epochs (early-stopping predicate).
+    pub fn plateaued(&self, patience: usize) -> bool {
+        match self.best_epoch() {
+            None => false,
+            Some(best) => self
+                .records
+                .last()
+                .map(|last| last.epoch.saturating_sub(best.epoch) >= patience)
+                .unwrap_or(false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: usize, auc: Option<f64>) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            train_loss: 1.0 / (epoch + 1) as f64,
+            val_auc: auc,
+            seconds: 0.1,
+        }
+    }
+
+    #[test]
+    fn best_epoch_is_max_val_auc() {
+        let mut h = History::new();
+        h.push(rec(0, Some(0.6)));
+        h.push(rec(1, Some(0.9)));
+        h.push(rec(2, Some(0.7)));
+        assert_eq!(h.best_epoch().unwrap().epoch, 1);
+        assert_eq!(h.best_val_auc(), Some(0.9));
+    }
+
+    #[test]
+    fn ties_go_to_earliest() {
+        let mut h = History::new();
+        h.push(rec(0, Some(0.8)));
+        h.push(rec(1, Some(0.8)));
+        assert_eq!(h.best_epoch().unwrap().epoch, 0);
+    }
+
+    #[test]
+    fn undefined_aucs_are_skipped() {
+        let mut h = History::new();
+        h.push(rec(0, None));
+        h.push(rec(1, Some(0.55)));
+        h.push(rec(2, None));
+        assert_eq!(h.best_epoch().unwrap().epoch, 1);
+        let empty = History::new();
+        assert!(empty.best_epoch().is_none());
+    }
+
+    #[test]
+    fn plateau_detection() {
+        let mut h = History::new();
+        h.push(rec(0, Some(0.9)));
+        for e in 1..=4 {
+            h.push(rec(e, Some(0.7)));
+        }
+        assert!(h.plateaued(4));
+        assert!(!h.plateaued(5));
+    }
+
+    #[test]
+    fn loss_curve_order() {
+        let mut h = History::new();
+        h.push(rec(0, Some(0.5)));
+        h.push(rec(1, Some(0.6)));
+        assert_eq!(h.loss_curve(), vec![(0, 1.0), (1, 0.5)]);
+    }
+}

@@ -1,0 +1,345 @@
+//! Extension (paper §5 future work): full-batch deterministic training
+//! with L-BFGS over the `grad_*` AOT artifacts.
+//!
+//! The paper: *"We would like to explore how our method could be used
+//! with full batch sizes and deterministic optimization algorithms such
+//! as the Limited Memory Broyden–Fletcher–Goldfarb–Shanno (LBFGS)
+//! optimizer.  We expect that for problems where there exists a bad
+//! condition number, LBFGS with full batch size should out-perform
+//! Stochastic Gradient Descent with small batch sizes."*  The functional
+//! loss makes full-batch gradients affordable (O(n log n) per epoch),
+//! which is precisely what a deterministic quasi-Newton method needs.
+//!
+//! Implementation: standard two-loop recursion with history `m`, an
+//! Armijo backtracking line search, and gamma-scaled initial Hessian.
+//! The objective/gradient oracle is one PJRT execution of a
+//! `grad_<model>_<loss>_n<N>` artifact; all quasi-Newton algebra runs on
+//! flat host vectors.
+
+use std::collections::VecDeque;
+
+use xla::Literal;
+
+use crate::runtime::{ArtifactKind, HostTensor, Runtime};
+
+/// L-BFGS hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct LbfgsConfig {
+    /// History length (pairs of (s, y) kept).
+    pub history: usize,
+    /// Maximum outer iterations.
+    pub max_iters: usize,
+    /// Armijo sufficient-decrease constant.
+    pub c1: f64,
+    /// Line-search backtracking factor.
+    pub backtrack: f64,
+    /// Maximum line-search trials per iteration.
+    pub max_ls: usize,
+    /// Stop when the gradient inf-norm falls below this.
+    pub grad_tol: f64,
+}
+
+impl Default for LbfgsConfig {
+    fn default() -> Self {
+        Self {
+            history: 10,
+            max_iters: 50,
+            c1: 1e-4,
+            backtrack: 0.5,
+            max_ls: 20,
+            grad_tol: 1e-6,
+        }
+    }
+}
+
+/// One record of the optimization trace.
+#[derive(Debug, Clone, Copy)]
+pub struct LbfgsRecord {
+    pub iter: usize,
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub step: f64,
+    pub ls_trials: usize,
+}
+
+/// The full-batch objective bound to a `grad_*` artifact and a dataset.
+pub struct FullBatchObjective<'rt> {
+    runtime: &'rt Runtime,
+    grad_name: String,
+    n_params: usize,
+    /// Fixed full-batch inputs (x, is_pos, is_neg), padded to the
+    /// artifact's static size.
+    x: Literal,
+    pos: Literal,
+    neg: Literal,
+    /// Shapes of the parameter tensors (for packing/unpacking).
+    param_shapes: Vec<Vec<i64>>,
+    /// Number of objective evaluations performed (diagnostics).
+    pub evals: usize,
+}
+
+impl<'rt> FullBatchObjective<'rt> {
+    /// Bind the `grad_<model>_<loss>_n<N>` artifact to a dataset slice.
+    ///
+    /// `rows` is row-major example data (`n_examples * row_len`) and
+    /// `labels` the {0,1} positive indicators; both are zero-padded to
+    /// the artifact's static batch.
+    pub fn new(
+        runtime: &'rt Runtime,
+        model: &str,
+        loss: &str,
+        rows: &[f32],
+        labels: &[f32],
+    ) -> crate::Result<Self> {
+        let art = runtime
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Grad && a.model == model && a.loss == loss)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no grad artifact for {model}/{loss}"))?;
+        let n_params = art.n_state;
+        let cap = art.batch;
+        anyhow::ensure!(
+            labels.len() <= cap,
+            "grad artifact holds {cap} examples, got {}",
+            labels.len()
+        );
+        let row_len: usize = art.inputs[n_params].shape[1..].iter().product();
+        anyhow::ensure!(rows.len() == labels.len() * row_len, "rows/labels mismatch");
+        let mut x = rows.to_vec();
+        x.resize(cap * row_len, 0.0);
+        let mut pos = labels.to_vec();
+        pos.resize(cap, 0.0);
+        let neg: Vec<f32> = labels
+            .iter()
+            .map(|&p| if p != 0.0 { 0.0 } else { 1.0 })
+            .chain(std::iter::repeat(0.0))
+            .take(cap)
+            .collect();
+        let x_shape: Vec<i64> = art.inputs[n_params].shape.iter().map(|&d| d as i64).collect();
+        let param_shapes: Vec<Vec<i64>> = art.inputs[..n_params]
+            .iter()
+            .map(|sig| sig.shape.iter().map(|&d| d as i64).collect())
+            .collect();
+        Ok(Self {
+            runtime,
+            grad_name: art.name.clone(),
+            n_params,
+            x: Literal::vec1(&x).reshape(&x_shape)?,
+            pos: Literal::vec1(&pos),
+            neg: Literal::vec1(&neg),
+            param_shapes,
+            evals: 0,
+        })
+    }
+
+    /// Total number of scalar parameters.
+    pub fn dim(&self) -> usize {
+        self.param_shapes
+            .iter()
+            .map(|s| s.iter().product::<i64>() as usize)
+            .sum()
+    }
+
+    /// Initial parameters from the matching init artifact, flattened.
+    pub fn init_params(&self, model: &str, loss: &str, seed: u32) -> crate::Result<Vec<f32>> {
+        let init_name = crate::runtime::Manifest::init_name(model, loss);
+        let outs = self.runtime.execute(&init_name, &[Literal::scalar(seed)])?;
+        // init returns the full state (params + optimizer slots); the
+        // params are the leading tensors whose shapes match ours.
+        let mut flat = Vec::with_capacity(self.dim());
+        for (lit, shape) in outs.iter().zip(&self.param_shapes) {
+            let t = HostTensor::from_literal(lit)?;
+            anyhow::ensure!(&t.shape == shape, "init/grad param shape mismatch");
+            flat.extend_from_slice(&t.data);
+        }
+        Ok(flat)
+    }
+
+    /// Evaluate (loss, gradient) at flat parameters `theta`.
+    pub fn eval(&mut self, theta: &[f32]) -> crate::Result<(f64, Vec<f32>)> {
+        anyhow::ensure!(theta.len() == self.dim(), "theta dim");
+        self.evals += 1;
+        let mut params: Vec<Literal> = Vec::with_capacity(self.n_params);
+        let mut offset = 0;
+        for shape in &self.param_shapes {
+            let len: i64 = shape.iter().product();
+            let chunk = &theta[offset..offset + len as usize];
+            offset += len as usize;
+            params.push(Literal::vec1(chunk).reshape(shape)?);
+        }
+        // borrow the fixed batch literals; only the params are rebuilt
+        let args: Vec<&Literal> = params
+            .iter()
+            .chain([&self.x, &self.pos, &self.neg])
+            .collect();
+        let outs = self.runtime.execute(&self.grad_name, &args)?;
+        let loss = outs[0].to_vec::<f32>()?[0] as f64;
+        let mut grad = Vec::with_capacity(self.dim());
+        for lit in &outs[1..] {
+            grad.extend_from_slice(&HostTensor::from_literal(lit)?.data);
+        }
+        Ok((loss, grad))
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+fn inf_norm(a: &[f32]) -> f64 {
+    a.iter().fold(0.0_f64, |m, &x| m.max(x.abs() as f64))
+}
+
+/// Minimize the objective with L-BFGS; returns (theta*, trace).
+pub fn minimize(
+    objective: &mut FullBatchObjective,
+    theta0: Vec<f32>,
+    config: &LbfgsConfig,
+) -> crate::Result<(Vec<f32>, Vec<LbfgsRecord>)> {
+    let mut theta = theta0;
+    let (mut loss, mut grad) = objective.eval(&theta)?;
+    let mut trace = Vec::new();
+    let mut s_hist: VecDeque<Vec<f32>> = VecDeque::new();
+    let mut y_hist: VecDeque<Vec<f32>> = VecDeque::new();
+    let mut rho_hist: VecDeque<f64> = VecDeque::new();
+
+    for iter in 0..config.max_iters {
+        let gnorm = inf_norm(&grad);
+        if gnorm < config.grad_tol {
+            trace.push(LbfgsRecord {
+                iter,
+                loss,
+                grad_norm: gnorm,
+                step: 0.0,
+                ls_trials: 0,
+            });
+            break;
+        }
+        // Two-loop recursion: d = -H g.
+        let mut q: Vec<f64> = grad.iter().map(|&g| g as f64).collect();
+        let mut alphas = Vec::with_capacity(s_hist.len());
+        for i in (0..s_hist.len()).rev() {
+            let alpha = rho_hist[i]
+                * s_hist[i]
+                    .iter()
+                    .zip(&q)
+                    .map(|(&s, &qv)| s as f64 * qv)
+                    .sum::<f64>();
+            for (qv, &y) in q.iter_mut().zip(&y_hist[i]) {
+                *qv -= alpha * y as f64;
+            }
+            alphas.push(alpha);
+        }
+        // Initial Hessian scaling gamma = s·y / y·y from the newest pair.
+        let gamma = match s_hist.back() {
+            Some(s) => {
+                let y = y_hist.back().unwrap();
+                let sy = dot(s, y);
+                let yy = dot(y, y);
+                if yy > 0.0 {
+                    sy / yy
+                } else {
+                    1.0
+                }
+            }
+            None => 1.0,
+        };
+        for qv in q.iter_mut() {
+            *qv *= gamma;
+        }
+        for (idx, i) in (0..s_hist.len()).enumerate() {
+            let beta = rho_hist[i]
+                * y_hist[i]
+                    .iter()
+                    .zip(&q)
+                    .map(|(&y, &qv)| y as f64 * qv)
+                    .sum::<f64>();
+            let alpha = alphas[s_hist.len() - 1 - idx];
+            for (qv, &s) in q.iter_mut().zip(&s_hist[i]) {
+                *qv += (alpha - beta) * s as f64;
+            }
+        }
+        let direction: Vec<f32> = q.iter().map(|&v| -v as f32).collect();
+        let dir_deriv = dot(&direction, &grad);
+        // Fall back to steepest descent on a non-descent direction.
+        let (direction, dir_deriv) = if dir_deriv < 0.0 {
+            (direction, dir_deriv)
+        } else {
+            let d: Vec<f32> = grad.iter().map(|&g| -g).collect();
+            let dd = dot(&d, &grad);
+            (d, dd)
+        };
+
+        // Armijo backtracking line search.
+        let mut step = 1.0_f64;
+        let mut trials = 0;
+        let (new_theta, new_loss, new_grad) = loop {
+            trials += 1;
+            let candidate: Vec<f32> = theta
+                .iter()
+                .zip(&direction)
+                .map(|(&t, &d)| t + (step * d as f64) as f32)
+                .collect();
+            let (cl, cg) = objective.eval(&candidate)?;
+            if cl <= loss + config.c1 * step * dir_deriv || trials >= config.max_ls {
+                break (candidate, cl, cg);
+            }
+            step *= config.backtrack;
+        };
+
+        // Curvature update.
+        let s: Vec<f32> = new_theta
+            .iter()
+            .zip(&theta)
+            .map(|(&a, &b)| a - b)
+            .collect();
+        let y: Vec<f32> = new_grad.iter().zip(&grad).map(|(&a, &b)| a - b).collect();
+        let sy = dot(&s, &y);
+        if sy > 1e-10 {
+            if s_hist.len() == config.history {
+                s_hist.pop_front();
+                y_hist.pop_front();
+                rho_hist.pop_front();
+            }
+            rho_hist.push_back(1.0 / sy);
+            s_hist.push_back(s);
+            y_hist.push_back(y);
+        }
+        trace.push(LbfgsRecord {
+            iter,
+            loss: new_loss,
+            grad_norm: inf_norm(&new_grad),
+            step,
+            ls_trials: trials,
+        });
+        theta = new_theta;
+        loss = new_loss;
+        grad = new_grad;
+        if !loss.is_finite() {
+            break;
+        }
+    }
+    Ok((theta, trace))
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/integration_lbfgs.rs; here we
+    // only cover the pure vector helpers.
+    use super::*;
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(inf_norm(&[-3.0, 2.0]), 3.0);
+        assert_eq!(inf_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = LbfgsConfig::default();
+        assert!(c.history > 0 && c.c1 < 1.0 && c.backtrack < 1.0);
+    }
+}

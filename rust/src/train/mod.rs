@@ -1,0 +1,19 @@
+//! Training loop over PJRT artifacts.
+//!
+//! * [`trainer`] — [`trainer::Trainer`]: owns the training state as
+//!   device-resident buffers and drives `init` / `train` / `predict`
+//!   artifacts (one PJRT execution per step; Python is never involved).
+//! * [`history`] — per-epoch records + the paper's max-validation-AUC
+//!   epoch selection.
+//! * [`checkpoint`] — binary snapshots of the flat training state.
+
+//! * [`lbfgs`] — the paper's §5 future-work extension: deterministic
+//!   full-batch L-BFGS over `grad_*` artifacts.
+
+pub mod checkpoint;
+pub mod history;
+pub mod lbfgs;
+pub mod trainer;
+
+pub use history::{EpochRecord, History};
+pub use trainer::Trainer;

@@ -1,0 +1,280 @@
+//! The training loop: one PJRT execution per step, state device-resident.
+//!
+//! A [`Trainer`] binds (runtime, model, loss, batch size) to the three
+//! artifacts `init_*`, `train_*_bs<B>`, `predict_*_bs<P>` and drives them:
+//!
+//! ```text
+//! init(seed) ──► state ──► train(state, x, p, q, lr) ──► state' ─┐
+//!                 ▲                                              │
+//!                 └──────────────── every batch ◄────────────────┘
+//! ```
+//!
+//! The state tensors stay on the device as `PjRtBuffer`s between steps and
+//! are passed to each execution *by reference* (PJRT borrows inputs; no
+//! donation is configured, so they remain valid).  Only the scalar loss is
+//! read back per batch, and scores per evaluation pass.
+
+use xla::{Literal, PjRtBuffer};
+
+use crate::data::{BatchPlan, Dataset, Rng};
+use crate::metrics::auc;
+use crate::runtime::{ArtifactKind, HostTensor, Manifest, Runtime};
+
+use super::history::{EpochRecord, History};
+
+/// Statistics from one training epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct EpochStats {
+    pub mean_loss: f64,
+    pub n_batches: usize,
+    pub n_examples: usize,
+}
+
+/// Drives init/train/predict artifacts for one (model, loss, batch) run.
+pub struct Trainer<'rt> {
+    runtime: &'rt Runtime,
+    train_name: String,
+    predict_name: String,
+    init_name: String,
+    batch: usize,
+    predict_batch: usize,
+    n_state: usize,
+    row_len: usize,
+    x_shape: Vec<i64>,
+    /// Device-resident training state (params + optimizer slots).
+    state: Option<Vec<PjRtBuffer>>,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Resolve artifacts for (model, loss, batch) and validate signatures.
+    pub fn new(
+        runtime: &'rt Runtime,
+        model: &str,
+        loss: &str,
+        batch: usize,
+    ) -> crate::Result<Self> {
+        let manifest = runtime.manifest();
+        let train_name = Manifest::train_name(model, loss, batch);
+        let train_art = manifest.get(&train_name)?.clone();
+        anyhow::ensure!(train_art.kind == ArtifactKind::Train, "{train_name} kind");
+        let predict_batch = manifest.predict_batch(model, loss)?;
+        let predict_name = Manifest::predict_name(model, loss, predict_batch);
+        let init_name = Manifest::init_name(model, loss);
+        manifest.get(&init_name)?;
+        manifest.get(&predict_name)?;
+
+        let n_state = train_art.n_state;
+        // x is the tensor right after the state block; its trailing dims
+        // give the per-example row length.
+        let x_sig = &train_art.inputs[n_state];
+        anyhow::ensure!(x_sig.shape[0] == batch, "batch dim mismatch");
+        let row_len: usize = x_sig.shape[1..].iter().product();
+        let x_shape: Vec<i64> = x_sig.shape.iter().map(|&d| d as i64).collect();
+        Ok(Self {
+            runtime,
+            train_name,
+            predict_name,
+            init_name,
+            batch,
+            predict_batch,
+            n_state,
+            row_len,
+            x_shape,
+            state: None,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn n_state(&self) -> usize {
+        self.n_state
+    }
+
+    /// Initialize the training state from a seed (runs the init artifact).
+    pub fn init(&mut self, seed: u32) -> crate::Result<()> {
+        let seed_lit = Literal::scalar(seed);
+        let outs = self.runtime.execute(&self.init_name, &[seed_lit])?;
+        anyhow::ensure!(outs.len() == self.n_state, "init arity");
+        // to_device_sync: the source literals are dropped at the end of
+        // this function, so the async host→device copies must be forced.
+        let buffers = outs
+            .iter()
+            .map(|lit| self.runtime.to_device_sync(lit))
+            .collect::<crate::Result<Vec<_>>>()?;
+        self.state = Some(buffers);
+        Ok(())
+    }
+
+    fn state_ref(&self) -> crate::Result<&Vec<PjRtBuffer>> {
+        self.state
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("trainer not initialized; call init()"))
+    }
+
+    /// One gradient step on a filled batch.  Returns the batch loss.
+    fn step(&mut self, x: &[f32], pos: &[f32], neg: &[f32], lr: f32) -> crate::Result<f64> {
+        debug_assert_eq!(x.len(), self.batch * self.row_len);
+        // The input literals MUST outlive the loss read-back below: the
+        // host→device copies run asynchronously and are only guaranteed
+        // complete once an output of the execution has been synchronized.
+        let x_lit = Literal::vec1(x).reshape(&self.x_shape)?;
+        let pos_lit = Literal::vec1(pos);
+        let neg_lit = Literal::vec1(neg);
+        let lr_lit = Literal::scalar(lr);
+        let inputs = [
+            self.runtime.to_device(&x_lit)?,
+            self.runtime.to_device(&pos_lit)?,
+            self.runtime.to_device(&neg_lit)?,
+            self.runtime.to_device(&lr_lit)?,
+        ];
+        let mut outs = {
+            let state = self.state_ref()?;
+            let args: Vec<&PjRtBuffer> = state.iter().chain(inputs.iter()).collect();
+            self.runtime.execute_buffers(&self.train_name, &args)?
+        };
+        anyhow::ensure!(outs.len() == self.n_state + 2, "train arity");
+        let _scores = outs.pop().unwrap(); // per-batch scores unused here
+        let loss_buf = outs.pop().unwrap();
+        self.state = Some(outs);
+        // Synchronizes the whole step (and thus the input copies).
+        let loss = loss_buf.to_literal_sync()?.to_vec::<f32>()?[0] as f64;
+        Ok(loss)
+    }
+
+    /// One shuffled epoch over `indices` of `dataset`.
+    pub fn train_epoch(
+        &mut self,
+        dataset: &Dataset,
+        indices: &[u32],
+        lr: f32,
+        rng: &mut Rng,
+    ) -> crate::Result<EpochStats> {
+        anyhow::ensure!(
+            dataset.row_len() == self.row_len,
+            "dataset row length {} != artifact {}",
+            dataset.row_len(),
+            self.row_len
+        );
+        let plan = BatchPlan::new(indices, self.batch, rng);
+        let mut iter = plan.iter(dataset);
+        let mut x = vec![0.0_f32; self.batch * self.row_len];
+        let mut p = vec![0.0_f32; self.batch];
+        let mut q = vec![0.0_f32; self.batch];
+        let mut total_loss = 0.0;
+        let mut n_batches = 0;
+        let mut n_examples = 0;
+        while let Some(count) = iter.fill_next(&mut x, &mut p, &mut q) {
+            total_loss += self.step(&x, &p, &q, lr)?;
+            n_batches += 1;
+            n_examples += count;
+        }
+        Ok(EpochStats {
+            mean_loss: if n_batches > 0 {
+                total_loss / n_batches as f64
+            } else {
+                0.0
+            },
+            n_batches,
+            n_examples,
+        })
+    }
+
+    /// Predict scores for `indices` of `dataset` (chunked + padded).
+    ///
+    /// The predict artifact consumes only the model-parameter slots of
+    /// the training state (`state_indices` in the manifest); optimizer
+    /// slots are not uploaded.
+    pub fn predict(&self, dataset: &Dataset, indices: &[u32]) -> crate::Result<Vec<f32>> {
+        let state = self.state_ref()?;
+        let row = dataset.row_len();
+        anyhow::ensure!(row == self.row_len, "row length mismatch");
+        let predict_art = self.runtime.manifest().get(&self.predict_name)?.clone();
+        let selected: Vec<&PjRtBuffer> = predict_art.select_state(state);
+        let pb = self.predict_batch;
+        let mut x_shape = self.x_shape.clone();
+        x_shape[0] = pb as i64;
+        let mut scores = Vec::with_capacity(indices.len());
+        let mut x_buf = vec![0.0_f32; pb * row];
+        for chunk in indices.chunks(pb) {
+            for (slot, &idx) in chunk.iter().enumerate() {
+                x_buf[slot * row..(slot + 1) * row].copy_from_slice(dataset.row(idx as usize));
+            }
+            x_buf[chunk.len() * row..].fill(0.0);
+            let x_lit = Literal::vec1(&x_buf).reshape(&x_shape)?;
+            let x_dev = self.runtime.to_device(&x_lit)?;
+            let args: Vec<&PjRtBuffer> = selected
+                .iter()
+                .copied()
+                .chain(std::iter::once(&x_dev))
+                .collect();
+            let outs = self.runtime.execute_buffers(&self.predict_name, &args)?;
+            let out = HostTensor::from_literal(&outs[0].to_literal_sync()?)?;
+            scores.extend_from_slice(&out.data[..chunk.len()]);
+        }
+        Ok(scores)
+    }
+
+    /// AUC of predictions over `indices` against the dataset labels.
+    pub fn eval_auc(&self, dataset: &Dataset, indices: &[u32]) -> crate::Result<Option<f64>> {
+        let scores = self.predict(dataset, indices)?;
+        let labels: Vec<f32> = indices.iter().map(|&i| dataset.y[i as usize]).collect();
+        Ok(auc(&scores, &labels))
+    }
+
+    /// Full run: `epochs` epochs with per-epoch validation AUC.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit(
+        &mut self,
+        dataset: &Dataset,
+        subtrain: &[u32],
+        validation: &[u32],
+        lr: f32,
+        epochs: usize,
+        seed: u32,
+        rng: &mut Rng,
+    ) -> crate::Result<History> {
+        self.init(seed)?;
+        let mut history = History::new();
+        for epoch in 0..epochs {
+            let t0 = std::time::Instant::now();
+            let stats = self.train_epoch(dataset, subtrain, lr, rng)?;
+            let val_auc = if validation.is_empty() {
+                None
+            } else {
+                self.eval_auc(dataset, validation)?
+            };
+            history.push(EpochRecord {
+                epoch,
+                train_loss: stats.mean_loss,
+                val_auc,
+                seconds: t0.elapsed().as_secs_f64(),
+            });
+            if !stats.mean_loss.is_finite() {
+                break; // diverged (paper: large lr overflows the pair sum)
+            }
+        }
+        Ok(history)
+    }
+
+    /// Download the training state for checkpointing.
+    pub fn state_to_host(&self) -> crate::Result<Vec<HostTensor>> {
+        self.state_ref()?
+            .iter()
+            .map(|b| HostTensor::from_literal(&b.to_literal_sync()?))
+            .collect()
+    }
+
+    /// Restore a previously downloaded state.
+    pub fn load_state(&mut self, tensors: &[HostTensor]) -> crate::Result<()> {
+        anyhow::ensure!(tensors.len() == self.n_state, "state arity");
+        let buffers = tensors
+            .iter()
+            // sync upload: the literal is a temporary dropped per-iteration
+            .map(|t| self.runtime.to_device_sync(&t.to_literal()?))
+            .collect::<crate::Result<Vec<_>>>()?;
+        self.state = Some(buffers);
+        Ok(())
+    }
+}

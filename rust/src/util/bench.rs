@@ -1,0 +1,192 @@
+//! Micro-benchmark harness (criterion stand-in) for `cargo bench`
+//! targets (`harness = false`).
+//!
+//! Methodology: warm-up runs, then timed iterations until both a minimum
+//! iteration count and a minimum wall-clock budget are met; reports
+//! median / mean / min over per-iteration times.  Good enough to read
+//! asymptotic slopes and before/after deltas; not a statistics suite.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:44} {:>12} median {:>12} mean {:>12} min  ({} iters)",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.mean),
+            fmt_duration(self.min),
+            self.iters
+        )
+    }
+}
+
+fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with a time budget per benchmark.
+pub struct Bench {
+    min_iters: usize,
+    max_iters: usize,
+    budget: Duration,
+    warmup: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            min_iters: 5,
+            max_iters: 1_000_000,
+            budget: Duration::from_millis(700),
+            warmup: 2,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode harness (smaller budget) when `ALLPAIRS_BENCH_QUICK=1`.
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if std::env::var("ALLPAIRS_BENCH_QUICK").as_deref() == Ok("1") {
+            b.budget = Duration::from_millis(120);
+            b.warmup = 1;
+            b.min_iters = 2;
+        }
+        b
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Run one benchmark; `f` must return something observable (it is
+    /// passed through `std::hint::black_box`).
+    pub fn run<T>(&mut self, name: impl Into<String>, mut f: impl FnMut() -> T) -> &Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_iters
+            || (start.elapsed() < self.budget && times.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort_unstable();
+        let sum: Duration = times.iter().sum();
+        let m = Measurement {
+            name: name.into(),
+            iters: times.len(),
+            median: times[times.len() / 2],
+            mean: sum / times.len() as u32,
+            min: times[0],
+        };
+        println!("{m}");
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Write results as CSV (used by EXPERIMENTS.md bookkeeping).
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut s = String::from("name,iters,median_s,mean_s,min_s\n");
+        for m in &self.results {
+            s.push_str(&format!(
+                "{},{},{:.9},{:.9},{:.9}\n",
+                m.name,
+                m.iters,
+                m.median.as_secs_f64(),
+                m.mean.as_secs_f64(),
+                m.min.as_secs_f64()
+            ));
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new().with_budget(Duration::from_millis(20));
+        let m = b.run("noop-ish", || (0..100).sum::<usize>());
+        assert!(m.iters >= 5);
+        assert!(m.min <= m.median);
+    }
+
+    #[test]
+    fn ordering_reflects_work() {
+        // A data-dependent xorshift chain: LLVM cannot closed-form it
+        // (unlike a sum of squares), so runtime genuinely scales with the
+        // iteration count.  Compare min (robust to scheduling noise).
+        fn chain(iters: u64) -> u64 {
+            let mut x = std::hint::black_box(0x9E3779B97F4A7C15u64);
+            for _ in 0..iters {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+            }
+            x
+        }
+        let mut b = Bench::new().with_budget(Duration::from_millis(60));
+        let small = b.run("small", || chain(100)).min;
+        let large = b.run("large", || chain(1_000_000)).min;
+        assert!(large > small * 50, "{large:?} vs {small:?}");
+    }
+
+    #[test]
+    fn csv_output() {
+        let mut b = Bench::new().with_budget(Duration::from_millis(10));
+        b.run("x", || 1 + 1);
+        let p = std::env::temp_dir().join("allpairs_bench_test.csv");
+        b.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("name,iters"));
+        assert!(text.lines().count() == 2);
+    }
+}

@@ -1,0 +1,142 @@
+//! Minimal declarative CLI argument parser (clap stand-in).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional
+//! subcommands, defaults and `--help` text generation — exactly what the
+//! `allpairs` binary and examples need, nothing more.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand + options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (subcommand), if any.
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0]).
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse an iterator of tokens.
+    pub fn parse(tokens: impl IntoIterator<Item = String>) -> anyhow::Result<Self> {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                anyhow::ensure!(!rest.is_empty(), "bare '--' not supported");
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.opts.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                anyhow::bail!("unexpected positional argument {tok:?}");
+            }
+        }
+        Ok(args)
+    }
+
+    /// Boolean flag (`--smoke`).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.opts
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn get_opt(&self, name: &str) -> Option<String> {
+        self.opts.get(name).cloned()
+    }
+
+    /// Typed option with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    /// All `--key value` options seen (for validation).
+    pub fn option_names(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|s| s.as_str())
+    }
+
+    /// Reject unknown options — typo protection for long sweep commands.
+    pub fn expect_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for name in self.option_names().chain(self.flags.iter().map(|s| s.as_str())) {
+            anyhow::ensure!(
+                known.contains(&name),
+                "unknown option --{name} (known: {})",
+                known.join(", ")
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> impl Iterator<Item = String> + '_ {
+        s.split_whitespace().map(|s| s.to_string())
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(toks("sweep --epochs 5 --smoke --out=results")).unwrap();
+        assert_eq!(a.command.as_deref(), Some("sweep"));
+        assert_eq!(a.get("epochs", 0usize).unwrap(), 5);
+        assert!(a.flag("smoke"));
+        assert_eq!(a.get_str("out", "x"), "results");
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn typed_defaults_and_errors() {
+        let a = Args::parse(toks("train --lr 0.01")).unwrap();
+        assert_eq!(a.get("lr", 0.5f64).unwrap(), 0.01);
+        assert_eq!(a.get("batch", 100usize).unwrap(), 100);
+        let bad = Args::parse(toks("train --batch abc")).unwrap();
+        assert!(bad.get("batch", 1usize).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        // "--shift -2" : -2 does not start with --, so it is a value
+        let a = Args::parse(toks("x --shift -2")).unwrap();
+        assert_eq!(a.get("shift", 0i32).unwrap(), -2);
+    }
+
+    #[test]
+    fn rejects_extra_positionals_and_unknown() {
+        assert!(Args::parse(toks("a b")).is_err());
+        let a = Args::parse(toks("run --good 1 --bad 2")).unwrap();
+        assert!(a.expect_known(&["good"]).is_err());
+        assert!(a.expect_known(&["good", "bad"]).is_ok());
+    }
+}

@@ -1,0 +1,15 @@
+//! In-tree substrates replacing unavailable third-party crates.
+//!
+//! This reproduction builds fully offline against a minimal vendored
+//! dependency set (`xla`, `anyhow`); the conveniences a richer set would
+//! provide are implemented here:
+//!
+//! * [`json`]  — a complete JSON parser/writer (serde_json stand-in),
+//!   used for the artifact manifest, configs and result files.
+//! * [`cli`]   — a small declarative argument parser (clap stand-in).
+//! * [`bench`] — a measured micro-benchmark harness (criterion stand-in)
+//!   used by `cargo bench` targets.
+
+pub mod bench;
+pub mod cli;
+pub mod json;

@@ -1,0 +1,171 @@
+//! Integration tests over the real AOT artifacts (requires
+//! `make artifacts`).  Skipped cleanly when artifacts are absent.
+//!
+//! These tests exercise the full PJRT path the sweep uses: init →
+//! device-resident train steps → predict, plus the cross-stack check
+//! that the Pallas hinge loss inside the train artifact matches the
+//! native Rust Algorithm 2 on the same batch.
+
+use allpairs::data::{Dataset, Rng};
+use allpairs::losses::functional::SquaredHinge;
+use allpairs::runtime::{HostTensor, Runtime};
+use allpairs::train::Trainer;
+use xla::Literal;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn feature_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n * 64);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let pos = rng.uniform() < 0.3;
+        y.push(if pos { 1.0 } else { 0.0 });
+        for d in 0..64 {
+            let shift = if pos && d < 8 { 1.5 } else { 0.0 };
+            x.push(rng.normal() as f32 + shift);
+        }
+    }
+    Dataset::new(x, y, 0, 64)
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let a = runtime
+        .execute("init_mlp_hinge", &[Literal::scalar(3u32)])
+        .unwrap();
+    let b = runtime
+        .execute("init_mlp_hinge", &[Literal::scalar(3u32)])
+        .unwrap();
+    let c = runtime
+        .execute("init_mlp_hinge", &[Literal::scalar(4u32)])
+        .unwrap();
+    // concatenate every leaf: biases are zero-init for all seeds, so a
+    // single-leaf comparison would be vacuous.
+    let cat = |lits: &[Literal]| -> Vec<f32> {
+        lits.iter()
+            .flat_map(|l| HostTensor::from_literal(l).unwrap().data)
+            .collect()
+    };
+    assert_eq!(cat(&a), cat(&b));
+    assert_ne!(cat(&a), cat(&c));
+}
+
+#[test]
+fn single_train_step_runs_and_returns_finite_loss() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut trainer = Trainer::new(&runtime, "mlp", "hinge", 100).unwrap();
+    trainer.init(0).unwrap();
+    let data = feature_dataset(100, 1);
+    let idx: Vec<u32> = (0..100).collect();
+    let mut rng = Rng::new(2);
+    let stats = trainer.train_epoch(&data, &idx, 0.05, &mut rng).unwrap();
+    assert_eq!(stats.n_batches, 1);
+    assert_eq!(stats.n_examples, 100);
+    assert!(stats.mean_loss.is_finite());
+    assert!(stats.mean_loss > 0.0);
+}
+
+#[test]
+fn training_reduces_loss_and_improves_auc() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut trainer = Trainer::new(&runtime, "mlp", "hinge", 100).unwrap();
+    let data = feature_dataset(400, 3);
+    let idx: Vec<u32> = (0..400).collect();
+    let mut rng = Rng::new(4);
+    let history = trainer
+        .fit(&data, &idx, &idx, 0.1, 6, 0, &mut rng)
+        .unwrap();
+    let first = &history.records[0];
+    let last = history.records.last().unwrap();
+    assert!(last.train_loss < first.train_loss, "{history:?}");
+    assert!(last.val_auc.unwrap() > 0.85, "{history:?}");
+}
+
+#[test]
+fn predict_is_padding_invariant() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut trainer = Trainer::new(&runtime, "mlp", "hinge", 100).unwrap();
+    trainer.init(1).unwrap();
+    let data = feature_dataset(300, 5);
+    // 300 examples through a 256-wide predict artifact: 2 chunks, second
+    // one padded.  Scores must match a full-size evaluation elementwise.
+    let all: Vec<u32> = (0..300).collect();
+    let scores = trainer.predict(&data, &all).unwrap();
+    assert_eq!(scores.len(), 300);
+    let head: Vec<u32> = (0..10).collect();
+    let scores_head = trainer.predict(&data, &head).unwrap();
+    for (a, b) in scores_head.iter().zip(&scores[..10]) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_predictions() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut trainer = Trainer::new(&runtime, "mlp", "hinge", 100).unwrap();
+    trainer.init(7).unwrap();
+    let data = feature_dataset(120, 8);
+    let idx: Vec<u32> = (0..120).collect();
+    let mut rng = Rng::new(9);
+    trainer.train_epoch(&data, &idx, 0.05, &mut rng).unwrap();
+    let before = trainer.predict(&data, &idx).unwrap();
+
+    let snapshot = trainer.state_to_host().unwrap();
+    let path = std::env::temp_dir().join("allpairs_integration_ckpt.bin");
+    allpairs::train::checkpoint::save(&path, &snapshot).unwrap();
+    let restored = allpairs::train::checkpoint::load(&path).unwrap();
+
+    // scramble the live state with another epoch, then restore
+    trainer.train_epoch(&data, &idx, 0.05, &mut rng).unwrap();
+    trainer.load_state(&restored).unwrap();
+    let after = trainer.predict(&data, &idx).unwrap();
+    for (a, b) in before.iter().zip(&after) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn pallas_loss_eval_matches_native_rust_algorithm2() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::new(10);
+    let n = 2000;
+    let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let is_pos: Vec<f32> = (0..n)
+        .map(|_| if rng.uniform() < 0.15 { 1.0 } else { 0.0 })
+        .collect();
+    let native = {
+        let n_pos = is_pos.iter().filter(|&&p| p != 0.0).count() as f64;
+        let n_neg = n as f64 - n_pos;
+        SquaredHinge::new(1.0).loss_only(&scores, &is_pos) / (n_pos * n_neg)
+    };
+    // monitor_artifact is already pair-normalized (the L2 loss wrappers
+    // normalize internally), matching monitor_native's convention.
+    let pjrt =
+        allpairs::coordinator::monitor::monitor_artifact(&runtime, "hinge", &scores, &is_pos)
+            .unwrap();
+    let rel = (native - pjrt).abs() / native.abs().max(1e-9);
+    assert!(rel < 1e-4, "native {native} vs pallas {pjrt}");
+}

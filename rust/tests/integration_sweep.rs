@@ -1,0 +1,185 @@
+//! Sweep-engine integration: a tiny but complete cross-validation sweep
+//! through real PJRT artifacts (multi-worker scheduler, imbalance,
+//! stratified splits, max-val-AUC selection, aggregation, persistence).
+//!
+//! Skipped cleanly when `make artifacts` has not been run.
+
+use std::sync::Arc;
+
+use allpairs::config::SweepConfig;
+use allpairs::coordinator::cv;
+use allpairs::data::synth::{generate, SynthSpec, SYNTH_DATASETS};
+use allpairs::sweep::runner::{run_job, JobData};
+use allpairs::sweep::scheduler::run_sweep;
+use allpairs::sweep::select::{aggregate, select_per_seed};
+use allpairs::sweep::{grid, results, Job};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn tiny_data() -> JobData {
+    let spec = SynthSpec {
+        n_train: 400,
+        n_test: 200,
+        ..SYNTH_DATASETS[2] // synth-pets: 2 latent classes, learnable
+    };
+    let (train_pool, test) = generate(&spec, 99);
+    JobData {
+        train_pool: Arc::new(train_pool),
+        test: Arc::new(test),
+    }
+}
+
+fn tiny_job(loss: &str, batch: usize, seed: u32) -> Job {
+    Job {
+        dataset: "synth-pets".into(),
+        imratio: 0.2,
+        loss: loss.into(),
+        batch,
+        lr: 0.01,
+        seed,
+        model: "resnet".into(),
+        epochs: 2,
+    }
+}
+
+#[test]
+fn single_job_end_to_end() {
+    let dir = require_artifacts!();
+    let runtime = allpairs::runtime::Runtime::new(&dir).unwrap();
+    let data = tiny_data();
+    let result = run_job(&runtime, &tiny_job("hinge", 50, 0), &data).unwrap();
+    assert!(!result.diverged);
+    assert!(result.best_val_auc.is_some());
+    assert!(result.test_auc.is_some());
+    let t = result.test_auc.unwrap();
+    assert!((0.0..=1.0).contains(&t));
+    assert!((result.achieved_imratio - 0.2).abs() < 0.1);
+    assert!(result.seconds > 0.0);
+}
+
+#[test]
+fn job_results_are_reproducible() {
+    let dir = require_artifacts!();
+    let runtime = allpairs::runtime::Runtime::new(&dir).unwrap();
+    let data = tiny_data();
+    let job = tiny_job("logistic", 100, 1);
+    let a = run_job(&runtime, &job, &data).unwrap();
+    let b = run_job(&runtime, &job, &data).unwrap();
+    assert_eq!(a.best_val_auc, b.best_val_auc);
+    assert_eq!(a.test_auc, b.test_auc);
+    assert_eq!(a.best_epoch, b.best_epoch);
+}
+
+#[test]
+fn multiworker_sweep_selection_and_persistence() {
+    let dir = require_artifacts!();
+    let jobs = vec![
+        tiny_job("hinge", 50, 0),
+        tiny_job("hinge", 100, 0),
+        tiny_job("hinge", 50, 1),
+        tiny_job("hinge", 100, 1),
+        tiny_job("logistic", 50, 0),
+        tiny_job("logistic", 100, 0),
+    ];
+    let n_jobs = jobs.len();
+    let mut datasets = std::collections::HashMap::new();
+    datasets.insert("synth-pets".to_string(), tiny_data());
+    let results_vec = run_sweep(&dir, jobs, datasets, 3, None).unwrap();
+    assert_eq!(results_vec.len(), n_jobs);
+
+    // selection: one winner per (loss, seed)
+    let selections = select_per_seed(&results_vec);
+    assert_eq!(selections.len(), 3); // hinge x {0,1}, logistic x {0}
+    let cells = aggregate(&selections);
+    assert_eq!(cells.len(), 2); // hinge cell + logistic cell
+    for c in &cells {
+        assert!(c.median_batch == 50.0 || c.median_batch == 75.0 || c.median_batch == 100.0);
+        assert!(!c.test_auc.is_empty());
+    }
+
+    // persistence roundtrip
+    let path = std::env::temp_dir().join("allpairs_sweep_test.jsonl");
+    results::save_jsonl(&path, &results_vec).unwrap();
+    let loaded = results::load_jsonl(&path).unwrap();
+    assert_eq!(loaded.len(), n_jobs);
+    let again = aggregate(&select_per_seed(&loaded));
+    assert_eq!(again.len(), cells.len());
+    for (a, b) in cells.iter().zip(&again) {
+        assert_eq!(a.loss, b.loss);
+        assert!((a.test_auc.mean() - b.test_auc.mean()).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn cv_summarize_writes_reports() {
+    let dir = require_artifacts!();
+    let runtime = allpairs::runtime::Runtime::new(&dir).unwrap();
+    let data = tiny_data();
+    let results_vec = vec![
+        run_job(&runtime, &tiny_job("hinge", 50, 0), &data).unwrap(),
+        run_job(&runtime, &tiny_job("logistic", 50, 0), &data).unwrap(),
+    ];
+    let out = std::env::temp_dir().join("allpairs_cv_reports");
+    std::fs::create_dir_all(&out).unwrap();
+    let output = cv::summarize(results_vec, &out).unwrap();
+    assert_eq!(output.cells.len(), 2);
+    for file in ["table2.md", "fig3.md", "fig3.csv"] {
+        let text = std::fs::read_to_string(out.join(file)).unwrap();
+        assert!(text.contains("hinge"), "{file} missing hinge row");
+    }
+}
+
+#[test]
+fn grid_jobs_have_matching_artifacts() {
+    // Every (model, loss, batch) the default config would schedule must
+    // exist in the manifest — catches config/manifest drift.
+    let dir = require_artifacts!();
+    let runtime = allpairs::runtime::Runtime::new(&dir).unwrap();
+    let cfg = SweepConfig::default();
+    let jobs = grid::expand(&cfg);
+    let manifest = runtime.manifest();
+    let mut checked = std::collections::BTreeSet::new();
+    for job in jobs {
+        let key = (job.model.clone(), job.loss.clone(), job.batch);
+        if !checked.insert(key) {
+            continue;
+        }
+        manifest
+            .get(&allpairs::runtime::Manifest::train_name(
+                &job.model, &job.loss, job.batch,
+            ))
+            .unwrap_or_else(|e| panic!("missing artifact for {}: {e}", job.id()));
+    }
+}
+
+#[test]
+fn build_datasets_generates_all_synth_sets() {
+    let cfg = SweepConfig {
+        max_train: Some(50),
+        ..Default::default()
+    };
+    let data = cv::build_datasets(&cfg).unwrap();
+    assert_eq!(data.len(), 3);
+    for name in ["synth-cifar", "synth-stl", "synth-pets"] {
+        let d = &data[name];
+        assert_eq!(d.train_pool.len(), 50);
+        // balanced test pool
+        let pos = d.test.y.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(pos * 2, d.test.len());
+    }
+}

@@ -1,0 +1,221 @@
+//! Property tests for the core algorithm invariants.
+//!
+//! The `proptest` crate is unavailable in this offline build, so these
+//! use the same structure with an in-tree generator: many random cases
+//! per property, deterministic seeds, shrink-free but wide coverage
+//! (sizes 0..2000, margins 0..4, imbalance down to one example, heavy
+//! ties, extreme magnitudes).
+
+use allpairs::data::Rng;
+use allpairs::losses::functional::{HingeScratch, Square, SquaredHinge};
+use allpairs::losses::logistic::Logistic;
+use allpairs::losses::naive::{NaiveSquare, NaiveSquaredHinge};
+use allpairs::losses::PairwiseLoss;
+use allpairs::metrics::auc::auc;
+
+const CASES: usize = 120;
+
+/// Random test case generator: (scores, is_pos) with assorted pathologies.
+struct CaseGen {
+    rng: Rng,
+}
+
+impl CaseGen {
+    fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed) }
+    }
+
+    fn next_case(&mut self) -> (Vec<f32>, Vec<f32>, f32) {
+        let n = self.rng.below(2000);
+        let pos_frac = [0.001, 0.01, 0.1, 0.3, 0.5, 0.9][self.rng.below(6)];
+        let scale = [0.01_f64, 1.0, 10.0, 1000.0][self.rng.below(4)];
+        let quantize = self.rng.uniform() < 0.3;
+        let margin = [0.0_f32, 0.5, 1.0, 4.0][self.rng.below(4)];
+        let scores: Vec<f32> = (0..n)
+            .map(|_| {
+                let v = (self.rng.normal() * scale) as f32;
+                if quantize {
+                    (v * 2.0).round() / 2.0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let is_pos: Vec<f32> = (0..n)
+            .map(|_| if self.rng.uniform() < pos_frac { 1.0 } else { 0.0 })
+            .collect();
+        (scores, is_pos, margin)
+    }
+}
+
+fn assert_rel(a: f64, b: f64, tol: f64, ctx: &str) {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!((a - b).abs() <= tol * scale, "{ctx}: {a} vs {b}");
+}
+
+#[test]
+fn prop_functional_hinge_equals_naive() {
+    let mut gen = CaseGen::new(1);
+    for case in 0..CASES {
+        let (scores, is_pos, margin) = gen.next_case();
+        if scores.len() > 400 {
+            continue; // naive is quadratic; keep the oracle cheap
+        }
+        let (ln, gn) = NaiveSquaredHinge::new(margin).loss_and_grad(&scores, &is_pos);
+        let (lf, gf) = SquaredHinge::new(margin).loss_and_grad(&scores, &is_pos);
+        assert_rel(ln, lf, 1e-6, &format!("case {case} loss"));
+        let gscale = gn.iter().fold(1.0_f32, |m, g| m.max(g.abs()));
+        for (i, (a, b)) in gn.iter().zip(&gf).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * gscale,
+                "case {case} grad[{i}]: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_functional_square_equals_naive() {
+    let mut gen = CaseGen::new(2);
+    for case in 0..CASES {
+        let (scores, is_pos, margin) = gen.next_case();
+        if scores.len() > 400 {
+            continue;
+        }
+        let (ln, gn) = NaiveSquare::new(margin).loss_and_grad(&scores, &is_pos);
+        let (lf, gf) = Square::new(margin).loss_and_grad(&scores, &is_pos);
+        assert_rel(ln, lf, 1e-6, &format!("case {case} loss"));
+        let gscale = gn.iter().fold(1.0_f32, |m, g| m.max(g.abs()));
+        for (i, (a, b)) in gn.iter().zip(&gf).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * gscale,
+                "case {case} grad[{i}]: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_hinge_le_square() {
+    // (m - z)_+^2 <= (m - z)^2 pairwise, so the totals must order.
+    let mut gen = CaseGen::new(3);
+    for _ in 0..CASES {
+        let (scores, is_pos, margin) = gen.next_case();
+        let lh = SquaredHinge::new(margin).loss_only(&scores, &is_pos);
+        let (ls, _) = Square::new(margin).loss_and_grad(&scores, &is_pos);
+        assert!(lh <= ls * (1.0 + 1e-9) + 1e-9, "{lh} > {ls}");
+    }
+}
+
+#[test]
+fn prop_loss_nonnegative_and_finite() {
+    let mut gen = CaseGen::new(4);
+    for _ in 0..CASES {
+        let (scores, is_pos, margin) = gen.next_case();
+        let hinge = SquaredHinge::new(margin);
+        let square = Square::new(margin);
+        let losses: [&dyn PairwiseLoss; 3] = [&hinge, &square, &Logistic];
+        for loss in losses {
+            let (l, g) = loss.loss_and_grad(&scores, &is_pos);
+            assert!(l >= 0.0 && l.is_finite(), "{} loss {l}", loss.name());
+            assert!(g.iter().all(|x| x.is_finite()), "{} grad", loss.name());
+        }
+    }
+}
+
+#[test]
+fn prop_shift_invariance_of_hinge() {
+    // Adding a constant to every score preserves all pairwise differences.
+    let mut gen = CaseGen::new(5);
+    for _ in 0..CASES {
+        let (scores, is_pos, margin) = gen.next_case();
+        if scores.iter().any(|s| s.abs() > 100.0) {
+            continue; // keep the shift numerically meaningful in f32
+        }
+        let l0 = SquaredHinge::new(margin).loss_only(&scores, &is_pos);
+        let shifted: Vec<f32> = scores.iter().map(|s| s + 3.25).collect();
+        let l1 = SquaredHinge::new(margin).loss_only(&shifted, &is_pos);
+        assert_rel(l0, l1, 1e-3, "shift invariance");
+    }
+}
+
+#[test]
+fn prop_gradient_descent_direction_reduces_loss() {
+    // A small step against the gradient must not increase the loss
+    // (convexity + smoothness of the squared hinge).
+    let mut gen = CaseGen::new(6);
+    for _ in 0..40 {
+        let (mut scores, is_pos, margin) = gen.next_case();
+        if scores.len() < 2 || scores.iter().any(|s| s.abs() > 50.0) {
+            continue;
+        }
+        let hinge = SquaredHinge::new(margin);
+        let (l0, g) = hinge.loss_and_grad(&scores, &is_pos);
+        if l0 == 0.0 {
+            continue;
+        }
+        let gnorm2: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if gnorm2 < 1e-12 {
+            continue;
+        }
+        let step = (1e-4 * l0 / gnorm2) as f32;
+        for (s, gi) in scores.iter_mut().zip(&g) {
+            *s -= step * gi;
+        }
+        let l1 = hinge.loss_only(&scores, &is_pos);
+        assert!(l1 <= l0 * (1.0 + 1e-6), "{l1} > {l0}");
+    }
+}
+
+#[test]
+fn prop_scratch_reuse_equals_fresh() {
+    let mut gen = CaseGen::new(7);
+    let hinge = SquaredHinge::new(1.0);
+    let mut grad = Vec::new();
+    let mut scratch = HingeScratch::default();
+    for _ in 0..CASES {
+        let (scores, is_pos, _) = gen.next_case();
+        let with_scratch = hinge.loss_and_grad_with(&scores, &is_pos, &mut grad, &mut scratch);
+        let (fresh, fresh_grad) = hinge.loss_and_grad(&scores, &is_pos);
+        assert_eq!(with_scratch, fresh);
+        assert_eq!(grad, fresh_grad);
+    }
+}
+
+#[test]
+fn prop_auc_bounds_and_complement() {
+    // AUC in [0,1]; negating scores gives 1 - AUC (ties preserved at 0.5).
+    let mut gen = CaseGen::new(8);
+    for _ in 0..CASES {
+        let (scores, is_pos, _) = gen.next_case();
+        let Some(a) = auc(&scores, &is_pos) else { continue };
+        assert!((0.0..=1.0).contains(&a), "{a}");
+        let neg: Vec<f32> = scores.iter().map(|s| -s).collect();
+        let an = auc(&neg, &is_pos).unwrap();
+        assert!((a + an - 1.0).abs() < 1e-9, "{a} + {an} != 1");
+    }
+}
+
+#[test]
+fn prop_zero_hinge_loss_implies_perfect_auc() {
+    // If the squared hinge loss is exactly zero, every positive outranks
+    // every negative by >= m; with m > 0 that forces AUC = 1.
+    let mut rng = Rng::new(9);
+    for _ in 0..60 {
+        let n = 2 + rng.below(300);
+        let mut scores = Vec::with_capacity(n);
+        let mut is_pos = Vec::with_capacity(n);
+        for _ in 0..n {
+            let pos = rng.uniform() < 0.4;
+            is_pos.push(if pos { 1.0 } else { 0.0 });
+            // positives in [2, 3], negatives in [-3, -2]: margin-1 safe
+            let base = rng.uniform() as f32;
+            scores.push(if pos { 2.0 + base } else { -3.0 + base });
+        }
+        let l = SquaredHinge::new(1.0).loss_only(&scores, &is_pos);
+        assert_eq!(l, 0.0);
+        if let Some(a) = auc(&scores, &is_pos) {
+            assert_eq!(a, 1.0);
+        }
+    }
+}
