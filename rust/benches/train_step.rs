@@ -1,9 +1,12 @@
-//! End-to-end train-step throughput through the PJRT artifacts: the L3
-//! hot path (host staging + one PJRT execution per step) per batch size
-//! and loss.  Requires `make artifacts`.
+//! End-to-end train-step throughput: the L3 hot path per backend, batch
+//! size and loss.
+//!
+//! Default: the native backend (no artifacts needed).  With a `pjrt`
+//! build and `make artifacts`, set `ALLPAIRS_BENCH_BACKEND=pjrt` to
+//! bench the PJRT path instead (host staging + one execution per step).
 
 use allpairs::data::{Dataset, Rng};
-use allpairs::runtime::Runtime;
+use allpairs::runtime::{BackendSpec, NativeSpec};
 use allpairs::train::Trainer;
 use allpairs::util::bench::Bench;
 
@@ -15,26 +18,36 @@ fn image_batch_dataset(n: usize, rng: &mut Rng) -> Dataset {
 }
 
 fn main() -> anyhow::Result<()> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
+    let quick = std::env::var("ALLPAIRS_BENCH_QUICK").as_deref() == Ok("1");
+    let spec = match std::env::var("ALLPAIRS_BENCH_BACKEND").as_deref() {
+        Ok("pjrt") => BackendSpec::pjrt("artifacts"),
+        _ => BackendSpec::Native(NativeSpec::default()),
+    };
+    if matches!(spec, BackendSpec::Pjrt { .. })
+        && !std::path::Path::new("artifacts/manifest.json").exists()
+    {
         eprintln!("skipping train_step bench: run `make artifacts` first");
         return Ok(());
     }
-    let quick = std::env::var("ALLPAIRS_BENCH_QUICK").as_deref() == Ok("1");
+    let pjrt = matches!(spec, BackendSpec::Pjrt { .. });
+    let backend = spec.connect()?;
+
     let batches: &[usize] = if quick { &[10, 100] } else { &[10, 100, 1000] };
     let losses: &[&str] = if quick {
         &["hinge"]
-    } else {
+    } else if pjrt {
         &["hinge", "square", "logistic", "aucm"]
+    } else {
+        &["hinge", "square", "logistic"]
     };
 
-    let runtime = Runtime::new("artifacts")?;
     let mut bench = Bench::from_env();
     let mut rng = Rng::new(5);
     let data = image_batch_dataset(2000, &mut rng);
 
     for &loss in losses {
         for &bs in batches {
-            let mut trainer = Trainer::new(&runtime, "resnet", loss, bs)?;
+            let mut trainer = Trainer::new(backend.as_ref(), "resnet", loss, bs)?;
             trainer.init(0)?;
             let indices: Vec<u32> = (0..bs as u32).collect();
             // one epoch over exactly one batch = one train step + staging
@@ -48,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // predict path (used for per-epoch validation AUC)
-    let mut trainer = Trainer::new(&runtime, "resnet", "hinge", 100)?;
+    let mut trainer = Trainer::new(backend.as_ref(), "resnet", "hinge", 100)?;
     trainer.init(0)?;
     let eval_idx: Vec<u32> = (0..1000).collect();
     bench.run("predict/resnet/1000_examples", || {

@@ -1,11 +1,13 @@
 //! Table 2 + Figure 3 reproduction driver: the full cross-validation
 //! sweep over datasets × imratios × losses × batch sizes × learning rates
-//! × seeds, through the PJRT artifacts, with max-validation-AUC selection.
+//! × seeds, through any backend, with max-validation-AUC selection.
 //!
-//! The default configuration is the full paper protocol (hours of CPU);
-//! `--smoke` runs a reduced grid in a few minutes, and `--medium` is the
-//! EXPERIMENTS.md configuration (reduced but still covering every cell of
-//! Table 2 / Figure 3).
+//! The default configuration is the full paper protocol on the native
+//! backend; `--smoke` runs a reduced grid in a couple of minutes, and
+//! `--medium` is the EXPERIMENTS.md configuration (reduced but still
+//! covering every cell of Table 2 / Figure 3).  Pass `--backend pjrt`
+//! (on a `--features pjrt` build with `make artifacts`) to drive the
+//! AOT kernels instead — that path also enables the `aucm` baseline.
 //!
 //! ```bash
 //! cargo run --release --example imbalance_sweep -- --medium
@@ -13,20 +15,34 @@
 
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::cv;
+use allpairs::runtime::BackendSpec;
 use allpairs::util::cli::Args;
 
 fn main() -> allpairs::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     args.expect_known(&[
-        "smoke", "medium", "artifacts", "out", "workers", "epochs", "config",
+        "smoke", "medium", "artifacts", "backend", "out", "workers", "epochs", "config",
     ])?;
-    let artifacts = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
     let out = std::path::PathBuf::from(args.get_str("out", "results"));
 
+    let user_config = args.get_opt("config").is_some();
     let mut cfg = match args.get_opt("config") {
         Some(path) => SweepConfig::load(path)?,
         None => SweepConfig::default(),
     };
+    match args.get_opt("backend").as_deref() {
+        Some("pjrt") => cfg.backend = BackendSpec::pjrt(args.get_str("artifacts", "artifacts")),
+        Some("native") => cfg.backend = BackendSpec::native(),
+        None => {} // keep the config file's backend (native by default)
+        Some(other) => anyhow::bail!("unknown backend {other:?} (native | pjrt)"),
+    }
+    let native = matches!(cfg.backend, BackendSpec::Native(_));
+    if cfg.adapt_losses_to_backend(!user_config) {
+        eprintln!(
+            "note: aucm requires the pjrt backend; sweeping losses {:?}",
+            cfg.losses
+        );
+    }
     if args.flag("smoke") {
         cfg.datasets = vec!["synth-pets".into()];
         cfg.imratios = vec![0.1, 0.01];
@@ -41,19 +57,20 @@ fn main() -> allpairs::Result<()> {
         // batch {10, 1000}, top-2 learning rates, 2 seeds, 3 epochs —
         // to finish in well under an hour on a single-core testbed.
         cfg.imratios = vec![0.1, 0.01, 0.001];
-        cfg.losses = vec!["hinge".into(), "aucm".into(), "logistic".into()];
         cfg.batch_sizes = vec![10, 1000];
         cfg.seeds = vec![0, 1];
         cfg.epochs = 3;
         cfg.max_train = Some(4000);
         cfg.max_lrs = Some(2);
-        cfg.workers = 1; // one PJRT runtime: compile each variant once
+        if !native {
+            cfg.workers = 1; // one PJRT runtime: compile each variant once
+        }
     }
     cfg.workers = args.get("workers", cfg.workers)?;
     cfg.epochs = args.get("epochs", cfg.epochs)?;
 
     eprintln!(
-        "sweep: {} runs ({} datasets x {} imratios x {} losses x {} batches x lr-grid x {} seeds) on {} workers",
+        "sweep: {} runs ({} datasets x {} imratios x {} losses x {} batches x lr-grid x {} seeds) on {} workers ({} backend)",
         cfg.n_runs(),
         cfg.datasets.len(),
         cfg.imratios.len(),
@@ -61,12 +78,13 @@ fn main() -> allpairs::Result<()> {
         cfg.batch_sizes.len(),
         cfg.seeds.len(),
         cfg.workers,
+        cfg.backend.kind(),
     );
     let t0 = std::time::Instant::now();
     let progress: allpairs::sweep::scheduler::ProgressFn = Box::new(|done, total, msg| {
         eprintln!("[{done}/{total}] {msg}");
     });
-    let output = cv::run(&cfg, &artifacts, &out, Some(progress))?;
+    let output = cv::run(&cfg, &out, Some(progress))?;
 
     println!(
         "\nsweep finished: {} runs in {:.1} min",

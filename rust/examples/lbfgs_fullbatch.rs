@@ -5,20 +5,21 @@
 //! Gradient Descent with small batch sizes."  The log-linear loss makes
 //! the full-batch gradient affordable, so this example runs both on the
 //! same imbalanced feature problem with an equal gradient-evaluation
-//! budget and reports full-batch loss + training AUC.
+//! budget and reports full-batch loss + training AUC.  Runs on the
+//! native backend's full-batch objective — no artifacts needed.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example lbfgs_fullbatch
+//! cargo run --release --example lbfgs_fullbatch
 //! ```
 
 use allpairs::data::{features, FeatureSpec, Rng};
 use allpairs::metrics::auc;
-use allpairs::runtime::Runtime;
-use allpairs::train::lbfgs::{minimize, FullBatchObjective, LbfgsConfig};
+use allpairs::runtime::{NativeBackend, NativeSpec};
+use allpairs::train::lbfgs::{minimize, LbfgsConfig, Objective};
 use allpairs::util::cli::Args;
 
 fn feature_batch(n: usize, pos_frac: f64, seed: u64) -> (Vec<f32>, Vec<f32>) {
-    // Moderate conditioning: with the MLP's sigmoid head, strongly
+    // Moderate conditioning: with the MLP's squashing head, strongly
     // anisotropic inputs saturate the activations and stall *every*
     // first-order method; the interesting regime for the §5 comparison
     // is curvature variation the quasi-Newton update can exploit while
@@ -33,21 +34,26 @@ fn feature_batch(n: usize, pos_frac: f64, seed: u64) -> (Vec<f32>, Vec<f32>) {
 
 fn main() -> allpairs::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    args.expect_known(&["artifacts", "iters", "n", "pos-frac"])?;
-    let artifacts = args.get_str("artifacts", "artifacts");
+    args.expect_known(&["iters", "n", "pos-frac", "hidden"])?;
     let iters: usize = args.get("iters", 15)?;
     let n: usize = args.get("n", 800)?;
     let pos_frac: f64 = args.get("pos-frac", 0.1)?;
+    let hidden: usize = args.get("hidden", 16)?;
 
-    let runtime = Runtime::new(&artifacts)?;
+    let backend = NativeBackend::new(NativeSpec {
+        input_dim: 64,
+        hidden,
+        margin: 1.0,
+        threads: 0,
+    });
     let (rows, labels) = feature_batch(n, pos_frac, 7);
     println!(
-        "full-batch problem: {n} examples, {:.1}% positive, ill-conditioned features",
+        "full-batch problem: {n} examples, {:.1}% positive",
         100.0 * labels.iter().sum::<f32>() as f64 / n as f64
     );
 
-    let mut objective = FullBatchObjective::new(&runtime, "mlp", "hinge", &rows, &labels)?;
-    let theta0 = objective.init_params("mlp", "hinge", 0)?;
+    let mut objective = backend.objective("mlp", "hinge", &rows, &labels)?;
+    let theta0 = objective.init_params(0);
     let (l0, _) = objective.eval(&theta0)?;
     println!("initial full-batch hinge loss: {l0:.6}\n== L-BFGS ==");
 
@@ -82,26 +88,11 @@ fn main() -> allpairs::Result<()> {
     }
 
     // AUC of both solutions on the training batch.
-    let score = |theta: &[f32]| -> allpairs::Result<f64> {
-        let mut trainer = allpairs::train::Trainer::new(&runtime, "mlp", "hinge", 100)?;
-        trainer.init(0)?;
-        let mut state = trainer.state_to_host()?;
-        let n_params = state.len() / 2;
-        let mut offset = 0;
-        for t in state.iter_mut().take(n_params) {
-            let len = t.data.len();
-            t.data.copy_from_slice(&theta[offset..offset + len]);
-            offset += len;
-        }
-        trainer.load_state(&state)?;
-        let data = allpairs::data::Dataset::new(rows.clone(), labels.clone(), 0, 64);
-        let idx: Vec<u32> = (0..data.len() as u32).collect();
-        let scores = trainer.predict(&data, &idx)?;
-        Ok(auc(&scores, &labels).unwrap_or(f64::NAN))
-    };
+    let lbfgs_auc = auc(&objective.scores(&theta)?, &labels).unwrap_or(f64::NAN);
+    let gd_auc = auc(&objective.scores(&theta_gd)?, &labels).unwrap_or(f64::NAN);
     println!("\n== summary (equal gradient-evaluation budget) ==");
-    println!("L-BFGS : loss {lbfgs_loss:10.6}  AUC {:.4}", score(&theta)?);
-    println!("GD     : loss {gd_loss:10.6}  AUC {:.4}", score(&theta_gd)?);
+    println!("L-BFGS : loss {lbfgs_loss:10.6}  AUC {lbfgs_auc:.4}");
+    println!("GD     : loss {gd_loss:10.6}  AUC {gd_auc:.4}");
     anyhow::ensure!(lbfgs_loss <= gd_loss, "expected L-BFGS <= GD on this problem");
     println!("\nlbfgs_fullbatch OK");
     Ok(())

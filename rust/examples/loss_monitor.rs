@@ -2,10 +2,11 @@
 //! loss every epoch, in the same O(n log n) as AUC — the paper's
 //! interpretability argument for the functional representation.
 //!
-//! Trains a model while computing, per epoch, on the whole subtrain and
-//! validation sets: (a) the all-pairs hinge loss via the **native Rust**
-//! Algorithm 2, (b) the same loss via the **Pallas loss_eval artifact**
-//! (cross-checking the two stacks against each other), and (c) AUC.
+//! Trains a model while computing, per epoch, on the whole subtrain set:
+//! (a) the all-pairs hinge loss via the **native Rust** Algorithm 2
+//! directly, (b) the same loss via the **backend's** monitoring entry
+//! point (cross-checking the plumbing; on a pjrt build with artifacts
+//! this is the Pallas loss_eval kernel), and (c) AUC.
 //!
 //! ```bash
 //! cargo run --release --example loss_monitor
@@ -15,14 +16,13 @@ use allpairs::config::SweepConfig;
 use allpairs::coordinator::{cv, monitor};
 use allpairs::data::{Rng, Split};
 use allpairs::metrics::auc;
-use allpairs::runtime::Runtime;
+use allpairs::runtime::BackendSpec;
 use allpairs::train::Trainer;
 use allpairs::util::cli::Args;
 
 fn main() -> allpairs::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    args.expect_known(&["artifacts", "epochs", "imratio", "max-train"])?;
-    let artifacts = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    args.expect_known(&["artifacts", "backend", "epochs", "imratio", "max-train"])?;
     let epochs: usize = args.get("epochs", 6)?;
     let imratio: f64 = args.get("imratio", 0.05)?;
     let max_train: usize = args.get("max-train", 2000)?;
@@ -43,18 +43,23 @@ fn main() -> allpairs::Result<()> {
         100.0 * train.pos_fraction()
     );
 
-    let runtime = Runtime::new(&artifacts)?;
-    let mut trainer = Trainer::new(&runtime, "resnet", "hinge", 100)?;
+    let spec = match args.get_opt("backend").as_deref() {
+        Some("pjrt") => BackendSpec::pjrt(args.get_str("artifacts", "artifacts")),
+        Some("native") | None => BackendSpec::native(),
+        Some(other) => anyhow::bail!("unknown backend {other:?} (native | pjrt)"),
+    };
+    let backend = spec.connect()?;
+    let mut trainer = Trainer::new(backend.as_ref(), "resnet", "hinge", 100)?;
     trainer.init(0)?;
 
     println!(
         "{:>5} {:>12} {:>14} {:>14} {:>10} {:>10}",
-        "epoch", "batch_loss", "full_loss_rust", "full_loss_pjrt", "sub_auc", "val_auc"
+        "epoch", "batch_loss", "full_loss_rust", "full_loss_bknd", "sub_auc", "val_auc"
     );
     for epoch in 0..epochs {
         let stats = trainer.train_epoch(&train, &split.subtrain, 0.01, &mut rng)?;
 
-        // Full-subtrain monitoring: predict once, evaluate both backends.
+        // Full-subtrain monitoring: predict once, evaluate both paths.
         let scores = trainer.predict(&train, &split.subtrain)?;
         let labels: Vec<f32> = split
             .subtrain
@@ -63,20 +68,20 @@ fn main() -> allpairs::Result<()> {
             .collect();
         let full_rust = monitor::monitor_native(&scores, &labels, 1.0);
         // both monitors are pair-normalized; they must agree to fp tolerance
-        let full_pjrt = monitor::monitor_artifact(&runtime, "hinge", &scores, &labels)?;
+        let full_backend = monitor::monitor_backend(backend.as_ref(), "hinge", &scores, &labels)?;
         let sub_auc = auc(&scores, &labels).unwrap_or(f64::NAN);
         let val_auc = trainer
             .eval_auc(&train, &split.validation)?
             .unwrap_or(f64::NAN);
         println!(
-            "{epoch:>5} {:>12.6} {full_rust:>14.6} {full_pjrt:>14.6} {sub_auc:>10.4} {val_auc:>10.4}",
+            "{epoch:>5} {:>12.6} {full_rust:>14.6} {full_backend:>14.6} {sub_auc:>10.4} {val_auc:>10.4}",
             stats.mean_loss
         );
         anyhow::ensure!(
-            (full_rust - full_pjrt).abs() <= 1e-3 * full_rust.abs().max(1e-6),
-            "native and Pallas monitors disagree: {full_rust} vs {full_pjrt}"
+            (full_rust - full_backend).abs() <= 1e-3 * full_rust.abs().max(1e-6),
+            "native and backend monitors disagree: {full_rust} vs {full_backend}"
         );
     }
-    println!("\nnative Rust and Pallas loss monitors agree; loss_monitor OK");
+    println!("\ndirect Algorithm 2 and the backend loss monitor agree; loss_monitor OK");
     Ok(())
 }

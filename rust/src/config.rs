@@ -8,6 +8,7 @@
 
 use std::path::Path;
 
+use crate::runtime::BackendSpec;
 use crate::util::json::Json;
 
 /// Learning-rate grid for one loss (the paper uses wider grids for the
@@ -42,7 +43,10 @@ pub struct SweepConfig {
     pub model: String,
     /// Dataset generation seed (shared across the sweep).
     pub data_seed: u64,
-    /// Worker threads (each owns a PJRT runtime).
+    /// Execution backend (native by default; each sweep worker connects
+    /// its own instance from this spec).
+    pub backend: BackendSpec,
+    /// Worker threads.
     pub workers: usize,
     /// Optional cap on train-pool size (smoke runs).
     pub max_train: Option<usize>,
@@ -67,6 +71,7 @@ impl Default for SweepConfig {
             val_fraction: 0.2,
             model: "resnet".into(),
             data_seed: 20230223, // the paper's date, for flavor
+            backend: BackendSpec::default(),
             workers: num_cpus(),
             max_train: None,
             max_lrs: None,
@@ -131,6 +136,9 @@ impl SweepConfig {
         if let Some(v) = j.get("data_seed") {
             c.data_seed = v.as_f64().ok_or_else(|| anyhow::anyhow!("data_seed"))? as u64;
         }
+        if let Some(v) = j.get("backend") {
+            c.backend = BackendSpec::from_json(v)?;
+        }
         if let Some(v) = j.get("workers") {
             c.workers = v.as_usize().ok_or_else(|| anyhow::anyhow!("workers"))?;
         }
@@ -162,6 +170,7 @@ impl SweepConfig {
             ("val_fraction", Json::num(self.val_fraction)),
             ("model", Json::str(&self.model)),
             ("data_seed", Json::num(self.data_seed as f64)),
+            ("backend", self.backend.to_json()),
             ("workers", Json::num(self.workers as f64)),
             (
                 "max_train",
@@ -183,6 +192,25 @@ impl SweepConfig {
     pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
         std::fs::write(path, self.to_json().dumps())?;
         Ok(())
+    }
+
+    /// Drop losses the configured backend cannot run (the `aucm` LIBAUC
+    /// baseline exists only as an AOT artifact).  With `keep_three`, a
+    /// default-protocol list that lost `aucm` gets the native `square`
+    /// loss substituted so three losses are still compared.  Returns
+    /// whether the list changed (callers log the adjustment).
+    pub fn adapt_losses_to_backend(&mut self, keep_three: bool) -> bool {
+        if !matches!(self.backend, BackendSpec::Native(_)) {
+            return false;
+        }
+        if !self.losses.iter().any(|l| l == "aucm") {
+            return false;
+        }
+        self.losses.retain(|l| l != "aucm");
+        if keep_three && !self.losses.contains(&"square".to_string()) {
+            self.losses.push("square".into());
+        }
+        true
     }
 
     /// Learning-rate grid for a loss, optionally truncated to the
@@ -252,6 +280,40 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(c.n_runs(), 2 * 2 * default_lr_grid("hinge").len());
+    }
+
+    #[test]
+    fn adapt_losses_drops_aucm_only_on_native() {
+        let mut c = SweepConfig::default(); // native backend, aucm present
+        assert!(c.adapt_losses_to_backend(true));
+        assert_eq!(c.losses, vec!["hinge", "logistic", "square"]);
+        assert!(!c.adapt_losses_to_backend(true)); // idempotent
+
+        let mut user = SweepConfig {
+            losses: vec!["hinge".into(), "aucm".into()],
+            ..Default::default()
+        };
+        assert!(user.adapt_losses_to_backend(false));
+        assert_eq!(user.losses, vec!["hinge"]); // no substitution
+
+        let mut pjrt = SweepConfig {
+            backend: BackendSpec::pjrt("artifacts"),
+            ..Default::default()
+        };
+        assert!(!pjrt.adapt_losses_to_backend(true));
+        assert!(pjrt.losses.contains(&"aucm".to_string()));
+    }
+
+    #[test]
+    fn backend_roundtrips_through_json() {
+        let c = SweepConfig {
+            backend: BackendSpec::pjrt("my/artifacts"),
+            ..Default::default()
+        };
+        let path = std::env::temp_dir().join("allpairs_cfg_backend.json");
+        c.save(&path).unwrap();
+        let back = SweepConfig::load(&path).unwrap();
+        assert_eq!(back.backend, BackendSpec::pjrt("my/artifacts"));
     }
 
     #[test]

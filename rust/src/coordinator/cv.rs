@@ -42,12 +42,11 @@ pub struct SweepOutput {
     pub cells: Vec<Cell>,
 }
 
-/// Run the full cross-validation experiment and write all report files
-/// into `out_dir`: `sweep_results.jsonl`, `table2.md`, `fig3.md`,
-/// `fig3.csv`.
+/// Run the full cross-validation experiment on `config.backend` and
+/// write all report files into `out_dir`: `sweep_results.jsonl`,
+/// `table2.md`, `fig3.md`, `fig3.csv`.
 pub fn run(
     config: &SweepConfig,
-    artifacts_dir: &Path,
     out_dir: &Path,
     progress: Option<ProgressFn>,
 ) -> crate::Result<SweepOutput> {
@@ -61,7 +60,7 @@ pub fn run(
         let _ = writer.append(r);
     });
     let run_results = run_sweep_with(
-        artifacts_dir,
+        &config.backend,
         jobs,
         datasets,
         config.workers,

@@ -4,7 +4,7 @@
 //!   naive / functional / logistic implementations.
 //! * [`cv`] — Table 2 + Figure 3: the full cross-validation sweep over
 //!   datasets × imratios × losses × batch sizes × learning rates × seeds,
-//!   driven through the PJRT artifacts.
+//!   driven through any [`crate::runtime::Backend`].
 //! * [`monitor`] — the paper's section-5 use case: monitoring the
 //!   full-set all-pairs loss every epoch in the same O(n log n) as AUC.
 

@@ -5,16 +5,16 @@
 //! sets every epoch — the same cost as computing AUC — and used to
 //! diagnose training (e.g. step size too large).
 //!
-//! Two interchangeable backends, cross-checked in the integration tests:
+//! Interchangeable evaluators, cross-checked in the integration tests:
 //!
-//! * [`monitor_native`] — the Rust functional implementation;
-//! * [`monitor_artifact`] — the `loss_eval_*` AOT artifact (the Pallas
-//!   kernel), fed the same scores through PJRT.
-
-use xla::Literal;
+//! * [`monitor_native`] — the Rust functional implementation, directly;
+//! * [`monitor_backend`] — any [`Backend`]'s `eval_loss` entry point
+//!   (native backend: the same functional sweep; PJRT backend: the
+//!   `loss_eval_*` AOT artifact, i.e. the Pallas kernel fed the same
+//!   scores).
 
 use crate::losses::functional::SquaredHinge;
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::Backend;
 
 /// Full-set squared hinge loss (normalized per pair) in native Rust.
 pub fn monitor_native(scores: &[f32], is_pos: &[f32], margin: f32) -> f64 {
@@ -24,51 +24,35 @@ pub fn monitor_native(scores: &[f32], is_pos: &[f32], margin: f32) -> f64 {
     SquaredHinge::new(margin).loss_only(scores, is_pos) / pairs
 }
 
-/// Full-set loss via the `loss_eval_<loss>_n<N>` artifact.  Scores are
-/// padded (mask zero) up to the artifact's static size N; inputs longer
-/// than N are an error.  Like [`monitor_native`], the returned value is
-/// normalized per pair (the L2 training losses normalize internally).
-pub fn monitor_artifact(
-    runtime: &Runtime,
+/// Full-set training loss through a backend's monitoring entry point.
+/// Like [`monitor_native`], the returned value is normalized per pair
+/// (pointwise losses: per example).
+pub fn monitor_backend(
+    backend: &dyn Backend,
     loss: &str,
     scores: &[f32],
     is_pos: &[f32],
 ) -> crate::Result<f64> {
-    // find the registered loss_eval size
-    let art = runtime
-        .manifest()
-        .artifacts
-        .iter()
-        .find(|a| a.kind == crate::runtime::ArtifactKind::LossEval && a.loss == loss)
-        .ok_or_else(|| anyhow::anyhow!("no loss_eval artifact for {loss}"))?;
-    let n = art.batch;
-    anyhow::ensure!(
-        scores.len() <= n,
-        "loss_eval artifact holds {n} elements, got {}",
-        scores.len()
-    );
-    let name = Manifest::loss_eval_name(loss, n);
-    let mut s = scores.to_vec();
-    s.resize(n, 0.0);
-    let mut p = is_pos.to_vec();
-    p.resize(n, 0.0);
-    let q: Vec<f32> = scores
-        .iter()
-        .zip(is_pos)
-        .map(|(_, &pi)| if pi != 0.0 { 0.0 } else { 1.0 })
-        .chain(std::iter::repeat(0.0))
-        .take(n)
-        .collect();
-    let outs = runtime.execute(
-        &name,
-        &[Literal::vec1(&s), Literal::vec1(&p), Literal::vec1(&q)],
-    )?;
-    Ok(outs[0].to_vec::<f32>()?[0] as f64)
+    backend.eval_loss(loss, scores, is_pos)
+}
+
+/// Full-set loss via the `loss_eval_<loss>_n<N>` artifact (feature
+/// `pjrt`).  Scores are padded (mask zero) up to the artifact's static
+/// size N; inputs longer than N are an error.
+#[cfg(feature = "pjrt")]
+pub fn monitor_artifact(
+    runtime: &crate::runtime::Runtime,
+    loss: &str,
+    scores: &[f32],
+    is_pos: &[f32],
+) -> crate::Result<f64> {
+    crate::runtime::pjrt::loss_eval(runtime, loss, scores, is_pos)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::BackendSpec;
 
     #[test]
     fn native_monitor_is_normalized() {
@@ -83,5 +67,15 @@ mod tests {
     #[test]
     fn native_monitor_single_class_is_zero() {
         assert_eq!(monitor_native(&[0.5, 0.2], &[1.0, 1.0], 1.0), 0.0);
+    }
+
+    #[test]
+    fn backend_monitor_agrees_with_native() {
+        let backend = BackendSpec::native().connect().unwrap();
+        let scores = [0.3_f32, -0.1, 0.8, 0.2, -0.5];
+        let is_pos = [1.0_f32, 0.0, 1.0, 0.0, 0.0];
+        let via_backend = monitor_backend(backend.as_ref(), "hinge", &scores, &is_pos).unwrap();
+        let native = monitor_native(&scores, &is_pos, 1.0);
+        assert!((via_backend - native).abs() < 1e-12);
     }
 }

@@ -13,26 +13,48 @@
 //!   `logistic`, `aucm`).
 //! * **L3 (this crate, run time)** — everything that runs: native Rust
 //!   implementations of the paper's algorithms ([`losses`]), ROC/AUC
-//!   metrics ([`metrics`]), synthetic data substrates ([`data`]), a PJRT
-//!   runtime that executes the AOT artifacts ([`runtime`]), the training
-//!   loop ([`train`]), the cross-validation hyper-parameter sweep engine
-//!   ([`sweep`]), reporting ([`report`]) and experiment orchestration
-//!   ([`coordinator`]).
+//!   metrics ([`metrics`]), synthetic data substrates ([`data`]), a
+//!   pluggable execution layer ([`runtime`]) with a self-contained
+//!   native backend (default) and a PJRT artifact runtime (feature
+//!   `pjrt`), the training loop ([`train`]), the cross-validation
+//!   hyper-parameter sweep engine ([`sweep`]), reporting ([`report`])
+//!   and experiment orchestration ([`coordinator`]).
 //!
-//! Python never runs on the training path: after `make artifacts`, the
-//! `allpairs` binary is self-contained.
+//! The default build is fully self-contained: `cargo build && cargo test`
+//! need no Python, no artifacts and no network.  With `make artifacts`
+//! and `--features pjrt`, the same trainer/sweep code runs through the
+//! AOT kernels instead — both implement [`runtime::Backend`].
 //!
 //! ## Quick tour
 //!
-//! ```no_run
+//! The paper's O(n log n) squared hinge loss + gradient, natively:
+//!
+//! ```
 //! use allpairs::losses::{functional, PairwiseLoss};
 //!
-//! // The paper's O(n log n) squared hinge loss + gradient:
 //! let scores = vec![0.9_f32, 0.2, 0.6, 0.1];
 //! let is_pos = vec![1.0_f32, 0.0, 1.0, 0.0];
 //! let loss = functional::SquaredHinge::new(1.0);
 //! let (value, grad) = loss.loss_and_grad(&scores, &is_pos);
 //! assert!(value >= 0.0 && grad.len() == 4);
+//! ```
+//!
+//! Training through the backend layer (one gradient step on a batch):
+//!
+//! ```
+//! use allpairs::runtime::{BackendSpec, NativeSpec};
+//! use allpairs::train::Trainer;
+//!
+//! let spec = BackendSpec::Native(NativeSpec {
+//!     input_dim: 4,
+//!     hidden: 8,
+//!     margin: 1.0,
+//!     threads: 1,
+//! });
+//! let backend = spec.connect()?;
+//! let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 2)?;
+//! trainer.init(0)?;
+//! # Ok::<(), anyhow::Error>(())
 //! ```
 
 pub mod config;

@@ -7,17 +7,22 @@
 //! * `train`           — one training run (debugging / ad-hoc)
 //! * `report`          — re-aggregate a saved sweep JSONL
 //! * `artifacts-check` — compile every artifact and smoke-run init
+//!                       (requires the `pjrt` feature)
+//!
+//! Execution defaults to the self-contained native backend; pass
+//! `--backend pjrt` (with a build carrying `--features pjrt` and a
+//! `make artifacts` directory) to run through the AOT artifacts.
 //!
 //! Argument parsing uses the in-tree `util::cli` (offline build: clap is
 //! unavailable); run with no arguments for usage.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::{cv, timing};
 use allpairs::data::{Rng, Split};
 use allpairs::report::figures::{ascii_loglog, write_csv};
-use allpairs::runtime::Runtime;
+use allpairs::runtime::BackendSpec;
 use allpairs::sweep::results;
 use allpairs::train::Trainer;
 use allpairs::util::cli::Args;
@@ -28,8 +33,9 @@ allpairs — log-linear all-pairs losses: coordinator
 USAGE: allpairs <COMMAND> [OPTIONS]
 
 Global options:
-  --artifacts DIR   artifacts directory [artifacts]
-  --out DIR         results directory   [results]
+  --backend B       execution backend: native | pjrt  [native]
+  --artifacts DIR   artifacts directory (pjrt)        [artifacts]
+  --out DIR         results directory                 [results]
 
 COMMANDS
   timing            Figure 2: loss+gradient wall time vs data size
@@ -45,7 +51,7 @@ COMMANDS
       --imratio R --epochs E --seed S --max-train N
   report            re-aggregate a saved results file
       --results FILE    sweep_results.jsonl path
-  artifacts-check   compile every artifact, smoke-run the inits
+  artifacts-check   compile every artifact, smoke-run the inits (pjrt)
 ";
 
 fn main() {
@@ -77,8 +83,18 @@ fn run() -> allpairs::Result<()> {
     }
 }
 
-fn cmd_timing(args: &Args, out: &PathBuf) -> allpairs::Result<()> {
-    args.expect_known(&["artifacts", "out", "max-exp", "repeats", "naive-cap"])?;
+/// Resolve `--backend` (native default; pjrt uses `--artifacts`).
+fn backend_from_args(args: &Args, artifacts: &Path) -> allpairs::Result<Option<BackendSpec>> {
+    match args.get_opt("backend").as_deref() {
+        None => Ok(None),
+        Some("native") => Ok(Some(BackendSpec::native())),
+        Some("pjrt") => Ok(Some(BackendSpec::pjrt(artifacts.to_path_buf()))),
+        Some(other) => anyhow::bail!("unknown backend {other:?} (native | pjrt)"),
+    }
+}
+
+fn cmd_timing(args: &Args, out: &Path) -> allpairs::Result<()> {
+    args.expect_known(&["artifacts", "out", "backend", "max-exp", "repeats", "naive-cap"])?;
     let max_exp: u32 = args.get("max-exp", 7)?;
     let config = timing::TimingConfig {
         sizes: (1..=max_exp).map(|e| 10usize.pow(e)).collect(),
@@ -118,8 +134,10 @@ fn cmd_timing(args: &Args, out: &PathBuf) -> allpairs::Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &Args, artifacts: &PathBuf, out: &PathBuf) -> allpairs::Result<()> {
-    args.expect_known(&["artifacts", "out", "config", "smoke", "workers", "epochs"])?;
+fn cmd_sweep(args: &Args, artifacts: &Path, out: &Path) -> allpairs::Result<()> {
+    args.expect_known(&[
+        "artifacts", "out", "backend", "config", "smoke", "workers", "epochs",
+    ])?;
     let mut cfg = match args.get_opt("config") {
         Some(path) => SweepConfig::load(path)?,
         None => SweepConfig::default(),
@@ -133,14 +151,28 @@ fn cmd_sweep(args: &Args, artifacts: &PathBuf, out: &PathBuf) -> allpairs::Resul
         cfg.epochs = 3;
         cfg.max_train = Some(600);
     }
+    if let Some(backend) = backend_from_args(args, artifacts)? {
+        cfg.backend = backend;
+    }
+    if cfg.adapt_losses_to_backend(args.get_opt("config").is_none()) {
+        eprintln!(
+            "note: aucm requires the pjrt backend; sweeping losses {:?}",
+            cfg.losses
+        );
+    }
     cfg.workers = args.get("workers", cfg.workers)?;
     cfg.epochs = args.get("epochs", cfg.epochs)?;
-    eprintln!("sweep: {} runs on {} workers ...", cfg.n_runs(), cfg.workers);
+    eprintln!(
+        "sweep: {} runs on {} workers ({} backend) ...",
+        cfg.n_runs(),
+        cfg.workers,
+        cfg.backend.kind()
+    );
     let t0 = std::time::Instant::now();
     let progress: allpairs::sweep::scheduler::ProgressFn = Box::new(|done, total, msg| {
         eprintln!("[{done}/{total}] {msg}");
     });
-    let output = cv::run(&cfg, artifacts, out, Some(progress))?;
+    let output = cv::run(&cfg, out, Some(progress))?;
     println!(
         "sweep finished: {} results in {:.1}s",
         output.results.len(),
@@ -159,10 +191,10 @@ fn cmd_sweep(args: &Args, artifacts: &PathBuf, out: &PathBuf) -> allpairs::Resul
     Ok(())
 }
 
-fn cmd_train(args: &Args, artifacts: &PathBuf) -> allpairs::Result<()> {
+fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
     args.expect_known(&[
-        "artifacts", "out", "dataset", "loss", "model", "batch", "lr", "imratio", "epochs",
-        "seed", "max-train",
+        "artifacts", "out", "backend", "dataset", "loss", "model", "batch", "lr", "imratio",
+        "epochs", "seed", "max-train",
     ])?;
     let dataset = args.get_str("dataset", "synth-cifar");
     let loss = args.get_str("loss", "hinge");
@@ -191,8 +223,9 @@ fn cmd_train(args: &Args, artifacts: &PathBuf) -> allpairs::Result<()> {
         split.subtrain.len(),
         split.validation.len()
     );
-    let runtime = Runtime::new(artifacts)?;
-    let mut trainer = Trainer::new(&runtime, &model, &loss, batch)?;
+    let spec = backend_from_args(args, artifacts)?.unwrap_or_default();
+    let backend = spec.connect()?;
+    let mut trainer = Trainer::new(backend.as_ref(), &model, &loss, batch)?;
     let history = trainer.fit(
         &train,
         &split.subtrain,
@@ -220,8 +253,8 @@ fn cmd_train(args: &Args, artifacts: &PathBuf) -> allpairs::Result<()> {
     Ok(())
 }
 
-fn cmd_report(args: &Args, out: &PathBuf) -> allpairs::Result<()> {
-    args.expect_known(&["artifacts", "out", "results"])?;
+fn cmd_report(args: &Args, out: &Path) -> allpairs::Result<()> {
+    args.expect_known(&["artifacts", "out", "backend", "results"])?;
     let results_path = args
         .get_opt("results")
         .ok_or_else(|| anyhow::anyhow!("--results FILE required"))?;
@@ -236,8 +269,9 @@ fn cmd_report(args: &Args, out: &PathBuf) -> allpairs::Result<()> {
     Ok(())
 }
 
-fn cmd_artifacts_check(artifacts: &PathBuf) -> allpairs::Result<()> {
-    let runtime = Runtime::new(artifacts)?;
+#[cfg(feature = "pjrt")]
+fn cmd_artifacts_check(artifacts: &Path) -> allpairs::Result<()> {
+    let runtime = allpairs::runtime::Runtime::new(artifacts)?;
     let names: Vec<String> = runtime
         .manifest()
         .artifacts
@@ -259,4 +293,12 @@ fn cmd_artifacts_check(artifacts: &PathBuf) -> allpairs::Result<()> {
     }
     println!("all artifacts OK");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts_check(_artifacts: &Path) -> allpairs::Result<()> {
+    anyhow::bail!(
+        "artifacts-check requires the PJRT runtime; \
+         rebuild with `cargo build --features pjrt`"
+    )
 }

@@ -1,0 +1,245 @@
+//! The pluggable execution layer: every way of running a model — the
+//! pure-Rust native backend, the PJRT artifact runtime, whatever comes
+//! next (sharded, remote, GPU) — implements [`Backend`], and everything
+//! above (trainer, sweep, coordinator, CLI) is written against the trait.
+//! See DESIGN.md §5 for the layering argument.
+//!
+//! Threading contract: a [`BackendSpec`] is plain `Send + Sync` data that
+//! can cross threads freely; a connected [`Backend`] may be thread-bound
+//! (the PJRT client is `Rc`-based), so the sweep scheduler ships the
+//! *spec* to each worker and connects per thread.  The native backend is
+//! freely shareable — which is what lets future PRs shard one backend
+//! across workers instead of one-runtime-per-thread.
+
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+
+use super::native::{NativeBackend, NativeSpec};
+use super::tensor::HostTensor;
+
+/// A connected execution backend: a factory of per-(model, loss, batch)
+/// executors plus the §5 full-set loss-monitoring entry point.
+pub trait Backend {
+    /// Short backend name for logs and reports (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Open an executor for one (model, loss, batch) combination.
+    ///
+    /// The executor may borrow the backend (the PJRT executor shares the
+    /// backend's compiled-executable cache), hence the lifetime tie.
+    fn open<'a>(
+        &'a self,
+        model: &str,
+        loss: &str,
+        batch: usize,
+    ) -> crate::Result<Box<dyn ModelExecutor + 'a>>;
+
+    /// Full-set training-loss evaluation (paper §5 monitoring): the loss
+    /// named `loss` over `scores`/`is_pos`, normalized per pair (or per
+    /// example for pointwise losses).
+    fn eval_loss(&self, loss: &str, scores: &[f32], is_pos: &[f32]) -> crate::Result<f64>;
+}
+
+/// One model bound to one (loss, batch): holds the training state and
+/// runs init / train-step / predict.
+///
+/// Batch buffers follow the sampler convention: fixed shape
+/// `batch_size() * row_len()`, padding rows zeroed with both masks zero.
+pub trait ModelExecutor {
+    /// Static train-batch size.
+    fn batch_size(&self) -> usize;
+
+    /// Scalars per example.
+    fn row_len(&self) -> usize;
+
+    /// Number of state tensors (parameters + optimizer slots).
+    fn n_state(&self) -> usize;
+
+    /// (Re)initialize the training state from a seed.
+    fn init(&mut self, seed: u32) -> crate::Result<()>;
+
+    /// One optimizer step on a filled batch; returns the batch loss
+    /// (normalized per pair / per example, matching the AOT kernels).
+    fn train_step(
+        &mut self,
+        x: &[f32],
+        is_pos: &[f32],
+        is_neg: &[f32],
+        lr: f32,
+    ) -> crate::Result<f64>;
+
+    /// Scores for `rows` examples stored row-major in `x`
+    /// (`rows * row_len()` scalars).  The executor handles any internal
+    /// chunking/padding its substrate needs.
+    fn predict(&mut self, x: &[f32], rows: usize) -> crate::Result<Vec<f32>>;
+
+    /// Download the training state (parameters first, optimizer slots
+    /// after, in a stable order) for checkpointing.
+    fn state_to_host(&self) -> crate::Result<Vec<HostTensor>>;
+
+    /// Restore a previously downloaded state.
+    fn load_state(&mut self, tensors: &[HostTensor]) -> crate::Result<()>;
+}
+
+/// Serializable description of a backend: plain data, `Send + Sync`,
+/// cheap to clone — the form in which backends cross thread and config
+/// boundaries.  `connect()` turns it into a live [`Backend`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum BackendSpec {
+    /// The self-contained pure-Rust backend (default build).
+    Native(NativeSpec),
+    /// The PJRT artifact runtime (requires the `pjrt` cargo feature and
+    /// `make artifacts`).
+    Pjrt { artifacts_dir: PathBuf },
+}
+
+impl Default for BackendSpec {
+    fn default() -> Self {
+        BackendSpec::Native(NativeSpec::default())
+    }
+}
+
+impl BackendSpec {
+    /// The default native backend.
+    pub fn native() -> Self {
+        Self::default()
+    }
+
+    /// A PJRT spec over an artifacts directory.
+    pub fn pjrt(artifacts_dir: impl Into<PathBuf>) -> Self {
+        BackendSpec::Pjrt {
+            artifacts_dir: artifacts_dir.into(),
+        }
+    }
+
+    /// Short name for logs.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BackendSpec::Native(_) => "native",
+            BackendSpec::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// Connect: instantiate the described backend on this thread.
+    pub fn connect(&self) -> crate::Result<Box<dyn Backend>> {
+        match self {
+            BackendSpec::Native(spec) => Ok(Box::new(NativeBackend::new(spec.clone()))),
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt { artifacts_dir } => Ok(Box::new(
+                super::pjrt::PjrtBackend::new(artifacts_dir)?,
+            )),
+            #[cfg(not(feature = "pjrt"))]
+            BackendSpec::Pjrt { .. } => anyhow::bail!(
+                "this binary was built without the `pjrt` feature; \
+                 rebuild with `cargo build --features pjrt` or use the native backend"
+            ),
+        }
+    }
+
+    /// JSON form (used inside sweep configs).
+    pub fn to_json(&self) -> Json {
+        match self {
+            BackendSpec::Native(s) => Json::obj([
+                ("kind", Json::str("native")),
+                ("input_dim", Json::num(s.input_dim as f64)),
+                ("hidden", Json::num(s.hidden as f64)),
+                ("margin", Json::num(s.margin as f64)),
+                ("threads", Json::num(s.threads as f64)),
+            ]),
+            BackendSpec::Pjrt { artifacts_dir } => Json::obj([
+                ("kind", Json::str("pjrt")),
+                ("artifacts", Json::str(artifacts_dir.display().to_string())),
+            ]),
+        }
+    }
+
+    /// Parse the JSON form; absent native fields keep their defaults.
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let kind = j
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("backend kind must be a string"))?;
+        match kind {
+            "native" => {
+                let mut spec = NativeSpec::default();
+                if let Some(v) = j.get("input_dim") {
+                    spec.input_dim = v
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("input_dim must be a non-negative integer"))?;
+                }
+                if let Some(v) = j.get("hidden") {
+                    spec.hidden = v
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("hidden must be a non-negative integer"))?;
+                }
+                if let Some(v) = j.get("margin") {
+                    spec.margin = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("margin must be a number"))?
+                        as f32;
+                }
+                if let Some(v) = j.get("threads") {
+                    spec.threads = v
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("threads must be a non-negative integer"))?;
+                }
+                Ok(BackendSpec::Native(spec))
+            }
+            "pjrt" => {
+                let dir = j
+                    .req("artifacts")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("artifacts must be a string path"))?;
+                Ok(BackendSpec::pjrt(dir))
+            }
+            other => anyhow::bail!("unknown backend kind {other:?} (native | pjrt)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let native = BackendSpec::Native(NativeSpec {
+            input_dim: 64,
+            hidden: 16,
+            margin: 0.5,
+            threads: 2,
+        });
+        let back = BackendSpec::from_json(&native.to_json()).unwrap();
+        assert_eq!(back, native);
+
+        let pjrt = BackendSpec::pjrt("artifacts");
+        let back = BackendSpec::from_json(&pjrt.to_json()).unwrap();
+        assert_eq!(back, pjrt);
+    }
+
+    #[test]
+    fn native_connects_and_names() {
+        let backend = BackendSpec::native().connect().unwrap();
+        assert_eq!(backend.name(), "native");
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let j = Json::obj([("kind", Json::str("quantum"))]);
+        assert!(BackendSpec::from_json(&j).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_spec_errors_without_feature() {
+        let err = BackendSpec::pjrt("artifacts").connect().err().unwrap();
+        assert!(err.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn spec_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<BackendSpec>();
+    }
+}

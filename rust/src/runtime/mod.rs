@@ -1,21 +1,36 @@
-//! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
+//! The execution layer: a pluggable [`Backend`] trait with two
+//! implementations.
 //!
+//! * [`backend`] — the [`Backend`] / [`ModelExecutor`] traits and the
+//!   serializable [`BackendSpec`] that crosses thread and config
+//!   boundaries (see DESIGN.md §5).
+//! * [`native`] — the default, fully self-contained pure-Rust backend:
+//!   forward/gradient execution built on [`crate::losses::functional`]
+//!   with scoped-thread data parallelism.  `Send + Sync`.
+//! * `pjrt` (feature `pjrt`) — the AOT-artifact runtime: a PJRT CPU
+//!   client plus a lazy cache of compiled executables, keyed by artifact
+//!   name.  HLO **text** is the interchange format
+//!   (`HloModuleProto::from_text_file`) — see DESIGN.md §4 for why
+//!   serialized protos are rejected here.  `xla::PjRtClient` is
+//!   `Rc`-based (not `Send`), so one runtime must live and die on a
+//!   single thread; the sweep scheduler connects a backend per worker
+//!   from a shared [`BackendSpec`].
 //! * [`artifact`] — parses `artifacts/manifest.json` (written by
 //!   `python/compile/aot.py`) into a typed registry.
-//! * [`tensor`] — host-side tensors ↔ `xla::Literal` conversions.
-//! * [`client`] — [`client::Runtime`]: a PJRT CPU client plus a lazy
-//!   cache of compiled executables, keyed by artifact name.  HLO **text**
-//!   is the interchange format (`HloModuleProto::from_text_file`) — see
-//!   DESIGN.md §4 for why serialized protos are rejected here.
-//!
-//! `xla::PjRtClient` is `Rc`-based (not `Send`), so one [`client::Runtime`]
-//! must live and die on a single thread; the sweep scheduler gives each
-//! worker thread its own runtime instance.
+//! * [`tensor`] — backend-neutral host tensors.
 
 pub mod artifact;
-pub mod client;
+pub mod backend;
+pub mod native;
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
 pub use artifact::{Artifact, ArtifactKind, Manifest};
-pub use client::Runtime;
+pub use backend::{Backend, BackendSpec, ModelExecutor};
+pub use native::{NativeBackend, NativeSpec};
 pub use tensor::HostTensor;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{PjrtBackend, Runtime};

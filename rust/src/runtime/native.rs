@@ -1,0 +1,1009 @@
+//! The pure-Rust native backend: forward/gradient execution built
+//! directly on [`crate::losses::functional`] and [`HostTensor`], with
+//! data-parallel batch processing on `std::thread::scope` (the offline
+//! build has no rayon; see DESIGN.md §5.4 — the chunking scheme is the
+//! same map/reduce shape a rayon `par_chunks` would produce).
+//!
+//! Models are the reproduction-scale stand-ins for the paper's networks:
+//! a linear scorer (`"linear"`) and a one-hidden-layer tanh MLP (every
+//! other model name, including the `"mlp"` and `"resnet"` names used by
+//! the AOT manifests).  The optimizer is heavy-ball SGD
+//! (`v ← μv + g`, `p ← p − lr·v`, μ = 0.9), matching
+//! `python/compile/optim.py`, and losses are normalized per pair (or per
+//! example), matching the L2 loss wrappers — so learning rates transfer
+//! between the native and PJRT backends.
+//!
+//! Everything is deterministic from the init seed at a fixed thread
+//! count; across thread counts only floating-point reduction order for
+//! the parameter gradient differs.
+
+use std::ops::Range;
+
+use crate::data::Rng;
+use crate::losses::functional::{HingeScratch, Square, SquaredHinge};
+use crate::losses::logistic;
+use crate::losses::PairwiseLoss;
+
+use super::backend::{Backend, ModelExecutor};
+use super::tensor::HostTensor;
+
+/// Heavy-ball momentum, as in `python/compile/optim.py::SGDMomentum`.
+const MOMENTUM: f32 = 0.9;
+
+/// Configuration of the native backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NativeSpec {
+    /// Scalars per example (the flattened input row length).
+    pub input_dim: usize,
+    /// Hidden units of the MLP stand-in (0 = every model is linear).
+    pub hidden: usize,
+    /// Margin of the pairwise losses.
+    pub margin: f32,
+    /// Worker threads for forward/gradient (0 = one per available core).
+    pub threads: usize,
+}
+
+impl Default for NativeSpec {
+    fn default() -> Self {
+        Self {
+            // The synthetic image datasets: 16 x 16 x 3 (NHWC).
+            input_dim: crate::data::synth::IMAGE_HW
+                * crate::data::synth::IMAGE_HW
+                * crate::data::synth::CHANNELS,
+            hidden: 32,
+            margin: 1.0,
+            threads: 0,
+        }
+    }
+}
+
+/// The self-contained pure-Rust backend.  `Send + Sync`: one instance
+/// may be shared across sweep workers.
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    spec: NativeSpec,
+}
+
+impl NativeBackend {
+    pub fn new(spec: NativeSpec) -> Self {
+        Self { spec }
+    }
+
+    pub fn spec(&self) -> &NativeSpec {
+        &self.spec
+    }
+
+    /// A full-batch (loss, gradient) oracle over `labels.len()` examples
+    /// for deterministic optimizers (L-BFGS, paper §5).  `rows` is
+    /// row-major example data, `labels` the {0,1} positive indicators.
+    pub fn objective(
+        &self,
+        model: &str,
+        loss: &str,
+        rows: &[f32],
+        labels: &[f32],
+    ) -> crate::Result<NativeObjective> {
+        let arch = ModelArch::parse(model, &self.spec);
+        let loss = LossKind::parse(loss, self.spec.margin)?;
+        anyhow::ensure!(
+            rows.len() == labels.len() * arch.dim(),
+            "rows/labels mismatch: {} scalars for {} examples of dim {}",
+            rows.len(),
+            labels.len(),
+            arch.dim()
+        );
+        Ok(NativeObjective {
+            arch,
+            loss,
+            threads: self.spec.threads,
+            x: rows.to_vec(),
+            is_pos: labels.to_vec(),
+            rows: labels.len(),
+            scores: Vec::new(),
+            hidden: Vec::new(),
+            dscores: Vec::new(),
+            grad_scores: Vec::new(),
+            partials: Vec::new(),
+            hinge_scratch: HingeScratch::default(),
+            evals: 0,
+        })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn open<'a>(
+        &'a self,
+        model: &str,
+        loss: &str,
+        batch: usize,
+    ) -> crate::Result<Box<dyn ModelExecutor + 'a>> {
+        anyhow::ensure!(batch > 0, "batch size must be positive");
+        let arch = ModelArch::parse(model, &self.spec);
+        let loss = LossKind::parse(loss, self.spec.margin)?;
+        Ok(Box::new(NativeExecutor::new(arch, loss, batch, self.spec.threads)))
+    }
+
+    fn eval_loss(&self, loss: &str, scores: &[f32], is_pos: &[f32]) -> crate::Result<f64> {
+        anyhow::ensure!(scores.len() == is_pos.len(), "scores/is_pos length mismatch");
+        let kind = LossKind::parse(loss, self.spec.margin)?;
+        Ok(kind.normalized_loss(scores, is_pos))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model architectures
+// ---------------------------------------------------------------------------
+
+/// Native model architecture (flat parameter vector layouts below).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ModelArch {
+    /// `s = w·x + b`; params `[w (dim), b (1)]`.
+    Linear { dim: usize },
+    /// `s = w2·tanh(W1 x + b1) + b2`;
+    /// params `[W1 (h*dim), b1 (h), w2 (h), b2 (1)]`.
+    Mlp { dim: usize, hidden: usize },
+}
+
+impl ModelArch {
+    fn parse(model: &str, spec: &NativeSpec) -> Self {
+        if model == "linear" || spec.hidden == 0 {
+            ModelArch::Linear { dim: spec.input_dim }
+        } else {
+            // "mlp", "resnet", ...: the MLP stand-in at reproduction scale.
+            ModelArch::Mlp {
+                dim: spec.input_dim,
+                hidden: spec.hidden,
+            }
+        }
+    }
+
+    fn dim(&self) -> usize {
+        match *self {
+            ModelArch::Linear { dim } => dim,
+            ModelArch::Mlp { dim, .. } => dim,
+        }
+    }
+
+    fn hidden_units(&self) -> usize {
+        match *self {
+            ModelArch::Linear { .. } => 0,
+            ModelArch::Mlp { hidden, .. } => hidden,
+        }
+    }
+
+    /// Shapes of the parameter tensors, in flat layout order.
+    fn param_shapes(&self) -> Vec<Vec<i64>> {
+        match *self {
+            ModelArch::Linear { dim } => vec![vec![dim as i64], vec![]],
+            ModelArch::Mlp { dim, hidden } => vec![
+                vec![hidden as i64, dim as i64],
+                vec![hidden as i64],
+                vec![hidden as i64],
+                vec![],
+            ],
+        }
+    }
+
+    fn n_params(&self) -> usize {
+        match *self {
+            ModelArch::Linear { dim } => dim + 1,
+            ModelArch::Mlp { dim, hidden } => hidden * dim + 2 * hidden + 1,
+        }
+    }
+
+    /// Seeded initialization: weights ~ N(0, 1/fan_in), biases zero.
+    fn init_params(&self, seed: u32) -> Vec<f32> {
+        let mut rng = Rng::new((seed as u64) ^ 0xA11_9A125_0001);
+        let mut params = vec![0.0_f32; self.n_params()];
+        match *self {
+            ModelArch::Linear { dim } => {
+                let scale = 1.0 / (dim as f64).sqrt();
+                for w in &mut params[..dim] {
+                    *w = (rng.normal() * scale) as f32;
+                }
+            }
+            ModelArch::Mlp { dim, hidden } => {
+                let w1_scale = 1.0 / (dim as f64).sqrt();
+                for w in &mut params[..hidden * dim] {
+                    *w = (rng.normal() * w1_scale) as f32;
+                }
+                let o_w2 = hidden * dim + hidden;
+                let w2_scale = 1.0 / (hidden as f64).sqrt();
+                for w in &mut params[o_w2..o_w2 + hidden] {
+                    *w = (rng.normal() * w2_scale) as f32;
+                }
+            }
+        }
+        params
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0_f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Minimum rows per spawned thread: below this, per-step thread-spawn
+/// cost rivals the compute, and sweep workers would oversubscribe the
+/// machine (each worker parallelizes its own batches).
+const MIN_ROWS_PER_THREAD: usize = 256;
+
+fn effective_threads(requested: usize, rows: usize) -> usize {
+    let by_work = rows / MIN_ROWS_PER_THREAD;
+    if by_work <= 1 {
+        return 1; // small batches: stay serial
+    }
+    let hw = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    hw.clamp(1, by_work)
+}
+
+/// Run `f(first_row, scores_chunk, hidden_chunk)` over row chunks on up
+/// to `threads` scoped threads.  `hidden` must hold `rows * h` scalars
+/// (`h == 0` for models without a hidden layer).
+fn run_chunked<F>(
+    rows: usize,
+    threads: usize,
+    h: usize,
+    scores: &mut [f32],
+    hidden: &mut [f32],
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+{
+    debug_assert_eq!(scores.len(), rows);
+    debug_assert_eq!(hidden.len(), rows * h);
+    let t = effective_threads(threads, rows);
+    if t <= 1 {
+        f(0, scores, hidden);
+        return;
+    }
+    let chunk = rows.div_ceil(t);
+    std::thread::scope(|scope| {
+        let mut score_rest = scores;
+        let mut hidden_rest = hidden;
+        let mut first_row = 0;
+        let f = &f;
+        while !score_rest.is_empty() {
+            let take = chunk.min(score_rest.len());
+            let (score_head, score_tail) = score_rest.split_at_mut(take);
+            let (hidden_head, hidden_tail) = hidden_rest.split_at_mut(take * h);
+            score_rest = score_tail;
+            hidden_rest = hidden_tail;
+            let start = first_row;
+            first_row += take;
+            scope.spawn(move || f(start, score_head, hidden_head));
+        }
+    });
+}
+
+/// Forward pass: scores (and the tanh hidden cache for the MLP).
+fn forward_into(
+    arch: ModelArch,
+    params: &[f32],
+    x: &[f32],
+    rows: usize,
+    threads: usize,
+    scores: &mut [f32],
+    hidden: &mut [f32],
+) {
+    match arch {
+        ModelArch::Linear { dim } => {
+            let w = &params[..dim];
+            let b = params[dim];
+            run_chunked(rows, threads, 0, scores, hidden, move |r0, out, _hid| {
+                for (i, s) in out.iter_mut().enumerate() {
+                    let row = &x[(r0 + i) * dim..(r0 + i + 1) * dim];
+                    *s = b + dot(w, row);
+                }
+            });
+        }
+        ModelArch::Mlp { dim, hidden: h } => {
+            let o_b1 = h * dim;
+            let o_w2 = o_b1 + h;
+            let o_b2 = o_w2 + h;
+            let w1 = &params[..o_b1];
+            let b1 = &params[o_b1..o_w2];
+            let w2 = &params[o_w2..o_b2];
+            let b2 = params[o_b2];
+            run_chunked(rows, threads, h, scores, hidden, move |r0, out, hid| {
+                for i in 0..out.len() {
+                    let row = &x[(r0 + i) * dim..(r0 + i + 1) * dim];
+                    let hrow = &mut hid[i * h..(i + 1) * h];
+                    for (j, hj) in hrow.iter_mut().enumerate() {
+                        *hj = (b1[j] + dot(&w1[j * dim..(j + 1) * dim], row)).tanh();
+                    }
+                    out[i] = b2 + dot(w2, hrow);
+                }
+            });
+        }
+    }
+}
+
+/// Accumulate `dL/dparams` for a row range into `grad`.
+fn accumulate_grad(
+    arch: ModelArch,
+    params: &[f32],
+    x: &[f32],
+    rows: Range<usize>,
+    dscores: &[f32],
+    hidden: &[f32],
+    grad: &mut [f32],
+) {
+    match arch {
+        ModelArch::Linear { dim } => {
+            let (gw, gb) = grad.split_at_mut(dim);
+            for r in rows {
+                let ds = dscores[r];
+                if ds == 0.0 {
+                    continue;
+                }
+                let row = &x[r * dim..(r + 1) * dim];
+                for (g, &v) in gw.iter_mut().zip(row) {
+                    *g += ds * v;
+                }
+                gb[0] += ds;
+            }
+        }
+        ModelArch::Mlp { dim, hidden: h } => {
+            let o_b1 = h * dim;
+            let o_w2 = o_b1 + h;
+            let o_b2 = o_w2 + h;
+            let w2 = &params[o_w2..o_b2];
+            for r in rows {
+                let ds = dscores[r];
+                if ds == 0.0 {
+                    continue;
+                }
+                let row = &x[r * dim..(r + 1) * dim];
+                let hrow = &hidden[r * h..(r + 1) * h];
+                grad[o_b2] += ds;
+                for j in 0..h {
+                    let hj = hrow[j];
+                    grad[o_w2 + j] += ds * hj;
+                    let dz = ds * w2[j] * (1.0 - hj * hj);
+                    if dz != 0.0 {
+                        grad[o_b1 + j] += dz;
+                        for (g, &v) in grad[j * dim..(j + 1) * dim].iter_mut().zip(row) {
+                            *g += dz * v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Parallel gradient: thread-local partials merged in thread order, so
+/// the result is deterministic at a fixed thread count.  `partials` is
+/// caller-owned scratch, reused across steps (no per-step allocation
+/// after warm-up).
+#[allow(clippy::too_many_arguments)]
+fn backward_into(
+    arch: ModelArch,
+    params: &[f32],
+    x: &[f32],
+    rows: usize,
+    threads: usize,
+    dscores: &[f32],
+    hidden: &[f32],
+    partials: &mut Vec<Vec<f32>>,
+    grad: &mut [f32],
+) {
+    let t = effective_threads(threads, rows);
+    if t <= 1 {
+        accumulate_grad(arch, params, x, 0..rows, dscores, hidden, grad);
+        return;
+    }
+    let chunk = rows.div_ceil(t);
+    let n = grad.len();
+    if partials.len() < t {
+        partials.resize_with(t, Vec::new);
+    }
+    for part in partials[..t].iter_mut() {
+        part.clear();
+        part.resize(n, 0.0);
+    }
+    std::thread::scope(|scope| {
+        for (ti, part) in partials[..t].iter_mut().enumerate() {
+            let r0 = ti * chunk;
+            let r1 = ((ti + 1) * chunk).min(rows);
+            if r0 >= r1 {
+                break;
+            }
+            scope.spawn(move || {
+                accumulate_grad(arch, params, x, r0..r1, dscores, hidden, part);
+            });
+        }
+    });
+    for part in partials[..t].iter() {
+        for (g, &p) in grad.iter_mut().zip(part) {
+            *g += p;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Losses
+// ---------------------------------------------------------------------------
+
+/// Training losses the native backend implements.
+#[derive(Debug, Clone, Copy)]
+enum LossKind {
+    Hinge(SquaredHinge),
+    Square(Square),
+    Logistic,
+}
+
+impl LossKind {
+    fn parse(name: &str, margin: f32) -> crate::Result<Self> {
+        match name {
+            "hinge" => Ok(LossKind::Hinge(SquaredHinge::new(margin))),
+            "square" => Ok(LossKind::Square(Square::new(margin))),
+            "logistic" => Ok(LossKind::Logistic),
+            other => anyhow::bail!(
+                "native backend does not implement loss {other:?} \
+                 (available: hinge, square, logistic; aucm needs the pjrt backend)"
+            ),
+        }
+    }
+
+    /// Normalizer: pair count for pairwise losses, example count for
+    /// pointwise ones — floored at 1, matching the L2 loss wrappers.
+    fn norm(&self, is_pos: &[f32]) -> f64 {
+        match self {
+            LossKind::Logistic => (is_pos.len() as f64).max(1.0),
+            _ => {
+                let n_pos = is_pos.iter().filter(|&&p| p != 0.0).count() as f64;
+                let n_neg = is_pos.len() as f64 - n_pos;
+                (n_pos * n_neg).max(1.0)
+            }
+        }
+    }
+
+    /// Unnormalized loss, gradient written into `grad`.
+    fn loss_and_grad_into(
+        &self,
+        scores: &[f32],
+        is_pos: &[f32],
+        grad: &mut Vec<f32>,
+        scratch: &mut HingeScratch,
+    ) -> f64 {
+        match self {
+            LossKind::Hinge(h) => h.loss_and_grad_with(scores, is_pos, grad, scratch),
+            LossKind::Square(s) => {
+                let (loss, g) = s.loss_and_grad(scores, is_pos);
+                grad.clear();
+                grad.extend_from_slice(&g);
+                loss
+            }
+            LossKind::Logistic => {
+                let (loss, g) = logistic::Logistic.loss_and_grad(scores, is_pos);
+                grad.clear();
+                grad.extend_from_slice(&g);
+                loss
+            }
+        }
+    }
+
+    /// Normalized loss value only (the §5 monitoring entry point).
+    fn normalized_loss(&self, scores: &[f32], is_pos: &[f32]) -> f64 {
+        let norm = self.norm(is_pos);
+        let raw = match self {
+            LossKind::Hinge(h) => h.loss_only(scores, is_pos),
+            LossKind::Square(s) => s.loss_and_grad(scores, is_pos).0,
+            LossKind::Logistic => logistic::Logistic.loss_and_grad(scores, is_pos).0,
+        };
+        raw / norm
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------------
+
+/// Native [`ModelExecutor`]: flat parameter + momentum vectors, reusable
+/// scratch buffers.  With the default hinge loss the train step is
+/// allocation-free after warm-up (see EXPERIMENTS.md §Perf); square and
+/// logistic allocate one gradient vector per step inside
+/// [`PairwiseLoss::loss_and_grad`].
+struct NativeExecutor {
+    arch: ModelArch,
+    loss: LossKind,
+    batch: usize,
+    threads: usize,
+    initialized: bool,
+    params: Vec<f32>,
+    momentum: Vec<f32>,
+    // scratch
+    scores: Vec<f32>,
+    hidden: Vec<f32>,
+    dscores: Vec<f32>,
+    grad: Vec<f32>,
+    compact_scores: Vec<f32>,
+    compact_pos: Vec<f32>,
+    compact_idx: Vec<u32>,
+    compact_grad: Vec<f32>,
+    partials: Vec<Vec<f32>>,
+    hinge_scratch: HingeScratch,
+}
+
+impl NativeExecutor {
+    fn new(arch: ModelArch, loss: LossKind, batch: usize, threads: usize) -> Self {
+        let n = arch.n_params();
+        Self {
+            arch,
+            loss,
+            batch,
+            threads,
+            initialized: false,
+            params: vec![0.0; n],
+            momentum: vec![0.0; n],
+            scores: Vec::new(),
+            hidden: Vec::new(),
+            dscores: Vec::new(),
+            grad: Vec::new(),
+            compact_scores: Vec::new(),
+            compact_pos: Vec::new(),
+            compact_idx: Vec::new(),
+            compact_grad: Vec::new(),
+            partials: Vec::new(),
+            hinge_scratch: HingeScratch::default(),
+        }
+    }
+
+    fn forward_rows(&mut self, x: &[f32], rows: usize) {
+        self.scores.clear();
+        self.scores.resize(rows, 0.0);
+        self.hidden.clear();
+        self.hidden.resize(rows * self.arch.hidden_units(), 0.0);
+        forward_into(
+            self.arch,
+            &self.params,
+            x,
+            rows,
+            self.threads,
+            &mut self.scores,
+            &mut self.hidden,
+        );
+    }
+}
+
+impl ModelExecutor for NativeExecutor {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn row_len(&self) -> usize {
+        self.arch.dim()
+    }
+
+    fn n_state(&self) -> usize {
+        2 * self.arch.param_shapes().len()
+    }
+
+    fn init(&mut self, seed: u32) -> crate::Result<()> {
+        self.params = self.arch.init_params(seed);
+        self.momentum = vec![0.0; self.params.len()];
+        self.initialized = true;
+        Ok(())
+    }
+
+    fn train_step(
+        &mut self,
+        x: &[f32],
+        is_pos: &[f32],
+        is_neg: &[f32],
+        lr: f32,
+    ) -> crate::Result<f64> {
+        let b = self.batch;
+        let d = self.arch.dim();
+        anyhow::ensure!(self.initialized, "executor not initialized; call init()");
+        anyhow::ensure!(x.len() == b * d, "x buffer size {} != {}", x.len(), b * d);
+        anyhow::ensure!(is_pos.len() == b && is_neg.len() == b, "mask buffer size");
+
+        self.forward_rows(x, b);
+
+        // Compact out padding rows (both masks zero): the native losses
+        // would otherwise count padding as negatives.
+        self.compact_scores.clear();
+        self.compact_pos.clear();
+        self.compact_idx.clear();
+        for i in 0..b {
+            if is_pos[i] != 0.0 || is_neg[i] != 0.0 {
+                self.compact_scores.push(self.scores[i]);
+                self.compact_pos.push(is_pos[i]);
+                self.compact_idx.push(i as u32);
+            }
+        }
+        let norm = self.loss.norm(&self.compact_pos);
+        let raw = self.loss.loss_and_grad_into(
+            &self.compact_scores,
+            &self.compact_pos,
+            &mut self.compact_grad,
+            &mut self.hinge_scratch,
+        );
+
+        // Scatter normalized score gradients back to batch positions.
+        self.dscores.clear();
+        self.dscores.resize(b, 0.0);
+        let inv = 1.0 / norm;
+        for (slot, &i) in self.compact_idx.iter().enumerate() {
+            self.dscores[i as usize] = (self.compact_grad[slot] as f64 * inv) as f32;
+        }
+
+        self.grad.clear();
+        self.grad.resize(self.params.len(), 0.0);
+        backward_into(
+            self.arch,
+            &self.params,
+            x,
+            b,
+            self.threads,
+            &self.dscores,
+            &self.hidden,
+            &mut self.partials,
+            &mut self.grad,
+        );
+
+        // Heavy-ball update.
+        for ((v, p), &g) in self
+            .momentum
+            .iter_mut()
+            .zip(self.params.iter_mut())
+            .zip(&self.grad)
+        {
+            *v = MOMENTUM * *v + g;
+            *p -= lr * *v;
+        }
+        Ok(raw / norm)
+    }
+
+    fn predict(&mut self, x: &[f32], rows: usize) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(self.initialized, "executor not initialized; call init()");
+        anyhow::ensure!(
+            x.len() == rows * self.arch.dim(),
+            "x buffer size {} != {}",
+            x.len(),
+            rows * self.arch.dim()
+        );
+        self.forward_rows(x, rows);
+        Ok(self.scores.clone())
+    }
+
+    fn state_to_host(&self) -> crate::Result<Vec<HostTensor>> {
+        anyhow::ensure!(self.initialized, "executor not initialized; call init()");
+        let shapes = self.arch.param_shapes();
+        let mut out = tensors_from_flat(&shapes, &self.params)?;
+        out.extend(tensors_from_flat(&shapes, &self.momentum)?);
+        Ok(out)
+    }
+
+    fn load_state(&mut self, tensors: &[HostTensor]) -> crate::Result<()> {
+        let shapes = self.arch.param_shapes();
+        anyhow::ensure!(
+            tensors.len() == 2 * shapes.len(),
+            "state arity {} (want {})",
+            tensors.len(),
+            2 * shapes.len()
+        );
+        let params = flat_from_tensors(&shapes, &tensors[..shapes.len()])?;
+        let momentum = flat_from_tensors(&shapes, &tensors[shapes.len()..])?;
+        self.params = params;
+        self.momentum = momentum;
+        self.initialized = true;
+        Ok(())
+    }
+}
+
+fn tensors_from_flat(shapes: &[Vec<i64>], flat: &[f32]) -> crate::Result<Vec<HostTensor>> {
+    let mut out = Vec::with_capacity(shapes.len());
+    let mut off = 0;
+    for shape in shapes {
+        let len = shape.iter().product::<i64>() as usize;
+        anyhow::ensure!(off + len <= flat.len(), "flat vector too short");
+        out.push(HostTensor::new(shape.clone(), flat[off..off + len].to_vec()));
+        off += len;
+    }
+    anyhow::ensure!(off == flat.len(), "flat vector too long");
+    Ok(out)
+}
+
+fn flat_from_tensors(shapes: &[Vec<i64>], tensors: &[HostTensor]) -> crate::Result<Vec<f32>> {
+    let total: usize = shapes.iter().map(|s| s.iter().product::<i64>() as usize).sum();
+    let mut flat = Vec::with_capacity(total);
+    for (shape, t) in shapes.iter().zip(tensors) {
+        anyhow::ensure!(
+            &t.shape == shape,
+            "state tensor shape {:?} (want {:?})",
+            t.shape,
+            shape
+        );
+        flat.extend_from_slice(&t.data);
+    }
+    Ok(flat)
+}
+
+// ---------------------------------------------------------------------------
+// Full-batch objective (L-BFGS oracle)
+// ---------------------------------------------------------------------------
+
+/// Native full-batch (loss, gradient) oracle over flat parameters —
+/// the [`crate::train::lbfgs::Objective`] the deterministic optimizers
+/// consume.  Built via [`NativeBackend::objective`].
+pub struct NativeObjective {
+    arch: ModelArch,
+    loss: LossKind,
+    threads: usize,
+    x: Vec<f32>,
+    is_pos: Vec<f32>,
+    rows: usize,
+    scores: Vec<f32>,
+    hidden: Vec<f32>,
+    dscores: Vec<f32>,
+    grad_scores: Vec<f32>,
+    partials: Vec<Vec<f32>>,
+    hinge_scratch: HingeScratch,
+    /// Number of oracle evaluations performed (diagnostics).
+    pub evals: usize,
+}
+
+impl NativeObjective {
+    /// Seeded initial parameters for this objective's architecture.
+    pub fn init_params(&self, seed: u32) -> Vec<f32> {
+        self.arch.init_params(seed)
+    }
+
+    /// Forward pass over the bound batch into the scratch buffers.
+    fn forward(&mut self, theta: &[f32]) -> crate::Result<()> {
+        anyhow::ensure!(theta.len() == self.arch.n_params(), "theta dim");
+        self.scores.clear();
+        self.scores.resize(self.rows, 0.0);
+        self.hidden.clear();
+        self.hidden.resize(self.rows * self.arch.hidden_units(), 0.0);
+        forward_into(
+            self.arch,
+            theta,
+            &self.x,
+            self.rows,
+            self.threads,
+            &mut self.scores,
+            &mut self.hidden,
+        );
+        Ok(())
+    }
+
+    /// Scores of the bound batch at parameters `theta`.
+    pub fn scores(&mut self, theta: &[f32]) -> crate::Result<Vec<f32>> {
+        self.forward(theta)?;
+        Ok(self.scores.clone())
+    }
+}
+
+impl crate::train::lbfgs::Objective for NativeObjective {
+    fn dim(&self) -> usize {
+        self.arch.n_params()
+    }
+
+    fn eval(&mut self, theta: &[f32]) -> crate::Result<(f64, Vec<f32>)> {
+        self.forward(theta)?;
+        self.evals += 1;
+        let norm = self.loss.norm(&self.is_pos);
+        let raw = self.loss.loss_and_grad_into(
+            &self.scores,
+            &self.is_pos,
+            &mut self.grad_scores,
+            &mut self.hinge_scratch,
+        );
+        let inv = 1.0 / norm;
+        self.dscores.clear();
+        self.dscores
+            .extend(self.grad_scores.iter().map(|&g| (g as f64 * inv) as f32));
+        let mut grad = vec![0.0_f32; self.arch.n_params()];
+        backward_into(
+            self.arch,
+            theta,
+            &self.x,
+            self.rows,
+            self.threads,
+            &self.dscores,
+            &self.hidden,
+            &mut self.partials,
+            &mut grad,
+        );
+        Ok((raw / norm, grad))
+    }
+
+    fn evals(&self) -> usize {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(dim: usize, hidden: usize, threads: usize) -> NativeSpec {
+        NativeSpec {
+            input_dim: dim,
+            hidden,
+            margin: 1.0,
+            threads,
+        }
+    }
+
+    fn toy_batch(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let p: Vec<f32> = (0..n)
+            .map(|_| if rng.uniform() < 0.4 { 1.0 } else { 0.0 })
+            .collect();
+        let q: Vec<f32> = p.iter().map(|&v| 1.0 - v).collect();
+        (x, p, q)
+    }
+
+    #[test]
+    fn linear_forward_matches_manual() {
+        let backend = NativeBackend::new(spec(3, 0, 1));
+        let mut exec = backend.open("linear", "hinge", 2).unwrap();
+        exec.init(0).unwrap();
+        let state = exec.state_to_host().unwrap();
+        let w = &state[0].data;
+        let b = state[1].data[0];
+        let x = vec![1.0, 2.0, 3.0, -1.0, 0.5, 0.0];
+        let scores = exec.predict(&x, 2).unwrap();
+        let want0 = b + w[0] + 2.0 * w[1] + 3.0 * w[2];
+        let want1 = b - w[0] + 0.5 * w[1];
+        assert!((scores[0] - want0).abs() < 1e-6);
+        assert!((scores[1] - want1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mlp_forward_matches_manual() {
+        let backend = NativeBackend::new(spec(4, 3, 1));
+        let mut exec = backend.open("mlp", "hinge", 1).unwrap();
+        exec.init(7).unwrap();
+        let state = exec.state_to_host().unwrap();
+        let (w1, b1, w2, b2) = (&state[0].data, &state[1].data, &state[2].data, state[3].data[0]);
+        let x = vec![0.3_f32, -0.2, 0.9, 0.1];
+        let scores = exec.predict(&x, 1).unwrap();
+        let mut want = b2;
+        for j in 0..3 {
+            let z: f32 = b1[j] + (0..4).map(|k| w1[j * 4 + k] * x[k]).sum::<f32>();
+            want += w2[j] * z.tanh();
+        }
+        assert!((scores[0] - want).abs() < 1e-5, "{} vs {want}", scores[0]);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let backend = NativeBackend::new(spec(8, 4, 1));
+        let mut a = backend.open("mlp", "hinge", 2).unwrap();
+        let mut b = backend.open("mlp", "hinge", 2).unwrap();
+        a.init(3).unwrap();
+        b.init(3).unwrap();
+        assert_eq!(a.state_to_host().unwrap(), b.state_to_host().unwrap());
+        b.init(4).unwrap();
+        assert_ne!(a.state_to_host().unwrap(), b.state_to_host().unwrap());
+    }
+
+    #[test]
+    fn padding_rows_are_ignored() {
+        let backend = NativeBackend::new(spec(4, 0, 1));
+        let mut full = backend.open("linear", "hinge", 4).unwrap();
+        let mut padded = backend.open("linear", "hinge", 6).unwrap();
+        full.init(1).unwrap();
+        padded.init(1).unwrap();
+        let (x, p, q) = toy_batch(4, 4, 9);
+        let mut xp = x.clone();
+        xp.extend([0.0; 8]);
+        let mut pp = p.clone();
+        pp.extend([0.0; 2]);
+        let mut qp = q.clone();
+        qp.extend([0.0; 2]);
+        let l_full = full.train_step(&x, &p, &q, 0.1).unwrap();
+        let l_padded = padded.train_step(&xp, &pp, &qp, 0.1).unwrap();
+        assert!((l_full - l_padded).abs() < 1e-12);
+        assert_eq!(
+            full.state_to_host().unwrap(),
+            padded.state_to_host().unwrap()
+        );
+    }
+
+    #[test]
+    fn thread_counts_agree() {
+        // n must exceed 2 * MIN_ROWS_PER_THREAD so the parallel path runs.
+        let n = 600;
+        let (x, p, q) = toy_batch(n, 16, 5);
+        let serial = NativeBackend::new(spec(16, 8, 1));
+        let parallel = NativeBackend::new(spec(16, 8, 4));
+        let mut a = serial.open("mlp", "hinge", n).unwrap();
+        let mut c = parallel.open("mlp", "hinge", n).unwrap();
+        a.init(2).unwrap();
+        c.init(2).unwrap();
+        let la = a.train_step(&x, &p, &q, 0.05).unwrap();
+        let lc = c.train_step(&x, &p, &q, 0.05).unwrap();
+        // forward is row-independent: identical loss
+        assert_eq!(la, lc);
+        // gradients differ only by fp reduction order
+        let sa = a.state_to_host().unwrap();
+        let sc = c.state_to_host().unwrap();
+        for (ta, tc) in sa.iter().zip(&sc) {
+            for (va, vc) in ta.data.iter().zip(&tc.data) {
+                assert!((va - vc).abs() <= 1e-4 * va.abs().max(1.0), "{va} vs {vc}");
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_restores_predictions() {
+        let backend = NativeBackend::new(spec(8, 4, 1));
+        let mut exec = backend.open("mlp", "hinge", 16).unwrap();
+        exec.init(11).unwrap();
+        let (x, p, q) = toy_batch(16, 8, 13);
+        exec.train_step(&x, &p, &q, 0.1).unwrap();
+        let snapshot = exec.state_to_host().unwrap();
+        let before = exec.predict(&x, 16).unwrap();
+        exec.train_step(&x, &p, &q, 0.1).unwrap();
+        exec.load_state(&snapshot).unwrap();
+        assert_eq!(exec.predict(&x, 16).unwrap(), before);
+    }
+
+    #[test]
+    fn unknown_loss_rejected() {
+        let backend = NativeBackend::new(spec(4, 0, 1));
+        assert!(backend.open("linear", "aucm", 4).is_err());
+        assert!(backend.open("linear", "hinge", 4).is_ok());
+    }
+
+    #[test]
+    fn eval_loss_matches_monitor_convention() {
+        // 1 pos, 1 neg, equal scores, m = 1: one pair of loss 1.
+        let backend = NativeBackend::new(NativeSpec::default());
+        let loss = backend.eval_loss("hinge", &[0.0, 0.0], &[1.0, 0.0]).unwrap();
+        assert!((loss - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn training_reduces_loss_on_separable_data() {
+        // Linear + squared hinge is convex in the weights, so a small
+        // step size must descend monotonically-ish on separable data.
+        let dim = 8;
+        let n = 128;
+        let mut rng = Rng::new(21);
+        let mut x = Vec::with_capacity(n * dim);
+        let mut p = Vec::with_capacity(n);
+        for _ in 0..n {
+            let pos = rng.uniform() < 0.5;
+            p.push(if pos { 1.0 } else { 0.0 });
+            for d in 0..dim {
+                let shift = if pos && d < 4 { 2.0 } else { 0.0 };
+                x.push(rng.normal() as f32 + shift);
+            }
+        }
+        let q: Vec<f32> = p.iter().map(|&v| 1.0 - v).collect();
+        let backend = NativeBackend::new(spec(dim, 0, 1));
+        let mut exec = backend.open("linear", "hinge", n).unwrap();
+        exec.init(0).unwrap();
+        let first = exec.train_step(&x, &p, &q, 0.05).unwrap();
+        let mut last = first;
+        for _ in 0..100 {
+            last = exec.train_step(&x, &p, &q, 0.05).unwrap();
+        }
+        assert!(
+            last < 0.5 * first,
+            "loss did not decrease: {first} -> {last}"
+        );
+    }
+}

@@ -1,0 +1,515 @@
+//! The PJRT backend (feature `pjrt`): compile-once, execute-many
+//! artifact host, wrapped behind the [`Backend`] trait.
+//!
+//! One [`Runtime`] owns a `PjRtClient` (CPU) and a lazy cache of compiled
+//! executables keyed by artifact name.  `PjRtClient` is `Rc`-based, so a
+//! `Runtime` is intentionally `!Send` — the sweep scheduler ships a
+//! [`super::BackendSpec`] to each worker and connects one backend per
+//! thread.
+//!
+//! ## Output handling
+//!
+//! All artifacts are lowered with `return_tuple=True`, so the HLO root is
+//! a tuple.  Depending on the PJRT plugin version the execute API either
+//! unpacks the root tuple into one buffer per leaf, or returns a single
+//! tuple buffer.  [`Runtime::execute`] normalizes both cases to a flat
+//! `Vec<Literal>` (checked against the manifest's `n_outputs`), and
+//! [`Runtime::execute_buffers`] does the same at the buffer level for the
+//! device-resident hot path.  HLO **text** is the interchange format —
+//! see DESIGN.md §4 for why serialized protos are rejected here.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::{Artifact, ArtifactKind, Manifest};
+use super::backend::{Backend, ModelExecutor};
+use super::tensor::HostTensor;
+
+/// Convert a host tensor to an XLA literal (rank 0 → true scalar).
+pub fn tensor_to_literal(t: &HostTensor) -> crate::Result<Literal> {
+    if t.shape.is_empty() {
+        return Ok(Literal::scalar(t.data[0]));
+    }
+    let lit = Literal::vec1(&t.data);
+    Ok(lit.reshape(&t.shape)?)
+}
+
+/// Read a literal back into a host tensor (f32 only).
+pub fn tensor_from_literal(lit: &Literal) -> crate::Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    let data = lit.to_vec::<f32>()?;
+    Ok(HostTensor::new(dims, data))
+}
+
+/// A PJRT CPU client plus a compiled-executable cache over a manifest.
+pub struct Runtime {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Get (compiling and caching on first use) an executable by name.
+    pub fn executable(&self, name: &str) -> crate::Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let artifact = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&artifact.path)?;
+        let computation = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&computation)?);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (for tests/diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute by name with literal inputs; returns flat output literals.
+    /// Accepts owned or borrowed literals (the C++ side synchronously
+    /// awaits the input transfers, so borrowed inputs are safe here).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        name: &str,
+        args: &[L],
+    ) -> crate::Result<Vec<Literal>> {
+        let n_outputs = self.manifest.get(name)?.n_outputs;
+        let exe = self.executable(name)?;
+        let mut results = exe.execute(args)?;
+        Self::normalize_outputs(&mut results, n_outputs)
+    }
+
+    /// Execute with device-resident buffers; returns flat output buffers
+    /// when the plugin unpacks the root tuple, otherwise falls back to a
+    /// literal round-trip (correct either way, slower on old plugins).
+    /// Accepts borrowed buffers so callers can chain state without copies.
+    pub fn execute_buffers<L: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        name: &str,
+        args: &[L],
+    ) -> crate::Result<Vec<PjRtBuffer>> {
+        let n_outputs = self.manifest.get(name)?.n_outputs;
+        let exe = self.executable(name)?;
+        let results = exe.execute_b(args)?;
+        let first: Vec<PjRtBuffer> = results
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("no results from {name}"))?;
+        // The CPU plugin untuples multi-leaf root tuples into one buffer
+        // per leaf, but a single-leaf root arrives as one *tuple* buffer
+        // (observed empirically).  Only trust an arity match when the
+        // buffer is not itself a tuple.
+        if first.len() == n_outputs {
+            let tupled = n_outputs == 1
+                && matches!(first[0].on_device_shape(), Ok(xla::Shape::Tuple(_)));
+            if !tupled {
+                return Ok(first);
+            }
+        }
+        // Root tuple not unpacked: round-trip through literals and rebuffer.
+        anyhow::ensure!(
+            first.len() == 1,
+            "{name}: unexpected output arity {} (want {n_outputs})",
+            first.len()
+        );
+        let mut tuple = first[0].to_literal_sync()?;
+        let leaves = tuple.decompose_tuple()?;
+        anyhow::ensure!(
+            leaves.len() == n_outputs,
+            "{name}: tuple arity {} (want {n_outputs})",
+            leaves.len()
+        );
+        leaves
+            .iter()
+            .map(|lit| {
+                let buffer = self.client.buffer_from_host_literal(None, lit)?;
+                // Force the async host→device copy before `leaves` drops.
+                let _ = buffer.to_literal_sync()?;
+                Ok(buffer)
+            })
+            .collect()
+    }
+
+    /// Upload a literal to the device.
+    ///
+    /// SAFETY CONTRACT: `buffer_from_host_literal` enqueues the host→device
+    /// copy on a worker thread; the caller must keep `lit` alive until the
+    /// copy is forced (by executing with the buffer and synchronizing on an
+    /// output, or via [`Runtime::to_device_sync`]).  Dropping the literal
+    /// early is a use-after-free inside the PJRT plugin.
+    pub fn to_device(&self, lit: &Literal) -> crate::Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Upload and block until the device copy completed, so the source
+    /// literal may be dropped immediately afterwards.  (The only
+    /// readiness-forcing operation this PJRT API exposes is a read-back,
+    /// so this costs one extra device→host copy — use on cold paths.)
+    pub fn to_device_sync(&self, lit: &Literal) -> crate::Result<PjRtBuffer> {
+        let buffer = self.client.buffer_from_host_literal(None, lit)?;
+        let _ = buffer.to_literal_sync()?;
+        Ok(buffer)
+    }
+
+    fn normalize_outputs(
+        results: &mut Vec<Vec<PjRtBuffer>>,
+        n_outputs: usize,
+    ) -> crate::Result<Vec<Literal>> {
+        let first = results
+            .drain(..)
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty execution result"))?;
+        if first.len() == n_outputs && n_outputs != 1 {
+            return first.iter().map(|b| Ok(b.to_literal_sync()?)).collect();
+        }
+        anyhow::ensure!(first.len() == 1, "unexpected output arity {}", first.len());
+        let mut lit = first[0].to_literal_sync()?;
+        // return_tuple=True means even single outputs arrive as a 1-tuple,
+        // unless the plugin already unpacked it.
+        match lit.decompose_tuple() {
+            Ok(leaves) => {
+                anyhow::ensure!(
+                    leaves.len() == n_outputs,
+                    "tuple arity {} (want {n_outputs})",
+                    leaves.len()
+                );
+                Ok(leaves)
+            }
+            Err(_) if n_outputs == 1 => Ok(vec![lit]),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.manifest.artifacts.len())
+            .field("compiled", &self.compiled_count())
+            .finish()
+    }
+}
+
+/// Full-set loss via the `loss_eval_<loss>_n<N>` artifact.  Scores are
+/// padded (mask zero) up to the artifact's static size N; inputs longer
+/// than N are an error.  The returned value is normalized per pair (the
+/// L2 training losses normalize internally).
+pub fn loss_eval(
+    runtime: &Runtime,
+    loss: &str,
+    scores: &[f32],
+    is_pos: &[f32],
+) -> crate::Result<f64> {
+    let art = runtime
+        .manifest()
+        .artifacts
+        .iter()
+        .find(|a| a.kind == ArtifactKind::LossEval && a.loss == loss)
+        .ok_or_else(|| anyhow::anyhow!("no loss_eval artifact for {loss}"))?;
+    let n = art.batch;
+    anyhow::ensure!(
+        scores.len() <= n,
+        "loss_eval artifact holds {n} elements, got {}",
+        scores.len()
+    );
+    let name = Manifest::loss_eval_name(loss, n);
+    let mut s = scores.to_vec();
+    s.resize(n, 0.0);
+    let mut p = is_pos.to_vec();
+    p.resize(n, 0.0);
+    let q: Vec<f32> = scores
+        .iter()
+        .zip(is_pos)
+        .map(|(_, &pi)| if pi != 0.0 { 0.0 } else { 1.0 })
+        .chain(std::iter::repeat(0.0))
+        .take(n)
+        .collect();
+    let outs = runtime.execute(
+        &name,
+        &[Literal::vec1(&s), Literal::vec1(&p), Literal::vec1(&q)],
+    )?;
+    Ok(outs[0].to_vec::<f32>()?[0] as f64)
+}
+
+/// The PJRT [`Backend`]: a [`Runtime`] behind the pluggable-backend API.
+pub struct PjrtBackend {
+    runtime: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        Ok(Self {
+            runtime: Runtime::new(artifacts_dir)?,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn open<'a>(
+        &'a self,
+        model: &str,
+        loss: &str,
+        batch: usize,
+    ) -> crate::Result<Box<dyn ModelExecutor + 'a>> {
+        Ok(Box::new(PjrtExecutor::new(&self.runtime, model, loss, batch)?))
+    }
+
+    fn eval_loss(&self, loss: &str, scores: &[f32], is_pos: &[f32]) -> crate::Result<f64> {
+        loss_eval(&self.runtime, loss, scores, is_pos)
+    }
+}
+
+/// PJRT [`ModelExecutor`]: binds the `init_*`, `train_*_bs<B>` and
+/// `predict_*_bs<P>` artifacts of one (model, loss, batch) and keeps the
+/// training state device-resident between steps (state buffers are
+/// passed by reference; no donation is configured, so they stay valid).
+pub struct PjrtExecutor<'rt> {
+    runtime: &'rt Runtime,
+    train_name: String,
+    init_name: String,
+    predict_art: Artifact,
+    batch: usize,
+    predict_batch: usize,
+    n_state: usize,
+    row_len: usize,
+    x_shape: Vec<i64>,
+    /// Device-resident training state (params + optimizer slots).
+    state: Option<Vec<PjRtBuffer>>,
+}
+
+impl<'rt> PjrtExecutor<'rt> {
+    /// Resolve artifacts for (model, loss, batch) and validate signatures.
+    pub fn new(
+        runtime: &'rt Runtime,
+        model: &str,
+        loss: &str,
+        batch: usize,
+    ) -> crate::Result<Self> {
+        let manifest = runtime.manifest();
+        let train_name = Manifest::train_name(model, loss, batch);
+        let train_art = manifest.get(&train_name)?.clone();
+        anyhow::ensure!(train_art.kind == ArtifactKind::Train, "{train_name} kind");
+        let predict_batch = manifest.predict_batch(model, loss)?;
+        let predict_name = Manifest::predict_name(model, loss, predict_batch);
+        let init_name = Manifest::init_name(model, loss);
+        manifest.get(&init_name)?;
+        let predict_art = manifest.get(&predict_name)?.clone();
+
+        let n_state = train_art.n_state;
+        // x is the tensor right after the state block; its trailing dims
+        // give the per-example row length.
+        let x_sig = &train_art.inputs[n_state];
+        anyhow::ensure!(x_sig.shape[0] == batch, "batch dim mismatch");
+        let row_len: usize = x_sig.shape[1..].iter().product();
+        let x_shape: Vec<i64> = x_sig.shape.iter().map(|&d| d as i64).collect();
+        Ok(Self {
+            runtime,
+            train_name,
+            init_name,
+            predict_art,
+            batch,
+            predict_batch,
+            n_state,
+            row_len,
+            x_shape,
+            state: None,
+        })
+    }
+
+    fn state_ref(&self) -> crate::Result<&Vec<PjRtBuffer>> {
+        self.state
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("executor not initialized; call init()"))
+    }
+}
+
+impl ModelExecutor for PjrtExecutor<'_> {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    fn n_state(&self) -> usize {
+        self.n_state
+    }
+
+    fn init(&mut self, seed: u32) -> crate::Result<()> {
+        let seed_lit = Literal::scalar(seed);
+        let outs = self.runtime.execute(&self.init_name, &[seed_lit])?;
+        anyhow::ensure!(outs.len() == self.n_state, "init arity");
+        // to_device_sync: the source literals are dropped at the end of
+        // this function, so the async host→device copies must be forced.
+        let buffers = outs
+            .iter()
+            .map(|lit| self.runtime.to_device_sync(lit))
+            .collect::<crate::Result<Vec<_>>>()?;
+        self.state = Some(buffers);
+        Ok(())
+    }
+
+    fn train_step(
+        &mut self,
+        x: &[f32],
+        is_pos: &[f32],
+        is_neg: &[f32],
+        lr: f32,
+    ) -> crate::Result<f64> {
+        anyhow::ensure!(
+            x.len() == self.batch * self.row_len,
+            "x buffer size {} != {}",
+            x.len(),
+            self.batch * self.row_len
+        );
+        // The input literals MUST outlive the loss read-back below: the
+        // host→device copies run asynchronously and are only guaranteed
+        // complete once an output of the execution has been synchronized.
+        let x_lit = Literal::vec1(x).reshape(&self.x_shape)?;
+        let pos_lit = Literal::vec1(is_pos);
+        let neg_lit = Literal::vec1(is_neg);
+        let lr_lit = Literal::scalar(lr);
+        let inputs = [
+            self.runtime.to_device(&x_lit)?,
+            self.runtime.to_device(&pos_lit)?,
+            self.runtime.to_device(&neg_lit)?,
+            self.runtime.to_device(&lr_lit)?,
+        ];
+        let mut outs = {
+            let state = self.state_ref()?;
+            let args: Vec<&PjRtBuffer> = state.iter().chain(inputs.iter()).collect();
+            self.runtime.execute_buffers(&self.train_name, &args)?
+        };
+        anyhow::ensure!(outs.len() == self.n_state + 2, "train arity");
+        let _scores = outs.pop().unwrap(); // per-batch scores unused here
+        let loss_buf = outs.pop().unwrap();
+        self.state = Some(outs);
+        // Synchronizes the whole step (and thus the input copies).
+        let loss = loss_buf.to_literal_sync()?.to_vec::<f32>()?[0] as f64;
+        Ok(loss)
+    }
+
+    /// Chunked + padded prediction through the predict artifact, which
+    /// consumes only the model-parameter slots of the training state
+    /// (`state_indices` in the manifest); optimizer slots stay put.
+    ///
+    /// Known trade-off of the slice-based executor contract: rows arrive
+    /// already gathered by the trainer and are copied once more into the
+    /// padded `x_buf` here.  Both copies are bounded by the trainer's
+    /// gather-chunk size; revisit only if per-epoch evaluation staging
+    /// shows up in profiles.
+    fn predict(&mut self, x: &[f32], rows: usize) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == rows * self.row_len,
+            "x buffer size {} != {}",
+            x.len(),
+            rows * self.row_len
+        );
+        let state = self.state_ref()?;
+        let selected: Vec<&PjRtBuffer> = self.predict_art.select_state(state);
+        let pb = self.predict_batch;
+        let row = self.row_len;
+        let mut x_shape = self.x_shape.clone();
+        x_shape[0] = pb as i64;
+        let mut scores = Vec::with_capacity(rows);
+        let mut x_buf = vec![0.0_f32; pb * row];
+        let mut done = 0;
+        while done < rows {
+            let take = pb.min(rows - done);
+            x_buf[..take * row].copy_from_slice(&x[done * row..(done + take) * row]);
+            x_buf[take * row..].fill(0.0);
+            let x_lit = Literal::vec1(&x_buf).reshape(&x_shape)?;
+            let x_dev = self.runtime.to_device(&x_lit)?;
+            let args: Vec<&PjRtBuffer> = selected
+                .iter()
+                .copied()
+                .chain(std::iter::once(&x_dev))
+                .collect();
+            let outs = self
+                .runtime
+                .execute_buffers(&self.predict_art.name, &args)?;
+            let out = tensor_from_literal(&outs[0].to_literal_sync()?)?;
+            scores.extend_from_slice(&out.data[..take]);
+            done += take;
+        }
+        Ok(scores)
+    }
+
+    fn state_to_host(&self) -> crate::Result<Vec<HostTensor>> {
+        self.state_ref()?
+            .iter()
+            .map(|b| tensor_from_literal(&b.to_literal_sync()?))
+            .collect()
+    }
+
+    fn load_state(&mut self, tensors: &[HostTensor]) -> crate::Result<()> {
+        anyhow::ensure!(tensors.len() == self.n_state, "state arity");
+        let buffers = tensors
+            .iter()
+            // sync upload: the literal is a temporary dropped per-iteration
+            .map(|t| self.runtime.to_device_sync(&tensor_to_literal(t)?))
+            .collect::<crate::Result<Vec<_>>>()?;
+        self.state = Some(buffers);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_tensor_roundtrip() {
+        let t = HostTensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = tensor_from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_tensor_roundtrip() {
+        let t = HostTensor::scalar(3.5);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = tensor_from_literal(&lit).unwrap();
+        assert_eq!(back.data, vec![3.5]);
+        assert!(back.shape.is_empty());
+    }
+}

@@ -1,13 +1,10 @@
-//! Host tensors and conversions to/from `xla::Literal`.
+//! Host tensors: the backend-neutral value type of the runtime layer.
 //!
-//! The runtime moves three kinds of values across the PJRT boundary:
-//! f32 arrays (batches, parameters, scores), f32 scalars (learning rate,
-//! loss) and one u32 scalar (the init seed).  [`HostTensor`] is the
-//! host-side owner; state tensors stay device-resident as `PjRtBuffer`s
-//! in the hot loop (see `train::trainer`) and only cross through here at
-//! init/checkpoint boundaries.
-
-use xla::Literal;
+//! [`HostTensor`] is what crosses every backend boundary: the native
+//! backend's state tensors live here directly, and the PJRT backend
+//! converts through it at init/checkpoint boundaries (the conversions to
+//! `xla::Literal` live in `runtime::pjrt`, behind the `pjrt` feature, so
+//! the default build carries no XLA types).
 
 /// A dense row-major f32 tensor on the host.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,28 +49,6 @@ impl HostTensor {
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
-
-    /// Convert to an XLA literal (rank 0 becomes a true scalar literal).
-    pub fn to_literal(&self) -> crate::Result<Literal> {
-        if self.shape.is_empty() {
-            return Ok(Literal::scalar(self.data[0]));
-        }
-        let lit = Literal::vec1(&self.data);
-        Ok(lit.reshape(&self.shape)?)
-    }
-
-    /// Read a literal back into a host tensor (f32 only).
-    pub fn from_literal(lit: &Literal) -> crate::Result<Self> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<i64> = shape.dims().to_vec();
-        let data = lit.to_vec::<f32>()?;
-        Ok(Self::new(dims, data))
-    }
-}
-
-/// Build the u32 seed literal for init artifacts.
-pub fn seed_literal(seed: u32) -> Literal {
-    Literal::scalar(seed)
 }
 
 #[cfg(test)]
@@ -81,27 +56,16 @@ mod tests {
     use super::*;
 
     #[test]
-    fn roundtrip_vector() {
-        let t = HostTensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
-        let lit = t.to_literal().unwrap();
-        let back = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(back, t);
-    }
-
-    #[test]
-    fn roundtrip_scalar() {
-        let t = HostTensor::scalar(3.5);
-        let lit = t.to_literal().unwrap();
-        let back = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(back.data, vec![3.5]);
-        assert!(back.shape.is_empty());
-    }
-
-    #[test]
     fn zeros_has_right_size() {
         let t = HostTensor::zeros(vec![4, 4, 3]);
         assert_eq!(t.len(), 48);
         assert!(t.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn constructors_shape_correctly() {
+        assert!(HostTensor::scalar(3.5).shape.is_empty());
+        assert_eq!(HostTensor::vec1(vec![1.0, 2.0]).shape, vec![2]);
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //!   stratified 80/20 subtrain/validation split, train with per-epoch
 //!   validation AUC, track the best-epoch state, and evaluate **test**
 //!   AUC at that state.
-//! * [`scheduler`] — executes the job list on worker threads, each with
-//!   its own PJRT runtime (`xla::PjRtClient` is not `Send`).
+//! * [`scheduler`] — executes the job list on worker threads; each
+//!   worker connects its own backend from a shared
+//!   [`crate::runtime::BackendSpec`] (the PJRT client is not `Send`).
 //! * [`select`] — max-validation-AUC selection per (dataset, imratio,
 //!   loss, seed), then the paper's aggregations: median selected
 //!   hyper-parameters (Table 2) and mean ± sd test AUC (Figure 3).

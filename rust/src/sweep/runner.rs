@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use crate::data::{Dataset, Rng, Split};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::train::{EpochRecord, History, Trainer};
 
 use super::grid::Job;
@@ -28,8 +28,8 @@ pub struct JobData {
     pub test: Arc<Dataset>,
 }
 
-/// Run one job to completion on the given runtime.
-pub fn run_job(runtime: &Runtime, job: &Job, data: &JobData) -> crate::Result<RunResult> {
+/// Run one job to completion on the given backend.
+pub fn run_job(backend: &dyn Backend, job: &Job, data: &JobData) -> crate::Result<RunResult> {
     let t0 = std::time::Instant::now();
     // Seed streams: independent per (job id), reproducible across runs.
     let mut rng = Rng::new(0x5EED ^ fnv(&job.id()));
@@ -37,7 +37,7 @@ pub fn run_job(runtime: &Runtime, job: &Job, data: &JobData) -> crate::Result<Ru
     let achieved_imratio = train.pos_fraction();
     let split = Split::stratified(&train.y, 0.2, &mut rng.fork(2));
 
-    let mut trainer = Trainer::new(runtime, &job.model, &job.loss, job.batch)?;
+    let mut trainer = Trainer::new(backend, &job.model, &job.loss, job.batch)?;
     trainer.init(job.seed)?;
 
     let mut history = History::new();

@@ -1,13 +1,15 @@
 //! Multi-threaded sweep execution.
 //!
-//! `xla::PjRtClient` is `Rc`-based (not `Send`), so parallelism is at the
-//! *job* level with one full [`Runtime`] per worker thread.  Jobs are
-//! pulled from a shared queue; results stream back over a channel so the
-//! caller can persist incrementally and print progress.
+//! Workers receive a [`BackendSpec`] (plain `Send + Sync` data) and
+//! connect their own backend instance: the PJRT client is `Rc`-based
+//! (not `Send`), so it cannot cross threads, and the native backend is
+//! cheap to instantiate.  Jobs are pulled from a shared queue; results
+//! stream back over a channel so the caller can persist incrementally
+//! and print progress.
 //!
 //! Memory note: the train pools are shared read-only via `Arc`; each
-//! worker's executable cache holds only the (model, loss, batch) variants
-//! its jobs actually touch.
+//! worker's executor/executable cache holds only the (model, loss,
+//! batch) variants its jobs actually touch.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -16,7 +18,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use super::grid::Job;
 use super::results::RunResult;
 use super::runner::{run_job, JobData};
-use crate::runtime::Runtime;
+use crate::runtime::BackendSpec;
 
 /// Progress callback: (finished, total, last result or error message).
 pub type ProgressFn = Box<dyn FnMut(usize, usize, &str) + Send>;
@@ -27,19 +29,19 @@ pub type OnResultFn = Box<dyn FnMut(&RunResult) + Send>;
 /// Execute `jobs` on `workers` threads.  `datasets` maps dataset name →
 /// shared data.  Failed jobs are reported (not retried) and skipped.
 pub fn run_sweep(
-    artifacts_dir: &std::path::Path,
+    backend: &BackendSpec,
     jobs: Vec<Job>,
     datasets: HashMap<String, JobData>,
     workers: usize,
     progress: Option<ProgressFn>,
 ) -> crate::Result<Vec<RunResult>> {
-    run_sweep_with(artifacts_dir, jobs, datasets, workers, progress, None)
+    run_sweep_with(backend, jobs, datasets, workers, progress, None)
 }
 
 /// [`run_sweep`] with an additional per-result hook, invoked on the
 /// collector thread in completion order.
 pub fn run_sweep_with(
-    artifacts_dir: &std::path::Path,
+    backend: &BackendSpec,
     jobs: Vec<Job>,
     datasets: HashMap<String, JobData>,
     workers: usize,
@@ -51,22 +53,39 @@ pub fn run_sweep_with(
     let datasets = Arc::new(datasets);
     let (tx, rx) = mpsc::channel::<Result<RunResult, String>>();
     let done = Arc::new(AtomicUsize::new(0));
-    let workers = workers.max(1).min(total.max(1));
+    let workers = workers.clamp(1, total.max(1));
+
+    // Job-level parallelism already saturates the cores: with several
+    // workers, an auto-threaded (threads = 0) native backend would add
+    // per-step data parallelism on top and oversubscribe the machine.
+    // An explicit thread count in the spec is respected.
+    let worker_spec = {
+        let mut spec = backend.clone();
+        if workers > 1 {
+            if let BackendSpec::Native(native) = &mut spec {
+                if native.threads == 0 {
+                    native.threads = 1;
+                }
+            }
+        }
+        spec
+    };
 
     let mut handles = Vec::with_capacity(workers);
     for worker_id in 0..workers {
         let queue = queue.clone();
         let datasets = datasets.clone();
         let tx = tx.clone();
-        let dir = artifacts_dir.to_path_buf();
+        let spec = worker_spec.clone();
         let done = done.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("sweep-{worker_id}"))
                 .spawn(move || {
-                    // One PJRT runtime per worker thread.
-                    let runtime = match Runtime::new(&dir) {
-                        Ok(rt) => rt,
+                    // One backend per worker thread (the spec crosses
+                    // threads; a connected backend may not).
+                    let backend = match spec.connect() {
+                        Ok(b) => b,
                         Err(e) => {
                             let _ = tx.send(Err(format!("worker {worker_id}: {e}")));
                             return;
@@ -82,7 +101,7 @@ pub fn run_sweep_with(
                         };
                         let outcome = match datasets.get(&job.dataset) {
                             None => Err(format!("{}: unknown dataset", job.id())),
-                            Some(data) => run_job(&runtime, &job, data)
+                            Some(data) => run_job(backend.as_ref(), &job, data)
                                 .map_err(|e| format!("{}: {e}", job.id())),
                         };
                         done.fetch_add(1, Ordering::Relaxed);
@@ -135,14 +154,85 @@ pub fn run_sweep_with(
 
 #[cfg(test)]
 mod tests {
-    // The scheduler's queue/channel mechanics are covered by the
-    // integration test (rust/tests/integration_sweep.rs) which needs real
-    // artifacts; here we only test the pure helpers.
+    use super::*;
+    use crate::data::Dataset;
+    use crate::runtime::NativeSpec;
+    use std::sync::Arc;
+
+    fn tiny_data(dim: usize, n: usize) -> JobData {
+        let mut rng = crate::data::Rng::new(3);
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let pos = i % 4 == 0;
+            y.push(if pos { 1.0 } else { 0.0 });
+            for d in 0..dim {
+                let shift = if pos && d < 2 { 1.5 } else { 0.0 };
+                x.push(rng.normal() as f32 + shift);
+            }
+        }
+        let set = Dataset::new(x, y, 0, dim);
+        JobData {
+            train_pool: Arc::new(set.clone()),
+            test: Arc::new(set),
+        }
+    }
+
+    fn tiny_job(seed: u32) -> Job {
+        Job {
+            dataset: "toy".into(),
+            imratio: 0.2,
+            loss: "hinge".into(),
+            batch: 16,
+            lr: 0.01,
+            seed,
+            model: "mlp".into(),
+            epochs: 1,
+        }
+    }
+
+    fn native_spec(dim: usize) -> BackendSpec {
+        BackendSpec::Native(NativeSpec {
+            input_dim: dim,
+            hidden: 4,
+            margin: 1.0,
+            threads: 1,
+        })
+    }
 
     #[test]
-    fn worker_count_clamped() {
-        // covered implicitly: run_sweep with 0 workers must still work via
-        // the .max(1); compile-time presence test.
-        assert_eq!(0usize.max(1).min(5), 1);
+    fn zero_workers_clamped_and_jobs_complete() {
+        let mut datasets = HashMap::new();
+        datasets.insert("toy".to_string(), tiny_data(6, 64));
+        let jobs = vec![tiny_job(0), tiny_job(1)];
+        let results = run_sweep(&native_spec(6), jobs, datasets, 0, None).unwrap();
+        assert_eq!(results.len(), 2);
+    }
+
+    #[test]
+    fn unknown_dataset_reports_failure() {
+        let mut datasets = HashMap::new();
+        datasets.insert("toy".to_string(), tiny_data(6, 64));
+        let mut bad = tiny_job(0);
+        bad.dataset = "missing".into();
+        let jobs = vec![bad, tiny_job(1)];
+        let failures = Arc::new(AtomicUsize::new(0));
+        let seen = failures.clone();
+        let progress: ProgressFn = Box::new(move |_, _, msg| {
+            if msg.starts_with("FAILED") {
+                seen.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        let results = run_sweep(&native_spec(6), jobs, datasets, 2, Some(progress)).unwrap();
+        // the bad job is reported as FAILED and skipped, the good one completes
+        assert_eq!(results.len(), 1);
+        assert_eq!(failures.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn all_failed_is_an_error() {
+        let datasets = HashMap::new(); // nothing registered
+        let jobs = vec![tiny_job(0)];
+        assert!(run_sweep(&native_spec(6), jobs, datasets, 1, None).is_err());
     }
 }

@@ -1,5 +1,5 @@
 //! Extension (paper §5 future work): full-batch deterministic training
-//! with L-BFGS over the `grad_*` AOT artifacts.
+//! with L-BFGS over a pluggable objective oracle.
 //!
 //! The paper: *"We would like to explore how our method could be used
 //! with full batch sizes and deterministic optimization algorithms such
@@ -10,17 +10,36 @@
 //! loss makes full-batch gradients affordable (O(n log n) per epoch),
 //! which is precisely what a deterministic quasi-Newton method needs.
 //!
+//! The optimizer is written against the [`Objective`] trait; two oracles
+//! exist: [`crate::runtime::native::NativeObjective`] (default build,
+//! via [`crate::runtime::NativeBackend::objective`]) and the PJRT
+//! `FullBatchObjective` over `grad_*` artifacts (feature `pjrt`).
+//!
 //! Implementation: standard two-loop recursion with history `m`, an
-//! Armijo backtracking line search, and gamma-scaled initial Hessian.
-//! The objective/gradient oracle is one PJRT execution of a
-//! `grad_<model>_<loss>_n<N>` artifact; all quasi-Newton algebra runs on
-//! flat host vectors.
+//! Armijo backtracking line search, and gamma-scaled initial Hessian;
+//! all quasi-Newton algebra runs on flat host vectors.
 
 use std::collections::VecDeque;
 
+#[cfg(feature = "pjrt")]
 use xla::Literal;
 
-use crate::runtime::{ArtifactKind, HostTensor, Runtime};
+#[cfg(feature = "pjrt")]
+use crate::runtime::pjrt::{tensor_from_literal, Runtime};
+#[cfg(feature = "pjrt")]
+use crate::runtime::ArtifactKind;
+
+/// A full-batch (loss, gradient) oracle over flat parameters.
+pub trait Objective {
+    /// Total number of scalar parameters.
+    fn dim(&self) -> usize;
+
+    /// Evaluate (loss, gradient) at flat parameters `theta`.
+    fn eval(&mut self, theta: &[f32]) -> crate::Result<(f64, Vec<f32>)>;
+
+    /// Number of evaluations performed so far (budget accounting).
+    fn evals(&self) -> usize;
+}
 
 /// L-BFGS hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -62,7 +81,9 @@ pub struct LbfgsRecord {
     pub ls_trials: usize,
 }
 
-/// The full-batch objective bound to a `grad_*` artifact and a dataset.
+/// The PJRT full-batch objective bound to a `grad_*` artifact and a
+/// dataset (feature `pjrt`).
+#[cfg(feature = "pjrt")]
 pub struct FullBatchObjective<'rt> {
     runtime: &'rt Runtime,
     grad_name: String,
@@ -78,6 +99,7 @@ pub struct FullBatchObjective<'rt> {
     pub evals: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'rt> FullBatchObjective<'rt> {
     /// Bind the `grad_<model>_<loss>_n<N>` artifact to a dataset slice.
     ///
@@ -134,31 +156,32 @@ impl<'rt> FullBatchObjective<'rt> {
         })
     }
 
-    /// Total number of scalar parameters.
-    pub fn dim(&self) -> usize {
-        self.param_shapes
-            .iter()
-            .map(|s| s.iter().product::<i64>() as usize)
-            .sum()
-    }
-
     /// Initial parameters from the matching init artifact, flattened.
     pub fn init_params(&self, model: &str, loss: &str, seed: u32) -> crate::Result<Vec<f32>> {
         let init_name = crate::runtime::Manifest::init_name(model, loss);
         let outs = self.runtime.execute(&init_name, &[Literal::scalar(seed)])?;
         // init returns the full state (params + optimizer slots); the
         // params are the leading tensors whose shapes match ours.
-        let mut flat = Vec::with_capacity(self.dim());
+        let mut flat = Vec::with_capacity(Objective::dim(self));
         for (lit, shape) in outs.iter().zip(&self.param_shapes) {
-            let t = HostTensor::from_literal(lit)?;
+            let t = tensor_from_literal(lit)?;
             anyhow::ensure!(&t.shape == shape, "init/grad param shape mismatch");
             flat.extend_from_slice(&t.data);
         }
         Ok(flat)
     }
+}
 
-    /// Evaluate (loss, gradient) at flat parameters `theta`.
-    pub fn eval(&mut self, theta: &[f32]) -> crate::Result<(f64, Vec<f32>)> {
+#[cfg(feature = "pjrt")]
+impl Objective for FullBatchObjective<'_> {
+    fn dim(&self) -> usize {
+        self.param_shapes
+            .iter()
+            .map(|s| s.iter().product::<i64>() as usize)
+            .sum()
+    }
+
+    fn eval(&mut self, theta: &[f32]) -> crate::Result<(f64, Vec<f32>)> {
         anyhow::ensure!(theta.len() == self.dim(), "theta dim");
         self.evals += 1;
         let mut params: Vec<Literal> = Vec::with_capacity(self.n_params);
@@ -178,9 +201,13 @@ impl<'rt> FullBatchObjective<'rt> {
         let loss = outs[0].to_vec::<f32>()?[0] as f64;
         let mut grad = Vec::with_capacity(self.dim());
         for lit in &outs[1..] {
-            grad.extend_from_slice(&HostTensor::from_literal(lit)?.data);
+            grad.extend_from_slice(&tensor_from_literal(lit)?.data);
         }
         Ok((loss, grad))
+    }
+
+    fn evals(&self) -> usize {
+        self.evals
     }
 }
 
@@ -194,7 +221,7 @@ fn inf_norm(a: &[f32]) -> f64 {
 
 /// Minimize the objective with L-BFGS; returns (theta*, trace).
 pub fn minimize(
-    objective: &mut FullBatchObjective,
+    objective: &mut dyn Objective,
     theta0: Vec<f32>,
     config: &LbfgsConfig,
 ) -> crate::Result<(Vec<f32>, Vec<LbfgsRecord>)> {
@@ -326,8 +353,8 @@ pub fn minimize(
 
 #[cfg(test)]
 mod tests {
-    // PJRT-backed tests live in rust/tests/integration_lbfgs.rs; here we
-    // only cover the pure vector helpers.
+    // Backend-driven tests live in rust/tests/integration_lbfgs.rs; here
+    // we cover the pure vector helpers and a tiny analytic objective.
     use super::*;
 
     #[test]
@@ -341,5 +368,48 @@ mod tests {
     fn default_config_sane() {
         let c = LbfgsConfig::default();
         assert!(c.history > 0 && c.c1 < 1.0 && c.backtrack < 1.0);
+    }
+
+    /// f(x) = Σ cᵢ xᵢ² — an ill-conditioned quadratic bowl.
+    struct Quadratic {
+        coeffs: Vec<f64>,
+        evals: usize,
+    }
+
+    impl Objective for Quadratic {
+        fn dim(&self) -> usize {
+            self.coeffs.len()
+        }
+        fn eval(&mut self, theta: &[f32]) -> crate::Result<(f64, Vec<f32>)> {
+            self.evals += 1;
+            let mut loss = 0.0;
+            let grad = theta
+                .iter()
+                .zip(&self.coeffs)
+                .map(|(&x, &c)| {
+                    loss += c * (x as f64) * (x as f64);
+                    (2.0 * c * x as f64) as f32
+                })
+                .collect();
+            Ok((loss, grad))
+        }
+        fn evals(&self) -> usize {
+            self.evals
+        }
+    }
+
+    #[test]
+    fn minimizes_ill_conditioned_quadratic() {
+        let mut obj = Quadratic {
+            coeffs: vec![1.0, 10.0, 100.0, 1000.0],
+            evals: 0,
+        };
+        let theta0 = vec![1.0_f32; 4];
+        let (theta, trace) = minimize(&mut obj, theta0, &LbfgsConfig::default()).unwrap();
+        assert!(!trace.is_empty());
+        let final_loss = trace.last().unwrap().loss;
+        assert!(final_loss < 1e-6, "final loss {final_loss}");
+        assert!(theta.iter().all(|x| x.abs() < 1e-2));
+        assert!(obj.evals() > 0);
     }
 }

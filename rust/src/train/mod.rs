@@ -1,14 +1,15 @@
-//! Training loop over PJRT artifacts.
+//! Training loop over pluggable backends.
 //!
-//! * [`trainer`] — [`trainer::Trainer`]: owns the training state as
-//!   device-resident buffers and drives `init` / `train` / `predict`
-//!   artifacts (one PJRT execution per step; Python is never involved).
+//! * [`trainer`] — [`trainer::Trainer`]: opens a
+//!   [`crate::runtime::ModelExecutor`] on any [`crate::runtime::Backend`]
+//!   and drives init / train-step / predict; state residency (host
+//!   vectors vs device buffers) is the executor's concern.
 //! * [`history`] — per-epoch records + the paper's max-validation-AUC
 //!   epoch selection.
 //! * [`checkpoint`] — binary snapshots of the flat training state.
-
 //! * [`lbfgs`] — the paper's §5 future-work extension: deterministic
-//!   full-batch L-BFGS over `grad_*` artifacts.
+//!   full-batch L-BFGS over an [`lbfgs::Objective`] oracle (native or
+//!   `grad_*` artifacts).
 
 pub mod checkpoint;
 pub mod history;

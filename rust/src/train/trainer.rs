@@ -1,24 +1,23 @@
-//! The training loop: one PJRT execution per step, state device-resident.
+//! The backend-agnostic training loop.
 //!
-//! A [`Trainer`] binds (runtime, model, loss, batch size) to the three
-//! artifacts `init_*`, `train_*_bs<B>`, `predict_*_bs<P>` and drives them:
+//! A [`Trainer`] opens a [`ModelExecutor`] for (model, loss, batch) on
+//! any [`Backend`] and drives it:
 //!
 //! ```text
-//! init(seed) ──► state ──► train(state, x, p, q, lr) ──► state' ─┐
-//!                 ▲                                              │
-//!                 └──────────────── every batch ◄────────────────┘
+//! init(seed) ──► state ──► train_step(x, p, q, lr) ──► state' ─┐
+//!                 ▲                                            │
+//!                 └───────────────── every batch ◄─────────────┘
 //! ```
 //!
-//! The state tensors stay on the device as `PjRtBuffer`s between steps and
-//! are passed to each execution *by reference* (PJRT borrows inputs; no
-//! donation is configured, so they remain valid).  Only the scalar loss is
-//! read back per batch, and scores per evaluation pass.
-
-use xla::{Literal, PjRtBuffer};
+//! Where the state lives is the executor's business: host vectors on the
+//! native backend, device-resident `PjRtBuffer`s on PJRT.  The trainer
+//! owns the parts every backend shares — epoch batching via
+//! [`BatchPlan`], per-epoch validation AUC, divergence cutoff, and
+//! host-side checkpoint snapshots.
 
 use crate::data::{BatchPlan, Dataset, Rng};
 use crate::metrics::auc;
-use crate::runtime::{ArtifactKind, HostTensor, Manifest, Runtime};
+use crate::runtime::{Backend, HostTensor, ModelExecutor};
 
 use super::history::{EpochRecord, History};
 
@@ -30,57 +29,28 @@ pub struct EpochStats {
     pub n_examples: usize,
 }
 
-/// Drives init/train/predict artifacts for one (model, loss, batch) run.
-pub struct Trainer<'rt> {
-    runtime: &'rt Runtime,
-    train_name: String,
-    predict_name: String,
-    init_name: String,
+/// Drives one (model, loss, batch) run on an open backend.
+pub struct Trainer<'b> {
+    exec: Box<dyn ModelExecutor + 'b>,
     batch: usize,
-    predict_batch: usize,
-    n_state: usize,
     row_len: usize,
-    x_shape: Vec<i64>,
-    /// Device-resident training state (params + optimizer slots).
-    state: Option<Vec<PjRtBuffer>>,
 }
 
-impl<'rt> Trainer<'rt> {
-    /// Resolve artifacts for (model, loss, batch) and validate signatures.
+impl<'b> Trainer<'b> {
+    /// Open the (model, loss, batch) executor on `backend`.
     pub fn new(
-        runtime: &'rt Runtime,
+        backend: &'b dyn Backend,
         model: &str,
         loss: &str,
         batch: usize,
     ) -> crate::Result<Self> {
-        let manifest = runtime.manifest();
-        let train_name = Manifest::train_name(model, loss, batch);
-        let train_art = manifest.get(&train_name)?.clone();
-        anyhow::ensure!(train_art.kind == ArtifactKind::Train, "{train_name} kind");
-        let predict_batch = manifest.predict_batch(model, loss)?;
-        let predict_name = Manifest::predict_name(model, loss, predict_batch);
-        let init_name = Manifest::init_name(model, loss);
-        manifest.get(&init_name)?;
-        manifest.get(&predict_name)?;
-
-        let n_state = train_art.n_state;
-        // x is the tensor right after the state block; its trailing dims
-        // give the per-example row length.
-        let x_sig = &train_art.inputs[n_state];
-        anyhow::ensure!(x_sig.shape[0] == batch, "batch dim mismatch");
-        let row_len: usize = x_sig.shape[1..].iter().product();
-        let x_shape: Vec<i64> = x_sig.shape.iter().map(|&d| d as i64).collect();
+        let exec = backend.open(model, loss, batch)?;
+        let batch = exec.batch_size();
+        let row_len = exec.row_len();
         Ok(Self {
-            runtime,
-            train_name,
-            predict_name,
-            init_name,
+            exec,
             batch,
-            predict_batch,
-            n_state,
             row_len,
-            x_shape,
-            state: None,
         })
     }
 
@@ -89,58 +59,12 @@ impl<'rt> Trainer<'rt> {
     }
 
     pub fn n_state(&self) -> usize {
-        self.n_state
+        self.exec.n_state()
     }
 
-    /// Initialize the training state from a seed (runs the init artifact).
+    /// Initialize the training state from a seed.
     pub fn init(&mut self, seed: u32) -> crate::Result<()> {
-        let seed_lit = Literal::scalar(seed);
-        let outs = self.runtime.execute(&self.init_name, &[seed_lit])?;
-        anyhow::ensure!(outs.len() == self.n_state, "init arity");
-        // to_device_sync: the source literals are dropped at the end of
-        // this function, so the async host→device copies must be forced.
-        let buffers = outs
-            .iter()
-            .map(|lit| self.runtime.to_device_sync(lit))
-            .collect::<crate::Result<Vec<_>>>()?;
-        self.state = Some(buffers);
-        Ok(())
-    }
-
-    fn state_ref(&self) -> crate::Result<&Vec<PjRtBuffer>> {
-        self.state
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("trainer not initialized; call init()"))
-    }
-
-    /// One gradient step on a filled batch.  Returns the batch loss.
-    fn step(&mut self, x: &[f32], pos: &[f32], neg: &[f32], lr: f32) -> crate::Result<f64> {
-        debug_assert_eq!(x.len(), self.batch * self.row_len);
-        // The input literals MUST outlive the loss read-back below: the
-        // host→device copies run asynchronously and are only guaranteed
-        // complete once an output of the execution has been synchronized.
-        let x_lit = Literal::vec1(x).reshape(&self.x_shape)?;
-        let pos_lit = Literal::vec1(pos);
-        let neg_lit = Literal::vec1(neg);
-        let lr_lit = Literal::scalar(lr);
-        let inputs = [
-            self.runtime.to_device(&x_lit)?,
-            self.runtime.to_device(&pos_lit)?,
-            self.runtime.to_device(&neg_lit)?,
-            self.runtime.to_device(&lr_lit)?,
-        ];
-        let mut outs = {
-            let state = self.state_ref()?;
-            let args: Vec<&PjRtBuffer> = state.iter().chain(inputs.iter()).collect();
-            self.runtime.execute_buffers(&self.train_name, &args)?
-        };
-        anyhow::ensure!(outs.len() == self.n_state + 2, "train arity");
-        let _scores = outs.pop().unwrap(); // per-batch scores unused here
-        let loss_buf = outs.pop().unwrap();
-        self.state = Some(outs);
-        // Synchronizes the whole step (and thus the input copies).
-        let loss = loss_buf.to_literal_sync()?.to_vec::<f32>()?[0] as f64;
-        Ok(loss)
+        self.exec.init(seed)
     }
 
     /// One shuffled epoch over `indices` of `dataset`.
@@ -153,7 +77,7 @@ impl<'rt> Trainer<'rt> {
     ) -> crate::Result<EpochStats> {
         anyhow::ensure!(
             dataset.row_len() == self.row_len,
-            "dataset row length {} != artifact {}",
+            "dataset row length {} != executor {}",
             dataset.row_len(),
             self.row_len
         );
@@ -166,7 +90,7 @@ impl<'rt> Trainer<'rt> {
         let mut n_batches = 0;
         let mut n_examples = 0;
         while let Some(count) = iter.fill_next(&mut x, &mut p, &mut q) {
-            total_loss += self.step(&x, &p, &q, lr)?;
+            total_loss += self.exec.train_step(&x, &p, &q, lr)?;
             n_batches += 1;
             n_examples += count;
         }
@@ -181,43 +105,29 @@ impl<'rt> Trainer<'rt> {
         })
     }
 
-    /// Predict scores for `indices` of `dataset` (chunked + padded).
+    /// Predict scores for `indices` of `dataset`.
     ///
-    /// The predict artifact consumes only the model-parameter slots of
-    /// the training state (`state_indices` in the manifest); optimizer
-    /// slots are not uploaded.
-    pub fn predict(&self, dataset: &Dataset, indices: &[u32]) -> crate::Result<Vec<f32>> {
-        let state = self.state_ref()?;
+    /// The gather is chunked so host memory stays bounded regardless of
+    /// the evaluation-set size (the executor handles any further
+    /// chunking/padding its substrate needs).
+    pub fn predict(&mut self, dataset: &Dataset, indices: &[u32]) -> crate::Result<Vec<f32>> {
+        const GATHER_ROWS: usize = 1024;
         let row = dataset.row_len();
         anyhow::ensure!(row == self.row_len, "row length mismatch");
-        let predict_art = self.runtime.manifest().get(&self.predict_name)?.clone();
-        let selected: Vec<&PjRtBuffer> = predict_art.select_state(state);
-        let pb = self.predict_batch;
-        let mut x_shape = self.x_shape.clone();
-        x_shape[0] = pb as i64;
         let mut scores = Vec::with_capacity(indices.len());
-        let mut x_buf = vec![0.0_f32; pb * row];
-        for chunk in indices.chunks(pb) {
-            for (slot, &idx) in chunk.iter().enumerate() {
-                x_buf[slot * row..(slot + 1) * row].copy_from_slice(dataset.row(idx as usize));
+        let mut x = Vec::with_capacity(indices.len().min(GATHER_ROWS) * row);
+        for chunk in indices.chunks(GATHER_ROWS) {
+            x.clear();
+            for &idx in chunk {
+                x.extend_from_slice(dataset.row(idx as usize));
             }
-            x_buf[chunk.len() * row..].fill(0.0);
-            let x_lit = Literal::vec1(&x_buf).reshape(&x_shape)?;
-            let x_dev = self.runtime.to_device(&x_lit)?;
-            let args: Vec<&PjRtBuffer> = selected
-                .iter()
-                .copied()
-                .chain(std::iter::once(&x_dev))
-                .collect();
-            let outs = self.runtime.execute_buffers(&self.predict_name, &args)?;
-            let out = HostTensor::from_literal(&outs[0].to_literal_sync()?)?;
-            scores.extend_from_slice(&out.data[..chunk.len()]);
+            scores.extend(self.exec.predict(&x, chunk.len())?);
         }
         Ok(scores)
     }
 
     /// AUC of predictions over `indices` against the dataset labels.
-    pub fn eval_auc(&self, dataset: &Dataset, indices: &[u32]) -> crate::Result<Option<f64>> {
+    pub fn eval_auc(&mut self, dataset: &Dataset, indices: &[u32]) -> crate::Result<Option<f64>> {
         let scores = self.predict(dataset, indices)?;
         let labels: Vec<f32> = indices.iter().map(|&i| dataset.y[i as usize]).collect();
         Ok(auc(&scores, &labels))
@@ -260,21 +170,99 @@ impl<'rt> Trainer<'rt> {
 
     /// Download the training state for checkpointing.
     pub fn state_to_host(&self) -> crate::Result<Vec<HostTensor>> {
-        self.state_ref()?
-            .iter()
-            .map(|b| HostTensor::from_literal(&b.to_literal_sync()?))
-            .collect()
+        self.exec.state_to_host()
     }
 
     /// Restore a previously downloaded state.
     pub fn load_state(&mut self, tensors: &[HostTensor]) -> crate::Result<()> {
-        anyhow::ensure!(tensors.len() == self.n_state, "state arity");
-        let buffers = tensors
-            .iter()
-            // sync upload: the literal is a temporary dropped per-iteration
-            .map(|t| self.runtime.to_device_sync(&t.to_literal()?))
-            .collect::<crate::Result<Vec<_>>>()?;
-        self.state = Some(buffers);
-        Ok(())
+        self.exec.load_state(tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{BackendSpec, NativeSpec};
+
+    fn toy_dataset(n: usize, dim: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let pos = rng.uniform() < 0.3;
+            y.push(if pos { 1.0 } else { 0.0 });
+            for d in 0..dim {
+                let shift = if pos && d < 2 { 1.5 } else { 0.0 };
+                x.push(rng.normal() as f32 + shift);
+            }
+        }
+        Dataset::new(x, y, 0, dim)
+    }
+
+    fn native_backend(dim: usize) -> Box<dyn Backend> {
+        BackendSpec::Native(NativeSpec {
+            input_dim: dim,
+            hidden: 8,
+            margin: 1.0,
+            threads: 1,
+        })
+        .connect()
+        .unwrap()
+    }
+
+    #[test]
+    fn epoch_counts_batches_and_examples() {
+        let backend = native_backend(6);
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 8).unwrap();
+        trainer.init(0).unwrap();
+        let data = toy_dataset(25, 6, 1);
+        let idx: Vec<u32> = (0..25).collect();
+        let stats = trainer
+            .train_epoch(&data, &idx, 0.01, &mut Rng::new(2))
+            .unwrap();
+        assert_eq!(stats.n_batches, 4); // 8 + 8 + 8 + 1
+        assert_eq!(stats.n_examples, 25);
+        assert!(stats.mean_loss.is_finite());
+    }
+
+    #[test]
+    fn row_length_mismatch_is_error() {
+        let backend = native_backend(6);
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 8).unwrap();
+        trainer.init(0).unwrap();
+        let data = toy_dataset(10, 4, 3);
+        let idx: Vec<u32> = (0..10).collect();
+        assert!(trainer
+            .train_epoch(&data, &idx, 0.01, &mut Rng::new(4))
+            .is_err());
+        assert!(trainer.predict(&data, &idx).is_err());
+    }
+
+    #[test]
+    fn fit_records_epochs_and_val_auc() {
+        let backend = native_backend(6);
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 16).unwrap();
+        let data = toy_dataset(80, 6, 5);
+        let idx: Vec<u32> = (0..80).collect();
+        let history = trainer
+            .fit(&data, &idx, &idx, 0.05, 3, 0, &mut Rng::new(6))
+            .unwrap();
+        assert_eq!(history.len(), 3);
+        assert!(history.records.iter().all(|r| r.val_auc.is_some()));
+    }
+
+    #[test]
+    fn predict_order_matches_indices() {
+        let backend = native_backend(6);
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 8).unwrap();
+        trainer.init(1).unwrap();
+        let data = toy_dataset(30, 6, 7);
+        let all: Vec<u32> = (0..30).collect();
+        let scores = trainer.predict(&data, &all).unwrap();
+        let head: Vec<u32> = vec![3, 7, 11];
+        let subset = trainer.predict(&data, &head).unwrap();
+        for (s, &i) in subset.iter().zip(&head) {
+            assert_eq!(*s, scores[i as usize]);
+        }
     }
 }

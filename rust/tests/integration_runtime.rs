@@ -1,32 +1,24 @@
-//! Integration tests over the real AOT artifacts (requires
-//! `make artifacts`).  Skipped cleanly when artifacts are absent.
+//! Backend integration tests.
 //!
-//! These tests exercise the full PJRT path the sweep uses: init →
-//! device-resident train steps → predict, plus the cross-stack check
-//! that the Pallas hinge loss inside the train artifact matches the
-//! native Rust Algorithm 2 on the same batch.
+//! The native-backend tests run in every build — they exercise the full
+//! path the sweep uses: init → train steps → predict → checkpoint.  The
+//! PJRT tests (feature `pjrt`, plus `make artifacts`) additionally
+//! cross-check the Pallas hinge kernel against the native Algorithm 2 on
+//! the same batch.
 
 use allpairs::data::{Dataset, Rng};
-use allpairs::losses::functional::SquaredHinge;
-use allpairs::runtime::{HostTensor, Runtime};
+use allpairs::runtime::{Backend, BackendSpec, NativeSpec};
 use allpairs::train::Trainer;
-use xla::Literal;
 
-fn artifacts_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
-}
-
-macro_rules! require_artifacts {
-    () => {
-        match artifacts_dir() {
-            Some(dir) => dir,
-            None => {
-                eprintln!("skipping: run `make artifacts` first");
-                return;
-            }
-        }
-    };
+fn native_backend() -> Box<dyn Backend> {
+    BackendSpec::Native(NativeSpec {
+        input_dim: 64,
+        hidden: 16,
+        margin: 1.0,
+        threads: 1,
+    })
+    .connect()
+    .unwrap()
 }
 
 fn feature_dataset(n: usize, seed: u64) -> Dataset {
@@ -46,33 +38,27 @@ fn feature_dataset(n: usize, seed: u64) -> Dataset {
 
 #[test]
 fn init_is_deterministic_and_seed_sensitive() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
-    let a = runtime
-        .execute("init_mlp_hinge", &[Literal::scalar(3u32)])
-        .unwrap();
-    let b = runtime
-        .execute("init_mlp_hinge", &[Literal::scalar(3u32)])
-        .unwrap();
-    let c = runtime
-        .execute("init_mlp_hinge", &[Literal::scalar(4u32)])
-        .unwrap();
-    // concatenate every leaf: biases are zero-init for all seeds, so a
-    // single-leaf comparison would be vacuous.
-    let cat = |lits: &[Literal]| -> Vec<f32> {
-        lits.iter()
-            .flat_map(|l| HostTensor::from_literal(l).unwrap().data)
+    let backend = native_backend();
+    let mut a = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
+    let mut b = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
+    a.init(3).unwrap();
+    b.init(3).unwrap();
+    let cat = |t: &Trainer| -> Vec<f32> {
+        t.state_to_host()
+            .unwrap()
+            .iter()
+            .flat_map(|t| t.data.clone())
             .collect()
     };
     assert_eq!(cat(&a), cat(&b));
-    assert_ne!(cat(&a), cat(&c));
+    b.init(4).unwrap();
+    assert_ne!(cat(&a), cat(&b));
 }
 
 #[test]
 fn single_train_step_runs_and_returns_finite_loss() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
-    let mut trainer = Trainer::new(&runtime, "mlp", "hinge", 100).unwrap();
+    let backend = native_backend();
+    let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
     trainer.init(0).unwrap();
     let data = feature_dataset(100, 1);
     let idx: Vec<u32> = (0..100).collect();
@@ -86,30 +72,26 @@ fn single_train_step_runs_and_returns_finite_loss() {
 
 #[test]
 fn training_reduces_loss_and_improves_auc() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
-    let mut trainer = Trainer::new(&runtime, "mlp", "hinge", 100).unwrap();
+    let backend = native_backend();
+    let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
     let data = feature_dataset(400, 3);
     let idx: Vec<u32> = (0..400).collect();
     let mut rng = Rng::new(4);
     let history = trainer
-        .fit(&data, &idx, &idx, 0.1, 6, 0, &mut rng)
+        .fit(&data, &idx, &idx, 0.02, 10, 0, &mut rng)
         .unwrap();
     let first = &history.records[0];
     let last = history.records.last().unwrap();
     assert!(last.train_loss < first.train_loss, "{history:?}");
-    assert!(last.val_auc.unwrap() > 0.85, "{history:?}");
+    assert!(last.val_auc.unwrap() > 0.75, "{history:?}");
 }
 
 #[test]
-fn predict_is_padding_invariant() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
-    let mut trainer = Trainer::new(&runtime, "mlp", "hinge", 100).unwrap();
+fn predict_is_chunking_invariant() {
+    let backend = native_backend();
+    let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
     trainer.init(1).unwrap();
     let data = feature_dataset(300, 5);
-    // 300 examples through a 256-wide predict artifact: 2 chunks, second
-    // one padded.  Scores must match a full-size evaluation elementwise.
     let all: Vec<u32> = (0..300).collect();
     let scores = trainer.predict(&data, &all).unwrap();
     assert_eq!(scores.len(), 300);
@@ -122,9 +104,8 @@ fn predict_is_padding_invariant() {
 
 #[test]
 fn checkpoint_roundtrip_preserves_predictions() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
-    let mut trainer = Trainer::new(&runtime, "mlp", "hinge", 100).unwrap();
+    let backend = native_backend();
+    let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
     trainer.init(7).unwrap();
     let data = feature_dataset(120, 8);
     let idx: Vec<u32> = (0..120).collect();
@@ -147,25 +128,82 @@ fn checkpoint_roundtrip_preserves_predictions() {
 }
 
 #[test]
-fn pallas_loss_eval_matches_native_rust_algorithm2() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
+fn backend_monitor_matches_direct_algorithm2() {
+    use allpairs::coordinator::monitor;
+    let backend = native_backend();
     let mut rng = Rng::new(10);
     let n = 2000;
     let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
     let is_pos: Vec<f32> = (0..n)
         .map(|_| if rng.uniform() < 0.15 { 1.0 } else { 0.0 })
         .collect();
-    let native = {
-        let n_pos = is_pos.iter().filter(|&&p| p != 0.0).count() as f64;
-        let n_neg = n as f64 - n_pos;
-        SquaredHinge::new(1.0).loss_only(&scores, &is_pos) / (n_pos * n_neg)
-    };
-    // monitor_artifact is already pair-normalized (the L2 loss wrappers
-    // normalize internally), matching monitor_native's convention.
-    let pjrt =
-        allpairs::coordinator::monitor::monitor_artifact(&runtime, "hinge", &scores, &is_pos)
-            .unwrap();
-    let rel = (native - pjrt).abs() / native.abs().max(1e-9);
-    assert!(rel < 1e-4, "native {native} vs pallas {pjrt}");
+    let native = monitor::monitor_native(&scores, &is_pos, 1.0);
+    let via_backend =
+        monitor::monitor_backend(backend.as_ref(), "hinge", &scores, &is_pos).unwrap();
+    let rel = (native - via_backend).abs() / native.abs().max(1e-9);
+    assert!(rel < 1e-9, "direct {native} vs backend {via_backend}");
+}
+
+/// PJRT-path tests: need a `--features pjrt` build (with the real `xla`
+/// crate) and `make artifacts`; skipped cleanly otherwise.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use allpairs::losses::functional::SquaredHinge;
+    use allpairs::runtime::PjrtBackend;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    macro_rules! require_backend {
+        () => {
+            match artifacts_dir().and_then(|dir| PjrtBackend::new(&dir).ok()) {
+                Some(backend) => backend,
+                None => {
+                    eprintln!("skipping: pjrt backend unavailable (run `make artifacts`)");
+                    return;
+                }
+            }
+        };
+    }
+
+    #[test]
+    fn pjrt_training_reduces_loss_and_improves_auc() {
+        let backend = require_backend!();
+        let mut trainer = Trainer::new(&backend, "mlp", "hinge", 100).unwrap();
+        let data = feature_dataset(400, 3);
+        let idx: Vec<u32> = (0..400).collect();
+        let mut rng = Rng::new(4);
+        let history = trainer.fit(&data, &idx, &idx, 0.1, 6, 0, &mut rng).unwrap();
+        let first = &history.records[0];
+        let last = history.records.last().unwrap();
+        assert!(last.train_loss < first.train_loss, "{history:?}");
+        assert!(last.val_auc.unwrap() > 0.85, "{history:?}");
+    }
+
+    #[test]
+    fn pallas_loss_eval_matches_native_rust_algorithm2() {
+        let backend = require_backend!();
+        let mut rng = Rng::new(10);
+        let n = 2000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let is_pos: Vec<f32> = (0..n)
+            .map(|_| if rng.uniform() < 0.15 { 1.0 } else { 0.0 })
+            .collect();
+        let native = {
+            let n_pos = is_pos.iter().filter(|&&p| p != 0.0).count() as f64;
+            let n_neg = n as f64 - n_pos;
+            SquaredHinge::new(1.0).loss_only(&scores, &is_pos) / (n_pos * n_neg)
+        };
+        // eval_loss is pair-normalized (the L2 loss wrappers normalize
+        // internally), matching monitor_native's convention.
+        let pjrt = allpairs::coordinator::monitor::monitor_backend(
+            &backend, "hinge", &scores, &is_pos,
+        )
+        .unwrap();
+        let rel = (native - pjrt).abs() / native.abs().max(1e-9);
+        assert!(rel < 1e-4, "native {native} vs pallas {pjrt}");
+    }
 }

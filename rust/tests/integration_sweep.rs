@@ -1,34 +1,27 @@
 //! Sweep-engine integration: a tiny but complete cross-validation sweep
-//! through real PJRT artifacts (multi-worker scheduler, imbalance,
+//! through the native backend (multi-worker scheduler, imbalance,
 //! stratified splits, max-val-AUC selection, aggregation, persistence).
-//!
-//! Skipped cleanly when `make artifacts` has not been run.
+//! No artifacts needed — this runs in every build.
 
 use std::sync::Arc;
 
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::cv;
 use allpairs::data::synth::{generate, SynthSpec, SYNTH_DATASETS};
+use allpairs::runtime::{Backend, BackendSpec, NativeSpec};
 use allpairs::sweep::runner::{run_job, JobData};
 use allpairs::sweep::scheduler::run_sweep;
 use allpairs::sweep::select::{aggregate, select_per_seed};
-use allpairs::sweep::{grid, results, Job};
+use allpairs::sweep::{results, Job};
 
-fn artifacts_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
-}
-
-macro_rules! require_artifacts {
-    () => {
-        match artifacts_dir() {
-            Some(dir) => dir,
-            None => {
-                eprintln!("skipping: run `make artifacts` first");
-                return;
-            }
-        }
-    };
+/// Native spec matching the synthetic image datasets (16 x 16 x 3).
+fn native_spec() -> BackendSpec {
+    BackendSpec::Native(NativeSpec {
+        input_dim: 16 * 16 * 3,
+        hidden: 8,
+        margin: 1.0,
+        threads: 1,
+    })
 }
 
 fn tiny_data() -> JobData {
@@ -59,10 +52,9 @@ fn tiny_job(loss: &str, batch: usize, seed: u32) -> Job {
 
 #[test]
 fn single_job_end_to_end() {
-    let dir = require_artifacts!();
-    let runtime = allpairs::runtime::Runtime::new(&dir).unwrap();
+    let backend = native_spec().connect().unwrap();
     let data = tiny_data();
-    let result = run_job(&runtime, &tiny_job("hinge", 50, 0), &data).unwrap();
+    let result = run_job(backend.as_ref(), &tiny_job("hinge", 50, 0), &data).unwrap();
     assert!(!result.diverged);
     assert!(result.best_val_auc.is_some());
     assert!(result.test_auc.is_some());
@@ -74,12 +66,11 @@ fn single_job_end_to_end() {
 
 #[test]
 fn job_results_are_reproducible() {
-    let dir = require_artifacts!();
-    let runtime = allpairs::runtime::Runtime::new(&dir).unwrap();
+    let backend = native_spec().connect().unwrap();
     let data = tiny_data();
     let job = tiny_job("logistic", 100, 1);
-    let a = run_job(&runtime, &job, &data).unwrap();
-    let b = run_job(&runtime, &job, &data).unwrap();
+    let a = run_job(backend.as_ref(), &job, &data).unwrap();
+    let b = run_job(backend.as_ref(), &job, &data).unwrap();
     assert_eq!(a.best_val_auc, b.best_val_auc);
     assert_eq!(a.test_auc, b.test_auc);
     assert_eq!(a.best_epoch, b.best_epoch);
@@ -87,7 +78,6 @@ fn job_results_are_reproducible() {
 
 #[test]
 fn multiworker_sweep_selection_and_persistence() {
-    let dir = require_artifacts!();
     let jobs = vec![
         tiny_job("hinge", 50, 0),
         tiny_job("hinge", 100, 0),
@@ -99,7 +89,7 @@ fn multiworker_sweep_selection_and_persistence() {
     let n_jobs = jobs.len();
     let mut datasets = std::collections::HashMap::new();
     datasets.insert("synth-pets".to_string(), tiny_data());
-    let results_vec = run_sweep(&dir, jobs, datasets, 3, None).unwrap();
+    let results_vec = run_sweep(&native_spec(), jobs, datasets, 3, None).unwrap();
     assert_eq!(results_vec.len(), n_jobs);
 
     // selection: one winner per (loss, seed)
@@ -127,12 +117,11 @@ fn multiworker_sweep_selection_and_persistence() {
 
 #[test]
 fn cv_summarize_writes_reports() {
-    let dir = require_artifacts!();
-    let runtime = allpairs::runtime::Runtime::new(&dir).unwrap();
+    let backend = native_spec().connect().unwrap();
     let data = tiny_data();
     let results_vec = vec![
-        run_job(&runtime, &tiny_job("hinge", 50, 0), &data).unwrap(),
-        run_job(&runtime, &tiny_job("logistic", 50, 0), &data).unwrap(),
+        run_job(backend.as_ref(), &tiny_job("hinge", 50, 0), &data).unwrap(),
+        run_job(backend.as_ref(), &tiny_job("logistic", 50, 0), &data).unwrap(),
     ];
     let out = std::env::temp_dir().join("allpairs_cv_reports");
     std::fs::create_dir_all(&out).unwrap();
@@ -145,16 +134,68 @@ fn cv_summarize_writes_reports() {
 }
 
 #[test]
-fn grid_jobs_have_matching_artifacts() {
-    // Every (model, loss, batch) the default config would schedule must
-    // exist in the manifest — catches config/manifest drift.
-    let dir = require_artifacts!();
-    let runtime = allpairs::runtime::Runtime::new(&dir).unwrap();
+fn cv_run_executes_a_micro_sweep_end_to_end() {
+    // The full coordinator path — config → datasets → scheduler →
+    // selection → reports — on a deliberately tiny grid.
+    let cfg = SweepConfig {
+        datasets: vec!["synth-pets".into()],
+        imratios: vec![0.2],
+        losses: vec!["hinge".into()],
+        batch_sizes: vec![50],
+        seeds: vec![0],
+        epochs: 1,
+        max_train: Some(200),
+        max_lrs: Some(1),
+        workers: 2,
+        backend: native_spec(),
+        ..Default::default()
+    };
+    let out = std::env::temp_dir().join("allpairs_cv_run_micro");
+    let output = cv::run(&cfg, &out, None).unwrap();
+    assert_eq!(output.results.len(), cfg.n_runs());
+    assert!(out.join("sweep_results.jsonl").exists());
+    assert!(out.join("table2.md").exists());
+}
+
+#[test]
+fn native_backend_opens_every_scheduled_combination() {
+    // Every (model, loss, batch) the default-config grid schedules must
+    // open on the native backend — except aucm, which documents its
+    // pjrt-only status by erroring with a clear message.
+    let backend = native_spec().connect().unwrap();
     let cfg = SweepConfig::default();
-    let jobs = grid::expand(&cfg);
-    let manifest = runtime.manifest();
+    let jobs = allpairs::sweep::grid::expand(&cfg);
     let mut checked = std::collections::BTreeSet::new();
     for job in jobs {
+        let key = (job.model.clone(), job.loss.clone(), job.batch);
+        if !checked.insert(key) {
+            continue;
+        }
+        let opened = backend.open(&job.model, &job.loss, job.batch);
+        if job.loss == "aucm" {
+            let msg = opened.err().unwrap().to_string();
+            assert!(msg.contains("aucm"), "unhelpful error: {msg}");
+        } else {
+            assert!(opened.is_ok(), "cannot open {}", job.id());
+        }
+    }
+}
+
+#[test]
+fn scheduled_grid_has_matching_artifacts_when_present() {
+    // Config/manifest drift guard for the AOT path: every (model, loss,
+    // batch) the default config schedules must exist in the manifest.
+    // Manifest parsing needs no PJRT, so this runs in every build —
+    // skipped cleanly when `make artifacts` has not been run.
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts directory (run `make artifacts`)");
+        return;
+    }
+    let manifest = allpairs::runtime::Manifest::load(&dir).unwrap();
+    let cfg = SweepConfig::default();
+    let mut checked = std::collections::BTreeSet::new();
+    for job in allpairs::sweep::grid::expand(&cfg) {
         let key = (job.model.clone(), job.loss.clone(), job.batch);
         if !checked.insert(key) {
             continue;

@@ -1,0 +1,221 @@
+//! Property tests for the native backend: its train step must equal a
+//! reference step assembled by hand from `losses::functional` plus
+//! explicit SGD-with-momentum algebra — many random cases, in-tree
+//! generator (same style as `proptest_losses.rs`; the `proptest` crate
+//! is unavailable offline).
+
+use allpairs::data::Rng;
+use allpairs::losses::functional::SquaredHinge;
+use allpairs::losses::PairwiseLoss;
+use allpairs::runtime::{Backend, ModelExecutor, NativeBackend, NativeSpec};
+
+const CASES: usize = 40;
+const MOMENTUM: f32 = 0.9;
+
+struct Case {
+    dim: usize,
+    batch: usize,
+    x: Vec<f32>,
+    is_pos: Vec<f32>,
+    is_neg: Vec<f32>,
+    lr: f32,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let dim = 2 + rng.below(10);
+    let batch = 2 + rng.below(40);
+    let pos_frac = [0.1, 0.3, 0.5][rng.below(3)];
+    let pad_frac = [0.0, 0.2][rng.below(2)];
+    let mut x = Vec::with_capacity(batch * dim);
+    let mut is_pos = Vec::with_capacity(batch);
+    let mut is_neg = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        if rng.uniform() < pad_frac {
+            // padding row: both masks zero, pixels zero
+            is_pos.push(0.0);
+            is_neg.push(0.0);
+            x.resize(x.len() + dim, 0.0);
+        } else {
+            let pos = rng.uniform() < pos_frac;
+            is_pos.push(if pos { 1.0 } else { 0.0 });
+            is_neg.push(if pos { 0.0 } else { 1.0 });
+            for _ in 0..dim {
+                x.push(rng.normal() as f32);
+            }
+        }
+    }
+    Case {
+        dim,
+        batch,
+        x,
+        is_pos,
+        is_neg,
+        lr: [0.01, 0.1][rng.below(2)] as f32,
+    }
+}
+
+/// Reference linear train step: forward, pairwise hinge on real rows,
+/// normalized gradient, manual heavy-ball update.
+fn reference_linear_step(
+    w: &[f32],
+    b: f32,
+    vw: &[f32],
+    vb: f32,
+    case: &Case,
+) -> (f64, Vec<f32>, f32, Vec<f32>, f32) {
+    let dim = case.dim;
+    // forward
+    let scores: Vec<f32> = (0..case.batch)
+        .map(|r| {
+            let row = &case.x[r * dim..(r + 1) * dim];
+            b + row.iter().zip(w).map(|(a, c)| a * c).sum::<f32>()
+        })
+        .collect();
+    // compact real rows
+    let mut c_scores = Vec::new();
+    let mut c_pos = Vec::new();
+    let mut c_rows = Vec::new();
+    for r in 0..case.batch {
+        if case.is_pos[r] != 0.0 || case.is_neg[r] != 0.0 {
+            c_scores.push(scores[r]);
+            c_pos.push(case.is_pos[r]);
+            c_rows.push(r);
+        }
+    }
+    let n_pos = c_pos.iter().filter(|&&p| p != 0.0).count() as f64;
+    let n_neg = c_pos.len() as f64 - n_pos;
+    let norm = (n_pos * n_neg).max(1.0);
+    let (raw, g_scores) = SquaredHinge::new(1.0).loss_and_grad(&c_scores, &c_pos);
+    // parameter gradient
+    let mut gw = vec![0.0_f32; dim];
+    let mut gb = 0.0_f32;
+    for (slot, &r) in c_rows.iter().enumerate() {
+        let ds = (g_scores[slot] as f64 / norm) as f32;
+        let row = &case.x[r * dim..(r + 1) * dim];
+        for (g, &v) in gw.iter_mut().zip(row) {
+            *g += ds * v;
+        }
+        gb += ds;
+    }
+    // heavy-ball
+    let new_vw: Vec<f32> = vw.iter().zip(&gw).map(|(&v, &g)| MOMENTUM * v + g).collect();
+    let new_vb = MOMENTUM * vb + gb;
+    let new_w: Vec<f32> = w
+        .iter()
+        .zip(&new_vw)
+        .map(|(&p, &v)| p - case.lr * v)
+        .collect();
+    let new_b = b - case.lr * new_vb;
+    (raw / norm, new_w, new_b, new_vw, new_vb)
+}
+
+#[test]
+fn prop_native_train_step_equals_functional_plus_manual_sgd() {
+    let mut rng = Rng::new(42);
+    for case_idx in 0..CASES {
+        let case = gen_case(&mut rng);
+        let backend = NativeBackend::new(NativeSpec {
+            input_dim: case.dim,
+            hidden: 0, // linear: the reference is exactly re-derivable
+            margin: 1.0,
+            threads: 1,
+        });
+        let mut exec = backend.open("linear", "hinge", case.batch).unwrap();
+        exec.init(case_idx as u32).unwrap();
+
+        // two steps: the second exercises non-zero momentum state
+        for step in 0..2 {
+            let state = exec.state_to_host().unwrap();
+            let (w, b) = (state[0].data.clone(), state[1].data[0]);
+            let (vw, vb) = (state[2].data.clone(), state[3].data[0]);
+            let (want_loss, want_w, want_b, want_vw, want_vb) =
+                reference_linear_step(&w, b, &vw, vb, &case);
+            let got_loss = exec
+                .train_step(&case.x, &case.is_pos, &case.is_neg, case.lr)
+                .unwrap();
+            let rel = (got_loss - want_loss).abs() / want_loss.abs().max(1.0);
+            assert!(
+                rel < 1e-9,
+                "case {case_idx} step {step}: loss {got_loss} vs {want_loss}"
+            );
+            let after = exec.state_to_host().unwrap();
+            let close = |a: &[f32], b: &[f32], what: &str| {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert!(
+                        (x - y).abs() <= 1e-5 * x.abs().max(1.0),
+                        "case {case_idx} step {step} {what}: {x} vs {y}"
+                    );
+                }
+            };
+            close(&after[0].data, &want_w, "w");
+            close(&after[1].data, &[want_b], "b");
+            close(&after[2].data, &want_vw, "vw");
+            close(&after[3].data, &[want_vb], "vb");
+        }
+    }
+}
+
+#[test]
+fn prop_native_loss_matches_functional_loss_value() {
+    // The reported batch loss equals the functional loss over the real
+    // rows, normalized per pair — across losses.
+    let mut rng = Rng::new(7);
+    for _ in 0..CASES {
+        let case = gen_case(&mut rng);
+        let backend = NativeBackend::new(NativeSpec {
+            input_dim: case.dim,
+            hidden: 4,
+            margin: 1.0,
+            threads: 1,
+        });
+        let mut exec = backend.open("mlp", "hinge", case.batch).unwrap();
+        exec.init(0).unwrap();
+        let scores = exec.predict(&case.x, case.batch).unwrap();
+        let mut c_scores = Vec::new();
+        let mut c_pos = Vec::new();
+        for r in 0..case.batch {
+            if case.is_pos[r] != 0.0 || case.is_neg[r] != 0.0 {
+                c_scores.push(scores[r]);
+                c_pos.push(case.is_pos[r]);
+            }
+        }
+        let n_pos = c_pos.iter().filter(|&&p| p != 0.0).count() as f64;
+        let n_neg = c_pos.len() as f64 - n_pos;
+        let want = SquaredHinge::new(1.0).loss_and_grad(&c_scores, &c_pos).0
+            / (n_pos * n_neg).max(1.0);
+        let got = exec
+            .train_step(&case.x, &case.is_pos, &case.is_neg, 0.0)
+            .unwrap();
+        assert!(
+            (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+            "{got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn prop_predict_is_deterministic_across_thread_counts() {
+    let mut rng = Rng::new(11);
+    for _ in 0..10 {
+        let dim = 8;
+        let rows = 600; // above the rows-per-thread cutoff → parallel path
+        let x: Vec<f32> = (0..rows * dim).map(|_| rng.normal() as f32).collect();
+        let mk = |threads: usize| {
+            NativeBackend::new(NativeSpec {
+                input_dim: dim,
+                hidden: 8,
+                margin: 1.0,
+                threads,
+            })
+        };
+        let b1 = mk(1);
+        let b4 = mk(4);
+        let mut e1 = b1.open("mlp", "hinge", 8).unwrap();
+        let mut e4 = b4.open("mlp", "hinge", 8).unwrap();
+        e1.init(5).unwrap();
+        e4.init(5).unwrap();
+        // forward is row-independent: bit-identical across thread counts
+        assert_eq!(e1.predict(&x, rows).unwrap(), e4.predict(&x, rows).unwrap());
+    }
+}

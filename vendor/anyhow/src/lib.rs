@@ -1,0 +1,151 @@
+//! Minimal, API-compatible subset of the `anyhow` crate, vendored so the
+//! workspace builds with no crates.io access (see DESIGN.md §5.4).
+//!
+//! Supported surface (everything this repo uses):
+//!
+//! * [`Error`] / [`Result`] — a string-message error with an optional
+//!   source chain; like real `anyhow`, `Error` deliberately does **not**
+//!   implement `std::error::Error` (that coherence choice is what allows
+//!   the blanket `From<E: std::error::Error>` conversion `?` relies on).
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros.
+//! * `{:#}` alternate display prints the source chain, mirroring
+//!   anyhow's "cause: ..." output used by the CLI's error reporting.
+
+use std::fmt;
+
+/// `Result` with a defaulted error type, as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-message error with an optional boxed source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// Construct from a concrete error value, keeping it as the source.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(err: E) -> Self {
+        Self {
+            msg: err.to_string(),
+            source: Some(Box::new(err)),
+        }
+    }
+
+    /// Walk the source chain (root cause last).
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        let mut next = self
+            .source
+            .as_deref()
+            .map(|e| e as &(dyn std::error::Error + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in self.chain() {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        for cause in self.chain() {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::new(err)
+    }
+}
+
+/// Format an [`Error`] from format-string arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+        assert_eq!(e.chain().count(), 1);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn bails() -> Result<()> {
+            bail!("nope: {}", "reason");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope: reason");
+        fn ensures(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(ensures(1).is_ok());
+        assert!(ensures(-1).is_err());
+    }
+
+    #[test]
+    fn alternate_display_prints_chain() {
+        let e = Error::new(io_err());
+        let s = format!("{e:#}");
+        assert!(s.contains("disk on fire"));
+    }
+}

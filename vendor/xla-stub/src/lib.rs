@@ -1,0 +1,260 @@
+//! Stub of the `xla` PJRT crate's API surface used by `allpairs`.
+//!
+//! The real crate binds a C++ PJRT plugin, which cannot be built in this
+//! offline environment.  This stub keeps the `pjrt` feature *compiling*
+//! (so the PJRT runtime code stays type-checked and ready) while failing
+//! cleanly at runtime: [`PjRtClient::cpu`] returns an error explaining
+//! that no plugin is linked.  Host-side [`Literal`] construction works
+//! for real, because tests exercise it.
+//!
+//! To run against actual hardware, point the `xla` dependency of
+//! `rust/Cargo.toml` at the real crate instead of this path stub; the
+//! API names and signatures here mirror the subset `allpairs` uses.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::marker::PhantomData;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Stub error type (string message).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn no_plugin<T>() -> Result<T> {
+    Err(Error(
+        "no PJRT plugin linked: this build uses the in-tree xla API stub; \
+         swap vendor/xla-stub for the real xla crate to execute artifacts"
+            .to_string(),
+    ))
+}
+
+/// Element types a [`Literal`] can hold (subset: f32, u32).
+pub trait NativeType: Copy {
+    fn store(values: Vec<Self>) -> Storage;
+    fn load(storage: &Storage) -> Option<&[Self]>;
+}
+
+/// Backing storage of a literal.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+}
+
+impl NativeType for f32 {
+    fn store(values: Vec<Self>) -> Storage {
+        Storage::F32(values)
+    }
+    fn load(storage: &Storage) -> Option<&[Self]> {
+        match storage {
+            Storage::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn store(values: Vec<Self>) -> Storage {
+        Storage::U32(values)
+    }
+    fn load(storage: &Storage) -> Option<&[Self]> {
+        match storage {
+            Storage::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side array shape (dims only; dtype lives in the storage).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Device shape: array or tuple (the runtime only matches on `Tuple`).
+#[derive(Debug, Clone)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// A host-resident dense literal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(value: T) -> Literal {
+        Literal {
+            storage: T::store(vec![value]),
+            dims: Vec::new(),
+        }
+    }
+
+    /// Rank-1 f32 literal.
+    pub fn vec1(values: &[f32]) -> Literal {
+        Literal {
+            storage: Storage::F32(values.to_vec()),
+            dims: vec![values.len() as i64],
+        }
+    }
+
+    /// Reshape without copying semantics (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::U32(v) => v.len(),
+        };
+        if want as usize != have {
+            return Err(Error(format!(
+                "reshape {dims:?} needs {want} elements, literal has {have}"
+            )));
+        }
+        Ok(Literal {
+            storage: self.storage.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.storage)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("literal dtype mismatch".to_string()))
+    }
+
+    /// Stub literals are never tuples.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error("literal is not a tuple".to_string()))
+    }
+}
+
+/// Parsed HLO module (stub: retains nothing).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        // Reading the file keeps manifest-vs-disk validation honest.
+        std::fs::read_to_string(path.as_ref())
+            .map(|_| HloModuleProto { _priv: () })
+            .map_err(|e| Error(format!("reading {}: {e}", path.as_ref().display())))
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client.  `Rc` marker keeps the stub `!Send`, matching the real
+/// crate's threading contract that the sweep scheduler is built around.
+pub struct PjRtClient {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        no_plugin()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        no_plugin()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        no_plugin()
+    }
+}
+
+/// Compiled executable (stub: cannot be constructed).
+pub struct PjRtLoadedExecutable {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        no_plugin()
+    }
+
+    pub fn execute_b<L: Borrow<PjRtBuffer>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        no_plugin()
+    }
+}
+
+/// Device buffer (stub: cannot be constructed).
+pub struct PjRtBuffer {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtBuffer {
+    pub fn on_device_shape(&self) -> Result<Shape> {
+        no_plugin()
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        no_plugin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap().len(), 6);
+        assert!(lit.reshape(&[7]).is_err());
+        assert!(r.to_vec::<u32>().is_err());
+    }
+
+    #[test]
+    fn client_reports_missing_plugin() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("no PJRT plugin"));
+    }
+}
