@@ -1,8 +1,9 @@
 //! Data-path benches: synthetic generation, imbalance subsetting and the
-//! batch-fill hot loop (the only host-side work between PJRT executions).
+//! batch-fill hot loop (the only host-side work between PJRT executions),
+//! plus the stratified epoch-order construction of the streaming loop.
 
 use allpairs::data::synth::{generate, SynthSpec, SYNTH_DATASETS};
-use allpairs::data::{BatchPlan, Rng};
+use allpairs::data::{BatchPlan, EpochSampler, Rng, SamplingMode};
 use allpairs::util::bench::Bench;
 
 fn main() -> anyhow::Result<()> {
@@ -39,6 +40,30 @@ fn main() -> anyhow::Result<()> {
             }
             total
         });
+    }
+
+    // Streaming stratified epochs: order construction + batch fill, in
+    // both composition modes (the `Trainer::fit_stream` hot path).
+    for (label, mode) in [
+        ("preserve", SamplingMode::Preserve),
+        ("rebalance", SamplingMode::Rebalance { pos_fraction: 0.5 }),
+    ] {
+        for &bs in &[100usize, 1000] {
+            let row = train.row_len();
+            let mut x = vec![0.0f32; bs * row];
+            let mut p = vec![0.0f32; bs];
+            let mut q = vec![0.0f32; bs];
+            let mut sampler = EpochSampler::new(&train, &indices, bs, mode);
+            bench.run(format!("stratified_fill/{label}_epoch_bs{bs}"), || {
+                let plan = sampler.epoch_plan(&mut rng);
+                let mut iter = plan.iter(&train);
+                let mut total = 0usize;
+                while let Some(c) = iter.fill_next(&mut x, &mut p, &mut q) {
+                    total += c;
+                }
+                total
+            });
+        }
     }
     bench.write_csv("results/bench_sampler.csv")?;
     Ok(())

@@ -15,6 +15,7 @@
 
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::cv;
+use allpairs::data::SamplingMode;
 use allpairs::runtime::BackendSpec;
 use allpairs::util::cli::Args;
 
@@ -22,6 +23,7 @@ fn main() -> allpairs::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     args.expect_known(&[
         "smoke", "medium", "artifacts", "backend", "out", "workers", "epochs", "config",
+        "patience", "sampling",
     ])?;
     let out = std::path::PathBuf::from(args.get_str("out", "results"));
 
@@ -68,6 +70,15 @@ fn main() -> allpairs::Result<()> {
     }
     cfg.workers = args.get("workers", cfg.workers)?;
     cfg.epochs = args.get("epochs", cfg.epochs)?;
+    if let Some(p) = args.get_opt("patience") {
+        cfg.patience = Some(p.parse()?);
+    }
+    if let Some(modes) = args.get_opt("sampling") {
+        cfg.sampling_modes = modes.split(',').map(|m| m.trim().to_string()).collect();
+        for name in &cfg.sampling_modes {
+            SamplingMode::parse(name)?;
+        }
+    }
 
     eprintln!(
         "sweep: {} runs ({} datasets x {} imratios x {} losses x {} batches x lr-grid x {} seeds) on {} workers ({} backend)",

@@ -35,8 +35,16 @@ pub struct SweepConfig {
     pub batch_sizes: Vec<usize>,
     /// Random seeds (model init + subtrain/validation split).
     pub seeds: Vec<u32>,
-    /// Training epochs per run.
+    /// Training epochs per run (an upper bound when `patience` is set).
     pub epochs: usize,
+    /// Early-stopping patience in epochs: stop a run once validation
+    /// AUC has not improved for this many consecutive epochs
+    /// (None = the paper's fixed-epoch protocol).
+    pub patience: Option<usize>,
+    /// Mini-batch sampling modes to sweep — a hyper-parameter axis like
+    /// `batch_sizes`.  Names per [`crate::data::SamplingMode::parse`]:
+    /// `"preserve"`, `"rebalance"`, `"rebalance:F"`.
+    pub sampling_modes: Vec<String>,
     /// Validation fraction of the (imbalanced) train set.
     pub val_fraction: f64,
     /// Model name (must have matching AOT artifacts).
@@ -68,6 +76,8 @@ impl Default for SweepConfig {
             batch_sizes: vec![10, 50, 100, 500, 1000],
             seeds: vec![0, 1, 2, 3, 4],
             epochs: 20,
+            patience: None,
+            sampling_modes: vec!["preserve".into()],
             val_fraction: 0.2,
             model: "resnet".into(),
             data_seed: 20230223, // the paper's date, for flavor
@@ -124,6 +134,22 @@ impl SweepConfig {
         if let Some(v) = j.get("epochs") {
             c.epochs = v.as_usize().ok_or_else(|| anyhow::anyhow!("epochs"))?;
         }
+        if let Some(v) = j.get("patience") {
+            c.patience = match v {
+                Json::Null => None,
+                other => Some(
+                    other
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("patience must be an integer"))?,
+                ),
+            };
+        }
+        if let Some(v) = j.get("sampling_modes") {
+            c.sampling_modes = strings(v)?;
+            for name in &c.sampling_modes {
+                crate::data::SamplingMode::parse(name)?;
+            }
+        }
         if let Some(v) = j.get("val_fraction") {
             c.val_fraction = v.as_f64().ok_or_else(|| anyhow::anyhow!("val_fraction"))?;
         }
@@ -167,6 +193,14 @@ impl SweepConfig {
                 Json::Arr(self.seeds.iter().map(|&s| Json::num(s as f64)).collect()),
             ),
             ("epochs", Json::num(self.epochs as f64)),
+            (
+                "patience",
+                match self.patience {
+                    Some(p) => Json::num(p as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("sampling_modes", strings(&self.sampling_modes)),
             ("val_fraction", Json::num(self.val_fraction)),
             ("model", Json::str(&self.model)),
             ("data_seed", Json::num(self.data_seed as f64)),
@@ -226,7 +260,12 @@ impl SweepConfig {
     /// Total number of training runs the sweep will schedule.
     pub fn n_runs(&self) -> usize {
         let lrs: usize = self.losses.iter().map(|l| self.lr_grid(l).len()).sum();
-        self.datasets.len() * self.imratios.len() * self.seeds.len() * self.batch_sizes.len() * lrs
+        self.datasets.len()
+            * self.imratios.len()
+            * self.seeds.len()
+            * self.batch_sizes.len()
+            * self.sampling_modes.len()
+            * lrs
     }
 }
 
@@ -267,6 +306,30 @@ mod tests {
         c.save(&path).unwrap();
         let back = SweepConfig::load(&path).unwrap();
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn patience_and_sampling_roundtrip() {
+        let c = SweepConfig {
+            patience: Some(3),
+            sampling_modes: vec!["preserve".into(), "rebalance:0.25".into()],
+            ..Default::default()
+        };
+        let path = std::env::temp_dir().join("allpairs_cfg_stream.json");
+        c.save(&path).unwrap();
+        let back = SweepConfig::load(&path).unwrap();
+        assert_eq!(back, c);
+        // the sampling axis multiplies the run count
+        assert_eq!(back.n_runs(), 2 * SweepConfig::default().n_runs());
+        // invalid mode names are rejected at load time
+        std::fs::write(&path, r#"{"sampling_modes": ["bogus"]}"#).unwrap();
+        assert!(SweepConfig::load(&path).is_err());
+        // non-integer patience is an error, not a silent None ...
+        std::fs::write(&path, r#"{"patience": "5"}"#).unwrap();
+        assert!(SweepConfig::load(&path).is_err());
+        // ... while an explicit null means "no early stopping"
+        std::fs::write(&path, r#"{"patience": null}"#).unwrap();
+        assert_eq!(SweepConfig::load(&path).unwrap().patience, None);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Data substrates: deterministic RNG, synthetic image generators,
-//! dataset containers, splits and the imbalance-aware batch sampler.
+//! dataset containers, splits, the imbalance-aware batch sampler and
+//! the streaming stratified epoch pipeline ([`stream`]).
 //!
 //! The paper's experiments use CIFAR10 / STL10 / Cat&Dog; those downloads
 //! are unavailable in this environment (repro band 0), so [`synth`]
@@ -15,10 +16,12 @@ pub mod dataset;
 pub mod features;
 pub mod rng;
 pub mod sampler;
+pub mod stream;
 pub mod synth;
 
 pub use dataset::{Dataset, Split};
 pub use features::FeatureSpec;
 pub use rng::Rng;
 pub use sampler::{BatchIter, BatchPlan};
+pub use stream::{EpochSampler, SamplingMode};
 pub use synth::{SynthSpec, SYNTH_DATASETS};

@@ -7,6 +7,11 @@
 //!
 //! [`BatchIter`] writes into caller-owned buffers so the training hot
 //! loop performs no per-batch allocation.
+//!
+//! A [`BatchPlan`] is either a plain shuffle ([`BatchPlan::new`]) or an
+//! explicit stratified order built by
+//! [`crate::data::stream::EpochSampler`] ([`BatchPlan::from_order`]);
+//! the iteration machinery is shared.
 
 use super::dataset::Dataset;
 use super::rng::Rng;
@@ -26,6 +31,24 @@ impl BatchPlan {
         let mut order = indices.to_vec();
         rng.shuffle(&mut order);
         Self { order, batch_size }
+    }
+
+    /// Wrap an explicit epoch order into a plan.  Batch `b` spans
+    /// `order[b*batch_size ..]`, so any short batch must be the last —
+    /// which is how [`crate::data::stream::EpochSampler`] builds them.
+    pub fn from_order(order: Vec<u32>, batch_size: usize) -> Self {
+        assert!(batch_size > 0);
+        Self { order, batch_size }
+    }
+
+    /// The flat epoch order (batches are consecutive `batch_size` runs).
+    pub fn order(&self) -> &[u32] {
+        &self.order
+    }
+
+    /// The fixed batch stride.
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
     }
 
     /// Number of batches in the epoch (final one possibly ragged).

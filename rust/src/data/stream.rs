@@ -1,0 +1,454 @@
+//! Streaming epoch pipeline: stratified mini-batch sampling with a
+//! deterministic per-epoch reshuffle.
+//!
+//! The paper's point is that the O(n log n) all-pairs gradient makes
+//! *large* batches affordable on imbalanced data — but a large batch
+//! drawn uniformly from a 0.1%-positive training set still contains
+//! mostly (or only) negatives, and an all-pairs loss over a batch with
+//! no positives is identically zero.  The sampler therefore controls
+//! each batch's class composition explicitly:
+//!
+//! * [`SamplingMode::Preserve`] — every example appears exactly once
+//!   per epoch and positives are spread evenly across batches, so each
+//!   batch mirrors the global imbalance as closely as integer counts
+//!   allow (instead of leaving it to shuffle luck).
+//! * [`SamplingMode::Rebalance`] — every batch is forced to a target
+//!   positive fraction; negatives are consumed exactly once per epoch
+//!   while the (scarce) positives are cycled — shuffled, drained
+//!   without replacement, reshuffled on exhaustion — i.e. classical
+//!   oversampling, but deterministic from the seeded [`Rng`].
+//!
+//! [`EpochSampler::epoch_plan`] emits a fresh [`BatchPlan`] per epoch;
+//! all randomness is drawn from the caller's [`Rng`], so a run is
+//! bit-reproducible from its seed.
+
+use super::dataset::Dataset;
+use super::rng::Rng;
+use super::sampler::BatchPlan;
+
+/// How each mini-batch's positive/negative composition is chosen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplingMode {
+    /// Keep the subset's imbalance: one pass over every example per
+    /// epoch, positives interleaved evenly across batches.
+    Preserve,
+    /// Force every batch to `pos_fraction` positives by oversampling
+    /// the positive class (see module docs).  Falls back to
+    /// [`SamplingMode::Preserve`] when a class is empty or the batch
+    /// size is 1 (no room for a quota).
+    Rebalance {
+        /// Target fraction of positive rows per batch, in (0, 1).
+        pos_fraction: f64,
+    },
+}
+
+impl SamplingMode {
+    /// Parse a config/CLI name: `"preserve"`, `"rebalance"` (= 0.5) or
+    /// `"rebalance:F"` with `F` in (0, 1).
+    pub fn parse(name: &str) -> crate::Result<Self> {
+        match name {
+            "preserve" => Ok(SamplingMode::Preserve),
+            "rebalance" => Ok(SamplingMode::Rebalance { pos_fraction: 0.5 }),
+            other => match other.strip_prefix("rebalance:") {
+                Some(frac) => {
+                    let pos_fraction: f64 = frac
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("sampling mode {other:?}: {e}"))?;
+                    anyhow::ensure!(
+                        pos_fraction > 0.0 && pos_fraction < 1.0,
+                        "sampling mode {other:?}: positive fraction must be in (0, 1)"
+                    );
+                    Ok(SamplingMode::Rebalance { pos_fraction })
+                }
+                None => anyhow::bail!(
+                    "unknown sampling mode {other:?} (preserve | rebalance | rebalance:F)"
+                ),
+            },
+        }
+    }
+
+    /// Canonical name; `parse(mode.name())` round-trips.
+    pub fn name(&self) -> String {
+        match self {
+            SamplingMode::Preserve => "preserve".to_string(),
+            SamplingMode::Rebalance { pos_fraction } => format!("rebalance:{pos_fraction}"),
+        }
+    }
+}
+
+/// Stratified epoch-batch generator over a fixed subset of a dataset.
+///
+/// Construct once per training run, then call [`Self::epoch_plan`] each
+/// epoch; the positive-cycle cursor persists across epochs so
+/// `Rebalance` oversampling rotates through all positives before
+/// repeating any.
+#[derive(Debug, Clone)]
+pub struct EpochSampler {
+    pos: Vec<u32>,
+    neg: Vec<u32>,
+    batch_size: usize,
+    mode: SamplingMode,
+    /// `Rebalance` positive cycle: shuffled, drained, reshuffled.
+    pos_cycle: Vec<u32>,
+    pos_cursor: usize,
+}
+
+impl EpochSampler {
+    /// Partition `indices` (a view into `dataset`) by class.
+    pub fn new(dataset: &Dataset, indices: &[u32], batch_size: usize, mode: SamplingMode) -> Self {
+        assert!(batch_size > 0, "batch size must be positive");
+        if let SamplingMode::Rebalance { pos_fraction } = mode {
+            assert!(
+                pos_fraction > 0.0 && pos_fraction < 1.0,
+                "pos_fraction in (0,1)"
+            );
+        }
+        let mut pos = Vec::new();
+        let mut neg = Vec::new();
+        for &i in indices {
+            if dataset.y[i as usize] != 0.0 {
+                pos.push(i);
+            } else {
+                neg.push(i);
+            }
+        }
+        let pos_cycle = pos.clone();
+        // Start the cursor exhausted: the first draw reshuffles, so the
+        // cycle order never leaks the dataset's example order.
+        let pos_cursor = pos_cycle.len();
+        Self {
+            pos,
+            neg,
+            batch_size,
+            mode,
+            pos_cycle,
+            pos_cursor,
+        }
+    }
+
+    pub fn n_pos(&self) -> usize {
+        self.pos.len()
+    }
+
+    pub fn n_neg(&self) -> usize {
+        self.neg.len()
+    }
+
+    /// The mode actually in effect (see [`SamplingMode::Rebalance`]'s
+    /// fallback conditions).
+    pub fn effective_mode(&self) -> SamplingMode {
+        match self.mode {
+            SamplingMode::Rebalance { pos_fraction }
+                if self.batch_size >= 2 && !self.pos.is_empty() && !self.neg.is_empty() =>
+            {
+                SamplingMode::Rebalance { pos_fraction }
+            }
+            _ => SamplingMode::Preserve,
+        }
+    }
+
+    /// Positive rows per batch under `Rebalance` (at least one of each
+    /// class; only meaningful when `effective_mode` is `Rebalance`).
+    fn rebalance_quota(&self, pos_fraction: f64) -> usize {
+        ((self.batch_size as f64 * pos_fraction).round() as usize).clamp(1, self.batch_size - 1)
+    }
+
+    /// Number of batches every epoch will contain (the final one may be
+    /// ragged).
+    pub fn n_batches(&self) -> usize {
+        match self.effective_mode() {
+            SamplingMode::Preserve => (self.pos.len() + self.neg.len()).div_ceil(self.batch_size),
+            SamplingMode::Rebalance { pos_fraction } => {
+                let per_batch = self.batch_size - self.rebalance_quota(pos_fraction);
+                self.neg.len().div_ceil(per_batch)
+            }
+        }
+    }
+
+    /// Next positive from the oversampling cycle.
+    fn next_pos(&mut self, rng: &mut Rng) -> u32 {
+        if self.pos_cursor >= self.pos_cycle.len() {
+            rng.shuffle(&mut self.pos_cycle);
+            self.pos_cursor = 0;
+        }
+        let v = self.pos_cycle[self.pos_cursor];
+        self.pos_cursor += 1;
+        v
+    }
+
+    /// One epoch's shuffled, stratified batch order.
+    pub fn epoch_plan(&mut self, rng: &mut Rng) -> BatchPlan {
+        let order = match self.effective_mode() {
+            SamplingMode::Preserve => self.preserve_order(rng),
+            SamplingMode::Rebalance { pos_fraction } => self.rebalance_order(pos_fraction, rng),
+        };
+        BatchPlan::from_order(order, self.batch_size)
+    }
+
+    /// Shuffle each class, then interleave proportionally (a Bresenham
+    /// error accumulator), so batch `b` holds its integer share of
+    /// positives.  Emits every index exactly once.
+    fn preserve_order(&self, rng: &mut Rng) -> Vec<u32> {
+        let mut pos = self.pos.clone();
+        rng.shuffle(&mut pos);
+        let mut neg = self.neg.clone();
+        rng.shuffle(&mut neg);
+        let n = pos.len() + neg.len();
+        let mut order = Vec::with_capacity(n);
+        let (mut pi, mut ni) = (0usize, 0usize);
+        // Each step adds n_pos to the accumulator; crossing n emits a
+        // positive.  Over n steps that emits exactly n_pos positives,
+        // evenly spaced (the accumulator ends back at zero).
+        let mut acc = 0usize;
+        for _ in 0..n {
+            acc += pos.len();
+            if acc >= n {
+                acc -= n;
+                order.push(pos[pi]);
+                pi += 1;
+            } else {
+                order.push(neg[ni]);
+                ni += 1;
+            }
+        }
+        debug_assert_eq!(pi, pos.len());
+        debug_assert_eq!(ni, neg.len());
+        order
+    }
+
+    /// Quota batches: `k_pos` positives from the cycle + negatives
+    /// consumed exactly once per epoch.  Only the final batch may be
+    /// short (so fixed-stride batch boundaries stay aligned).
+    fn rebalance_order(&mut self, pos_fraction: f64, rng: &mut Rng) -> Vec<u32> {
+        let k_pos = self.rebalance_quota(pos_fraction);
+        let k_neg = self.batch_size - k_pos;
+        let mut neg = self.neg.clone();
+        rng.shuffle(&mut neg);
+        let n_batches = neg.len().div_ceil(k_neg);
+        let mut order = Vec::with_capacity(n_batches * self.batch_size);
+        let mut ni = 0usize;
+        for _ in 0..n_batches {
+            for _ in 0..k_pos {
+                let p = self.next_pos(rng);
+                order.push(p);
+            }
+            let take = k_neg.min(neg.len() - ni);
+            order.extend_from_slice(&neg[ni..ni + take]);
+            ni += take;
+        }
+        debug_assert_eq!(ni, neg.len());
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `n` examples, positive iff `i < n_pos` (feature 0 encodes `i`).
+    fn toy(n: usize, n_pos: usize) -> Dataset {
+        let y: Vec<f32> = (0..n).map(|i| if i < n_pos { 1.0 } else { 0.0 }).collect();
+        let x: Vec<f32> = (0..n * 2).map(|i| i as f32).collect();
+        Dataset::new(x, y, 0, 2)
+    }
+
+    fn batch_compositions(
+        d: &Dataset,
+        plan: &BatchPlan,
+        batch_size: usize,
+    ) -> Vec<(usize, usize)> {
+        let row = d.row_len();
+        let mut x = vec![0.0f32; batch_size * row];
+        let mut p = vec![0.0f32; batch_size];
+        let mut q = vec![0.0f32; batch_size];
+        let mut out = Vec::new();
+        let mut it = plan.iter(d);
+        while let Some(count) = it.fill_next(&mut x, &mut p, &mut q) {
+            let pos = (0..count).filter(|&i| p[i] != 0.0).count();
+            out.push((pos, count - pos));
+        }
+        out
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for mode in [
+            SamplingMode::Preserve,
+            SamplingMode::Rebalance { pos_fraction: 0.5 },
+            SamplingMode::Rebalance { pos_fraction: 0.25 },
+        ] {
+            assert_eq!(SamplingMode::parse(&mode.name()).unwrap(), mode);
+        }
+        assert_eq!(
+            SamplingMode::parse("rebalance").unwrap(),
+            SamplingMode::Rebalance { pos_fraction: 0.5 }
+        );
+        assert!(SamplingMode::parse("bogus").is_err());
+        assert!(SamplingMode::parse("rebalance:0").is_err());
+        assert!(SamplingMode::parse("rebalance:1.5").is_err());
+        assert!(SamplingMode::parse("rebalance:x").is_err());
+    }
+
+    #[test]
+    fn preserve_covers_every_example_once_with_even_positives() {
+        let d = toy(103, 13);
+        let indices: Vec<u32> = (0..103).collect();
+        let mut sampler = EpochSampler::new(&d, &indices, 10, SamplingMode::Preserve);
+        assert_eq!(sampler.n_batches(), 11);
+        let plan = sampler.epoch_plan(&mut Rng::new(1));
+        let comps = batch_compositions(&d, &plan, 10);
+        assert_eq!(comps.len(), 11);
+        let total_pos: usize = comps.iter().map(|c| c.0).sum();
+        let total: usize = comps.iter().map(|c| c.0 + c.1).sum();
+        assert_eq!(total_pos, 13);
+        assert_eq!(total, 103);
+        // proportional share is 13/103 ~ 1.26 per 10-row batch: every
+        // full batch gets 1 or 2 positives, never 0 or 3+
+        for &(pos, neg) in &comps {
+            if pos + neg == 10 {
+                assert!((1..=2).contains(&pos), "batch had {pos} positives");
+            }
+        }
+    }
+
+    #[test]
+    fn preserve_epoch_is_a_permutation() {
+        let d = toy(50, 20);
+        let indices: Vec<u32> = (0..50).collect();
+        let mut sampler = EpochSampler::new(&d, &indices, 7, SamplingMode::Preserve);
+        let plan = sampler.epoch_plan(&mut Rng::new(2));
+        let mut order = plan.order().to_vec();
+        order.sort_unstable();
+        assert_eq!(order, (0..50).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn rebalance_hits_the_quota_every_batch() {
+        let d = toy(1000, 10); // 1% positive
+        let indices: Vec<u32> = (0..1000).collect();
+        let mut sampler = EpochSampler::new(
+            &d,
+            &indices,
+            100,
+            SamplingMode::Rebalance { pos_fraction: 0.5 },
+        );
+        // 990 negatives at 50 per batch -> 20 batches
+        assert_eq!(sampler.n_batches(), 20);
+        let plan = sampler.epoch_plan(&mut Rng::new(3));
+        let comps = batch_compositions(&d, &plan, 100);
+        assert_eq!(comps.len(), 20);
+        for &(pos, _) in &comps {
+            assert_eq!(pos, 50);
+        }
+        // negatives are covered exactly once
+        let neg_total: usize = comps.iter().map(|c| c.1).sum();
+        assert_eq!(neg_total, 990);
+    }
+
+    #[test]
+    fn rebalance_cycles_all_positives_before_repeating() {
+        let d = toy(200, 8);
+        let indices: Vec<u32> = (0..200).collect();
+        let mut sampler = EpochSampler::new(
+            &d,
+            &indices,
+            32,
+            SamplingMode::Rebalance { pos_fraction: 0.25 },
+        );
+        let plan = sampler.epoch_plan(&mut Rng::new(4));
+        let positives: Vec<u32> = plan
+            .order()
+            .iter()
+            .copied()
+            .filter(|&i| d.y[i as usize] != 0.0)
+            .collect();
+        // within each full cycle of 8 draws, all 8 distinct positives
+        for cycle in positives.chunks(8) {
+            let mut c = cycle.to_vec();
+            c.sort_unstable();
+            c.dedup();
+            assert_eq!(c.len(), cycle.len(), "repeat inside a cycle");
+        }
+    }
+
+    #[test]
+    fn rebalance_final_batch_may_be_short_but_boundaries_align() {
+        let d = toy(107, 7);
+        let indices: Vec<u32> = (0..107).collect();
+        let mut sampler = EpochSampler::new(
+            &d,
+            &indices,
+            20,
+            SamplingMode::Rebalance { pos_fraction: 0.2 },
+        );
+        // quota 4 pos + 16 neg; 100 negatives -> 6 full + 1 short batch
+        assert_eq!(sampler.n_batches(), 7);
+        let plan = sampler.epoch_plan(&mut Rng::new(5));
+        let comps = batch_compositions(&d, &plan, 20);
+        assert_eq!(comps.len(), 7);
+        for &(pos, _) in &comps {
+            assert_eq!(pos, 4);
+        }
+        assert_eq!(comps.last().unwrap().1, 100 - 6 * 16);
+    }
+
+    #[test]
+    fn degenerate_inputs_fall_back_to_preserve() {
+        let all_neg = toy(30, 0);
+        let indices: Vec<u32> = (0..30).collect();
+        let mut s = EpochSampler::new(
+            &all_neg,
+            &indices,
+            8,
+            SamplingMode::Rebalance { pos_fraction: 0.5 },
+        );
+        assert_eq!(s.effective_mode(), SamplingMode::Preserve);
+        let plan = s.epoch_plan(&mut Rng::new(6));
+        assert_eq!(plan.order().len(), 30);
+
+        let mut tiny_batch = EpochSampler::new(
+            &toy(10, 5),
+            &(0..10).collect::<Vec<u32>>(),
+            1,
+            SamplingMode::Rebalance { pos_fraction: 0.5 },
+        );
+        assert_eq!(tiny_batch.effective_mode(), SamplingMode::Preserve);
+        assert_eq!(tiny_batch.epoch_plan(&mut Rng::new(7)).order().len(), 10);
+    }
+
+    #[test]
+    fn epochs_reshuffle_deterministically() {
+        let d = toy(60, 12);
+        let indices: Vec<u32> = (0..60).collect();
+        for mode in [
+            SamplingMode::Preserve,
+            SamplingMode::Rebalance { pos_fraction: 0.5 },
+        ] {
+            let mut a = EpochSampler::new(&d, &indices, 8, mode);
+            let mut b = EpochSampler::new(&d, &indices, 8, mode);
+            let mut rng_a = Rng::new(9);
+            let mut rng_b = Rng::new(9);
+            let a1 = a.epoch_plan(&mut rng_a).order().to_vec();
+            let a2 = a.epoch_plan(&mut rng_a).order().to_vec();
+            let b1 = b.epoch_plan(&mut rng_b).order().to_vec();
+            assert_eq!(a1, b1, "same seed, same first epoch");
+            assert_ne!(a1, a2, "consecutive epochs reshuffle");
+        }
+    }
+
+    #[test]
+    fn subset_view_respected() {
+        let d = toy(100, 50);
+        let indices: Vec<u32> = (40..80).collect();
+        let mut sampler = EpochSampler::new(
+            &d,
+            &indices,
+            16,
+            SamplingMode::Rebalance { pos_fraction: 0.5 },
+        );
+        assert_eq!(sampler.n_pos(), 10); // 40..50 positive
+        assert_eq!(sampler.n_neg(), 30);
+        let plan = sampler.epoch_plan(&mut Rng::new(10));
+        assert!(plan.order().iter().all(|&i| (40..80).contains(&i)));
+    }
+}

@@ -32,18 +32,11 @@ impl Square {
         assert!(margin >= 0.0, "margin must be non-negative");
         Self { margin }
     }
-}
 
-impl PairwiseLoss for Square {
-    fn name(&self) -> &'static str {
-        "functional_square"
-    }
-
-    fn complexity(&self) -> &'static str {
-        "O(n)"
-    }
-
-    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
+    /// Loss + gradient written into `grad` (cleared and refilled) — the
+    /// allocation-free hot path.  Algorithm 1 needs no sort and hence
+    /// no scratch beyond the gradient buffer itself.
+    pub fn loss_and_grad_into(&self, scores: &[f32], is_pos: &[f32], grad: &mut Vec<f32>) -> f64 {
         assert_eq!(scores.len(), is_pos.len());
         let m = self.margin as f64;
         // Pass 1: the six global sums (paper eqs. 11-13 + mirrors).
@@ -65,18 +58,31 @@ impl PairwiseLoss for Square {
         // Loss (eq. 15): sum_k a+ yk^2 + b+ yk + c+.
         let loss = n_pos * q_neg + b_pos * s_neg + c_pos * n_neg;
         // Pass 2: closed-form per-element gradient.
-        let grad = scores
-            .iter()
-            .zip(is_pos)
-            .map(|(&y, &p)| {
-                let y = y as f64;
-                if p != 0.0 {
-                    (-2.0 * (n_neg * (m - y) + s_neg)) as f32
-                } else {
-                    (2.0 * n_pos * y + b_pos) as f32
-                }
-            })
-            .collect();
+        grad.clear();
+        grad.extend(scores.iter().zip(is_pos).map(|(&y, &p)| {
+            let y = y as f64;
+            if p != 0.0 {
+                (-2.0 * (n_neg * (m - y) + s_neg)) as f32
+            } else {
+                (2.0 * n_pos * y + b_pos) as f32
+            }
+        }));
+        loss
+    }
+}
+
+impl PairwiseLoss for Square {
+    fn name(&self) -> &'static str {
+        "functional_square"
+    }
+
+    fn complexity(&self) -> &'static str {
+        "O(n)"
+    }
+
+    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
+        let mut grad = Vec::new();
+        let loss = self.loss_and_grad_into(scores, is_pos, &mut grad);
         (loss, grad)
     }
 }

@@ -21,6 +21,25 @@ pub fn log1p_exp_neg(z: f64) -> f64 {
     }
 }
 
+impl Logistic {
+    /// Loss + gradient written into `grad` (cleared and refilled) — the
+    /// allocation-free hot path.
+    pub fn loss_and_grad_into(&self, scores: &[f32], is_pos: &[f32], grad: &mut Vec<f32>) -> f64 {
+        assert_eq!(scores.len(), is_pos.len());
+        let mut loss = 0.0_f64;
+        grad.clear();
+        grad.extend(scores.iter().zip(is_pos).map(|(&s, &p)| {
+            let y = if p != 0.0 { 1.0 } else { -1.0 };
+            let z = y * s as f64;
+            loss += log1p_exp_neg(z);
+            // d/ds log(1+exp(-ys)) = -y sigmoid(-ys)
+            let sig = 1.0 / (1.0 + z.exp());
+            (-y * sig) as f32
+        }));
+        loss
+    }
+}
+
 impl PairwiseLoss for Logistic {
     fn name(&self) -> &'static str {
         "logistic"
@@ -31,20 +50,8 @@ impl PairwiseLoss for Logistic {
     }
 
     fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
-        assert_eq!(scores.len(), is_pos.len());
-        let mut loss = 0.0_f64;
-        let grad = scores
-            .iter()
-            .zip(is_pos)
-            .map(|(&s, &p)| {
-                let y = if p != 0.0 { 1.0 } else { -1.0 };
-                let z = y * s as f64;
-                loss += log1p_exp_neg(z);
-                // d/ds log(1+exp(-ys)) = -y sigmoid(-ys)
-                let sig = 1.0 / (1.0 + z.exp());
-                (-y * sig) as f32
-            })
-            .collect();
+        let mut grad = Vec::new();
+        let loss = self.loss_and_grad_into(scores, is_pos, &mut grad);
         (loss, grad)
     }
 }

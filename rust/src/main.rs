@@ -20,11 +20,11 @@ use std::path::{Path, PathBuf};
 
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::{cv, timing};
-use allpairs::data::{Rng, Split};
+use allpairs::data::{Rng, SamplingMode, Split};
 use allpairs::report::figures::{ascii_loglog, write_csv};
 use allpairs::runtime::BackendSpec;
 use allpairs::sweep::results;
-use allpairs::train::Trainer;
+use allpairs::train::{FitConfig, Trainer};
 use allpairs::util::cli::Args;
 
 const USAGE: &str = "\
@@ -46,9 +46,14 @@ COMMANDS
       --config FILE     JSON config (defaults = paper protocol)
       --smoke           tiny grid + tiny data (minutes, not hours)
       --workers W       worker threads               [n_cpus]
-  train             one training run
+      --patience P      early-stop after P stale epochs  [off]
+      --sampling MODES  comma-separated batch sampling axis
+                        (preserve | rebalance | rebalance:F)
+  train             one training run (streaming epoch loop)
       --dataset D --loss L --model M --batch B --lr LR
       --imratio R --epochs E --seed S --max-train N
+      --patience P      early-stop after P stale epochs  [off]
+      --sampling MODE   preserve | rebalance | rebalance:F  [preserve]
   report            re-aggregate a saved results file
       --results FILE    sweep_results.jsonl path
   artifacts-check   compile every artifact, smoke-run the inits (pjrt)
@@ -136,7 +141,8 @@ fn cmd_timing(args: &Args, out: &Path) -> allpairs::Result<()> {
 
 fn cmd_sweep(args: &Args, artifacts: &Path, out: &Path) -> allpairs::Result<()> {
     args.expect_known(&[
-        "artifacts", "out", "backend", "config", "smoke", "workers", "epochs",
+        "artifacts", "out", "backend", "config", "smoke", "workers", "epochs", "patience",
+        "sampling",
     ])?;
     let mut cfg = match args.get_opt("config") {
         Some(path) => SweepConfig::load(path)?,
@@ -162,6 +168,15 @@ fn cmd_sweep(args: &Args, artifacts: &Path, out: &Path) -> allpairs::Result<()> 
     }
     cfg.workers = args.get("workers", cfg.workers)?;
     cfg.epochs = args.get("epochs", cfg.epochs)?;
+    if let Some(p) = args.get_opt("patience") {
+        cfg.patience = Some(p.parse()?);
+    }
+    if let Some(modes) = args.get_opt("sampling") {
+        cfg.sampling_modes = modes.split(',').map(|m| m.trim().to_string()).collect();
+        for name in &cfg.sampling_modes {
+            SamplingMode::parse(name)?;
+        }
+    }
     eprintln!(
         "sweep: {} runs on {} workers ({} backend) ...",
         cfg.n_runs(),
@@ -194,7 +209,7 @@ fn cmd_sweep(args: &Args, artifacts: &Path, out: &Path) -> allpairs::Result<()> 
 fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
     args.expect_known(&[
         "artifacts", "out", "backend", "dataset", "loss", "model", "batch", "lr", "imratio",
-        "epochs", "seed", "max-train",
+        "epochs", "seed", "max-train", "patience", "sampling",
     ])?;
     let dataset = args.get_str("dataset", "synth-cifar");
     let loss = args.get_str("loss", "hinge");
@@ -205,6 +220,8 @@ fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
     let epochs: usize = args.get("epochs", 10)?;
     let seed: u32 = args.get("seed", 0)?;
     let max_train: Option<usize> = args.get_opt("max-train").map(|v| v.parse()).transpose()?;
+    let patience: Option<usize> = args.get_opt("patience").map(|v| v.parse()).transpose()?;
+    let sampling = SamplingMode::parse(&args.get_str("sampling", "preserve"))?;
 
     let cfg = SweepConfig {
         datasets: vec![dataset.clone()],
@@ -226,16 +243,21 @@ fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
     let spec = backend_from_args(args, artifacts)?.unwrap_or_default();
     let backend = spec.connect()?;
     let mut trainer = Trainer::new(backend.as_ref(), &model, &loss, batch)?;
-    let history = trainer.fit(
+    let fit_cfg = FitConfig {
+        lr: lr as f32,
+        epochs,
+        patience,
+        sampling,
+        seed,
+    };
+    let outcome = trainer.fit_stream(
         &train,
         &split.subtrain,
         &split.validation,
-        lr as f32,
-        epochs,
-        seed,
+        &fit_cfg,
         &mut rng,
     )?;
-    for r in &history.records {
+    for r in &outcome.history.records {
         println!(
             "epoch {:3}  loss {:10.6}  val_auc {}  ({:.2}s)",
             r.epoch,
@@ -246,8 +268,20 @@ fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
             r.seconds
         );
     }
+    if outcome.stopped_early {
+        println!("early stop: no improvement in {} epochs", patience.unwrap_or(0));
+    }
+    if outcome.diverged {
+        println!("diverged (non-finite training loss)");
+    }
     let test_indices: Vec<u32> = (0..pool.test.len() as u32).collect();
-    if let Some(test_auc) = trainer.eval_auc(&pool.test, &test_indices)? {
+    if let Some(best) = &outcome.best {
+        println!("best val AUC {:.4} at epoch {}", best.val_auc, best.epoch);
+        trainer.load_state(&best.state)?;
+        if let Some(test_auc) = trainer.eval_auc(&pool.test, &test_indices)? {
+            println!("test AUC at best checkpoint: {test_auc:.4}");
+        }
+    } else if let Some(test_auc) = trainer.eval_auc(&pool.test, &test_indices)? {
         println!("final test AUC: {test_auc:.4}");
     }
     Ok(())

@@ -472,7 +472,10 @@ impl LossKind {
         }
     }
 
-    /// Unnormalized loss, gradient written into `grad`.
+    /// Unnormalized loss, gradient written into `grad`.  Every arm
+    /// reuses the caller's buffers, so the train-step hot loop performs
+    /// no per-batch allocation regardless of the loss (see
+    /// EXPERIMENTS.md §Perf).
     fn loss_and_grad_into(
         &self,
         scores: &[f32],
@@ -482,18 +485,8 @@ impl LossKind {
     ) -> f64 {
         match self {
             LossKind::Hinge(h) => h.loss_and_grad_with(scores, is_pos, grad, scratch),
-            LossKind::Square(s) => {
-                let (loss, g) = s.loss_and_grad(scores, is_pos);
-                grad.clear();
-                grad.extend_from_slice(&g);
-                loss
-            }
-            LossKind::Logistic => {
-                let (loss, g) = logistic::Logistic.loss_and_grad(scores, is_pos);
-                grad.clear();
-                grad.extend_from_slice(&g);
-                loss
-            }
+            LossKind::Square(s) => s.loss_and_grad_into(scores, is_pos, grad),
+            LossKind::Logistic => logistic::Logistic.loss_and_grad_into(scores, is_pos, grad),
         }
     }
 
@@ -514,10 +507,10 @@ impl LossKind {
 // ---------------------------------------------------------------------------
 
 /// Native [`ModelExecutor`]: flat parameter + momentum vectors, reusable
-/// scratch buffers.  With the default hinge loss the train step is
-/// allocation-free after warm-up (see EXPERIMENTS.md §Perf); square and
-/// logistic allocate one gradient vector per step inside
-/// [`PairwiseLoss::loss_and_grad`].
+/// scratch buffers.  The train step is allocation-free after warm-up
+/// for every loss — hinge via [`SquaredHinge::loss_and_grad_with`],
+/// square/logistic via their `loss_and_grad_into` paths (see
+/// EXPERIMENTS.md §Perf).
 struct NativeExecutor {
     arch: ModelArch,
     loss: LossKind,

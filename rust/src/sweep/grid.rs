@@ -14,6 +14,11 @@ pub struct Job {
     pub seed: u32,
     pub model: String,
     pub epochs: usize,
+    /// Early-stopping patience (None = fixed-epoch protocol).
+    pub patience: Option<usize>,
+    /// Mini-batch sampling mode name (see
+    /// [`crate::data::SamplingMode::parse`]); a sweepable axis.
+    pub sampling: String,
 }
 
 impl Job {
@@ -27,6 +32,14 @@ impl Job {
             ("seed", Json::num(self.seed as f64)),
             ("model", Json::str(&self.model)),
             ("epochs", Json::num(self.epochs as f64)),
+            (
+                "patience",
+                match self.patience {
+                    Some(p) => Json::num(p as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("sampling", Json::str(&self.sampling)),
         ])
     }
 
@@ -51,14 +64,41 @@ impl Job {
             seed: n("seed")? as u32,
             model: s("model")?,
             epochs: n("epochs")? as usize,
+            // absent in pre-streaming JSONL files: default to the old
+            // fixed-epoch, plain-shuffle behavior
+            patience: j.get("patience").and_then(|v| v.as_usize()),
+            sampling: j
+                .get("sampling")
+                .and_then(|v| v.as_str())
+                .unwrap_or("preserve")
+                .to_string(),
         })
     }
-    /// Stable id for logs and result files.
+
+    /// Stable id for logs and result files.  Streaming knobs appear
+    /// only when non-default, so pre-streaming ids are unchanged.
     pub fn id(&self) -> String {
-        format!(
+        let mut id = format!(
             "{}_im{}_{}_bs{}_lr{:.0e}_s{}",
             self.dataset, self.imratio, self.loss, self.batch, self.lr, self.seed
-        )
+        );
+        if self.sampling != "preserve" {
+            id.push('_');
+            id.push_str(&self.sampling);
+        }
+        if let Some(p) = self.patience {
+            id.push_str(&format!("_pat{p}"));
+        }
+        id
+    }
+
+    /// Key of the *data* a job sees: dataset, imratio and seed — and
+    /// nothing else.  Jobs differing only in training hyper-parameters
+    /// (batch, lr, sampling, patience) must train and validate on the
+    /// identical imbalanced subset and split, or hyper-parameter
+    /// comparisons confound data with the knob under study.
+    pub fn data_key(&self) -> String {
+        format!("{}_im{}_s{}", self.dataset, self.imratio, self.seed)
     }
 
     /// Selection group: runs competing for the same Table-2 cell.
@@ -90,24 +130,28 @@ pub fn expand(config: &SweepConfig) -> Vec<Job> {
     let mut jobs = Vec::with_capacity(config.n_runs());
     for &seed in &config.seeds {
         for lr_idx in 0..max_lr_len {
-            for &batch in &config.batch_sizes {
-                for dataset in &config.datasets {
-                    for &imratio in &config.imratios {
-                        for loss in &config.losses {
-                            let grid = config.lr_grid(loss);
-                            let Some(&lr) = grid.get(lr_idx) else {
-                                continue;
-                            };
-                            jobs.push(Job {
-                                dataset: dataset.clone(),
-                                imratio,
-                                loss: loss.clone(),
-                                batch,
-                                lr,
-                                seed,
-                                model: config.model.clone(),
-                                epochs: config.epochs,
-                            });
+            for sampling in &config.sampling_modes {
+                for &batch in &config.batch_sizes {
+                    for dataset in &config.datasets {
+                        for &imratio in &config.imratios {
+                            for loss in &config.losses {
+                                let grid = config.lr_grid(loss);
+                                let Some(&lr) = grid.get(lr_idx) else {
+                                    continue;
+                                };
+                                jobs.push(Job {
+                                    dataset: dataset.clone(),
+                                    imratio,
+                                    loss: loss.clone(),
+                                    batch,
+                                    lr,
+                                    seed,
+                                    model: config.model.clone(),
+                                    epochs: config.epochs,
+                                    patience: config.patience,
+                                    sampling: sampling.clone(),
+                                });
+                            }
                         }
                     }
                 }
@@ -201,7 +245,7 @@ mod tests {
 
     #[test]
     fn job_id_is_unique_key() {
-        let j = Job {
+        let mut j = Job {
             dataset: "d".into(),
             imratio: 0.01,
             loss: "hinge".into(),
@@ -210,7 +254,67 @@ mod tests {
             seed: 3,
             model: "resnet".into(),
             epochs: 5,
+            patience: None,
+            sampling: "preserve".into(),
         };
         assert_eq!(j.id(), "d_im0.01_hinge_bs500_lr3e-2_s3");
+        j.sampling = "rebalance:0.5".into();
+        j.patience = Some(4);
+        assert_eq!(j.id(), "d_im0.01_hinge_bs500_lr3e-2_s3_rebalance:0.5_pat4");
+    }
+
+    #[test]
+    fn data_key_ignores_training_knobs() {
+        // Jobs competing in one selection group must see identical data
+        // (runner seeds the imbalance/split RNG from data_key).
+        let a = Job {
+            dataset: "d".into(),
+            imratio: 0.01,
+            loss: "hinge".into(),
+            batch: 50,
+            lr: 0.01,
+            seed: 3,
+            model: "resnet".into(),
+            epochs: 5,
+            patience: None,
+            sampling: "preserve".into(),
+        };
+        let mut b = a.clone();
+        b.loss = "logistic".into();
+        b.batch = 1000;
+        b.lr = 1.0;
+        b.sampling = "rebalance:0.5".into();
+        b.patience = Some(9);
+        assert_eq!(a.data_key(), b.data_key());
+        assert_ne!(a.id(), b.id());
+        let mut c = a.clone();
+        c.seed = 7;
+        assert_ne!(a.data_key(), c.data_key());
+    }
+
+    #[test]
+    fn sampling_axis_expands_and_roundtrips() {
+        let c = SweepConfig {
+            sampling_modes: vec!["preserve".into(), "rebalance:0.5".into()],
+            patience: Some(3),
+            ..small_config()
+        };
+        let jobs = expand(&c);
+        assert_eq!(jobs.len(), c.n_runs());
+        let preserve = jobs.iter().filter(|j| j.sampling == "preserve").count();
+        assert_eq!(preserve * 2, jobs.len());
+        assert!(jobs.iter().all(|j| j.patience == Some(3)));
+        // JSON round-trip carries the new fields...
+        let j = &jobs[0];
+        assert_eq!(&Job::from_json(&j.to_json()).unwrap(), j);
+        // ...and pre-streaming records (no such keys) parse to defaults
+        let mut legacy = j.to_json();
+        if let crate::util::json::Json::Obj(fields) = &mut legacy {
+            fields.remove("patience");
+            fields.remove("sampling");
+        }
+        let parsed = Job::from_json(&legacy).unwrap();
+        assert_eq!(parsed.patience, None);
+        assert_eq!(parsed.sampling, "preserve");
     }
 }

@@ -1,11 +1,13 @@
 //! Hyper-parameter sweep engine (the paper's section 4.2 protocol).
 //!
 //! * [`grid`] — expands a [`crate::config::SweepConfig`] into the full
-//!   cartesian job list (dataset × imratio × loss × batch × lr × seed).
+//!   cartesian job list (dataset × imratio × loss × batch × sampling
+//!   mode × lr × seed).
 //! * [`runner`] — runs one job end to end: imbalance the train pool,
-//!   stratified 80/20 subtrain/validation split, train with per-epoch
-//!   validation AUC, track the best-epoch state, and evaluate **test**
-//!   AUC at that state.
+//!   stratified 80/20 subtrain/validation split, stream stratified
+//!   epochs with per-epoch validation AUC and optional early stopping,
+//!   track the best-epoch state, and evaluate **test** AUC at that
+//!   state.
 //! * [`scheduler`] — executes the job list on worker threads; each
 //!   worker connects its own backend from a shared
 //!   [`crate::runtime::BackendSpec`] (the PJRT client is not `Send`).

@@ -137,6 +137,8 @@ mod tests {
                 seed,
                 model: "resnet".into(),
                 epochs: 2,
+                patience: None,
+                sampling: "preserve".into(),
             },
             best_val_auc: Some(auc),
             best_epoch: Some(1),

@@ -1,20 +1,24 @@
 //! End-to-end execution of a single sweep job.
 //!
-//! Protocol per job (paper section 4.2):
+//! Protocol per job (paper section 4.2, streaming pipeline):
 //!
-//! 1. imbalance the shared train pool to `job.imratio` (seeded by
-//!    `job.seed` — each seed removes a different random positive subset);
+//! 1. imbalance the shared train pool to `job.imratio`, seeded by
+//!    [`Job::data_key`] (dataset, imratio, seed) so every run competing
+//!    in the same selection group — across batch, lr, sampling mode and
+//!    patience — sees the *identical* subset, and each seed removes a
+//!    different random positive subset;
 //! 2. stratified 80/20 subtrain/validation split (seeded likewise);
-//! 3. train `job.epochs` epochs; after each epoch compute validation AUC
-//!    and snapshot the state to host whenever it improves;
-//! 4. restore the best state and evaluate **test** AUC on the balanced
-//!    test set.
+//! 3. [`Trainer::fit_stream`]: up to `job.epochs` stratified epochs
+//!    under `job.sampling`, per-epoch validation AUC, best-checkpoint
+//!    tracking, early stopping after `job.patience` stale epochs;
+//! 4. restore the best checkpoint and evaluate **test** AUC on the
+//!    balanced test set.
 
 use std::sync::Arc;
 
-use crate::data::{Dataset, Rng, Split};
+use crate::data::{Dataset, Rng, SamplingMode, Split};
 use crate::runtime::Backend;
-use crate::train::{EpochRecord, History, Trainer};
+use crate::train::{FitConfig, Trainer};
 
 use super::grid::Job;
 use super::results::RunResult;
@@ -31,54 +35,39 @@ pub struct JobData {
 /// Run one job to completion on the given backend.
 pub fn run_job(backend: &dyn Backend, job: &Job, data: &JobData) -> crate::Result<RunResult> {
     let t0 = std::time::Instant::now();
-    // Seed streams: independent per (job id), reproducible across runs.
-    let mut rng = Rng::new(0x5EED ^ fnv(&job.id()));
-    let train = data.train_pool.imbalance(job.imratio, &mut rng.fork(1));
+    // Data stream: keyed by (dataset, imratio, seed) ONLY, so jobs that
+    // differ in batch/lr/sampling/patience train on identical data.
+    let mut data_rng = Rng::new(0x5EED ^ fnv(&job.data_key()));
+    let train = data.train_pool.imbalance(job.imratio, &mut data_rng.fork(1));
     let achieved_imratio = train.pos_fraction();
-    let split = Split::stratified(&train.y, 0.2, &mut rng.fork(2));
+    let split = Split::stratified(&train.y, 0.2, &mut data_rng.fork(2));
 
     let mut trainer = Trainer::new(backend, &job.model, &job.loss, job.batch)?;
-    trainer.init(job.seed)?;
+    let fit_cfg = FitConfig {
+        lr: job.lr as f32,
+        epochs: job.epochs,
+        patience: job.patience,
+        sampling: SamplingMode::parse(&job.sampling)?,
+        seed: job.seed,
+    };
+    // Epoch stream: per full job id (reshuffle order may differ across
+    // hyper-parameter combinations; the data above does not).
+    let mut epoch_rng = Rng::new(0xE90C ^ fnv(&job.id()));
+    let outcome = trainer.fit_stream(
+        &train,
+        &split.subtrain,
+        &split.validation,
+        &fit_cfg,
+        &mut epoch_rng,
+    )?;
 
-    let mut history = History::new();
-    let mut best: Option<(f64, usize, Vec<crate::runtime::HostTensor>)> = None;
-    let mut epoch_rng = rng.fork(3);
-    let mut diverged = false;
-    for epoch in 0..job.epochs {
-        let te = std::time::Instant::now();
-        let stats = trainer.train_epoch(&train, &split.subtrain, job.lr as f32, &mut epoch_rng)?;
-        if !stats.mean_loss.is_finite() {
-            diverged = true;
-            history.push(EpochRecord {
-                epoch,
-                train_loss: stats.mean_loss,
-                val_auc: None,
-                seconds: te.elapsed().as_secs_f64(),
-            });
-            break;
-        }
-        let val_auc = trainer.eval_auc(&train, &split.validation)?;
-        if let Some(v) = val_auc {
-            let improved = best.as_ref().map(|(b, _, _)| v > *b).unwrap_or(true);
-            if improved {
-                best = Some((v, epoch, trainer.state_to_host()?));
-            }
-        }
-        history.push(EpochRecord {
-            epoch,
-            train_loss: stats.mean_loss,
-            val_auc,
-            seconds: te.elapsed().as_secs_f64(),
-        });
-    }
-
-    // Test AUC at the best-validation-AUC state.
-    let (best_val_auc, best_epoch, test_auc) = match best {
-        Some((v, e, state)) => {
-            trainer.load_state(&state)?;
+    // Test AUC at the best-validation-AUC checkpoint.
+    let (best_val_auc, best_epoch, test_auc) = match &outcome.best {
+        Some(best) => {
+            trainer.load_state(&best.state)?;
             let test_indices: Vec<u32> = (0..data.test.len() as u32).collect();
             let t_auc = trainer.eval_auc(&data.test, &test_indices)?;
-            (Some(v), Some(e), t_auc)
+            (Some(best.val_auc), Some(best.epoch), t_auc)
         }
         None => (None, None, None),
     };
@@ -88,12 +77,13 @@ pub fn run_job(backend: &dyn Backend, job: &Job, data: &JobData) -> crate::Resul
         best_val_auc,
         best_epoch,
         test_auc,
-        final_train_loss: history
+        final_train_loss: outcome
+            .history
             .records
             .last()
             .map(|r| r.train_loss)
             .unwrap_or(f64::NAN),
-        diverged,
+        diverged: outcome.diverged,
         seconds: t0.elapsed().as_secs_f64(),
         achieved_imratio,
     })

@@ -188,6 +188,8 @@ mod tests {
             seed,
             model: "mlp".into(),
             epochs: 1,
+            patience: None,
+            sampling: "preserve".into(),
         }
     }
 

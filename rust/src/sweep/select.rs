@@ -142,6 +142,8 @@ mod tests {
                 seed,
                 model: "resnet".into(),
                 epochs: 2,
+                patience: None,
+                sampling: "preserve".into(),
             },
             best_val_auc: Some(val),
             best_epoch: Some(1),

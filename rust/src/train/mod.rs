@@ -3,7 +3,10 @@
 //! * [`trainer`] — [`trainer::Trainer`]: opens a
 //!   [`crate::runtime::ModelExecutor`] on any [`crate::runtime::Backend`]
 //!   and drives init / train-step / predict; state residency (host
-//!   vectors vs device buffers) is the executor's concern.
+//!   vectors vs device buffers) is the executor's concern.  Its
+//!   [`trainer::Trainer::fit_stream`] entry point is the streaming
+//!   epoch loop: stratified batches ([`crate::data::stream`]),
+//!   validation-AUC early stopping and best-checkpoint tracking.
 //! * [`history`] — per-epoch records + the paper's max-validation-AUC
 //!   epoch selection.
 //! * [`checkpoint`] — binary snapshots of the flat training state.
@@ -17,4 +20,4 @@ pub mod lbfgs;
 pub mod trainer;
 
 pub use history::{EpochRecord, History};
-pub use trainer::Trainer;
+pub use trainer::{BestState, FitConfig, FitOutcome, Trainer};

@@ -11,11 +11,14 @@
 //!
 //! Where the state lives is the executor's business: host vectors on the
 //! native backend, device-resident `PjRtBuffer`s on PJRT.  The trainer
-//! owns the parts every backend shares — epoch batching via
-//! [`BatchPlan`], per-epoch validation AUC, divergence cutoff, and
-//! host-side checkpoint snapshots.
+//! owns the parts every backend shares — streaming epoch batching via
+//! [`EpochSampler`] (stratified, deterministically reshuffled per
+//! epoch), per-epoch validation AUC, validation-AUC early stopping,
+//! best-checkpoint tracking, divergence cutoff, and host-side state
+//! snapshots.  The batch buffers live on the trainer, so the epoch hot
+//! loop performs no per-batch allocation after warm-up.
 
-use crate::data::{BatchPlan, Dataset, Rng};
+use crate::data::{BatchPlan, Dataset, EpochSampler, Rng, SamplingMode};
 use crate::metrics::auc;
 use crate::runtime::{Backend, HostTensor, ModelExecutor};
 
@@ -29,11 +32,68 @@ pub struct EpochStats {
     pub n_examples: usize,
 }
 
+/// Options for the streaming epoch loop ([`Trainer::fit_stream`]).
+#[derive(Debug, Clone, Copy)]
+pub struct FitConfig {
+    /// Learning rate.
+    pub lr: f32,
+    /// Maximum number of epochs.
+    pub epochs: usize,
+    /// Early stopping: stop once validation AUC has not improved for
+    /// this many consecutive epochs (`None` = the paper's fixed-epoch
+    /// protocol; best-checkpoint tracking runs either way).
+    pub patience: Option<usize>,
+    /// Mini-batch class-composition policy.
+    pub sampling: SamplingMode,
+    /// Model-init seed.
+    pub seed: u32,
+}
+
+impl Default for FitConfig {
+    fn default() -> Self {
+        Self {
+            lr: 0.01,
+            epochs: 10,
+            patience: None,
+            sampling: SamplingMode::Preserve,
+            seed: 0,
+        }
+    }
+}
+
+/// The max-validation-AUC checkpoint of a run.
+#[derive(Debug, Clone)]
+pub struct BestState {
+    pub val_auc: f64,
+    pub epoch: usize,
+    /// Host snapshot, restorable via [`Trainer::load_state`] (or
+    /// persistable via [`crate::train::checkpoint`]).
+    pub state: Vec<HostTensor>,
+}
+
+/// Outcome of a streaming fit.
+#[derive(Debug, Clone)]
+pub struct FitOutcome {
+    /// Per-epoch records (loss, validation AUC, wall time).
+    pub history: History,
+    /// Best checkpoint, `None` when validation AUC was never defined.
+    pub best: Option<BestState>,
+    /// Early stopping fired before the epoch budget was spent.
+    pub stopped_early: bool,
+    /// A non-finite training loss ended the run (paper: large learning
+    /// rates overflow the pair sum).
+    pub diverged: bool,
+}
+
 /// Drives one (model, loss, batch) run on an open backend.
 pub struct Trainer<'b> {
     exec: Box<dyn ModelExecutor + 'b>,
     batch: usize,
     row_len: usize,
+    // Reusable fixed-shape batch buffers (see module docs).
+    buf_x: Vec<f32>,
+    buf_pos: Vec<f32>,
+    buf_neg: Vec<f32>,
 }
 
 impl<'b> Trainer<'b> {
@@ -51,6 +111,9 @@ impl<'b> Trainer<'b> {
             exec,
             batch,
             row_len,
+            buf_x: vec![0.0; batch * row_len],
+            buf_pos: vec![0.0; batch],
+            buf_neg: vec![0.0; batch],
         })
     }
 
@@ -67,13 +130,12 @@ impl<'b> Trainer<'b> {
         self.exec.init(seed)
     }
 
-    /// One shuffled epoch over `indices` of `dataset`.
-    pub fn train_epoch(
+    /// One pass over a prepared epoch plan.
+    pub fn train_plan(
         &mut self,
         dataset: &Dataset,
-        indices: &[u32],
+        plan: &BatchPlan,
         lr: f32,
-        rng: &mut Rng,
     ) -> crate::Result<EpochStats> {
         anyhow::ensure!(
             dataset.row_len() == self.row_len,
@@ -81,16 +143,22 @@ impl<'b> Trainer<'b> {
             dataset.row_len(),
             self.row_len
         );
-        let plan = BatchPlan::new(indices, self.batch, rng);
+        anyhow::ensure!(
+            plan.batch_size() == self.batch,
+            "plan batch size {} != executor {}",
+            plan.batch_size(),
+            self.batch
+        );
         let mut iter = plan.iter(dataset);
-        let mut x = vec![0.0_f32; self.batch * self.row_len];
-        let mut p = vec![0.0_f32; self.batch];
-        let mut q = vec![0.0_f32; self.batch];
         let mut total_loss = 0.0;
         let mut n_batches = 0;
         let mut n_examples = 0;
-        while let Some(count) = iter.fill_next(&mut x, &mut p, &mut q) {
-            total_loss += self.exec.train_step(&x, &p, &q, lr)?;
+        while let Some(count) =
+            iter.fill_next(&mut self.buf_x, &mut self.buf_pos, &mut self.buf_neg)
+        {
+            total_loss += self
+                .exec
+                .train_step(&self.buf_x, &self.buf_pos, &self.buf_neg, lr)?;
             n_batches += 1;
             n_examples += count;
         }
@@ -103,6 +171,18 @@ impl<'b> Trainer<'b> {
             n_batches,
             n_examples,
         })
+    }
+
+    /// One plainly-shuffled epoch over `indices` of `dataset`.
+    pub fn train_epoch(
+        &mut self,
+        dataset: &Dataset,
+        indices: &[u32],
+        lr: f32,
+        rng: &mut Rng,
+    ) -> crate::Result<EpochStats> {
+        let plan = BatchPlan::new(indices, self.batch, rng);
+        self.train_plan(dataset, &plan, lr)
     }
 
     /// Predict scores for `indices` of `dataset`.
@@ -133,7 +213,86 @@ impl<'b> Trainer<'b> {
         Ok(auc(&scores, &labels))
     }
 
-    /// Full run: `epochs` epochs with per-epoch validation AUC.
+    /// The streaming epoch loop: stratified batches with a deterministic
+    /// per-epoch reshuffle, per-epoch validation AUC, best-checkpoint
+    /// tracking and (optional) validation-AUC early stopping.
+    ///
+    /// The trainer is left at its *final* state; restore the best
+    /// checkpoint explicitly via `load_state(&outcome.best...state)`
+    /// when evaluating test metrics (the paper's protocol).
+    pub fn fit_stream(
+        &mut self,
+        dataset: &Dataset,
+        subtrain: &[u32],
+        validation: &[u32],
+        cfg: &FitConfig,
+        rng: &mut Rng,
+    ) -> crate::Result<FitOutcome> {
+        anyhow::ensure!(
+            dataset.row_len() == self.row_len,
+            "dataset row length {} != executor {}",
+            dataset.row_len(),
+            self.row_len
+        );
+        self.init(cfg.seed)?;
+        let mut sampler = EpochSampler::new(dataset, subtrain, self.batch, cfg.sampling);
+        let mut history = History::new();
+        let mut best: Option<BestState> = None;
+        let mut stopped_early = false;
+        let mut diverged = false;
+        for epoch in 0..cfg.epochs {
+            let t0 = std::time::Instant::now();
+            let plan = sampler.epoch_plan(rng);
+            let stats = self.train_plan(dataset, &plan, cfg.lr)?;
+            if !stats.mean_loss.is_finite() {
+                diverged = true;
+                history.push(EpochRecord {
+                    epoch,
+                    train_loss: stats.mean_loss,
+                    val_auc: None,
+                    seconds: t0.elapsed().as_secs_f64(),
+                });
+                break;
+            }
+            let val_auc = if validation.is_empty() {
+                None
+            } else {
+                self.eval_auc(dataset, validation)?
+            };
+            if let Some(v) = val_auc {
+                let improved = best.as_ref().map(|b| v > b.val_auc).unwrap_or(true);
+                if improved {
+                    best = Some(BestState {
+                        val_auc: v,
+                        epoch,
+                        state: self.state_to_host()?,
+                    });
+                }
+            }
+            history.push(EpochRecord {
+                epoch,
+                train_loss: stats.mean_loss,
+                val_auc,
+                seconds: t0.elapsed().as_secs_f64(),
+            });
+            if let Some(patience) = cfg.patience {
+                if history.plateaued(patience) {
+                    stopped_early = true;
+                    break;
+                }
+            }
+        }
+        Ok(FitOutcome {
+            history,
+            best,
+            stopped_early,
+            diverged,
+        })
+    }
+
+    /// Fixed-epoch run with per-epoch validation AUC (the pre-streaming
+    /// entry point, kept for ad-hoc runs; [`Self::fit_stream`] exposes
+    /// early stopping and checkpoint tracking).
     #[allow(clippy::too_many_arguments)]
     pub fn fit(
         &mut self,
@@ -145,27 +304,16 @@ impl<'b> Trainer<'b> {
         seed: u32,
         rng: &mut Rng,
     ) -> crate::Result<History> {
-        self.init(seed)?;
-        let mut history = History::new();
-        for epoch in 0..epochs {
-            let t0 = std::time::Instant::now();
-            let stats = self.train_epoch(dataset, subtrain, lr, rng)?;
-            let val_auc = if validation.is_empty() {
-                None
-            } else {
-                self.eval_auc(dataset, validation)?
-            };
-            history.push(EpochRecord {
-                epoch,
-                train_loss: stats.mean_loss,
-                val_auc,
-                seconds: t0.elapsed().as_secs_f64(),
-            });
-            if !stats.mean_loss.is_finite() {
-                break; // diverged (paper: large lr overflows the pair sum)
-            }
-        }
-        Ok(history)
+        let cfg = FitConfig {
+            lr,
+            epochs,
+            patience: None,
+            sampling: SamplingMode::Preserve,
+            seed,
+        };
+        Ok(self
+            .fit_stream(dataset, subtrain, validation, &cfg, rng)?
+            .history)
     }
 
     /// Download the training state for checkpointing.
@@ -236,6 +384,9 @@ mod tests {
             .train_epoch(&data, &idx, 0.01, &mut Rng::new(4))
             .is_err());
         assert!(trainer.predict(&data, &idx).is_err());
+        assert!(trainer
+            .fit_stream(&data, &idx, &idx, &FitConfig::default(), &mut Rng::new(4))
+            .is_err());
     }
 
     #[test]
@@ -249,6 +400,79 @@ mod tests {
             .unwrap();
         assert_eq!(history.len(), 3);
         assert!(history.records.iter().all(|r| r.val_auc.is_some()));
+    }
+
+    #[test]
+    fn fit_stream_tracks_best_checkpoint() {
+        let backend = native_backend(6);
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 16).unwrap();
+        let data = toy_dataset(120, 6, 7);
+        let idx: Vec<u32> = (0..120).collect();
+        let cfg = FitConfig {
+            lr: 0.05,
+            epochs: 4,
+            sampling: SamplingMode::Rebalance { pos_fraction: 0.5 },
+            ..Default::default()
+        };
+        let outcome = trainer
+            .fit_stream(&data, &idx, &idx, &cfg, &mut Rng::new(8))
+            .unwrap();
+        assert_eq!(outcome.history.len(), 4);
+        assert!(!outcome.stopped_early);
+        assert!(!outcome.diverged);
+        let best = outcome.best.expect("val AUC defined on mixed-class data");
+        assert_eq!(Some(best.val_auc), outcome.history.best_val_auc());
+        assert_eq!(best.epoch, outcome.history.best_epoch().unwrap().epoch);
+        // restoring the snapshot reproduces the best-epoch validation AUC
+        trainer.load_state(&best.state).unwrap();
+        let auc_restored = trainer.eval_auc(&data, &idx).unwrap().unwrap();
+        assert_eq!(auc_restored, best.val_auc);
+    }
+
+    #[test]
+    fn fit_stream_early_stops_on_plateau() {
+        let backend = native_backend(6);
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 16).unwrap();
+        let data = toy_dataset(80, 6, 9);
+        let idx: Vec<u32> = (0..80).collect();
+        // lr = 0: the model never changes, so validation AUC never
+        // improves after epoch 0 and patience-1 stopping fires at epoch 1.
+        let cfg = FitConfig {
+            lr: 0.0,
+            epochs: 50,
+            patience: Some(1),
+            ..Default::default()
+        };
+        let outcome = trainer
+            .fit_stream(&data, &idx, &idx, &cfg, &mut Rng::new(10))
+            .unwrap();
+        assert!(outcome.stopped_early);
+        assert!(outcome.history.len() <= 3, "ran {} epochs", outcome.history.len());
+    }
+
+    #[test]
+    fn fit_stream_is_deterministic_per_seed() {
+        let backend = native_backend(6);
+        let data = toy_dataset(100, 6, 11);
+        let idx: Vec<u32> = (0..100).collect();
+        let cfg = FitConfig {
+            lr: 0.02,
+            epochs: 3,
+            sampling: SamplingMode::Rebalance { pos_fraction: 0.5 },
+            ..Default::default()
+        };
+        let run = || {
+            let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 16).unwrap();
+            trainer
+                .fit_stream(&data, &idx, &idx, &cfg, &mut Rng::new(12))
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
+            assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits());
+            assert_eq!(ra.val_auc, rb.val_auc);
+        }
     }
 
     #[test]

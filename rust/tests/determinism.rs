@@ -1,0 +1,132 @@
+//! Golden determinism: the same seed + config must reproduce the sweep
+//! byte for byte — results, selection tables and per-epoch history —
+//! across two independent runs.  This pins the streaming pipeline's
+//! per-epoch reshuffle, the oversampling cycle and the early-stopping
+//! logic to the seeded RNG (any hidden nondeterminism — map iteration,
+//! time-based seeding, cross-thread reduction — breaks these).
+
+use allpairs::config::SweepConfig;
+use allpairs::coordinator::cv;
+use allpairs::data::{features, FeatureSpec, Rng, SamplingMode, Split};
+use allpairs::runtime::{BackendSpec, NativeSpec};
+use allpairs::sweep::results::{load_jsonl, RunResult};
+use allpairs::train::{FitConfig, Trainer};
+
+fn micro_config() -> SweepConfig {
+    SweepConfig {
+        datasets: vec!["synth-pets".into()],
+        imratios: vec![0.1],
+        losses: vec!["hinge".into()],
+        batch_sizes: vec![50, 100],
+        sampling_modes: vec!["preserve".into(), "rebalance:0.5".into()],
+        seeds: vec![0],
+        epochs: 2,
+        patience: Some(2),
+        max_train: Some(300),
+        max_lrs: Some(1),
+        // one worker: completion order == queue order, so the JSONL
+        // line order itself is part of the golden output
+        workers: 1,
+        backend: BackendSpec::Native(NativeSpec {
+            input_dim: 16 * 16 * 3,
+            hidden: 8,
+            margin: 1.0,
+            threads: 1,
+        }),
+        ..Default::default()
+    }
+}
+
+/// Canonical dump of results with the only nondeterministic field (wall
+/// time) zeroed.
+fn golden_dump(mut results: Vec<RunResult>) -> String {
+    for r in &mut results {
+        r.seconds = 0.0;
+    }
+    results
+        .iter()
+        .map(|r| r.to_json().dumps())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn sweep_outputs_are_identical_across_runs() {
+    let cfg = micro_config();
+    let out_a = std::env::temp_dir().join("allpairs_golden_a");
+    let out_b = std::env::temp_dir().join("allpairs_golden_b");
+    cv::run(&cfg, &out_a, None).unwrap();
+    cv::run(&cfg, &out_b, None).unwrap();
+
+    // results: identical modulo wall time (including line order)
+    let ra = load_jsonl(out_a.join("sweep_results.jsonl")).unwrap();
+    let rb = load_jsonl(out_b.join("sweep_results.jsonl")).unwrap();
+    assert_eq!(ra.len(), cfg.n_runs());
+    assert_eq!(golden_dump(ra), golden_dump(rb));
+
+    // selection + report outputs carry no timing: byte-identical files
+    for file in ["table2.md", "fig3.md", "fig3.csv"] {
+        let a = std::fs::read(out_a.join(file)).unwrap();
+        let b = std::fs::read(out_b.join(file)).unwrap();
+        assert_eq!(a, b, "{file} differs between identical runs");
+    }
+}
+
+#[test]
+fn epoch_history_is_identical_across_runs() {
+    // The streaming loop end to end — stratified reshuffle, rebalanced
+    // oversampling, early stopping, best-checkpoint tracking — twice
+    // from the same seed, compared bit for bit.
+    let mut data_rng = Rng::new(41);
+    let spec = FeatureSpec {
+        pos_frac: 0.5,
+        ..Default::default()
+    };
+    let pool = features::generate(&spec, 1200, &mut data_rng);
+    let train = pool.imbalance(0.05, &mut data_rng);
+    let split = Split::stratified(&train.y, 0.2, &mut data_rng);
+    let backend = BackendSpec::Native(NativeSpec {
+        input_dim: spec.dim,
+        hidden: 16,
+        margin: 1.0,
+        threads: 1,
+    })
+    .connect()
+    .unwrap();
+    let cfg = FitConfig {
+        lr: 0.05,
+        epochs: 6,
+        patience: Some(2),
+        sampling: SamplingMode::Rebalance { pos_fraction: 0.5 },
+        seed: 3,
+    };
+    let run = || {
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 64).unwrap();
+        trainer
+            .fit_stream(
+                &train,
+                &split.subtrain,
+                &split.validation,
+                &cfg,
+                &mut Rng::new(99),
+            )
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.history.len(), b.history.len());
+    assert_eq!(a.stopped_early, b.stopped_early);
+    assert_eq!(a.diverged, b.diverged);
+    for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
+        assert_eq!(ra.epoch, rb.epoch);
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits());
+        assert_eq!(
+            ra.val_auc.map(f64::to_bits),
+            rb.val_auc.map(f64::to_bits)
+        );
+    }
+    let (ba, bb) = (a.best.unwrap(), b.best.unwrap());
+    assert_eq!(ba.epoch, bb.epoch);
+    assert_eq!(ba.val_auc.to_bits(), bb.val_auc.to_bits());
+    assert_eq!(ba.state, bb.state);
+}

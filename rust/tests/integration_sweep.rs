@@ -47,6 +47,8 @@ fn tiny_job(loss: &str, batch: usize, seed: u32) -> Job {
         seed,
         model: "resnet".into(),
         epochs: 2,
+        patience: None,
+        sampling: "preserve".into(),
     }
 }
 
@@ -74,6 +76,27 @@ fn job_results_are_reproducible() {
     assert_eq!(a.best_val_auc, b.best_val_auc);
     assert_eq!(a.test_auc, b.test_auc);
     assert_eq!(a.best_epoch, b.best_epoch);
+}
+
+#[test]
+fn jobs_in_one_selection_group_share_data() {
+    // Jobs differing only in training knobs (batch, sampling, patience)
+    // must see the identical imbalanced subset and validation split.
+    // With lr = 0 the model never moves, so validation AUC depends only
+    // on the init seed and the validation subset — bit-equality across
+    // the two jobs pins the shared-data seeding (Job::data_key).
+    let backend = native_spec().connect().unwrap();
+    let data = tiny_data();
+    let mut a = tiny_job("hinge", 50, 0);
+    a.lr = 0.0;
+    let mut b = tiny_job("hinge", 100, 0);
+    b.lr = 0.0;
+    b.sampling = "rebalance:0.5".into();
+    b.patience = Some(3);
+    let ra = run_job(backend.as_ref(), &a, &data).unwrap();
+    let rb = run_job(backend.as_ref(), &b, &data).unwrap();
+    assert_eq!(ra.achieved_imratio, rb.achieved_imratio);
+    assert_eq!(ra.best_val_auc, rb.best_val_auc);
 }
 
 #[test]

@@ -196,6 +196,126 @@ fn prop_auc_bounds_and_complement() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Differential tests at paper scale: the functional algorithms vs the
+// O(n²) references at n >= 10^4 (the size regime the paper's Figure 2
+// claims wins in).  The naive oracle is quadratic — 2.5·10⁷ pair ops
+// per balanced case in release — so debug builds (tier-1 `cargo test
+// -q`) shrink n; release CI (`cargo test --release`) runs full size.
+// ---------------------------------------------------------------------------
+
+/// 10⁴ in release; small enough to keep the quadratic oracle fast in
+/// unoptimized tier-1 runs.
+fn differential_n() -> usize {
+    if cfg!(debug_assertions) {
+        1_500
+    } else {
+        10_000
+    }
+}
+
+/// Class-indicator vector with exactly `n_pos` positives, shuffled.
+fn labels_with(n: usize, n_pos: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut is_pos = vec![0.0_f32; n];
+    for p in is_pos.iter_mut().take(n_pos) {
+        *p = 1.0;
+    }
+    rng.shuffle(&mut is_pos);
+    is_pos
+}
+
+/// Compare functional vs naive on one case.
+///
+/// Tolerances: both implementations accumulate the loss in f64, where
+/// the summation error over ~n² terms of similar magnitude is below
+/// 1e-12 relative — 1e-8 leaves two orders of headroom for the
+/// different algebraic groupings (pair-by-pair vs the coefficient
+/// sweep).  Gradients are returned as f32: each side computes an exact
+/// f64 value and rounds once (~6e-8 relative), so entries can differ by
+/// a couple of f32 ulps at the gradient scale — 1e-4 of the max
+/// absolute gradient covers that with a wide margin while still
+/// catching any real indexing/sweep error (which shows up at O(scale)).
+fn assert_differential(scores: &[f32], is_pos: &[f32], margin: f32, ctx: &str) {
+    let (lnh, gnh) = NaiveSquaredHinge::new(margin).loss_and_grad(scores, is_pos);
+    let (lfh, gfh) = SquaredHinge::new(margin).loss_and_grad(scores, is_pos);
+    assert_rel(lnh, lfh, 1e-8, &format!("{ctx}: hinge loss"));
+    let (lns, gns) = NaiveSquare::new(margin).loss_and_grad(scores, is_pos);
+    let (lfs, gfs) = Square::new(margin).loss_and_grad(scores, is_pos);
+    assert_rel(lns, lfs, 1e-8, &format!("{ctx}: square loss"));
+    for (family, gn, gf) in [("hinge", &gnh, &gfh), ("square", &gns, &gfs)] {
+        let gscale = gn.iter().fold(1.0_f32, |m, g| m.max(g.abs()));
+        for (i, (a, b)) in gn.iter().zip(gf.iter()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * gscale,
+                "{ctx}: {family} grad[{i}]: {a} vs {b} (scale {gscale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn diff_large_n_random_scores() {
+    let n = differential_n();
+    let mut rng = Rng::new(0xD1FF);
+    for (case, pos_frac) in [0.5, 0.1, 0.01].into_iter().enumerate() {
+        let scores: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let is_pos = labels_with(n, ((n as f64) * pos_frac) as usize, &mut rng);
+        assert_differential(&scores, &is_pos, 1.0, &format!("random case {case}"));
+    }
+}
+
+#[test]
+fn diff_large_n_tie_heavy_scores() {
+    // Quantized scores: long runs of exactly-equal sort keys exercise
+    // the tie-handling argument of the ascending sweep (any tie order
+    // is valid because tied (pos, neg) pairs contribute zero).
+    let n = differential_n();
+    let mut rng = Rng::new(0x7135);
+    for margin in [0.0_f32, 0.5, 1.0] {
+        let scores: Vec<f32> = (0..n)
+            .map(|_| ((rng.normal() * 4.0).round() / 2.0) as f32)
+            .collect();
+        let is_pos = labels_with(n, n / 5, &mut rng);
+        assert_differential(&scores, &is_pos, margin, &format!("ties margin {margin}"));
+    }
+}
+
+#[test]
+fn diff_large_n_extreme_imbalance() {
+    // The paper's regime: a single positive among thousands of
+    // negatives (the naive oracle is only O(n) pairs here, so this
+    // runs at full 10^4 even in debug).
+    let n = 10_000;
+    let mut rng = Rng::new(0x1BAD);
+    for n_pos in [1usize, 3, 10] {
+        let scores: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let is_pos = labels_with(n, n_pos, &mut rng);
+        assert_differential(&scores, &is_pos, 1.0, &format!("{n_pos} positives"));
+    }
+}
+
+#[test]
+fn diff_large_n_varied_sizes_and_margins() {
+    // Random (size, margin, imbalance) combinations around the large-n
+    // scale so the agreement is not an artifact of one fixed shape.
+    let mut rng = Rng::new(0x517E);
+    let cap = differential_n();
+    for case in 0..4 {
+        let n = cap / 2 + rng.below(cap / 2);
+        let margin = [0.0_f32, 0.5, 1.0, 4.0][rng.below(4)];
+        let pos_frac = [0.5, 0.1, 0.003][rng.below(3)];
+        let scores: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let n_pos = (((n as f64) * pos_frac) as usize).max(1);
+        let is_pos = labels_with(n, n_pos, &mut rng);
+        assert_differential(
+            &scores,
+            &is_pos,
+            margin,
+            &format!("varied case {case} (n={n}, m={margin})"),
+        );
+    }
+}
+
 #[test]
 fn prop_zero_hinge_loss_implies_perfect_auc() {
     // If the squared hinge loss is exactly zero, every positive outranks

@@ -1,0 +1,139 @@
+//! Property tests for the evaluation metrics: AUC against its literal
+//! pair-counting definition, ROC curve shape invariants, and partial
+//! AUC bounds.  Same in-tree generator style as `proptest_losses.rs`
+//! (no proptest crate in the offline build).
+
+use allpairs::data::Rng;
+use allpairs::metrics::{auc, partial_auc, roc_curve};
+
+/// The Bamber (1975) definition, literally: over every (positive,
+/// negative) pair, count 1 for a correctly ordered pair, ½ for a tie,
+/// normalized by the pair count.  This is the specification `auc`'s
+/// O(n log n) midrank formulation must reproduce.
+fn pair_counting_auc(scores: &[f32], is_pos: &[f32]) -> Option<f64> {
+    let pos: Vec<f32> = scores
+        .iter()
+        .zip(is_pos)
+        .filter(|(_, &p)| p != 0.0)
+        .map(|(&s, _)| s)
+        .collect();
+    let neg: Vec<f32> = scores
+        .iter()
+        .zip(is_pos)
+        .filter(|(_, &p)| p == 0.0)
+        .map(|(&s, _)| s)
+        .collect();
+    if pos.is_empty() || neg.is_empty() {
+        return None;
+    }
+    let mut u = 0.0_f64;
+    for &a in &pos {
+        for &b in &neg {
+            if a > b {
+                u += 1.0;
+            } else if a == b {
+                u += 0.5;
+            }
+        }
+    }
+    Some(u / (pos.len() as f64 * neg.len() as f64))
+}
+
+/// Random case: sizes 0..400, tie-prone quantized scores, positive
+/// fractions down to "usually zero or one positive".
+fn random_case(rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+    let n = rng.below(400);
+    let pos_frac = [0.0, 0.005, 0.1, 0.5, 0.95, 1.0][rng.below(6)];
+    let quantize = rng.uniform() < 0.5;
+    let scores: Vec<f32> = (0..n)
+        .map(|_| {
+            let v = (rng.normal() * 2.0) as f32;
+            if quantize {
+                (v * 4.0).round() / 4.0
+            } else {
+                v
+            }
+        })
+        .collect();
+    let is_pos: Vec<f32> = (0..n)
+        .map(|_| if rng.uniform() < pos_frac { 1.0 } else { 0.0 })
+        .collect();
+    (scores, is_pos)
+}
+
+#[test]
+fn prop_auc_equals_pair_counting_definition() {
+    let mut rng = Rng::new(1);
+    for case in 0..300 {
+        let (scores, is_pos) = random_case(&mut rng);
+        match (auc(&scores, &is_pos), pair_counting_auc(&scores, &is_pos)) {
+            // Both pure-f64 computations over < 2^20 exact half-integer
+            // counts: agreement to 1e-12 relative is the f64 round-off
+            // of the two different normalization orders.
+            (Some(a), Some(b)) => {
+                assert!((a - b).abs() < 1e-12, "case {case}: {a} vs {b}")
+            }
+            (None, None) => {}
+            other => panic!("case {case}: definedness mismatch {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn prop_roc_curve_monotone_anchored_and_consistent() {
+    let mut rng = Rng::new(2);
+    for case in 0..200 {
+        let (scores, is_pos) = random_case(&mut rng);
+        let curve = roc_curve(&scores, &is_pos);
+        let n_pos = is_pos.iter().filter(|&&p| p != 0.0).count();
+        if n_pos == 0 || n_pos == is_pos.len() || is_pos.is_empty() {
+            assert!(curve.is_empty(), "case {case}: curve on single class");
+            continue;
+        }
+        // anchored at (0,0) and (1,1)
+        assert_eq!((curve[0].fpr, curve[0].tpr), (0.0, 0.0), "case {case}");
+        let last = curve.last().unwrap();
+        assert_eq!((last.fpr, last.tpr), (1.0, 1.0), "case {case}");
+        // monotone non-decreasing in both coordinates, rates in [0,1]
+        for w in curve.windows(2) {
+            assert!(w[1].fpr >= w[0].fpr, "case {case}: fpr decreased");
+            assert!(w[1].tpr >= w[0].tpr, "case {case}: tpr decreased");
+        }
+        for p in &curve {
+            assert!((0.0..=1.0).contains(&p.fpr) && (0.0..=1.0).contains(&p.tpr));
+        }
+        // thresholds strictly decrease (one point per distinct score)
+        for w in curve.windows(2) {
+            assert!(w[1].threshold < w[0].threshold, "case {case}: thresholds");
+        }
+    }
+}
+
+#[test]
+fn prop_partial_auc_bounded_and_consistent_with_auc() {
+    let mut rng = Rng::new(3);
+    let mut defined = 0;
+    for case in 0..200 {
+        let (scores, is_pos) = random_case(&mut rng);
+        // random non-degenerate FPR interval
+        let a = rng.uniform() * 0.8;
+        let b = a + 0.01 + rng.uniform() * (0.99 - a);
+        let full = auc(&scores, &is_pos);
+        let partial = partial_auc(&scores, &is_pos, a, b.min(1.0));
+        assert_eq!(
+            full.is_some(),
+            partial.is_some(),
+            "case {case}: definedness must match"
+        );
+        let (Some(full), Some(partial)) = (full, partial) else {
+            continue;
+        };
+        defined += 1;
+        // normalized pAUC is an average TPR over the interval: in [0,1]
+        assert!((0.0..=1.0 + 1e-12).contains(&partial), "case {case}: {partial}");
+        // the full interval recovers the ordinary AUC
+        let whole = partial_auc(&scores, &is_pos, 0.0, 1.0).unwrap();
+        assert!((whole - full).abs() < 1e-12, "case {case}: {whole} vs {full}");
+    }
+    assert!(defined > 50, "generator produced too few two-class cases");
+}
