@@ -7,7 +7,11 @@
 //!   driven through any [`crate::runtime::Backend`].
 //! * [`monitor`] — the paper's section-5 use case: monitoring the
 //!   full-set all-pairs loss every epoch in the same O(n log n) as AUC.
+//! * [`perf`] — the tracked perf trajectory (`allpairs bench` →
+//!   `BENCH_train.json`): train-step / loss / AUC wall times at
+//!   n ∈ {10⁴, 10⁵, 10⁶}, serial vs parallel.
 
 pub mod cv;
 pub mod monitor;
+pub mod perf;
 pub mod timing;

@@ -1,0 +1,265 @@
+//! The tracked perf trajectory: train-step / loss / AUC benches behind
+//! `allpairs bench`, emitted as machine-readable `BENCH_train.json`.
+//!
+//! The paper's claim is that the functional all-pairs gradient is fast
+//! enough for *large* batches, so the train step — chunked forward +
+//! sort/sweep loss + feature-gradient reduction — is the hot path the
+//! ROADMAP's "as fast as the hardware allows" north star lives on.
+//! This module measures it at n ∈ {10⁴, 10⁵, 10⁶} at both 1 worker
+//! thread and the requested parallel count, so every PR extends one
+//! comparable JSON series instead of quoting ad-hoc numbers (schema
+//! and conventions: EXPERIMENTS.md §Perf trajectory).
+//!
+//! Scope: the **linear** model on the native backend — its train step
+//! is exactly sort + sweep + feature-gradient reduction, the kernel the
+//! paper times; MLP numbers would mostly measure the tanh layer.
+//! `ALLPAIRS_BENCH_QUICK=1` shrinks the iteration budget (CI smoke),
+//! not the sizes, so quick-mode files stay schema-identical.
+
+use std::path::Path;
+
+use crate::data::Rng;
+use crate::losses::functional::{HingeScratch, SquaredHinge};
+use crate::metrics::auc;
+use crate::runtime::{Backend, NativeBackend, NativeSpec};
+use crate::util::bench::Bench;
+use crate::util::json::Json;
+
+/// What to measure.
+#[derive(Debug, Clone)]
+pub struct PerfConfig {
+    /// Examples per measured batch.
+    pub sizes: Vec<usize>,
+    /// Worker-thread counts for the train-step bench (1 = the serial
+    /// baseline of the speedup table).
+    pub threads: Vec<usize>,
+    /// Features per example for the train-step bench.
+    pub dim: usize,
+}
+
+impl Default for PerfConfig {
+    fn default() -> Self {
+        Self {
+            sizes: vec![10_000, 100_000, 1_000_000],
+            threads: vec![1, 8],
+            dim: 32,
+        }
+    }
+}
+
+/// One benchmark point of the trajectory (the `BENCH_train.json`
+/// record schema: name, n, threads, median_s, mean_s, min_s).
+#[derive(Debug, Clone)]
+pub struct PerfRecord {
+    pub name: String,
+    pub n: usize,
+    /// Requested worker threads (1 for the serial baseline and for the
+    /// inherently serial loss/AUC kernels).
+    pub threads: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+}
+
+impl PerfRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", Json::str(self.name.clone())),
+            ("n", Json::num(self.n as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("median_s", Json::num(self.median_s)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("min_s", Json::num(self.min_s)),
+        ])
+    }
+}
+
+/// 10%-positive benchmark data: `n` rows of `dim` standard normals
+/// plus the {0,1} masks, deterministic from the seed.
+fn bench_data(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+    let is_pos: Vec<f32> = (0..n)
+        .map(|_| if rng.uniform() < 0.1 { 1.0 } else { 0.0 })
+        .collect();
+    let is_neg: Vec<f32> = is_pos.iter().map(|&p| 1.0 - p).collect();
+    (x, is_pos, is_neg)
+}
+
+/// Run the perf suite.  Honors `ALLPAIRS_BENCH_QUICK=1` via
+/// [`Bench::from_env`].
+pub fn run(cfg: &PerfConfig) -> crate::Result<Vec<PerfRecord>> {
+    let mut bench = Bench::from_env();
+    let mut records = Vec::new();
+    for &n in &cfg.sizes {
+        let (x, is_pos, is_neg) = bench_data(n, cfg.dim, 0xBE7C4 ^ n as u64);
+
+        // The full train step (forward → hinge sort/sweep → feature-
+        // gradient reduction → SGD), serial and parallel.
+        for &threads in &cfg.threads {
+            let backend = NativeBackend::new(NativeSpec {
+                input_dim: cfg.dim,
+                hidden: 0,
+                margin: 1.0,
+                threads,
+            });
+            let mut exec = backend.open("linear", "hinge", n)?;
+            exec.init(0)?;
+            // lr = 0: parameters never move, so every timed iteration
+            // performs bit-identical work (a non-zero lr would fit the
+            // data across iterations — pairs go hinge-inactive, scores
+            // become pre-sorted — and medians would drift with the
+            // iteration count instead of being comparable across runs).
+            let m = bench.run(format!("train_step/hinge/n{n}/t{threads}"), || {
+                exec.train_step(&x, &is_pos, &is_neg, 0.0).unwrap()
+            });
+            records.push(record(m, n, threads));
+        }
+
+        // The loss kernel alone (sort + sweep, gradient included) —
+        // inherently serial, the O(n log n) object the paper times.
+        let hinge = SquaredHinge::new(1.0);
+        let scores: Vec<f32> = x.iter().step_by(cfg.dim).copied().collect();
+        let mut grad = Vec::new();
+        let mut scratch = HingeScratch::default();
+        let m = bench.run(format!("loss/hinge/n{n}"), || {
+            hinge.loss_and_grad_with(&scores, &is_pos, &mut grad, &mut scratch)
+        });
+        records.push(record(m, n, 1));
+
+        // AUC over the same scores (the per-epoch validation cost).
+        let m = bench.run(format!("auc/n{n}"), || auc(&scores, &is_pos));
+        records.push(record(m, n, 1));
+    }
+    Ok(records)
+}
+
+fn record(m: &crate::util::bench::Measurement, n: usize, threads: usize) -> PerfRecord {
+    PerfRecord {
+        name: m.name.clone(),
+        n,
+        threads,
+        median_s: m.median.as_secs_f64(),
+        mean_s: m.mean.as_secs_f64(),
+        min_s: m.min.as_secs_f64(),
+    }
+}
+
+/// The serial-vs-parallel speedup rows for EXPERIMENTS.md:
+/// `(n, serial median, best parallel (threads, median), speedup)`.
+pub fn speedups(records: &[PerfRecord]) -> Vec<(usize, f64, usize, f64, f64)> {
+    let mut out = Vec::new();
+    let mut sizes: Vec<usize> = records
+        .iter()
+        .filter(|r| r.name.starts_with("train_step/"))
+        .map(|r| r.n)
+        .collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    for n in sizes {
+        let serial = records
+            .iter()
+            .find(|r| r.name.starts_with("train_step/") && r.n == n && r.threads == 1);
+        let parallel = records
+            .iter()
+            .filter(|r| r.name.starts_with("train_step/") && r.n == n && r.threads > 1)
+            .min_by(|a, b| a.median_s.total_cmp(&b.median_s));
+        if let (Some(s), Some(p)) = (serial, parallel) {
+            out.push((n, s.median_s, p.threads, p.median_s, s.median_s / p.median_s));
+        }
+    }
+    out
+}
+
+/// Write the records as `BENCH_train.json`: a versioned envelope so
+/// future PRs can extend the schema without breaking readers.
+pub fn write_json(
+    records: &[PerfRecord],
+    quick: bool,
+    path: impl AsRef<Path>,
+) -> crate::Result<()> {
+    let doc = Json::obj([
+        ("schema", Json::num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("records", Json::Arr(records.iter().map(|r| r.to_json()).collect())),
+    ]);
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, doc.dumps())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &str, n: usize, threads: usize, median_s: f64) -> PerfRecord {
+        PerfRecord {
+            name: name.into(),
+            n,
+            threads,
+            median_s,
+            mean_s: median_s,
+            min_s: median_s,
+        }
+    }
+
+    #[test]
+    fn json_round_trips_through_the_strict_parser() {
+        let records = vec![
+            rec("train_step/hinge/n100/t1", 100, 1, 0.5),
+            rec("train_step/hinge/n100/t8", 100, 8, 0.125),
+        ];
+        let name = format!("allpairs_bench_json_test_{}.json", std::process::id());
+        let path = std::env::temp_dir().join(name);
+        write_json(&records, true, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.req("schema").unwrap().as_usize(), Some(1));
+        assert_eq!(doc.req("quick").unwrap().as_bool(), Some(true));
+        let rows = doc.req("records").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        for (row, want) in rows.iter().zip(&records) {
+            assert_eq!(row.req("name").unwrap().as_str(), Some(want.name.as_str()));
+            assert_eq!(row.req("n").unwrap().as_usize(), Some(want.n));
+            assert_eq!(row.req("threads").unwrap().as_usize(), Some(want.threads));
+            assert_eq!(row.req("median_s").unwrap().as_f64(), Some(want.median_s));
+        }
+    }
+
+    #[test]
+    fn speedups_pair_serial_with_best_parallel() {
+        let records = vec![
+            rec("train_step/hinge/n100/t1", 100, 1, 0.8),
+            rec("train_step/hinge/n100/t8", 100, 8, 0.2),
+            rec("train_step/hinge/n200/t1", 200, 1, 1.0),
+            rec("loss/hinge/n100", 100, 1, 0.3), // not a train step
+        ];
+        let rows = speedups(&records);
+        assert_eq!(rows.len(), 1, "n=200 has no parallel row, loss rows skip");
+        let (n, serial, threads, parallel, speedup) = rows[0];
+        assert_eq!((n, threads), (100, 8));
+        assert_eq!(serial, 0.8);
+        assert_eq!(parallel, 0.2);
+        assert!((speedup - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_suite_runs_end_to_end() {
+        // Keep it seconds-scale: small n, quick-ish budget comes from
+        // the default Bench (each point still takes min_iters runs).
+        let cfg = PerfConfig {
+            sizes: vec![500],
+            threads: vec![1],
+            dim: 4,
+        };
+        let records = run(&cfg).unwrap();
+        assert_eq!(records.len(), 3); // train_step + loss + auc
+        assert!(records.iter().all(|r| r.min_s >= 0.0 && r.median_s >= r.min_s));
+        assert!(records.iter().any(|r| r.name == "train_step/hinge/n500/t1"));
+    }
+}

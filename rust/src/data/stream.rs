@@ -147,8 +147,12 @@ impl EpochSampler {
         }
     }
 
-    /// Positive rows per batch under `Rebalance` (at least one of each
-    /// class; only meaningful when `effective_mode` is `Rebalance`).
+    /// Positive rows per batch under `Rebalance` (only meaningful when
+    /// `effective_mode` is `Rebalance`).  The clamp guarantees at least
+    /// one positive *and* one negative per batch even when
+    /// `pos_fraction * batch_size` rounds to 0 (or to `batch_size`) —
+    /// a batch with zero positives makes the all-pairs loss
+    /// identically zero, so that gradient step would be wasted.
     fn rebalance_quota(&self, pos_fraction: f64) -> usize {
         ((self.batch_size as f64 * pos_fraction).round() as usize).clamp(1, self.batch_size - 1)
     }
@@ -390,6 +394,32 @@ mod tests {
             assert_eq!(pos, 4);
         }
         assert_eq!(comps.last().unwrap().1, 100 - 6 * 16);
+    }
+
+    #[test]
+    fn rebalance_tiny_fraction_still_puts_a_positive_in_every_batch() {
+        // batch_size = 8, pos_fraction = 0.05: the raw quota
+        // 8 * 0.05 = 0.4 rounds to 0, which the clamp must lift to 1 —
+        // a batch with zero positives makes the all-pairs loss
+        // identically zero.
+        let d = toy(73, 3); // 3 positives, 70 negatives
+        let indices: Vec<u32> = (0..73).collect();
+        let mut sampler = EpochSampler::new(
+            &d,
+            &indices,
+            8,
+            SamplingMode::Rebalance { pos_fraction: 0.05 },
+        );
+        // quota 1 pos + 7 neg; 70 negatives -> 10 batches
+        assert_eq!(sampler.n_batches(), 10);
+        let plan = sampler.epoch_plan(&mut Rng::new(11));
+        let comps = batch_compositions(&d, &plan, 8);
+        assert_eq!(comps.len(), 10);
+        for &(pos, _) in &comps {
+            assert_eq!(pos, 1, "every batch must contain a positive");
+        }
+        let neg_total: usize = comps.iter().map(|c| c.1).sum();
+        assert_eq!(neg_total, 70);
     }
 
     #[test]

@@ -17,7 +17,10 @@
 //!
 //! Accumulators are f64: at n = 10⁷ the loss is a sum of ~10¹³-scale
 //! products and f32 accumulation would lose the low-order digits that the
-//! property tests (functional ≡ naive) check.
+//! property tests (functional ≡ naive) check.  The hinge sort keys are
+//! f64 for the same reason — an f32-rounded key can order a near-margin
+//! pair differently than the f64 sweep evaluates it (see
+//! [`HingeScratch`]).
 
 use super::PairwiseLoss;
 
@@ -90,10 +93,19 @@ impl PairwiseLoss for Square {
 /// Reusable scratch for [`SquaredHinge::loss_and_grad_with`]: the sort
 /// permutation and sorted copies.  Reusing it across calls makes the sweep
 /// allocation-free after warm-up.
+///
+/// Keys are f64: the sweep accumulates in f64, so the sort order must be
+/// decided by the *exact* augmented values `ŷᵢ + m·I[neg]`.  Building the
+/// key as an f32 sum rounds it (at |ŷ| = 2²⁴ the f32 ulp is 2.0, so
+/// `ŷₖ + 1` collapses onto `ŷₖ`), and a near-margin pair whose rounded
+/// key flips or ties out of order is silently dropped from (or added to)
+/// the loss and gradient.  f32 → f64 conversion and the f64 sum of two
+/// f32-valued operands are exact, so the f64 key order always matches
+/// the f64 sweep.
 #[derive(Debug, Default, Clone)]
 pub struct HingeScratch {
     order: Vec<u32>,
-    keys: Vec<f32>,
+    keys: Vec<f64>,
 }
 
 /// Algorithm 2: all-pairs squared hinge loss in O(n log n).
@@ -126,17 +138,18 @@ impl SquaredHinge {
             return 0.0;
         }
 
-        // Sort indices by augmented value v_i = yhat_i + m * I[neg] (eq. 20).
-        // Ties are benign: a (pos, neg) pair at equal v contributes zero
-        // loss and zero gradient, so any tie-break order is correct.
+        // Sort indices by augmented value v_i = yhat_i + m * I[neg] (eq. 20),
+        // computed in f64 so key order matches the f64 sweep (see
+        // [`HingeScratch`]).  Exact-tie order is benign: a (pos, neg) pair
+        // at equal v contributes zero loss and zero gradient.
         scratch.keys.clear();
         scratch
             .keys
             .extend(scores.iter().zip(is_pos).map(|(&y, &p)| {
                 if p != 0.0 {
-                    y
+                    y as f64
                 } else {
-                    y + self.margin
+                    y as f64 + m
                 }
             }));
         scratch.order.clear();
@@ -187,10 +200,12 @@ impl SquaredHinge {
         let n = scores.len();
         let m = self.margin as f64;
         let mut order: Vec<u32> = (0..n as u32).collect();
-        let keys: Vec<f32> = scores
+        // f64 keys for the same reason as `loss_and_grad_with` (see
+        // [`HingeScratch`]): key order must match the f64 sweep.
+        let keys: Vec<f64> = scores
             .iter()
             .zip(is_pos)
-            .map(|(&y, &p)| if p != 0.0 { y } else { y + self.margin })
+            .map(|(&y, &p)| if p != 0.0 { y as f64 } else { y as f64 + m })
             .collect();
         order.sort_unstable_by(|&a, &b| keys[a as usize].total_cmp(&keys[b as usize]));
         let (mut a, mut b, mut c) = (0.0_f64, 0.0_f64, 0.0_f64);
@@ -331,6 +346,67 @@ mod tests {
         assert_eq!(h.loss_and_grad(&[], &[]).0, 0.0);
         assert_eq!(h.loss_and_grad(&[0.5], &[1.0]).0, 0.0);
         assert_eq!(h.loss_and_grad(&[0.5], &[0.0]).0, 0.0);
+    }
+
+    #[test]
+    fn regression_f32_keys_drop_near_boundary_pairs() {
+        // Scores within one f32 ulp of the sort-key boundary.  At
+        // |score| = 2^24 the f32 ulp is 2.0, so the f32 sum
+        // `y_neg + m = 2^24 + 1` rounds back onto 2^24 and ties with
+        // every positive key — the ascending sweep then sees the
+        // negative *before* the positives (unstable sort keeps the
+        // input order of exact ties at this size) and drops all five
+        // active pairs, each of which contributes (m - yj + yk)^2 = 1.
+        // The exact f64 key 2^24 + 1 sorts strictly after the
+        // positives, matching the f64 sweep.  This test fails if the
+        // keys are computed in f32.
+        let big = 16_777_216.0_f32; // 2^24
+        let mut scores = vec![big]; // the negative first, so a tie order
+        let mut is_pos = vec![0.0]; // that keeps input order is wrong
+        for _ in 0..5 {
+            scores.push(big);
+            is_pos.push(1.0);
+        }
+        let h = SquaredHinge::new(1.0);
+        let (ln, gn) = NaiveSquaredHinge::new(1.0).loss_and_grad(&scores, &is_pos);
+        assert_eq!(ln, 5.0); // five active pairs, each exactly 1 (f64-exact)
+        let (lf, gf) = h.loss_and_grad(&scores, &is_pos);
+        assert_close(ln, lf, 1e-12);
+        assert_close(h.loss_only(&scores, &is_pos), ln, 1e-12);
+        // grad[neg] = 2 * 5 pairs * (m - yj + yk) = 10; grad[pos] = -2
+        for (a, b) in gn.iter().zip(&gf) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        assert_eq!(gf[0], 10.0);
+        assert!(gf[1..].iter().all(|&g| g == -2.0));
+    }
+
+    #[test]
+    fn regression_f32_keys_add_phantom_pairs_on_round_up() {
+        // The mirror of the test above: here the f32 key sum rounds
+        // *up* onto the positive keys.  y_neg = 2^24 + 2 has an odd
+        // f32 mantissa, so `y_neg + 1 = 2^24 + 3` is an exact halfway
+        // case and round-to-even lands on 2^24 + 4 — tying with the
+        // positives at 2^24 + 4 even though the exact key sorts
+        // strictly *before* them.  Every pair has yj - yk = 2 > m, so
+        // the correct loss and gradients are exactly zero; an f32-key
+        // sweep that breaks the tie with the negative last adds a
+        // phantom (m - yj + yk)^2 = 1 per pair.  Together with the
+        // round-down test above (which needs the negative *last* in
+        // its tie group, while this one needs it *first*), no single
+        // tie-break policy can make f32 keys pass both.
+        let pos = 16_777_220.0_f32; // 2^24 + 4
+        let neg = 16_777_218.0_f32; // 2^24 + 2
+        let scores = vec![pos, pos, pos, neg];
+        let is_pos = vec![1.0, 1.0, 1.0, 0.0];
+        let h = SquaredHinge::new(1.0);
+        let (ln, gn) = NaiveSquaredHinge::new(1.0).loss_and_grad(&scores, &is_pos);
+        assert_eq!(ln, 0.0);
+        assert!(gn.iter().all(|&g| g == 0.0));
+        let (lf, gf) = h.loss_and_grad(&scores, &is_pos);
+        assert_eq!(lf, 0.0);
+        assert!(gf.iter().all(|&g| g == 0.0));
+        assert_eq!(h.loss_only(&scores, &is_pos), 0.0);
     }
 
     #[test]

@@ -111,11 +111,13 @@ impl PairwiseLoss for LinearHinge {
         // an equal-key *positive*: the negative's evaluation then excludes
         // that positive.  For the loss this is immaterial (the term is 0);
         // for the subgradient it selects the minimal-norm element.
+        // f64 keys so key order matches the f64 sweep exactly (see
+        // `functional::HingeScratch` for the rounding failure mode).
         let mut order: Vec<u32> = (0..n as u32).collect();
-        let keys: Vec<f32> = scores
+        let keys: Vec<f64> = scores
             .iter()
             .zip(is_pos)
-            .map(|(&y, &p)| if p != 0.0 { y } else { y + self.margin })
+            .map(|(&y, &p)| if p != 0.0 { y as f64 } else { y as f64 + m })
             .collect();
         order.sort_unstable_by(|&a, &b| {
             keys[a as usize]

@@ -5,6 +5,8 @@
 //! * `timing`          — Figure 2 (loss+gradient wall time vs n)
 //! * `sweep`           — Table 2 + Figure 3 (cross-validation protocol)
 //! * `train`           — one training run (debugging / ad-hoc)
+//! * `bench`           — the tracked perf trajectory (train-step /
+//!                       loss / AUC wall times → `BENCH_train.json`)
 //! * `report`          — re-aggregate a saved sweep JSONL
 //! * `artifacts-check` — compile every artifact and smoke-run init
 //!                       (requires the `pjrt` feature)
@@ -19,7 +21,7 @@
 use std::path::{Path, PathBuf};
 
 use allpairs::config::SweepConfig;
-use allpairs::coordinator::{cv, timing};
+use allpairs::coordinator::{cv, perf, timing};
 use allpairs::data::{Rng, SamplingMode, Split};
 use allpairs::report::figures::{ascii_loglog, write_csv};
 use allpairs::runtime::BackendSpec;
@@ -54,6 +56,12 @@ COMMANDS
       --imratio R --epochs E --seed S --max-train N
       --patience P      early-stop after P stale epochs  [off]
       --sampling MODE   preserve | rebalance | rebalance:F  [preserve]
+  bench             train-step/loss/AUC perf trajectory (native backend)
+      --json FILE       output JSON path        [BENCH_train.json]
+      --sizes LIST      comma-separated n       [10000,100000,1000000]
+      --threads LIST    train-step worker counts [1,8]
+      --dim D           features per row        [32]
+      (ALLPAIRS_BENCH_QUICK=1 shrinks the iteration budget, not sizes)
   report            re-aggregate a saved results file
       --results FILE    sweep_results.jsonl path
   artifacts-check   compile every artifact, smoke-run the inits (pjrt)
@@ -78,6 +86,7 @@ fn run() -> allpairs::Result<()> {
         Some("timing") => cmd_timing(&args, &out),
         Some("sweep") => cmd_sweep(&args, &artifacts, &out),
         Some("train") => cmd_train(&args, &artifacts),
+        Some("bench") => cmd_bench(&args),
         Some("report") => cmd_report(&args, &out),
         Some("artifacts-check") => cmd_artifacts_check(&artifacts),
         Some(other) => anyhow::bail!("unknown command {other:?}\n\n{USAGE}"),
@@ -284,6 +293,62 @@ fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
     } else if let Some(test_auc) = trainer.eval_auc(&pool.test, &test_indices)? {
         println!("final test AUC: {test_auc:.4}");
     }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> allpairs::Result<()> {
+    args.expect_known(&["artifacts", "out", "backend", "json", "sizes", "threads", "dim"])?;
+    let parse_list = |name: &str, default: &[usize]| -> allpairs::Result<Vec<usize>> {
+        match args.get_opt(name) {
+            None => Ok(default.to_vec()),
+            Some(list) => list
+                .split(',')
+                .map(|v| {
+                    v.trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}"))
+                })
+                .collect(),
+        }
+    };
+    let cfg = perf::PerfConfig {
+        sizes: parse_list("sizes", &[10_000, 100_000, 1_000_000])?,
+        threads: parse_list("threads", &[1, 8])?,
+        dim: args.get("dim", 32)?,
+    };
+    anyhow::ensure!(
+        !cfg.sizes.is_empty() && !cfg.threads.is_empty() && cfg.dim > 0,
+        "--sizes, --threads and --dim must be non-empty / positive"
+    );
+    // 0 means "auto" elsewhere, but the trajectory records *requested*
+    // worker counts (EXPERIMENTS.md convention 1), so it must be explicit.
+    anyhow::ensure!(
+        cfg.threads.iter().all(|&t| t >= 1),
+        "--threads entries must be >= 1 (the recorded count is the requested one)"
+    );
+    let quick = allpairs::util::bench::Bench::quick_from_env();
+    eprintln!(
+        "bench: train-step/loss/AUC at n {:?}, threads {:?}, dim {}{} ...",
+        cfg.sizes,
+        cfg.threads,
+        cfg.dim,
+        if quick { " (quick mode)" } else { "" }
+    );
+    let records = perf::run(&cfg)?;
+    let rows = perf::speedups(&records);
+    if !rows.is_empty() {
+        println!("\ntrain-step speedup (serial vs best parallel, median):");
+        println!(
+            "{:>10} {:>14} {:>8} {:>14} {:>9}",
+            "n", "serial_s", "threads", "parallel_s", "speedup"
+        );
+        for (n, serial, threads, parallel, speedup) in rows {
+            println!("{n:>10} {serial:>14.6} {threads:>8} {parallel:>14.6} {speedup:>8.2}x");
+        }
+    }
+    let json_path = args.get_str("json", "BENCH_train.json");
+    perf::write_json(&records, quick, &json_path)?;
+    println!("wrote {json_path} ({} records)", records.len());
     Ok(())
 }
 

@@ -1,0 +1,434 @@
+//! The deterministic parallel train-step engine (DESIGN.md §7).
+//!
+//! One object owns the parallel execution of a native train step:
+//! chunked forward → (serial) functional loss → chunked backward with a
+//! fixed-order f64 reduction.  The determinism contract is the point:
+//!
+//! * **Chunk layout is a pure function of the row count** —
+//!   [`chunk_layout`] never looks at the thread count, so every thread
+//!   count sees the same chunk boundaries.
+//! * **Each chunk is computed serially by exactly one worker**, in row
+//!   order, accumulating its parameter-gradient partial in f64.
+//! * **Partials are reduced in chunk-index order** on the calling
+//!   thread, also in f64, then rounded to f32 once.
+//!
+//! A result therefore depends only on the inputs, never on the thread
+//! count or on which worker happened to run which chunk: the parallel
+//! path is bit-identical to the serial path (threads = 1), which runs
+//! the very same chunk loop sequentially.  `tests/proptest_engine.rs`
+//! pins this across thread counts {1, 2, 8} and non-chunk-aligned row
+//! counts; this is what lets PR 3's bit-reproducibility guarantees
+//! survive parallel execution.
+//!
+//! Workers are scoped threads (the offline build has no rayon; see
+//! DESIGN.md §5.4): chunks are dealt round-robin to `threads` workers,
+//! which is load-balanced here because per-row cost is uniform.
+
+use std::ops::Range;
+
+/// Chunk granularity in rows.  Row counts at or below this stay a
+/// single chunk (and hence serial): below ~256 rows per-step
+/// thread-spawn cost rivals the compute, and sweep workers (which
+/// already parallelize at the job level) would oversubscribe the
+/// machine.
+pub const CHUNK_ROWS: usize = 256;
+
+/// Upper bound on chunks per step, which bounds the f64 partial-buffer
+/// memory at `MAX_CHUNKS × n_params` doubles while still keeping ≥ 8×
+/// more chunks than any sensible worker count for load balance.
+pub const MAX_CHUNKS: usize = 64;
+
+/// The chunk layout for `rows` rows: `(n_chunks, rows_per_chunk)`,
+/// where the final chunk may be ragged.  A pure function of `rows` —
+/// never of the thread count — so chunk boundaries (and therefore
+/// every f64 partial and the reduction order) are identical whether
+/// the step runs on 1 thread or 16.
+pub fn chunk_layout(rows: usize) -> (usize, usize) {
+    if rows == 0 {
+        return (0, 0);
+    }
+    let n = rows.div_ceil(CHUNK_ROWS).min(MAX_CHUNKS);
+    let per = rows.div_ceil(n);
+    (rows.div_ceil(per), per)
+}
+
+/// The row ranges of the chunks of [`chunk_layout`], in chunk order.
+pub fn chunk_ranges(rows: usize) -> impl Iterator<Item = Range<usize>> {
+    let (n_chunks, per) = chunk_layout(rows);
+    (0..n_chunks).map(move |c| c * per..((c + 1) * per).min(rows))
+}
+
+/// A model the engine can execute: per-chunk forward and backward
+/// kernels over row-major example data.  Implemented by the native
+/// backend's architectures (`runtime/native.rs`); the engine supplies
+/// the chunking, threading and deterministic reduction around them.
+pub trait ChunkModel: Sync {
+    /// Flat parameter-vector length.
+    fn n_params(&self) -> usize;
+
+    /// Hidden-activation scalars cached per row (0 = none).
+    fn hidden_units(&self) -> usize;
+
+    /// Forward over `rows` (absolute row indices into `x`), writing
+    /// into the chunk-local `scores`/`hidden` slices (lengths
+    /// `rows.len()` and `rows.len() * hidden_units()`).
+    fn forward_chunk(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        rows: Range<usize>,
+        scores: &mut [f32],
+        hidden: &mut [f32],
+    );
+
+    /// Accumulate `dL/dparams` over `rows` into the chunk's f64
+    /// `partial` (length `n_params()`).  `dscores` and `hidden` are
+    /// full-batch slices indexed absolutely; per-term products stay in
+    /// f32 (matching the serial reference math) — only the
+    /// accumulation is widened.
+    fn backward_chunk(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        rows: Range<usize>,
+        dscores: &[f32],
+        hidden: &[f32],
+        partial: &mut [f64],
+    );
+}
+
+/// The engine: worker-count policy plus the reusable f64 partial and
+/// reduction scratch.  The `O(n_params)`-sized buffers are reused
+/// across steps (no warm-path allocation that scales with the model);
+/// a parallel call additionally builds a few pointer-sized work-item
+/// lists, which cannot be cached because they hold per-call `&mut`
+/// chunk borrows.
+#[derive(Debug, Default)]
+pub struct Engine {
+    /// Requested worker threads (0 = one per available core).
+    threads: usize,
+    /// Per-chunk f64 gradient partials, indexed by chunk.
+    partials: Vec<Vec<f64>>,
+    /// Fixed-order reduction accumulator.
+    accum: Vec<f64>,
+}
+
+impl Engine {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads,
+            partials: Vec::new(),
+            accum: Vec::new(),
+        }
+    }
+
+    /// Workers actually spawned for `rows`: capped by full chunks of
+    /// work (`rows / CHUNK_ROWS`) so small batches stay serial, and by
+    /// the chunk count.
+    fn resolve_threads(&self, rows: usize, n_chunks: usize) -> usize {
+        let by_work = (rows / CHUNK_ROWS).min(n_chunks);
+        if by_work <= 1 {
+            return 1;
+        }
+        let hw = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        hw.clamp(1, by_work)
+    }
+
+    /// Chunked parallel forward: scores (and the hidden cache) for
+    /// `rows` examples.  Bit-identical across thread counts because
+    /// rows are independent and chunks write disjoint slices.
+    pub fn forward<M: ChunkModel + ?Sized>(
+        &self,
+        model: &M,
+        params: &[f32],
+        x: &[f32],
+        rows: usize,
+        scores: &mut [f32],
+        hidden: &mut [f32],
+    ) {
+        let h = model.hidden_units();
+        debug_assert_eq!(scores.len(), rows);
+        debug_assert_eq!(hidden.len(), rows * h);
+        let (n_chunks, _) = chunk_layout(rows);
+        if n_chunks == 0 {
+            return;
+        }
+        let t = self.resolve_threads(rows, n_chunks);
+        if t <= 1 {
+            for r in chunk_ranges(rows) {
+                let (s, hid) = (&mut scores[r.clone()], &mut hidden[r.start * h..r.end * h]);
+                model.forward_chunk(params, x, r, s, hid);
+            }
+            return;
+        }
+        // Deal (range, score slice, hidden slice) work items round-robin.
+        let mut buckets: Vec<Vec<_>> = (0..t).map(|_| Vec::new()).collect();
+        let (mut s_rest, mut h_rest) = (scores, hidden);
+        for (i, r) in chunk_ranges(rows).enumerate() {
+            let take = r.len();
+            let (s_head, s_tail) = s_rest.split_at_mut(take);
+            let (h_head, h_tail) = h_rest.split_at_mut(take * h);
+            s_rest = s_tail;
+            h_rest = h_tail;
+            buckets[i % t].push((r, s_head, h_head));
+        }
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || {
+                    for (r, s, hid) in bucket {
+                        model.forward_chunk(params, x, r, s, hid);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Chunked parallel backward: writes `dL/dparams` into `grad`
+    /// (overwritten).  Per-chunk f64 partials, reduced in chunk-index
+    /// order — bit-identical across thread counts (module docs).
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward<M: ChunkModel + ?Sized>(
+        &mut self,
+        model: &M,
+        params: &[f32],
+        x: &[f32],
+        rows: usize,
+        dscores: &[f32],
+        hidden: &[f32],
+        grad: &mut [f32],
+    ) {
+        let p = grad.len();
+        debug_assert_eq!(p, model.n_params());
+        let (n_chunks, _) = chunk_layout(rows);
+        if n_chunks == 0 {
+            grad.fill(0.0);
+            return;
+        }
+        if self.partials.len() < n_chunks {
+            self.partials.resize_with(n_chunks, Vec::new);
+        }
+        for part in self.partials[..n_chunks].iter_mut() {
+            part.clear();
+            part.resize(p, 0.0);
+        }
+        let t = self.resolve_threads(rows, n_chunks);
+        if t <= 1 {
+            for (r, part) in chunk_ranges(rows).zip(self.partials[..n_chunks].iter_mut()) {
+                model.backward_chunk(params, x, r, dscores, hidden, part);
+            }
+        } else {
+            let mut buckets: Vec<Vec<_>> = (0..t).map(|_| Vec::new()).collect();
+            for (i, (r, part)) in chunk_ranges(rows)
+                .zip(self.partials[..n_chunks].iter_mut())
+                .enumerate()
+            {
+                buckets[i % t].push((r, part));
+            }
+            std::thread::scope(|scope| {
+                for bucket in buckets {
+                    scope.spawn(move || {
+                        for (r, part) in bucket {
+                            model.backward_chunk(params, x, r, dscores, hidden, part);
+                        }
+                    });
+                }
+            });
+        }
+        // Fixed chunk-order f64 reduction, rounded to f32 once.
+        self.accum.clear();
+        self.accum.resize(p, 0.0);
+        for part in self.partials[..n_chunks].iter() {
+            for (a, &v) in self.accum.iter_mut().zip(part) {
+                *a += v;
+            }
+        }
+        for (g, &a) in grad.iter_mut().zip(&self.accum) {
+            *g = a as f32;
+        }
+    }
+
+    /// The fused train-step data path: chunked forward, then the
+    /// caller's (serial, f64) score-loss — `loss(scores, dscores)`
+    /// returns the loss value and fills the per-score gradient — then
+    /// chunked backward into `grad`.  One call per batch; every
+    /// model-sized buffer is caller-owned and reused.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fused_step<M: ChunkModel + ?Sized, L>(
+        &mut self,
+        model: &M,
+        params: &[f32],
+        x: &[f32],
+        rows: usize,
+        scores: &mut [f32],
+        hidden: &mut [f32],
+        dscores: &mut [f32],
+        loss: L,
+        grad: &mut [f32],
+    ) -> f64
+    where
+        L: FnOnce(&[f32], &mut [f32]) -> f64,
+    {
+        self.forward(model, params, x, rows, &mut *scores, &mut *hidden);
+        let value = loss(&*scores, &mut *dscores);
+        self.backward(model, params, x, rows, dscores, hidden, grad);
+        value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_pure_and_covers_rows() {
+        for rows in [0usize, 1, 7, 255, 256, 257, 511, 512, 1000, 16_384, 100_000, 1_000_000] {
+            let (n, per) = chunk_layout(rows);
+            assert_eq!(chunk_layout(rows), (n, per), "pure function of rows");
+            if rows == 0 {
+                assert_eq!((n, per), (0, 0));
+                continue;
+            }
+            assert!((1..=MAX_CHUNKS).contains(&n));
+            assert!(per >= 1);
+            let ranges: Vec<_> = chunk_ranges(rows).collect();
+            assert_eq!(ranges.len(), n);
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, rows);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous chunks");
+                assert_eq!(w[0].len(), per, "only the final chunk may be ragged");
+            }
+            assert!(!ranges.last().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn small_row_counts_are_one_chunk() {
+        for rows in 1..=CHUNK_ROWS {
+            assert_eq!(chunk_layout(rows), (1, rows));
+        }
+    }
+
+    /// Toy model: one weight, score = w * x[r], dL/dw = Σ ds_r * x[r].
+    struct Scale;
+
+    impl ChunkModel for Scale {
+        fn n_params(&self) -> usize {
+            1
+        }
+        fn hidden_units(&self) -> usize {
+            0
+        }
+        fn forward_chunk(
+            &self,
+            params: &[f32],
+            x: &[f32],
+            rows: Range<usize>,
+            scores: &mut [f32],
+            _hidden: &mut [f32],
+        ) {
+            for (i, r) in rows.enumerate() {
+                scores[i] = params[0] * x[r];
+            }
+        }
+        fn backward_chunk(
+            &self,
+            _params: &[f32],
+            x: &[f32],
+            rows: Range<usize>,
+            dscores: &[f32],
+            _hidden: &[f32],
+            partial: &mut [f64],
+        ) {
+            for r in rows {
+                partial[0] += (dscores[r] * x[r]) as f64;
+            }
+        }
+    }
+
+    #[test]
+    fn forward_and_backward_match_hand_computation() {
+        // Integer data keeps every f64 partial exact, so the expected
+        // values are exact too.
+        let rows = 600; // 3 chunks of 200
+        let x: Vec<f32> = (0..rows).map(|i| (i % 7) as f32).collect();
+        let ds: Vec<f32> = (0..rows).map(|i| ((i % 3) as f32) - 1.0).collect();
+        let want: f64 = (0..rows).map(|i| (ds[i] * x[i]) as f64).sum();
+        let mut engine = Engine::new(1);
+        let mut scores = vec![0.0; rows];
+        engine.forward(&Scale, &[2.0], &x, rows, &mut scores, &mut []);
+        assert!(scores.iter().zip(&x).all(|(s, v)| *s == 2.0 * v));
+        let mut grad = vec![0.0_f32; 1];
+        engine.backward(&Scale, &[2.0], &x, rows, &ds, &[], &mut grad);
+        assert_eq!(grad[0] as f64, want);
+    }
+
+    #[test]
+    fn thread_counts_are_bit_identical() {
+        // Irrational-ish magnitudes so any reduction-order difference
+        // would actually show; includes non-chunk-aligned row counts.
+        for rows in [1usize, 255, 256, 257, 600, 1000, 1537] {
+            let x: Vec<f32> = (0..rows)
+                .map(|i| ((i as f32) * 0.7310586).sin() * 100.0)
+                .collect();
+            let ds: Vec<f32> = (0..rows).map(|i| ((i as f32) * 1.618).cos()).collect();
+            let mut grads = Vec::new();
+            let mut all_scores = Vec::new();
+            for threads in [1usize, 2, 8] {
+                let mut engine = Engine::new(threads);
+                let mut scores = vec![0.0; rows];
+                engine.forward(&Scale, &[1.5], &x, rows, &mut scores, &mut []);
+                let mut grad = vec![0.0_f32; 1];
+                engine.backward(&Scale, &[1.5], &x, rows, &ds, &[], &mut grad);
+                grads.push(grad);
+                all_scores.push(scores);
+            }
+            assert_eq!(grads[0], grads[1], "rows {rows}: 1 vs 2 threads");
+            assert_eq!(grads[0], grads[2], "rows {rows}: 1 vs 8 threads");
+            assert_eq!(all_scores[0], all_scores[1]);
+            assert_eq!(all_scores[0], all_scores[2]);
+        }
+    }
+
+    #[test]
+    fn fused_step_is_forward_loss_backward() {
+        let rows = 300;
+        let x: Vec<f32> = (0..rows).map(|i| i as f32 * 0.01).collect();
+        let mut engine = Engine::new(2);
+        let mut scores = vec![0.0; rows];
+        let mut dscores = vec![0.0; rows];
+        let mut grad = vec![0.0_f32; 1];
+        // loss = Σ scores, dL/ds = 1 → dL/dw = Σ x
+        let value = engine.fused_step(
+            &Scale,
+            &[1.0],
+            &x,
+            rows,
+            &mut scores,
+            &mut vec![],
+            &mut dscores,
+            |s, ds| {
+                ds.fill(1.0);
+                s.iter().map(|&v| v as f64).sum()
+            },
+            &mut grad,
+        );
+        let want_loss: f64 = x.iter().map(|&v| v as f64).sum();
+        assert!((value - want_loss).abs() < 1e-9);
+        let want_grad: f64 = x.iter().map(|&v| v as f64).sum();
+        assert!((grad[0] as f64 - want_grad).abs() < 1e-3);
+    }
+
+    #[test]
+    fn zero_rows_are_a_no_op() {
+        let mut engine = Engine::new(4);
+        engine.forward(&Scale, &[1.0], &[], 0, &mut [], &mut []);
+        let mut grad = vec![7.0_f32];
+        engine.backward(&Scale, &[1.0], &[], 0, &[], &[], &mut grad);
+        assert_eq!(grad[0], 0.0, "backward overwrites");
+    }
+}

@@ -4,9 +4,13 @@
 //! * [`backend`] — the [`Backend`] / [`ModelExecutor`] traits and the
 //!   serializable [`BackendSpec`] that crosses thread and config
 //!   boundaries (see DESIGN.md §5).
+//! * [`engine`] — the deterministic parallel train-step engine: fixed
+//!   chunk layout, per-chunk f64 gradient partials, fixed chunk-order
+//!   reduction — bit-identical results at every thread count (see
+//!   DESIGN.md §7).
 //! * [`native`] — the default, fully self-contained pure-Rust backend:
-//!   forward/gradient execution built on [`crate::losses::functional`]
-//!   with scoped-thread data parallelism.  `Send + Sync`.
+//!   forward/gradient execution built on [`crate::losses::functional`],
+//!   parallelized through the engine.  `Send + Sync`.
 //! * `pjrt` (feature `pjrt`) — the AOT-artifact runtime: a PJRT CPU
 //!   client plus a lazy cache of compiled executables, keyed by artifact
 //!   name.  HLO **text** is the interchange format
@@ -21,6 +25,7 @@
 
 pub mod artifact;
 pub mod backend;
+pub mod engine;
 pub mod native;
 pub mod tensor;
 
@@ -29,6 +34,7 @@ pub mod pjrt;
 
 pub use artifact::{Artifact, ArtifactKind, Manifest};
 pub use backend::{Backend, BackendSpec, ModelExecutor};
+pub use engine::{ChunkModel, Engine};
 pub use native::{NativeBackend, NativeSpec};
 pub use tensor::HostTensor;
 

@@ -1,8 +1,7 @@
 //! The pure-Rust native backend: forward/gradient execution built
 //! directly on [`crate::losses::functional`] and [`HostTensor`], with
-//! data-parallel batch processing on `std::thread::scope` (the offline
-//! build has no rayon; see DESIGN.md §5.4 — the chunking scheme is the
-//! same map/reduce shape a rayon `par_chunks` would produce).
+//! the parallel train-step data path delegated to the deterministic
+//! chunked [`Engine`] (`runtime/engine.rs`, DESIGN.md §7).
 //!
 //! Models are the reproduction-scale stand-ins for the paper's networks:
 //! a linear scorer (`"linear"`) and a one-hidden-layer tanh MLP (every
@@ -13,9 +12,10 @@
 //! example), matching the L2 loss wrappers — so learning rates transfer
 //! between the native and PJRT backends.
 //!
-//! Everything is deterministic from the init seed at a fixed thread
-//! count; across thread counts only floating-point reduction order for
-//! the parameter gradient differs.
+//! Everything is deterministic from the init seed — including across
+//! thread counts: the engine's chunk layout and fixed-order f64
+//! reduction make the parallel gradient bit-identical to the serial
+//! one (`tests/proptest_engine.rs`).
 
 use std::ops::Range;
 
@@ -25,6 +25,7 @@ use crate::losses::logistic;
 use crate::losses::PairwiseLoss;
 
 use super::backend::{Backend, ModelExecutor};
+use super::engine::{ChunkModel, Engine};
 use super::tensor::HostTensor;
 
 /// Heavy-ball momentum, as in `python/compile/optim.py::SGDMomentum`.
@@ -95,7 +96,7 @@ impl NativeBackend {
         Ok(NativeObjective {
             arch,
             loss,
-            threads: self.spec.threads,
+            engine: Engine::new(self.spec.threads),
             x: rows.to_vec(),
             is_pos: labels.to_vec(),
             rows: labels.len(),
@@ -103,7 +104,6 @@ impl NativeBackend {
             hidden: Vec::new(),
             dscores: Vec::new(),
             grad_scores: Vec::new(),
-            partials: Vec::new(),
             hinge_scratch: HingeScratch::default(),
             evals: 0,
         })
@@ -231,205 +231,106 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
-/// Minimum rows per spawned thread: below this, per-step thread-spawn
-/// cost rivals the compute, and sweep workers would oversubscribe the
-/// machine (each worker parallelizes its own batches).
-const MIN_ROWS_PER_THREAD: usize = 256;
-
-fn effective_threads(requested: usize, rows: usize) -> usize {
-    let by_work = rows / MIN_ROWS_PER_THREAD;
-    if by_work <= 1 {
-        return 1; // small batches: stay serial
+/// The engine's view of the native architectures: per-chunk forward
+/// and f64-accumulating backward kernels.  Per-term products stay in
+/// f32 (the same arithmetic as a serial f32 step); only the
+/// accumulation is widened, which is what makes the chunked reduction
+/// both deterministic and summation-error-free (DESIGN.md §7).
+impl ChunkModel for ModelArch {
+    fn n_params(&self) -> usize {
+        ModelArch::n_params(self)
     }
-    let hw = if requested == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        requested
-    };
-    hw.clamp(1, by_work)
-}
 
-/// Run `f(first_row, scores_chunk, hidden_chunk)` over row chunks on up
-/// to `threads` scoped threads.  `hidden` must hold `rows * h` scalars
-/// (`h == 0` for models without a hidden layer).
-fn run_chunked<F>(
-    rows: usize,
-    threads: usize,
-    h: usize,
-    scores: &mut [f32],
-    hidden: &mut [f32],
-    f: F,
-) where
-    F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
-{
-    debug_assert_eq!(scores.len(), rows);
-    debug_assert_eq!(hidden.len(), rows * h);
-    let t = effective_threads(threads, rows);
-    if t <= 1 {
-        f(0, scores, hidden);
-        return;
+    fn hidden_units(&self) -> usize {
+        ModelArch::hidden_units(self)
     }
-    let chunk = rows.div_ceil(t);
-    std::thread::scope(|scope| {
-        let mut score_rest = scores;
-        let mut hidden_rest = hidden;
-        let mut first_row = 0;
-        let f = &f;
-        while !score_rest.is_empty() {
-            let take = chunk.min(score_rest.len());
-            let (score_head, score_tail) = score_rest.split_at_mut(take);
-            let (hidden_head, hidden_tail) = hidden_rest.split_at_mut(take * h);
-            score_rest = score_tail;
-            hidden_rest = hidden_tail;
-            let start = first_row;
-            first_row += take;
-            scope.spawn(move || f(start, score_head, hidden_head));
-        }
-    });
-}
 
-/// Forward pass: scores (and the tanh hidden cache for the MLP).
-fn forward_into(
-    arch: ModelArch,
-    params: &[f32],
-    x: &[f32],
-    rows: usize,
-    threads: usize,
-    scores: &mut [f32],
-    hidden: &mut [f32],
-) {
-    match arch {
-        ModelArch::Linear { dim } => {
-            let w = &params[..dim];
-            let b = params[dim];
-            run_chunked(rows, threads, 0, scores, hidden, move |r0, out, _hid| {
-                for (i, s) in out.iter_mut().enumerate() {
-                    let row = &x[(r0 + i) * dim..(r0 + i + 1) * dim];
-                    *s = b + dot(w, row);
+    fn forward_chunk(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        rows: Range<usize>,
+        scores: &mut [f32],
+        hidden: &mut [f32],
+    ) {
+        match *self {
+            ModelArch::Linear { dim } => {
+                let w = &params[..dim];
+                let b = params[dim];
+                for (i, r) in rows.enumerate() {
+                    scores[i] = b + dot(w, &x[r * dim..(r + 1) * dim]);
                 }
-            });
-        }
-        ModelArch::Mlp { dim, hidden: h } => {
-            let o_b1 = h * dim;
-            let o_w2 = o_b1 + h;
-            let o_b2 = o_w2 + h;
-            let w1 = &params[..o_b1];
-            let b1 = &params[o_b1..o_w2];
-            let w2 = &params[o_w2..o_b2];
-            let b2 = params[o_b2];
-            run_chunked(rows, threads, h, scores, hidden, move |r0, out, hid| {
-                for i in 0..out.len() {
-                    let row = &x[(r0 + i) * dim..(r0 + i + 1) * dim];
-                    let hrow = &mut hid[i * h..(i + 1) * h];
+            }
+            ModelArch::Mlp { dim, hidden: h } => {
+                let o_b1 = h * dim;
+                let o_w2 = o_b1 + h;
+                let o_b2 = o_w2 + h;
+                let w1 = &params[..o_b1];
+                let b1 = &params[o_b1..o_w2];
+                let w2 = &params[o_w2..o_b2];
+                let b2 = params[o_b2];
+                for (i, r) in rows.enumerate() {
+                    let row = &x[r * dim..(r + 1) * dim];
+                    let hrow = &mut hidden[i * h..(i + 1) * h];
                     for (j, hj) in hrow.iter_mut().enumerate() {
                         *hj = (b1[j] + dot(&w1[j * dim..(j + 1) * dim], row)).tanh();
                     }
-                    out[i] = b2 + dot(w2, hrow);
+                    scores[i] = b2 + dot(w2, hrow);
                 }
-            });
-        }
-    }
-}
-
-/// Accumulate `dL/dparams` for a row range into `grad`.
-fn accumulate_grad(
-    arch: ModelArch,
-    params: &[f32],
-    x: &[f32],
-    rows: Range<usize>,
-    dscores: &[f32],
-    hidden: &[f32],
-    grad: &mut [f32],
-) {
-    match arch {
-        ModelArch::Linear { dim } => {
-            let (gw, gb) = grad.split_at_mut(dim);
-            for r in rows {
-                let ds = dscores[r];
-                if ds == 0.0 {
-                    continue;
-                }
-                let row = &x[r * dim..(r + 1) * dim];
-                for (g, &v) in gw.iter_mut().zip(row) {
-                    *g += ds * v;
-                }
-                gb[0] += ds;
             }
         }
-        ModelArch::Mlp { dim, hidden: h } => {
-            let o_b1 = h * dim;
-            let o_w2 = o_b1 + h;
-            let o_b2 = o_w2 + h;
-            let w2 = &params[o_w2..o_b2];
-            for r in rows {
-                let ds = dscores[r];
-                if ds == 0.0 {
-                    continue;
+    }
+
+    fn backward_chunk(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        rows: Range<usize>,
+        dscores: &[f32],
+        hidden: &[f32],
+        partial: &mut [f64],
+    ) {
+        match *self {
+            ModelArch::Linear { dim } => {
+                let (gw, gb) = partial.split_at_mut(dim);
+                for r in rows {
+                    let ds = dscores[r];
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let row = &x[r * dim..(r + 1) * dim];
+                    for (g, &v) in gw.iter_mut().zip(row) {
+                        *g += (ds * v) as f64;
+                    }
+                    gb[0] += ds as f64;
                 }
-                let row = &x[r * dim..(r + 1) * dim];
-                let hrow = &hidden[r * h..(r + 1) * h];
-                grad[o_b2] += ds;
-                for j in 0..h {
-                    let hj = hrow[j];
-                    grad[o_w2 + j] += ds * hj;
-                    let dz = ds * w2[j] * (1.0 - hj * hj);
-                    if dz != 0.0 {
-                        grad[o_b1 + j] += dz;
-                        for (g, &v) in grad[j * dim..(j + 1) * dim].iter_mut().zip(row) {
-                            *g += dz * v;
+            }
+            ModelArch::Mlp { dim, hidden: h } => {
+                let o_b1 = h * dim;
+                let o_w2 = o_b1 + h;
+                let o_b2 = o_w2 + h;
+                let w2 = &params[o_w2..o_b2];
+                for r in rows {
+                    let ds = dscores[r];
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let row = &x[r * dim..(r + 1) * dim];
+                    let hrow = &hidden[r * h..(r + 1) * h];
+                    partial[o_b2] += ds as f64;
+                    for j in 0..h {
+                        let hj = hrow[j];
+                        partial[o_w2 + j] += (ds * hj) as f64;
+                        let dz = ds * w2[j] * (1.0 - hj * hj);
+                        if dz != 0.0 {
+                            partial[o_b1 + j] += dz as f64;
+                            for (g, &v) in partial[j * dim..(j + 1) * dim].iter_mut().zip(row) {
+                                *g += (dz * v) as f64;
+                            }
                         }
                     }
                 }
             }
-        }
-    }
-}
-
-/// Parallel gradient: thread-local partials merged in thread order, so
-/// the result is deterministic at a fixed thread count.  `partials` is
-/// caller-owned scratch, reused across steps (no per-step allocation
-/// after warm-up).
-#[allow(clippy::too_many_arguments)]
-fn backward_into(
-    arch: ModelArch,
-    params: &[f32],
-    x: &[f32],
-    rows: usize,
-    threads: usize,
-    dscores: &[f32],
-    hidden: &[f32],
-    partials: &mut Vec<Vec<f32>>,
-    grad: &mut [f32],
-) {
-    let t = effective_threads(threads, rows);
-    if t <= 1 {
-        accumulate_grad(arch, params, x, 0..rows, dscores, hidden, grad);
-        return;
-    }
-    let chunk = rows.div_ceil(t);
-    let n = grad.len();
-    if partials.len() < t {
-        partials.resize_with(t, Vec::new);
-    }
-    for part in partials[..t].iter_mut() {
-        part.clear();
-        part.resize(n, 0.0);
-    }
-    std::thread::scope(|scope| {
-        for (ti, part) in partials[..t].iter_mut().enumerate() {
-            let r0 = ti * chunk;
-            let r1 = ((ti + 1) * chunk).min(rows);
-            if r0 >= r1 {
-                break;
-            }
-            scope.spawn(move || {
-                accumulate_grad(arch, params, x, r0..r1, dscores, hidden, part);
-            });
-        }
-    });
-    for part in partials[..t].iter() {
-        for (g, &p) in grad.iter_mut().zip(part) {
-            *g += p;
         }
     }
 }
@@ -507,15 +408,17 @@ impl LossKind {
 // ---------------------------------------------------------------------------
 
 /// Native [`ModelExecutor`]: flat parameter + momentum vectors, reusable
-/// scratch buffers.  The train step is allocation-free after warm-up
-/// for every loss — hinge via [`SquaredHinge::loss_and_grad_with`],
+/// scratch buffers, and a per-executor [`Engine`] driving the parallel
+/// data path.  The train step is allocation-free after warm-up for
+/// every loss — hinge via [`SquaredHinge::loss_and_grad_with`],
 /// square/logistic via their `loss_and_grad_into` paths (see
-/// EXPERIMENTS.md §Perf).
+/// EXPERIMENTS.md §Perf) — and bit-identical across thread counts
+/// (DESIGN.md §7).
 struct NativeExecutor {
     arch: ModelArch,
     loss: LossKind,
     batch: usize,
-    threads: usize,
+    engine: Engine,
     initialized: bool,
     params: Vec<f32>,
     momentum: Vec<f32>,
@@ -528,7 +431,6 @@ struct NativeExecutor {
     compact_pos: Vec<f32>,
     compact_idx: Vec<u32>,
     compact_grad: Vec<f32>,
-    partials: Vec<Vec<f32>>,
     hinge_scratch: HingeScratch,
 }
 
@@ -539,7 +441,7 @@ impl NativeExecutor {
             arch,
             loss,
             batch,
-            threads,
+            engine: Engine::new(threads),
             initialized: false,
             params: vec![0.0; n],
             momentum: vec![0.0; n],
@@ -551,7 +453,6 @@ impl NativeExecutor {
             compact_pos: Vec::new(),
             compact_idx: Vec::new(),
             compact_grad: Vec::new(),
-            partials: Vec::new(),
             hinge_scratch: HingeScratch::default(),
         }
     }
@@ -561,12 +462,11 @@ impl NativeExecutor {
         self.scores.resize(rows, 0.0);
         self.hidden.clear();
         self.hidden.resize(rows * self.arch.hidden_units(), 0.0);
-        forward_into(
-            self.arch,
+        self.engine.forward(
+            &self.arch,
             &self.params,
             x,
             rows,
-            self.threads,
             &mut self.scores,
             &mut self.hidden,
         );
@@ -606,48 +506,69 @@ impl ModelExecutor for NativeExecutor {
         anyhow::ensure!(x.len() == b * d, "x buffer size {} != {}", x.len(), b * d);
         anyhow::ensure!(is_pos.len() == b && is_neg.len() == b, "mask buffer size");
 
-        self.forward_rows(x, b);
-
-        // Compact out padding rows (both masks zero): the native losses
-        // would otherwise count padding as negatives.
-        self.compact_scores.clear();
-        self.compact_pos.clear();
-        self.compact_idx.clear();
-        for i in 0..b {
-            if is_pos[i] != 0.0 || is_neg[i] != 0.0 {
-                self.compact_scores.push(self.scores[i]);
-                self.compact_pos.push(is_pos[i]);
-                self.compact_idx.push(i as u32);
-            }
-        }
-        let norm = self.loss.norm(&self.compact_pos);
-        let raw = self.loss.loss_and_grad_into(
-            &self.compact_scores,
-            &self.compact_pos,
-            &mut self.compact_grad,
-            &mut self.hinge_scratch,
-        );
-
-        // Scatter normalized score gradients back to batch positions.
+        let arch = self.arch;
+        let loss = self.loss;
+        self.scores.clear();
+        self.scores.resize(b, 0.0);
+        self.hidden.clear();
+        self.hidden.resize(b * arch.hidden_units(), 0.0);
         self.dscores.clear();
         self.dscores.resize(b, 0.0);
-        let inv = 1.0 / norm;
-        for (slot, &i) in self.compact_idx.iter().enumerate() {
-            self.dscores[i as usize] = (self.compact_grad[slot] as f64 * inv) as f32;
-        }
-
         self.grad.clear();
         self.grad.resize(self.params.len(), 0.0);
-        backward_into(
-            self.arch,
-            &self.params,
+
+        // One fused engine call: chunked forward → functional loss →
+        // chunked backward with the fixed-order f64 reduction.
+        let Self {
+            engine,
+            params,
+            scores,
+            hidden,
+            dscores,
+            grad,
+            compact_scores,
+            compact_pos,
+            compact_idx,
+            compact_grad,
+            hinge_scratch,
+            ..
+        } = self;
+        let normalized = engine.fused_step(
+            &arch,
+            params,
             x,
             b,
-            self.threads,
-            &self.dscores,
-            &self.hidden,
-            &mut self.partials,
-            &mut self.grad,
+            scores,
+            hidden,
+            dscores,
+            |scores, dscores| {
+                // Compact out padding rows (both masks zero): the native
+                // losses would otherwise count padding as negatives.
+                compact_scores.clear();
+                compact_pos.clear();
+                compact_idx.clear();
+                for i in 0..b {
+                    if is_pos[i] != 0.0 || is_neg[i] != 0.0 {
+                        compact_scores.push(scores[i]);
+                        compact_pos.push(is_pos[i]);
+                        compact_idx.push(i as u32);
+                    }
+                }
+                let norm = loss.norm(compact_pos);
+                let raw = loss.loss_and_grad_into(
+                    compact_scores,
+                    compact_pos,
+                    compact_grad,
+                    hinge_scratch,
+                );
+                // Scatter normalized score gradients to batch positions.
+                let inv = 1.0 / norm;
+                for (slot, &i) in compact_idx.iter().enumerate() {
+                    dscores[i as usize] = (compact_grad[slot] as f64 * inv) as f32;
+                }
+                raw / norm
+            },
+            grad,
         );
 
         // Heavy-ball update.
@@ -660,7 +581,7 @@ impl ModelExecutor for NativeExecutor {
             *v = MOMENTUM * *v + g;
             *p -= lr * *v;
         }
-        Ok(raw / norm)
+        Ok(normalized)
     }
 
     fn predict(&mut self, x: &[f32], rows: usize) -> crate::Result<Vec<f32>> {
@@ -734,11 +655,12 @@ fn flat_from_tensors(shapes: &[Vec<i64>], tensors: &[HostTensor]) -> crate::Resu
 
 /// Native full-batch (loss, gradient) oracle over flat parameters —
 /// the [`crate::train::lbfgs::Objective`] the deterministic optimizers
-/// consume.  Built via [`NativeBackend::objective`].
+/// consume.  Built via [`NativeBackend::objective`]; executes through
+/// the same deterministic chunked [`Engine`] as the train step.
 pub struct NativeObjective {
     arch: ModelArch,
     loss: LossKind,
-    threads: usize,
+    engine: Engine,
     x: Vec<f32>,
     is_pos: Vec<f32>,
     rows: usize,
@@ -746,7 +668,6 @@ pub struct NativeObjective {
     hidden: Vec<f32>,
     dscores: Vec<f32>,
     grad_scores: Vec<f32>,
-    partials: Vec<Vec<f32>>,
     hinge_scratch: HingeScratch,
     /// Number of oracle evaluations performed (diagnostics).
     pub evals: usize,
@@ -765,12 +686,11 @@ impl NativeObjective {
         self.scores.resize(self.rows, 0.0);
         self.hidden.clear();
         self.hidden.resize(self.rows * self.arch.hidden_units(), 0.0);
-        forward_into(
-            self.arch,
+        self.engine.forward(
+            &self.arch,
             theta,
             &self.x,
             self.rows,
-            self.threads,
             &mut self.scores,
             &mut self.hidden,
         );
@@ -804,15 +724,13 @@ impl crate::train::lbfgs::Objective for NativeObjective {
         self.dscores
             .extend(self.grad_scores.iter().map(|&g| (g as f64 * inv) as f32));
         let mut grad = vec![0.0_f32; self.arch.n_params()];
-        backward_into(
-            self.arch,
+        self.engine.backward(
+            &self.arch,
             theta,
             &self.x,
             self.rows,
-            self.threads,
             &self.dscores,
             &self.hidden,
-            &mut self.partials,
             &mut grad,
         );
         Ok((raw / norm, grad))
@@ -915,8 +833,11 @@ mod tests {
     }
 
     #[test]
-    fn thread_counts_agree() {
-        // n must exceed 2 * MIN_ROWS_PER_THREAD so the parallel path runs.
+    fn thread_counts_are_bit_identical() {
+        // n must exceed 2 * engine::CHUNK_ROWS so the parallel path
+        // runs.  The engine's fixed chunk layout + fixed-order f64
+        // reduction make the whole step — loss AND parameter state —
+        // bit-identical across thread counts (DESIGN.md §7).
         let n = 600;
         let (x, p, q) = toy_batch(n, 16, 5);
         let serial = NativeBackend::new(spec(16, 8, 1));
@@ -925,17 +846,11 @@ mod tests {
         let mut c = parallel.open("mlp", "hinge", n).unwrap();
         a.init(2).unwrap();
         c.init(2).unwrap();
-        let la = a.train_step(&x, &p, &q, 0.05).unwrap();
-        let lc = c.train_step(&x, &p, &q, 0.05).unwrap();
-        // forward is row-independent: identical loss
-        assert_eq!(la, lc);
-        // gradients differ only by fp reduction order
-        let sa = a.state_to_host().unwrap();
-        let sc = c.state_to_host().unwrap();
-        for (ta, tc) in sa.iter().zip(&sc) {
-            for (va, vc) in ta.data.iter().zip(&tc.data) {
-                assert!((va - vc).abs() <= 1e-4 * va.abs().max(1.0), "{va} vs {vc}");
-            }
+        for _ in 0..3 {
+            let la = a.train_step(&x, &p, &q, 0.05).unwrap();
+            let lc = c.train_step(&x, &p, &q, 0.05).unwrap();
+            assert_eq!(la.to_bits(), lc.to_bits());
+            assert_eq!(a.state_to_host().unwrap(), c.state_to_host().unwrap());
         }
     }
 

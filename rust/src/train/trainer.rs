@@ -17,6 +17,12 @@
 //! best-checkpoint tracking, divergence cutoff, and host-side state
 //! snapshots.  The batch buffers live on the trainer, so the epoch hot
 //! loop performs no per-batch allocation after warm-up.
+//!
+//! On the native backend every `train_step`/`predict` call below runs
+//! through the deterministic parallel engine (`runtime/engine.rs`,
+//! DESIGN.md §7), so a [`Trainer::fit_stream`] run is bit-reproducible
+//! from its seed at *any* thread count — the worker count is a pure
+//! speed knob, never a result knob (`tests/proptest_engine.rs`).
 
 use crate::data::{BatchPlan, Dataset, EpochSampler, Rng, SamplingMode};
 use crate::metrics::auc;

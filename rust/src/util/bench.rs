@@ -51,6 +51,29 @@ fn fmt_duration(d: Duration) -> String {
     }
 }
 
+/// Median / mean / min over raw per-iteration times.  The median of an
+/// even sample count is the average of the two middle samples (the
+/// textbook definition — picking the upper middle biases repeated
+/// short runs upward).
+fn summarize(name: String, mut times: Vec<Duration>) -> Measurement {
+    assert!(!times.is_empty(), "summarize needs at least one sample");
+    times.sort_unstable();
+    let n = times.len();
+    let median = if n % 2 == 0 {
+        (times[n / 2 - 1] + times[n / 2]) / 2
+    } else {
+        times[n / 2]
+    };
+    let sum: Duration = times.iter().sum();
+    Measurement {
+        name,
+        iters: n,
+        median,
+        mean: sum / n as u32,
+        min: times[0],
+    }
+}
+
 /// Benchmark runner with a time budget per benchmark.
 pub struct Bench {
     min_iters: usize,
@@ -77,10 +100,17 @@ impl Bench {
         Self::default()
     }
 
+    /// Whether `ALLPAIRS_BENCH_QUICK=1` is set — the single source of
+    /// truth for quick mode, shared by [`Self::from_env`] and anything
+    /// that records which mode a run used (e.g. `BENCH_train.json`).
+    pub fn quick_from_env() -> bool {
+        std::env::var("ALLPAIRS_BENCH_QUICK").as_deref() == Ok("1")
+    }
+
     /// Quick-mode harness (smaller budget) when `ALLPAIRS_BENCH_QUICK=1`.
     pub fn from_env() -> Self {
         let mut b = Self::default();
-        if std::env::var("ALLPAIRS_BENCH_QUICK").as_deref() == Ok("1") {
+        if Self::quick_from_env() {
             b.budget = Duration::from_millis(120);
             b.warmup = 1;
             b.min_iters = 2;
@@ -108,15 +138,7 @@ impl Bench {
             std::hint::black_box(f());
             times.push(t0.elapsed());
         }
-        times.sort_unstable();
-        let sum: Duration = times.iter().sum();
-        let m = Measurement {
-            name: name.into(),
-            iters: times.len(),
-            median: times[times.len() / 2],
-            mean: sum / times.len() as u32,
-            min: times[0],
-        };
+        let m = summarize(name.into(), times);
         println!("{m}");
         self.results.push(m);
         self.results.last().unwrap()
@@ -180,12 +202,30 @@ mod tests {
     }
 
     #[test]
+    fn median_of_even_sample_count_averages_middle_pair() {
+        let ms = Duration::from_millis;
+        let odd = summarize("odd".into(), vec![ms(30), ms(10), ms(20)]);
+        assert_eq!(odd.median, ms(20));
+        // even count: (20 + 40) / 2, not the upper middle 40
+        let even = summarize("even".into(), vec![ms(40), ms(10), ms(20), ms(90)]);
+        assert_eq!(even.median, ms(30));
+        assert_eq!(even.min, ms(10));
+        assert_eq!(even.mean, ms(40));
+        let pair = summarize("pair".into(), vec![ms(10), ms(20)]);
+        assert_eq!(pair.median, ms(15));
+    }
+
+    #[test]
     fn csv_output() {
         let mut b = Bench::new().with_budget(Duration::from_millis(10));
         b.run("x", || 1 + 1);
-        let p = std::env::temp_dir().join("allpairs_bench_test.csv");
+        // Unique per test process: a fixed path collides when several
+        // `cargo test` invocations run concurrently on one machine.
+        let name = format!("allpairs_bench_test_{}.csv", std::process::id());
+        let p = std::env::temp_dir().join(name);
         b.write_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
+        let _ = std::fs::remove_file(&p);
         assert!(text.starts_with("name,iters"));
         assert!(text.lines().count() == 2);
     }

@@ -1,0 +1,139 @@
+//! Property tests for the deterministic parallel train-step engine
+//! (DESIGN.md §7): at every thread count the native backend must
+//! produce **bit-identical** results — batch loss, score path, full
+//! parameter/momentum state, and the L-BFGS oracle's gradient — to the
+//! serial path, including non-chunk-aligned batch sizes.  In-tree
+//! generator, same style as `proptest_losses.rs` (the `proptest` crate
+//! is unavailable offline).
+
+use allpairs::data::Rng;
+use allpairs::runtime::{NativeBackend, NativeSpec};
+use allpairs::train::lbfgs::Objective;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// Batch sizes straddling the engine's chunk granularity (256 rows):
+/// sub-chunk, exactly aligned, one-off-aligned, and ragged multiples.
+const SIZES: [usize; 9] = [1, 7, 100, 255, 256, 257, 600, 777, 1023];
+
+struct Case {
+    n: usize,
+    dim: usize,
+    hidden: usize,
+    model: &'static str,
+    loss: &'static str,
+    x: Vec<f32>,
+    is_pos: Vec<f32>,
+    is_neg: Vec<f32>,
+}
+
+fn gen_case(n: usize, case_idx: usize, rng: &mut Rng) -> Case {
+    let dim = 2 + rng.below(8);
+    let (model, hidden) = if rng.below(2) == 0 {
+        ("linear", 0)
+    } else {
+        ("mlp", 2 + rng.below(6))
+    };
+    let loss = ["hinge", "square", "logistic"][case_idx % 3];
+    let pad_frac = [0.0, 0.15][rng.below(2)];
+    let mut x = Vec::with_capacity(n * dim);
+    let mut is_pos = Vec::with_capacity(n);
+    let mut is_neg = Vec::with_capacity(n);
+    for _ in 0..n {
+        if rng.uniform() < pad_frac {
+            is_pos.push(0.0);
+            is_neg.push(0.0);
+            x.resize(x.len() + dim, 0.0);
+        } else {
+            let pos = rng.uniform() < 0.3;
+            is_pos.push(if pos { 1.0 } else { 0.0 });
+            is_neg.push(if pos { 0.0 } else { 1.0 });
+            for _ in 0..dim {
+                x.push(rng.normal() as f32);
+            }
+        }
+    }
+    Case {
+        n,
+        dim,
+        hidden,
+        model,
+        loss,
+        x,
+        is_pos,
+        is_neg,
+    }
+}
+
+fn backend(case: &Case, threads: usize) -> NativeBackend {
+    NativeBackend::new(NativeSpec {
+        input_dim: case.dim,
+        hidden: case.hidden,
+        margin: 1.0,
+        threads,
+    })
+}
+
+#[test]
+fn prop_train_step_is_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(0xE9617E);
+    for (case_idx, &n) in SIZES.iter().enumerate() {
+        for round in 0..3 {
+            let case = gen_case(n, case_idx + round, &mut rng);
+            // Reference: the serial path (threads = 1), two steps so
+            // momentum state is exercised.
+            let mut outputs = Vec::new();
+            for &threads in &THREAD_COUNTS {
+                let b = backend(&case, threads);
+                let mut exec = b.open(case.model, case.loss, case.n).unwrap();
+                exec.init(round as u32).unwrap();
+                let mut losses = Vec::new();
+                for _ in 0..2 {
+                    let l = exec.train_step(&case.x, &case.is_pos, &case.is_neg, 0.05).unwrap();
+                    losses.push(l);
+                }
+                let scores = exec.predict(&case.x, case.n).unwrap();
+                outputs.push((losses, exec.state_to_host().unwrap(), scores));
+            }
+            let (ref_losses, ref_state, ref_scores) = &outputs[0];
+            for (t_idx, (losses, state, scores)) in outputs.iter().enumerate().skip(1) {
+                let ctx = format!(
+                    "n={n} model={} loss={} threads={}",
+                    case.model, case.loss, THREAD_COUNTS[t_idx]
+                );
+                for (a, b) in ref_losses.iter().zip(losses) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "loss differs: {ctx}");
+                }
+                assert_eq!(ref_state, state, "state differs: {ctx}");
+                assert_eq!(ref_scores, scores, "scores differ: {ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_objective_gradient_is_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(0x0B1EC7);
+    for (case_idx, &n) in [100usize, 257, 600, 1023].iter().enumerate() {
+        let case = gen_case(n, case_idx, &mut rng);
+        let theta = backend(&case, 1)
+            .objective(case.model, case.loss, &case.x, &case.is_pos)
+            .unwrap()
+            .init_params(7);
+        let mut outputs = Vec::new();
+        for &threads in &THREAD_COUNTS {
+            let b = backend(&case, threads);
+            let mut obj = b.objective(case.model, case.loss, &case.x, &case.is_pos).unwrap();
+            outputs.push(obj.eval(&theta).unwrap());
+        }
+        let (ref_loss, ref_grad) = &outputs[0];
+        for (t_idx, (loss, grad)) in outputs.iter().enumerate().skip(1) {
+            let ctx = format!(
+                "n={n} model={} loss={} threads={}",
+                case.model, case.loss, THREAD_COUNTS[t_idx]
+            );
+            assert_eq!(ref_loss.to_bits(), loss.to_bits(), "loss differs: {ctx}");
+            assert_eq!(ref_grad, grad, "gradient differs: {ctx}");
+        }
+    }
+}
