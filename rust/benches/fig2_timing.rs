@@ -31,21 +31,21 @@ fn main() -> anyhow::Result<()> {
             });
         }
     }
-    // Perf ablation: allocation-per-call vs reusable scratch buffers on
-    // the O(n log n) hinge sweep (EXPERIMENTS.md §Perf).
-    use allpairs::losses::functional::{HingeScratch, SquaredHinge};
-    use allpairs::losses::PairwiseLoss;
+    // Perf ablation: allocation-per-call (the Figure-2 PairwiseLoss
+    // trait) vs the reusable LossFn workspace on the O(n log n) hinge
+    // sweep (EXPERIMENTS.md §Perf).
+    use allpairs::losses::functional::SquaredHinge;
+    use allpairs::losses::{BatchView, LossFn, LossWorkspace, PairwiseLoss};
     let n = if quick { 10_000 } else { 1_000_000 };
     let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
     let is_pos: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
     let hinge = SquaredHinge::new(1.0);
     bench.run(format!("hinge_alloc_per_call/n={n}"), || {
-        hinge.loss_and_grad(&scores, &is_pos).0
+        PairwiseLoss::loss_and_grad(&hinge, &scores, &is_pos).0
     });
-    let mut grad = Vec::new();
-    let mut scratch = HingeScratch::default();
-    bench.run(format!("hinge_scratch_reuse/n={n}"), || {
-        hinge.loss_and_grad_with(&scores, &is_pos, &mut grad, &mut scratch)
+    let mut ws = LossWorkspace::default();
+    bench.run(format!("hinge_workspace_reuse/n={n}"), || {
+        LossFn::loss_and_grad(&hinge, BatchView::new(&scores, &is_pos), &mut ws)
     });
     bench.run(format!("hinge_loss_only/n={n}"), || {
         hinge.loss_only(&scores, &is_pos)

@@ -6,6 +6,7 @@
 //! bench the PJRT path instead (host staging + one execution per step).
 
 use allpairs::data::{Dataset, Rng};
+use allpairs::losses::LossSpec;
 use allpairs::runtime::{BackendSpec, NativeSpec};
 use allpairs::train::Trainer;
 use allpairs::util::bench::Bench;
@@ -33,19 +34,31 @@ fn main() -> anyhow::Result<()> {
     let backend = spec.connect()?;
 
     let batches: &[usize] = if quick { &[10, 100] } else { &[10, 100, 1000] };
-    let losses: &[&str] = if quick {
-        &["hinge"]
+    let losses: Vec<LossSpec> = if quick {
+        vec![LossSpec::hinge()]
     } else if pjrt {
-        &["hinge", "square", "logistic", "aucm"]
+        vec![
+            LossSpec::hinge(),
+            LossSpec::square(),
+            LossSpec::logistic(),
+            LossSpec::aucm(),
+        ]
     } else {
-        &["hinge", "square", "logistic"]
+        // every loss with a native kernel, the weighted hinge included
+        vec![
+            LossSpec::hinge(),
+            LossSpec::square(),
+            LossSpec::logistic(),
+            LossSpec::linear_hinge(),
+            LossSpec::weighted_hinge(),
+        ]
     };
 
     let mut bench = Bench::from_env();
     let mut rng = Rng::new(5);
     let data = image_batch_dataset(2000, &mut rng);
 
-    for &loss in losses {
+    for loss in &losses {
         for &bs in batches {
             let mut trainer = Trainer::new(backend.as_ref(), "resnet", loss, bs)?;
             trainer.init(0)?;
@@ -61,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // predict path (used for per-epoch validation AUC)
-    let mut trainer = Trainer::new(backend.as_ref(), "resnet", "hinge", 100)?;
+    let mut trainer = Trainer::new(backend.as_ref(), "resnet", &LossSpec::hinge(), 100)?;
     trainer.init(0)?;
     let eval_idx: Vec<u32> = (0..1000).collect();
     bench.run("predict/resnet/1000_examples", || {

@@ -16,6 +16,7 @@
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::cv;
 use allpairs::data::SamplingMode;
+use allpairs::losses::LossSpec;
 use allpairs::runtime::BackendSpec;
 use allpairs::util::cli::Args;
 
@@ -42,13 +43,13 @@ fn main() -> allpairs::Result<()> {
     if cfg.adapt_losses_to_backend(!user_config) {
         eprintln!(
             "note: aucm requires the pjrt backend; sweeping losses {:?}",
-            cfg.losses
+            cfg.losses.iter().map(|l| l.to_string()).collect::<Vec<_>>()
         );
     }
     if args.flag("smoke") {
         cfg.datasets = vec!["synth-pets".into()];
         cfg.imratios = vec![0.1, 0.01];
-        cfg.losses = vec!["hinge".into(), "logistic".into()];
+        cfg.losses = vec![LossSpec::hinge(), LossSpec::logistic()];
         cfg.batch_sizes = vec![50, 500];
         cfg.seeds = vec![0, 1];
         cfg.epochs = 4;

@@ -12,6 +12,7 @@
 //! ```
 
 use allpairs::data::{features, FeatureSpec, Rng, SamplingMode, Split};
+use allpairs::losses::LossSpec;
 use allpairs::runtime::{BackendSpec, NativeSpec};
 use allpairs::train::{FitConfig, Trainer};
 use allpairs::util::cli::Args;
@@ -19,8 +20,10 @@ use allpairs::util::cli::Args;
 fn main() -> allpairs::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     args.expect_known(&[
-        "batch", "epochs", "patience", "lr", "imratio", "sampling", "seed",
+        "batch", "epochs", "patience", "lr", "imratio", "sampling", "seed", "loss",
     ])?;
+    // e.g. --loss whinge trains the class-balanced weighted hinge
+    let loss: LossSpec = args.get_str("loss", "hinge").parse()?;
     let batch: usize = args.get("batch", 1000)?;
     let epochs: usize = args.get("epochs", 40)?;
     let patience: usize = args.get("patience", 5)?;
@@ -56,7 +59,6 @@ fn main() -> allpairs::Result<()> {
     let backend = BackendSpec::Native(NativeSpec {
         input_dim: spec.dim,
         hidden: 32,
-        margin: 1.0,
         threads: 0, // one per core: large batches parallelize well
     })
     .connect()?;
@@ -68,7 +70,7 @@ fn main() -> allpairs::Result<()> {
         seed,
     };
     let fit_seed = seed as u64 + 0x57EA4;
-    let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", batch)?;
+    let mut trainer = Trainer::new(backend.as_ref(), "mlp", &loss, batch)?;
     let outcome = trainer.fit_stream(
         &train,
         &split.subtrain,
@@ -104,7 +106,7 @@ fn main() -> allpairs::Result<()> {
 
     // Same seed, fresh trainer: the streaming pipeline (reshuffle,
     // oversampling cycle, early stop) must reproduce bit-identically.
-    let mut rerun_trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", batch)?;
+    let mut rerun_trainer = Trainer::new(backend.as_ref(), "mlp", &loss, batch)?;
     let rerun = rerun_trainer.fit_stream(
         &train,
         &split.subtrain,

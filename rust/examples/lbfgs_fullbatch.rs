@@ -13,6 +13,7 @@
 //! ```
 
 use allpairs::data::{features, FeatureSpec, Rng};
+use allpairs::losses::LossSpec;
 use allpairs::metrics::auc;
 use allpairs::runtime::{NativeBackend, NativeSpec};
 use allpairs::train::lbfgs::{minimize, LbfgsConfig, Objective};
@@ -43,7 +44,6 @@ fn main() -> allpairs::Result<()> {
     let backend = NativeBackend::new(NativeSpec {
         input_dim: 64,
         hidden,
-        margin: 1.0,
         threads: 0,
     });
     let (rows, labels) = feature_batch(n, pos_frac, 7);
@@ -52,7 +52,7 @@ fn main() -> allpairs::Result<()> {
         100.0 * labels.iter().sum::<f32>() as f64 / n as f64
     );
 
-    let mut objective = backend.objective("mlp", "hinge", &rows, &labels)?;
+    let mut objective = backend.objective("mlp", &LossSpec::hinge(), &rows, &labels)?;
     let theta0 = objective.init_params(0);
     let (l0, _) = objective.eval(&theta0)?;
     println!("initial full-batch hinge loss: {l0:.6}\n== L-BFGS ==");

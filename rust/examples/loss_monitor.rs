@@ -15,6 +15,7 @@
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::{cv, monitor};
 use allpairs::data::{Rng, Split};
+use allpairs::losses::LossSpec;
 use allpairs::metrics::auc;
 use allpairs::runtime::BackendSpec;
 use allpairs::train::Trainer;
@@ -49,7 +50,8 @@ fn main() -> allpairs::Result<()> {
         Some(other) => anyhow::bail!("unknown backend {other:?} (native | pjrt)"),
     };
     let backend = spec.connect()?;
-    let mut trainer = Trainer::new(backend.as_ref(), "resnet", "hinge", 100)?;
+    let hinge = LossSpec::hinge();
+    let mut trainer = Trainer::new(backend.as_ref(), "resnet", &hinge, 100)?;
     trainer.init(0)?;
 
     println!(
@@ -68,7 +70,7 @@ fn main() -> allpairs::Result<()> {
             .collect();
         let full_rust = monitor::monitor_native(&scores, &labels, 1.0);
         // both monitors are pair-normalized; they must agree to fp tolerance
-        let full_backend = monitor::monitor_backend(backend.as_ref(), "hinge", &scores, &labels)?;
+        let full_backend = monitor::monitor_backend(backend.as_ref(), &hinge, &scores, &labels)?;
         let sub_auc = auc(&scores, &labels).unwrap_or(f64::NAN);
         let val_auc = trainer
             .eval_auc(&train, &split.validation)?

@@ -8,7 +8,7 @@
 //! ```
 
 use allpairs::data::{features, FeatureSpec, Rng, Split};
-use allpairs::losses::{functional, PairwiseLoss};
+use allpairs::losses::{functional, LossSpec, PairwiseLoss};
 use allpairs::metrics::{auc, roc_curve};
 use allpairs::runtime::{BackendSpec, NativeSpec};
 use allpairs::train::Trainer;
@@ -52,11 +52,10 @@ fn main() -> allpairs::Result<()> {
     let backend = BackendSpec::Native(NativeSpec {
         input_dim: spec.dim,
         hidden: 32,
-        margin: 1.0,
         threads: 0, // one per core
     })
     .connect()?;
-    let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 100)?;
+    let mut trainer = Trainer::new(backend.as_ref(), "mlp", &LossSpec::hinge(), 100)?;
     let history = trainer.fit(
         &train,
         &split.subtrain,

@@ -8,17 +8,22 @@
 
 use std::path::Path;
 
+use crate::losses::LossSpec;
 use crate::runtime::BackendSpec;
 use crate::util::json::Json;
 
 /// Learning-rate grid for one loss (the paper uses wider grids for the
 /// baselines than for the hinge loss, which diverges at large rates).
-pub fn default_lr_grid(loss: &str) -> Vec<f64> {
+pub fn default_lr_grid(loss: &LossSpec) -> Vec<f64> {
     match loss {
-        // paper: 1e-4 .. 1e-1 for the proposed squared hinge
-        "hinge" | "square" => vec![1e-3, 1e-2, 3.16e-2, 1e-1],
+        // paper: 1e-4 .. 1e-1 for the proposed squared hinge (the whole
+        // pairwise hinge family shares its divergence behavior)
+        LossSpec::Hinge { .. }
+        | LossSpec::Square { .. }
+        | LossSpec::LinearHinge { .. }
+        | LossSpec::WeightedHinge { .. } => vec![1e-3, 1e-2, 3.16e-2, 1e-1],
         // paper: 1e-4 .. 1e2 for LIBAUC and logistic
-        _ => vec![1e-3, 1e-2, 1e-1, 1.0],
+        LossSpec::Logistic | LossSpec::Aucm => vec![1e-3, 1e-2, 1e-1, 1.0],
     }
 }
 
@@ -29,8 +34,9 @@ pub struct SweepConfig {
     pub datasets: Vec<String>,
     /// Train-set positive-label proportions.
     pub imratios: Vec<f64>,
-    /// Training losses to compare.
-    pub losses: Vec<String>,
+    /// Training losses to compare (parsed loss specs; the per-loss
+    /// margin is a sweepable part of the spec, e.g. `"hinge@margin=2"`).
+    pub losses: Vec<LossSpec>,
     /// Batch sizes (must have matching AOT artifacts).
     pub batch_sizes: Vec<usize>,
     /// Random seeds (model init + subtrain/validation split).
@@ -72,7 +78,7 @@ impl Default for SweepConfig {
                 "synth-pets".into(),
             ],
             imratios: vec![0.1, 0.01, 0.001],
-            losses: vec!["hinge".into(), "aucm".into(), "logistic".into()],
+            losses: vec![LossSpec::hinge(), LossSpec::aucm(), LossSpec::logistic()],
             batch_sizes: vec![10, 50, 100, 500, 1000],
             seeds: vec![0, 1, 2, 3, 4],
             epochs: 20,
@@ -123,7 +129,12 @@ impl SweepConfig {
             c.imratios = f64s(v)?;
         }
         if let Some(v) = j.get("losses") {
-            c.losses = strings(v)?;
+            // Validated here, at config-parse time: a typo'd loss fails
+            // before any data is generated or job scheduled.
+            c.losses = strings(v)?
+                .iter()
+                .map(|name| name.parse::<LossSpec>())
+                .collect::<crate::Result<Vec<_>>>()?;
         }
         if let Some(v) = j.get("batch_sizes") {
             c.batch_sizes = f64s(v)?.into_iter().map(|n| n as usize).collect();
@@ -183,7 +194,10 @@ impl SweepConfig {
         Json::obj([
             ("datasets", strings(&self.datasets)),
             ("imratios", nums(&self.imratios)),
-            ("losses", strings(&self.losses)),
+            (
+                "losses",
+                Json::Arr(self.losses.iter().map(|l| Json::str(l.to_string())).collect()),
+            ),
             (
                 "batch_sizes",
                 Json::Arr(self.batch_sizes.iter().map(|&b| Json::num(b as f64)).collect()),
@@ -237,19 +251,19 @@ impl SweepConfig {
         if !matches!(self.backend, BackendSpec::Native(_)) {
             return false;
         }
-        if !self.losses.iter().any(|l| l == "aucm") {
+        if !self.losses.iter().any(|l| matches!(l, LossSpec::Aucm)) {
             return false;
         }
-        self.losses.retain(|l| l != "aucm");
-        if keep_three && !self.losses.contains(&"square".to_string()) {
-            self.losses.push("square".into());
+        self.losses.retain(|l| !matches!(l, LossSpec::Aucm));
+        if keep_three && !self.losses.iter().any(|l| matches!(l, LossSpec::Square { .. })) {
+            self.losses.push(LossSpec::square());
         }
         true
     }
 
     /// Learning-rate grid for a loss, optionally truncated to the
     /// largest `max_lrs` entries (the grids are sorted ascending).
-    pub fn lr_grid(&self, loss: &str) -> Vec<f64> {
+    pub fn lr_grid(&self, loss: &LossSpec) -> Vec<f64> {
         let grid = default_lr_grid(loss);
         match self.max_lrs {
             Some(k) if k < grid.len() => grid[grid.len() - k..].to_vec(),
@@ -291,8 +305,11 @@ mod tests {
 
     #[test]
     fn lr_grid_is_loss_dependent() {
-        assert!(default_lr_grid("hinge").iter().all(|&lr| lr <= 0.1));
-        assert!(default_lr_grid("logistic").contains(&1.0));
+        assert!(default_lr_grid(&LossSpec::hinge()).iter().all(|&lr| lr <= 0.1));
+        assert!(default_lr_grid(&LossSpec::weighted_hinge())
+            .iter()
+            .all(|&lr| lr <= 0.1));
+        assert!(default_lr_grid(&LossSpec::logistic()).contains(&1.0));
     }
 
     #[test]
@@ -337,34 +354,73 @@ mod tests {
         let c = SweepConfig {
             datasets: vec!["a".into()],
             imratios: vec![0.1],
-            losses: vec!["hinge".into()],
+            losses: vec![LossSpec::hinge()],
             batch_sizes: vec![10, 50],
             seeds: vec![0, 1],
             ..Default::default()
         };
-        assert_eq!(c.n_runs(), 2 * 2 * default_lr_grid("hinge").len());
+        assert_eq!(c.n_runs(), 2 * 2 * default_lr_grid(&LossSpec::hinge()).len());
     }
 
     #[test]
     fn adapt_losses_drops_aucm_only_on_native() {
         let mut c = SweepConfig::default(); // native backend, aucm present
         assert!(c.adapt_losses_to_backend(true));
-        assert_eq!(c.losses, vec!["hinge", "logistic", "square"]);
+        assert_eq!(
+            c.losses,
+            vec![LossSpec::hinge(), LossSpec::logistic(), LossSpec::square()]
+        );
         assert!(!c.adapt_losses_to_backend(true)); // idempotent
 
         let mut user = SweepConfig {
-            losses: vec!["hinge".into(), "aucm".into()],
+            losses: vec![LossSpec::hinge(), LossSpec::aucm()],
             ..Default::default()
         };
         assert!(user.adapt_losses_to_backend(false));
-        assert_eq!(user.losses, vec!["hinge"]); // no substitution
+        assert_eq!(user.losses, vec![LossSpec::hinge()]); // no substitution
 
         let mut pjrt = SweepConfig {
             backend: BackendSpec::pjrt("artifacts"),
             ..Default::default()
         };
         assert!(!pjrt.adapt_losses_to_backend(true));
-        assert!(pjrt.losses.contains(&"aucm".to_string()));
+        assert!(pjrt.losses.contains(&LossSpec::aucm()));
+    }
+
+    #[test]
+    fn unknown_loss_fails_at_parse_time_listing_valid_specs() {
+        // The fail-fast guarantee: a typo'd loss is rejected while
+        // loading the config — long before data generation or
+        // Backend::open — with an error naming the valid specs.
+        let path = std::env::temp_dir().join("allpairs_cfg_badloss.json");
+        std::fs::write(&path, r#"{"losses": ["typo"]}"#).unwrap();
+        let err = SweepConfig::load(&path).unwrap_err().to_string();
+        assert!(err.contains("hinge") && err.contains("whinge"), "{err}");
+        // malformed margins are caught the same way
+        std::fs::write(&path, r#"{"losses": ["hinge@margin=-2"]}"#).unwrap();
+        assert!(SweepConfig::load(&path).is_err());
+    }
+
+    #[test]
+    fn loss_margins_are_sweepable_and_roundtrip() {
+        let c = SweepConfig {
+            losses: vec![
+                LossSpec::hinge(),
+                LossSpec::Hinge { margin: 2.0 },
+                LossSpec::weighted_hinge(),
+            ],
+            ..Default::default()
+        };
+        let path = std::env::temp_dir().join("allpairs_cfg_margins.json");
+        c.save(&path).unwrap();
+        let back = SweepConfig::load(&path).unwrap();
+        assert_eq!(back, c);
+        // the two hinge margins are distinct sweep axis entries
+        let single = SweepConfig {
+            losses: vec![LossSpec::hinge()],
+            ..Default::default()
+        };
+        assert_eq!(back.n_runs(), 3 * single.n_runs());
     }
 
     #[test]

@@ -14,9 +14,11 @@
 //!   scores).
 
 use crate::losses::functional::SquaredHinge;
+use crate::losses::LossSpec;
 use crate::runtime::Backend;
 
-/// Full-set squared hinge loss (normalized per pair) in native Rust.
+/// Full-set squared hinge loss (normalized per pair) in native Rust —
+/// the gradient-free ascending sweep only.
 pub fn monitor_native(scores: &[f32], is_pos: &[f32], margin: f32) -> f64 {
     let n_pos = is_pos.iter().filter(|&&p| p != 0.0).count() as f64;
     let n_neg = scores.len() as f64 - n_pos;
@@ -29,7 +31,7 @@ pub fn monitor_native(scores: &[f32], is_pos: &[f32], margin: f32) -> f64 {
 /// (pointwise losses: per example).
 pub fn monitor_backend(
     backend: &dyn Backend,
-    loss: &str,
+    loss: &LossSpec,
     scores: &[f32],
     is_pos: &[f32],
 ) -> crate::Result<f64> {
@@ -42,7 +44,7 @@ pub fn monitor_backend(
 #[cfg(feature = "pjrt")]
 pub fn monitor_artifact(
     runtime: &crate::runtime::Runtime,
-    loss: &str,
+    loss: &LossSpec,
     scores: &[f32],
     is_pos: &[f32],
 ) -> crate::Result<f64> {
@@ -74,7 +76,8 @@ mod tests {
         let backend = BackendSpec::native().connect().unwrap();
         let scores = [0.3_f32, -0.1, 0.8, 0.2, -0.5];
         let is_pos = [1.0_f32, 0.0, 1.0, 0.0, 0.0];
-        let via_backend = monitor_backend(backend.as_ref(), "hinge", &scores, &is_pos).unwrap();
+        let via_backend =
+            monitor_backend(backend.as_ref(), &LossSpec::hinge(), &scores, &is_pos).unwrap();
         let native = monitor_native(&scores, &is_pos, 1.0);
         assert!((via_backend - native).abs() < 1e-12);
     }

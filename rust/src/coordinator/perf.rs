@@ -19,7 +19,8 @@
 use std::path::Path;
 
 use crate::data::Rng;
-use crate::losses::functional::{HingeScratch, SquaredHinge};
+use crate::losses::functional::SquaredHinge;
+use crate::losses::{BatchView, LossFn, LossSpec, LossWorkspace};
 use crate::metrics::auc;
 use crate::runtime::{Backend, NativeBackend, NativeSpec};
 use crate::util::bench::Bench;
@@ -100,10 +101,9 @@ pub fn run(cfg: &PerfConfig) -> crate::Result<Vec<PerfRecord>> {
             let backend = NativeBackend::new(NativeSpec {
                 input_dim: cfg.dim,
                 hidden: 0,
-                margin: 1.0,
                 threads,
             });
-            let mut exec = backend.open("linear", "hinge", n)?;
+            let mut exec = backend.open("linear", &LossSpec::hinge(), n)?;
             exec.init(0)?;
             // lr = 0: parameters never move, so every timed iteration
             // performs bit-identical work (a non-zero lr would fit the
@@ -117,13 +117,13 @@ pub fn run(cfg: &PerfConfig) -> crate::Result<Vec<PerfRecord>> {
         }
 
         // The loss kernel alone (sort + sweep, gradient included) —
-        // inherently serial, the O(n log n) object the paper times.
+        // inherently serial, the O(n log n) object the paper times —
+        // through the allocation-free LossFn workspace API.
         let hinge = SquaredHinge::new(1.0);
         let scores: Vec<f32> = x.iter().step_by(cfg.dim).copied().collect();
-        let mut grad = Vec::new();
-        let mut scratch = HingeScratch::default();
+        let mut ws = LossWorkspace::default();
         let m = bench.run(format!("loss/hinge/n{n}"), || {
-            hinge.loss_and_grad_with(&scores, &is_pos, &mut grad, &mut scratch)
+            hinge.loss_and_grad(BatchView::new(&scores, &is_pos), &mut ws)
         });
         records.push(record(m, n, 1));
 

@@ -27,32 +27,42 @@
 //!
 //! ## Quick tour
 //!
-//! The paper's O(n log n) squared hinge loss + gradient, natively:
+//! Losses are *typed*: a [`losses::LossSpec`] is parsed (and validated)
+//! once at the API edge and carries everything downstream — including
+//! the margin, which makes `"hinge@margin=2"` a first-class sweep axis.
+//! The paper's O(n log n) squared hinge loss + gradient through the
+//! allocation-free kernel API:
 //!
 //! ```
-//! use allpairs::losses::{functional, PairwiseLoss};
+//! use allpairs::losses::{BatchView, LossFn, LossSpec, LossWorkspace};
 //!
+//! let spec: LossSpec = "hinge@margin=2".parse()?;
+//! let kernel = spec.build()?; // a boxed, allocation-free LossFn
 //! let scores = vec![0.9_f32, 0.2, 0.6, 0.1];
 //! let is_pos = vec![1.0_f32, 0.0, 1.0, 0.0];
-//! let loss = functional::SquaredHinge::new(1.0);
-//! let (value, grad) = loss.loss_and_grad(&scores, &is_pos);
-//! assert!(value >= 0.0 && grad.len() == 4);
+//! let mut ws = LossWorkspace::new();
+//! let value = kernel.loss_and_grad(BatchView::new(&scores, &is_pos), &mut ws);
+//! assert!(value >= 0.0 && ws.grad.len() == 4);
+//! assert_eq!(spec.to_string(), "hinge@margin=2"); // specs round-trip
+//! # Ok::<(), anyhow::Error>(())
 //! ```
 //!
-//! Training through the backend layer (one gradient step on a batch):
+//! Training through the backend layer (one gradient step on a batch);
+//! `"whinge"` selects the class-balanced weighted hinge scenario:
 //!
 //! ```
+//! use allpairs::losses::LossSpec;
 //! use allpairs::runtime::{BackendSpec, NativeSpec};
 //! use allpairs::train::Trainer;
 //!
 //! let spec = BackendSpec::Native(NativeSpec {
 //!     input_dim: 4,
 //!     hidden: 8,
-//!     margin: 1.0,
 //!     threads: 1,
 //! });
 //! let backend = spec.connect()?;
-//! let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 2)?;
+//! let loss: LossSpec = "whinge".parse()?;
+//! let mut trainer = Trainer::new(backend.as_ref(), "mlp", &loss, 2)?;
 //! trainer.init(0)?;
 //! # Ok::<(), anyhow::Error>(())
 //! ```

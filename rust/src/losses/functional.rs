@@ -11,17 +11,20 @@
 //!   gradient for negatives — and run a mirrored descending sweep for the
 //!   positive gradients.  Total O(n log n), dominated by the sort.
 //!
-//! The scratch buffers used by the hinge sweep can be reused across calls
-//! via [`SquaredHinge::loss_and_grad_with`] + [`HingeScratch`], which keeps
-//! the training hot loop allocation-free (see EXPERIMENTS.md §Perf).
+//! Both implement the allocation-free [`LossFn`] kernel API — gradients
+//! and the hinge sort scratch live in the caller's [`LossWorkspace`], so
+//! the training hot loop allocates nothing after warm-up (see
+//! EXPERIMENTS.md §Perf) — plus the allocating [`PairwiseLoss`] trait
+//! for the Figure 2 harness.
 //!
 //! Accumulators are f64: at n = 10⁷ the loss is a sum of ~10¹³-scale
 //! products and f32 accumulation would lose the low-order digits that the
 //! property tests (functional ≡ naive) check.  The hinge sort keys are
 //! f64 for the same reason — an f32-rounded key can order a near-margin
 //! pair differently than the f64 sweep evaluates it (see
-//! [`HingeScratch`]).
+//! `kernel::fill_hinge_order` and the regression tests below).
 
+use super::kernel::{fill_hinge_order, pair_norm, BatchView, LossFn, LossWorkspace};
 use super::PairwiseLoss;
 
 /// Algorithm 1: all-pairs square loss in O(n).
@@ -36,16 +39,13 @@ impl Square {
         Self { margin }
     }
 
-    /// Loss + gradient written into `grad` (cleared and refilled) — the
-    /// allocation-free hot path.  Algorithm 1 needs no sort and hence
-    /// no scratch beyond the gradient buffer itself.
-    pub fn loss_and_grad_into(&self, scores: &[f32], is_pos: &[f32], grad: &mut Vec<f32>) -> f64 {
-        assert_eq!(scores.len(), is_pos.len());
+    /// The six global sums of pass 1 (paper eqs. 11-13 + mirrors):
+    /// `(n_pos, b_pos, c_pos, n_neg, s_neg, q_neg)`.
+    fn coefficients(&self, batch: BatchView<'_>) -> (f64, f64, f64, f64, f64, f64) {
         let m = self.margin as f64;
-        // Pass 1: the six global sums (paper eqs. 11-13 + mirrors).
         let (mut n_pos, mut b_pos, mut c_pos) = (0.0_f64, 0.0_f64, 0.0_f64);
         let (mut n_neg, mut s_neg, mut q_neg) = (0.0_f64, 0.0_f64, 0.0_f64);
-        for (&y, &p) in scores.iter().zip(is_pos) {
+        for (&y, &p) in batch.scores.iter().zip(batch.is_pos) {
             let y = y as f64;
             if p != 0.0 {
                 let z = m - y;
@@ -58,19 +58,37 @@ impl Square {
                 q_neg += y * y;
             }
         }
+        (n_pos, b_pos, c_pos, n_neg, s_neg, q_neg)
+    }
+}
+
+impl LossFn for Square {
+    fn loss_and_grad(&self, batch: BatchView<'_>, ws: &mut LossWorkspace) -> f64 {
+        let m = self.margin as f64;
+        let (n_pos, b_pos, c_pos, n_neg, s_neg, q_neg) = self.coefficients(batch);
         // Loss (eq. 15): sum_k a+ yk^2 + b+ yk + c+.
         let loss = n_pos * q_neg + b_pos * s_neg + c_pos * n_neg;
         // Pass 2: closed-form per-element gradient.
-        grad.clear();
-        grad.extend(scores.iter().zip(is_pos).map(|(&y, &p)| {
-            let y = y as f64;
-            if p != 0.0 {
-                (-2.0 * (n_neg * (m - y) + s_neg)) as f32
-            } else {
-                (2.0 * n_pos * y + b_pos) as f32
-            }
-        }));
+        ws.grad.clear();
+        ws.grad
+            .extend(batch.scores.iter().zip(batch.is_pos).map(|(&y, &p)| {
+                let y = y as f64;
+                if p != 0.0 {
+                    (-2.0 * (n_neg * (m - y) + s_neg)) as f32
+                } else {
+                    (2.0 * n_pos * y + b_pos) as f32
+                }
+            }));
         loss
+    }
+
+    fn loss_only(&self, batch: BatchView<'_>, _ws: &mut LossWorkspace) -> f64 {
+        let (n_pos, b_pos, c_pos, n_neg, s_neg, q_neg) = self.coefficients(batch);
+        n_pos * q_neg + b_pos * s_neg + c_pos * n_neg
+    }
+
+    fn norm(&self, batch: BatchView<'_>) -> f64 {
+        pair_norm(batch)
     }
 }
 
@@ -83,29 +101,16 @@ impl PairwiseLoss for Square {
         "O(n)"
     }
 
-    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
-        let mut grad = Vec::new();
-        let loss = self.loss_and_grad_into(scores, is_pos, &mut grad);
-        (loss, grad)
+    fn loss(&self, scores: &[f32], is_pos: &[f32]) -> f64 {
+        // Gradient-free path: pass 1 only, no buffer touched.
+        LossFn::loss_only(self, BatchView::new(scores, is_pos), &mut LossWorkspace::default())
     }
-}
 
-/// Reusable scratch for [`SquaredHinge::loss_and_grad_with`]: the sort
-/// permutation and sorted copies.  Reusing it across calls makes the sweep
-/// allocation-free after warm-up.
-///
-/// Keys are f64: the sweep accumulates in f64, so the sort order must be
-/// decided by the *exact* augmented values `ŷᵢ + m·I[neg]`.  Building the
-/// key as an f32 sum rounds it (at |ŷ| = 2²⁴ the f32 ulp is 2.0, so
-/// `ŷₖ + 1` collapses onto `ŷₖ`), and a near-margin pair whose rounded
-/// key flips or ties out of order is silently dropped from (or added to)
-/// the loss and gradient.  f32 → f64 conversion and the f64 sum of two
-/// f32-valued operands are exact, so the f64 key order always matches
-/// the f64 sweep.
-#[derive(Debug, Default, Clone)]
-pub struct HingeScratch {
-    order: Vec<u32>,
-    keys: Vec<f64>,
+    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
+        let mut ws = LossWorkspace::default();
+        let loss = LossFn::loss_and_grad(self, BatchView::new(scores, is_pos), &mut ws);
+        (loss, std::mem::take(&mut ws.grad))
+    }
 }
 
 /// Algorithm 2: all-pairs squared hinge loss in O(n log n).
@@ -120,52 +125,37 @@ impl SquaredHinge {
         Self { margin }
     }
 
-    /// Loss + gradient, writing the gradient into `grad` (resized to fit)
-    /// and reusing `scratch` buffers.  The allocation-free hot path.
-    pub fn loss_and_grad_with(
-        &self,
-        scores: &[f32],
-        is_pos: &[f32],
-        grad: &mut Vec<f32>,
-        scratch: &mut HingeScratch,
-    ) -> f64 {
-        assert_eq!(scores.len(), is_pos.len());
-        let n = scores.len();
+    /// Loss only — single ascending sweep, no gradient buffers.  The
+    /// allocating convenience form of [`LossFn::loss_only`] (monitoring
+    /// and tests; the hot paths hold a [`LossWorkspace`]).
+    pub fn loss_only(&self, scores: &[f32], is_pos: &[f32]) -> f64 {
+        LossFn::loss_only(self, BatchView::new(scores, is_pos), &mut LossWorkspace::default())
+    }
+}
+
+impl LossFn for SquaredHinge {
+    fn loss_and_grad(&self, batch: BatchView<'_>, ws: &mut LossWorkspace) -> f64 {
+        let n = batch.len();
         let m = self.margin as f64;
-        grad.clear();
-        grad.resize(n, 0.0);
+        ws.grad.clear();
+        ws.grad.resize(n, 0.0);
         if n == 0 {
             return 0.0;
         }
 
-        // Sort indices by augmented value v_i = yhat_i + m * I[neg] (eq. 20),
-        // computed in f64 so key order matches the f64 sweep (see
-        // [`HingeScratch`]).  Exact-tie order is benign: a (pos, neg) pair
-        // at equal v contributes zero loss and zero gradient.
-        scratch.keys.clear();
-        scratch
-            .keys
-            .extend(scores.iter().zip(is_pos).map(|(&y, &p)| {
-                if p != 0.0 {
-                    y as f64
-                } else {
-                    y as f64 + m
-                }
-            }));
-        scratch.order.clear();
-        scratch.order.extend(0..n as u32);
-        let keys = &scratch.keys;
-        scratch
-            .order
-            .sort_unstable_by(|&a, &b| keys[a as usize].total_cmp(&keys[b as usize]));
+        // Sort indices by augmented value (eq. 20) on exact f64 keys
+        // (see `kernel::fill_hinge_order`).  Exact-tie order is benign:
+        // a (pos, neg) pair at equal v contributes zero loss and zero
+        // gradient.
+        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, false);
 
         // Ascending sweep (paper eqs. 22-25) + negative gradients.
         let (mut a, mut b, mut c, mut t) = (0.0_f64, 0.0_f64, 0.0_f64, 0.0_f64);
         let mut loss = 0.0_f64;
-        for &i in &scratch.order {
+        for &i in &ws.order {
             let i = i as usize;
-            let y = scores[i] as f64;
-            if is_pos[i] != 0.0 {
+            let y = batch.scores[i] as f64;
+            if batch.is_pos[i] != 0.0 {
                 let z = m - y;
                 a += 1.0;
                 b += 2.0 * z;
@@ -174,18 +164,18 @@ impl SquaredHinge {
             } else {
                 loss += a * y * y + b * y + c;
                 // dL/dyk = 2 [ a_k (m + yk) - t_k ]
-                grad[i] = (2.0 * (a * (m + y) - t)) as f32;
+                ws.grad[i] = (2.0 * (a * (m + y) - t)) as f32;
             }
         }
 
         // Descending sweep: positive gradients.
         let (mut n_cnt, mut t_sum) = (0.0_f64, 0.0_f64);
-        for &i in scratch.order.iter().rev() {
+        for &i in ws.order.iter().rev() {
             let i = i as usize;
-            let y = scores[i] as f64;
-            if is_pos[i] != 0.0 {
+            let y = batch.scores[i] as f64;
+            if batch.is_pos[i] != 0.0 {
                 // dL/dyj = -2 [ N_j (m - yj) + T_j ]
-                grad[i] = (-2.0 * (n_cnt * (m - y) + t_sum)) as f32;
+                ws.grad[i] = (-2.0 * (n_cnt * (m - y) + t_sum)) as f32;
             } else {
                 n_cnt += 1.0;
                 t_sum += y;
@@ -194,26 +184,18 @@ impl SquaredHinge {
         loss
     }
 
-    /// Loss only — single ascending sweep, no gradient buffers.
-    pub fn loss_only(&self, scores: &[f32], is_pos: &[f32]) -> f64 {
-        assert_eq!(scores.len(), is_pos.len());
-        let n = scores.len();
+    fn loss_only(&self, batch: BatchView<'_>, ws: &mut LossWorkspace) -> f64 {
         let m = self.margin as f64;
-        let mut order: Vec<u32> = (0..n as u32).collect();
-        // f64 keys for the same reason as `loss_and_grad_with` (see
-        // [`HingeScratch`]): key order must match the f64 sweep.
-        let keys: Vec<f64> = scores
-            .iter()
-            .zip(is_pos)
-            .map(|(&y, &p)| if p != 0.0 { y as f64 } else { y as f64 + m })
-            .collect();
-        order.sort_unstable_by(|&a, &b| keys[a as usize].total_cmp(&keys[b as usize]));
+        if batch.is_empty() {
+            return 0.0;
+        }
+        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, false);
         let (mut a, mut b, mut c) = (0.0_f64, 0.0_f64, 0.0_f64);
         let mut loss = 0.0_f64;
-        for &i in &order {
+        for &i in &ws.order {
             let i = i as usize;
-            let y = scores[i] as f64;
-            if is_pos[i] != 0.0 {
+            let y = batch.scores[i] as f64;
+            if batch.is_pos[i] != 0.0 {
                 let z = m - y;
                 a += 1.0;
                 b += 2.0 * z;
@@ -223,6 +205,10 @@ impl SquaredHinge {
             }
         }
         loss
+    }
+
+    fn norm(&self, batch: BatchView<'_>) -> f64 {
+        pair_norm(batch)
     }
 }
 
@@ -235,11 +221,16 @@ impl PairwiseLoss for SquaredHinge {
         "O(n log n)"
     }
 
+    fn loss(&self, scores: &[f32], is_pos: &[f32]) -> f64 {
+        // Route the trait's loss-only evaluation through the sweep-only
+        // path instead of the default "compute and discard a gradient".
+        self.loss_only(scores, is_pos)
+    }
+
     fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
-        let mut grad = Vec::new();
-        let mut scratch = HingeScratch::default();
-        let loss = self.loss_and_grad_with(scores, is_pos, &mut grad, &mut scratch);
-        (loss, grad)
+        let mut ws = LossWorkspace::default();
+        let loss = LossFn::loss_and_grad(self, BatchView::new(scores, is_pos), &mut ws);
+        (loss, std::mem::take(&mut ws.grad))
     }
 }
 
@@ -273,7 +264,7 @@ mod tests {
         for seed in 0..20 {
             let (s, p) = random_case(seed, 50, 0.3);
             let (ln, gn) = NaiveSquaredHinge::new(1.0).loss_and_grad(&s, &p);
-            let (lf, gf) = SquaredHinge::new(1.0).loss_and_grad(&s, &p);
+            let (lf, gf) = PairwiseLoss::loss_and_grad(&SquaredHinge::new(1.0), &s, &p);
             assert_close(ln, lf, 1e-9);
             for (a, b) in gn.iter().zip(&gf) {
                 assert!((a - b).abs() < 1e-3, "{a} vs {b}");
@@ -286,7 +277,7 @@ mod tests {
         for seed in 0..20 {
             let (s, p) = random_case(seed + 100, 64, 0.2);
             let (ln, gn) = NaiveSquare::new(1.0).loss_and_grad(&s, &p);
-            let (lf, gf) = Square::new(1.0).loss_and_grad(&s, &p);
+            let (lf, gf) = PairwiseLoss::loss_and_grad(&Square::new(1.0), &s, &p);
             assert_close(ln, lf, 1e-9);
             for (a, b) in gn.iter().zip(&gf) {
                 assert!((a - b).abs() < 1e-3, "{a} vs {b}");
@@ -298,7 +289,7 @@ mod tests {
     fn hinge_zero_margin() {
         let (s, p) = random_case(7, 40, 0.5);
         let (ln, _) = NaiveSquaredHinge::new(0.0).loss_and_grad(&s, &p);
-        let (lf, _) = SquaredHinge::new(0.0).loss_and_grad(&s, &p);
+        let (lf, _) = PairwiseLoss::loss_and_grad(&SquaredHinge::new(0.0), &s, &p);
         assert_close(ln, lf, 1e-9);
     }
 
@@ -310,7 +301,7 @@ mod tests {
             *y = (*y * 2.0).round() / 2.0;
         }
         let (ln, gn) = NaiveSquaredHinge::new(1.0).loss_and_grad(&s, &p);
-        let (lf, gf) = SquaredHinge::new(1.0).loss_and_grad(&s, &p);
+        let (lf, gf) = PairwiseLoss::loss_and_grad(&SquaredHinge::new(1.0), &s, &p);
         assert_close(ln, lf, 1e-9);
         for (a, b) in gn.iter().zip(&gf) {
             assert!((a - b).abs() < 1e-3);
@@ -321,31 +312,40 @@ mod tests {
     fn loss_only_matches_full() {
         let (s, p) = random_case(3, 333, 0.1);
         let h = SquaredHinge::new(1.0);
-        let (full, _) = h.loss_and_grad(&s, &p);
+        let (full, _) = PairwiseLoss::loss_and_grad(&h, &s, &p);
         assert_close(h.loss_only(&s, &p), full, 1e-12);
+        // and the trait's loss-only entry point takes the same path
+        assert_close(PairwiseLoss::loss(&h, &s, &p), full, 1e-12);
     }
 
     #[test]
-    fn scratch_reuse_is_identical() {
+    fn square_loss_only_matches_full() {
+        let (s, p) = random_case(4, 222, 0.3);
+        let sq = Square::new(1.0);
+        let (full, _) = PairwiseLoss::loss_and_grad(&sq, &s, &p);
+        assert_close(PairwiseLoss::loss(&sq, &s, &p), full, 1e-12);
+    }
+
+    #[test]
+    fn workspace_reuse_is_identical() {
         let h = SquaredHinge::new(1.0);
-        let mut grad = Vec::new();
-        let mut scratch = HingeScratch::default();
+        let mut ws = LossWorkspace::default();
         let (s1, p1) = random_case(1, 100, 0.4);
         let (s2, p2) = random_case(2, 77, 0.2);
-        let l1 = h.loss_and_grad_with(&s1, &p1, &mut grad, &mut scratch);
-        let g1 = grad.clone();
-        let _ = h.loss_and_grad_with(&s2, &p2, &mut grad, &mut scratch);
-        let l1b = h.loss_and_grad_with(&s1, &p1, &mut grad, &mut scratch);
+        let l1 = LossFn::loss_and_grad(&h, BatchView::new(&s1, &p1), &mut ws);
+        let g1 = ws.grad.clone();
+        let _ = LossFn::loss_and_grad(&h, BatchView::new(&s2, &p2), &mut ws);
+        let l1b = LossFn::loss_and_grad(&h, BatchView::new(&s1, &p1), &mut ws);
         assert_eq!(l1, l1b);
-        assert_eq!(g1, grad);
+        assert_eq!(g1, ws.grad);
     }
 
     #[test]
     fn empty_and_degenerate() {
         let h = SquaredHinge::new(1.0);
-        assert_eq!(h.loss_and_grad(&[], &[]).0, 0.0);
-        assert_eq!(h.loss_and_grad(&[0.5], &[1.0]).0, 0.0);
-        assert_eq!(h.loss_and_grad(&[0.5], &[0.0]).0, 0.0);
+        assert_eq!(PairwiseLoss::loss_and_grad(&h, &[], &[]).0, 0.0);
+        assert_eq!(PairwiseLoss::loss_and_grad(&h, &[0.5], &[1.0]).0, 0.0);
+        assert_eq!(PairwiseLoss::loss_and_grad(&h, &[0.5], &[0.0]).0, 0.0);
     }
 
     #[test]
@@ -370,7 +370,7 @@ mod tests {
         let h = SquaredHinge::new(1.0);
         let (ln, gn) = NaiveSquaredHinge::new(1.0).loss_and_grad(&scores, &is_pos);
         assert_eq!(ln, 5.0); // five active pairs, each exactly 1 (f64-exact)
-        let (lf, gf) = h.loss_and_grad(&scores, &is_pos);
+        let (lf, gf) = PairwiseLoss::loss_and_grad(&h, &scores, &is_pos);
         assert_close(ln, lf, 1e-12);
         assert_close(h.loss_only(&scores, &is_pos), ln, 1e-12);
         // grad[neg] = 2 * 5 pairs * (m - yj + yk) = 10; grad[pos] = -2
@@ -403,7 +403,7 @@ mod tests {
         let (ln, gn) = NaiveSquaredHinge::new(1.0).loss_and_grad(&scores, &is_pos);
         assert_eq!(ln, 0.0);
         assert!(gn.iter().all(|&g| g == 0.0));
-        let (lf, gf) = h.loss_and_grad(&scores, &is_pos);
+        let (lf, gf) = PairwiseLoss::loss_and_grad(&h, &scores, &is_pos);
         assert_eq!(lf, 0.0);
         assert!(gf.iter().all(|&g| g == 0.0));
         assert_eq!(h.loss_only(&scores, &is_pos), 0.0);
@@ -413,7 +413,7 @@ mod tests {
     fn perfect_separation_beyond_margin_is_zero() {
         let s = vec![-2.0, -1.9, 2.0, 2.1];
         let p = vec![0.0, 0.0, 1.0, 1.0];
-        let (l, g) = SquaredHinge::new(1.0).loss_and_grad(&s, &p);
+        let (l, g) = PairwiseLoss::loss_and_grad(&SquaredHinge::new(1.0), &s, &p);
         assert_eq!(l, 0.0);
         assert!(g.iter().all(|&x| x == 0.0));
     }

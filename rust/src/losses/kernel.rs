@@ -1,0 +1,231 @@
+//! The allocation-free loss kernel layer: [`LossFn`], [`BatchView`] and
+//! [`LossWorkspace`].
+//!
+//! Every native training loss implements [`LossFn`] — one entry point,
+//! one workspace — so the backend, trainer, L-BFGS oracle, sweep and
+//! bench layers all call losses the same way.  This replaces the four
+//! historical call shapes (`loss_and_grad` allocating a `Vec<f32>` per
+//! step, `loss_and_grad_into`, `loss_and_grad_with` + `HingeScratch`,
+//! and the weighted 4-argument form): the workspace owns the gradient
+//! buffer *and* the sort scratch, so the training hot loop performs no
+//! per-batch allocation after warm-up regardless of the loss.
+//!
+//! Loss *identity* lives one level up in [`super::spec::LossSpec`],
+//! which maps a validated spec onto a boxed [`LossFn`]; nothing above
+//! the losses module matches on loss-name strings.
+
+/// One batch of predictions as the loss kernels see it: predicted
+/// scores, {0,1} positive-class indicators, and optional per-example
+/// weights.
+///
+/// `is_pos[i] == 1.0` marks example *i* positive; `0.0` negative.
+/// `weights` is consumed only by the weighted losses
+/// ([`super::weighted::WeightedSquaredHinge`]); when `None`, a weighted
+/// loss derives class-balanced weights internally and the unweighted
+/// losses are unaffected.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchView<'a> {
+    /// Predicted scores, one per example.
+    pub scores: &'a [f32],
+    /// {0,1} positive-class indicators, same length as `scores`.
+    pub is_pos: &'a [f32],
+    /// Optional per-example weights (`>= 0`), same length as `scores`.
+    pub weights: Option<&'a [f32]>,
+}
+
+impl<'a> BatchView<'a> {
+    /// An unweighted batch view.  Panics on length mismatch.
+    pub fn new(scores: &'a [f32], is_pos: &'a [f32]) -> Self {
+        assert_eq!(scores.len(), is_pos.len(), "scores/is_pos length mismatch");
+        Self {
+            scores,
+            is_pos,
+            weights: None,
+        }
+    }
+
+    /// A weighted batch view.  Panics on length mismatch.
+    pub fn weighted(scores: &'a [f32], is_pos: &'a [f32], weights: &'a [f32]) -> Self {
+        assert_eq!(scores.len(), is_pos.len(), "scores/is_pos length mismatch");
+        assert_eq!(scores.len(), weights.len(), "scores/weights length mismatch");
+        Self {
+            scores,
+            is_pos,
+            weights: Some(weights),
+        }
+    }
+
+    /// Number of examples in the batch.
+    pub fn len(&self) -> usize {
+        self.scores.len()
+    }
+
+    /// Whether the batch is empty.
+    pub fn is_empty(&self) -> bool {
+        self.scores.is_empty()
+    }
+}
+
+/// Reusable buffers for [`LossFn`] calls: the per-score gradient output
+/// plus the sort scratch of the hinge-family sweeps.  Reusing one
+/// workspace across calls keeps the training hot loop allocation-free
+/// after warm-up; a fresh `LossWorkspace::default()` is always valid.
+#[derive(Debug, Default, Clone)]
+pub struct LossWorkspace {
+    /// Gradient w.r.t. every score, written by
+    /// [`LossFn::loss_and_grad`] (cleared and resized to the batch
+    /// length each call).  Contents are unspecified after
+    /// [`LossFn::loss_only`].
+    pub grad: Vec<f32>,
+    /// Sort permutation of the hinge-family sweeps.
+    pub(crate) order: Vec<u32>,
+    /// f64 sort keys of the hinge-family sweeps (see
+    /// [`fill_hinge_order`] for why they must be f64).
+    pub(crate) keys: Vec<f64>,
+    /// Derived per-example weights (class-balanced reweighting).
+    pub(crate) weights: Vec<f32>,
+}
+
+impl LossWorkspace {
+    /// An empty workspace (buffers grow on first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// A training loss over a [`BatchView`]: the single seam between loss
+/// kernels and everything that calls them (native executor, L-BFGS
+/// oracle, `Backend::eval_loss`, benches).
+///
+/// All entry points are allocation-free after workspace warm-up, and
+/// return the **unnormalized** loss — callers divide by [`LossFn::norm`]
+/// (pair count for pairwise losses, example count for pointwise ones),
+/// matching the L2 loss wrappers so learning rates transfer between
+/// backends.
+pub trait LossFn: Send + Sync {
+    /// Loss value; gradient w.r.t. every score written into `ws.grad`
+    /// (cleared and resized to `batch.len()`).
+    fn loss_and_grad(&self, batch: BatchView<'_>, ws: &mut LossWorkspace) -> f64;
+
+    /// Loss value only — implementations override this with their
+    /// cheaper gradient-free path (e.g. the single ascending sweep of
+    /// the squared hinge); `ws.grad` is left unspecified.
+    fn loss_only(&self, batch: BatchView<'_>, ws: &mut LossWorkspace) -> f64 {
+        self.loss_and_grad(batch, ws)
+    }
+
+    /// Normalizer for this loss on this batch, floored at 1: the
+    /// (pos, neg) pair count for pairwise losses, the example count for
+    /// pointwise ones, the weighted pair mass for weighted losses.
+    fn norm(&self, batch: BatchView<'_>) -> f64;
+}
+
+/// Pair-count normalizer shared by the unweighted pairwise losses.
+pub(crate) fn pair_norm(batch: BatchView<'_>) -> f64 {
+    let n_pos = batch.is_pos.iter().filter(|&&p| p != 0.0).count() as f64;
+    let n_neg = batch.is_pos.len() as f64 - n_pos;
+    (n_pos * n_neg).max(1.0)
+}
+
+/// Fill `keys`/`order` with the augmented-value sort of the hinge-family
+/// sweeps: `vᵢ = ŷᵢ + m·I[yᵢ = −1]` (paper eq. 20), ascending.
+///
+/// Keys are f64: the sweeps accumulate in f64, so the sort order must be
+/// decided by the *exact* augmented values.  Building the key as an f32
+/// sum rounds it (at |ŷ| = 2²⁴ the f32 ulp is 2.0, so `ŷₖ + 1` collapses
+/// onto `ŷₖ`), and a near-margin pair whose rounded key flips or ties
+/// out of order is silently dropped from (or added to) the loss and
+/// gradient.  f32 → f64 conversion and the f64 sum of two f32-valued
+/// operands are exact, so the f64 key order always matches the f64
+/// sweep (regression tests: `losses::functional`).
+///
+/// With `negatives_first_on_ties`, equal-key ties are broken so that a
+/// negative precedes a positive — required by the linear hinge's
+/// minimal-norm subgradient choice at exact-margin pairs.  The squared
+/// hinges pass `false`: their exact-tie pairs contribute zero loss and
+/// zero gradient in any order.
+pub(crate) fn fill_hinge_order(
+    batch: BatchView<'_>,
+    margin: f64,
+    keys: &mut Vec<f64>,
+    order: &mut Vec<u32>,
+    negatives_first_on_ties: bool,
+) {
+    let n = batch.len();
+    keys.clear();
+    keys.extend(batch.scores.iter().zip(batch.is_pos).map(|(&y, &p)| {
+        if p != 0.0 {
+            y as f64
+        } else {
+            y as f64 + margin
+        }
+    }));
+    order.clear();
+    order.extend(0..n as u32);
+    let keys = &*keys;
+    let is_pos = batch.is_pos;
+    if negatives_first_on_ties {
+        order.sort_unstable_by(|&a, &b| {
+            keys[a as usize]
+                .total_cmp(&keys[b as usize])
+                // negatives (is_pos == 0) first within a tie group
+                .then_with(|| is_pos[a as usize].partial_cmp(&is_pos[b as usize]).unwrap())
+        });
+    } else {
+        order.sort_unstable_by(|&a, &b| keys[a as usize].total_cmp(&keys[b as usize]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_view_lengths_checked() {
+        let s = [0.1_f32, 0.2];
+        let p = [1.0_f32, 0.0];
+        let v = BatchView::new(&s, &p);
+        assert_eq!(v.len(), 2);
+        assert!(!v.is_empty());
+        assert!(v.weights.is_none());
+        let w = [1.0_f32, 2.0];
+        assert!(BatchView::weighted(&s, &p, &w).weights.is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn batch_view_rejects_mismatch() {
+        let _ = BatchView::new(&[0.0], &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn pair_norm_floors_at_one() {
+        let s = [0.0_f32; 3];
+        assert_eq!(pair_norm(BatchView::new(&s, &[1.0, 1.0, 1.0])), 1.0);
+        assert_eq!(pair_norm(BatchView::new(&s, &[1.0, 0.0, 0.0])), 2.0);
+        assert_eq!(pair_norm(BatchView::new(&[], &[])), 1.0);
+    }
+
+    #[test]
+    fn hinge_order_sorts_augmented_values() {
+        // pos 0.5 (key 0.5), neg 0.0 (key 1.0), neg -2.0 (key -1.0)
+        let s = [0.5_f32, 0.0, -2.0];
+        let p = [1.0_f32, 0.0, 0.0];
+        let mut keys = Vec::new();
+        let mut order = Vec::new();
+        fill_hinge_order(BatchView::new(&s, &p), 1.0, &mut keys, &mut order, false);
+        assert_eq!(order, vec![2, 0, 1]);
+        assert_eq!(keys, vec![0.5, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn tie_break_puts_negatives_first() {
+        // pos 1.0 (key 1.0) ties with neg 0.0 (key 1.0) at margin 1
+        let s = [1.0_f32, 0.0];
+        let p = [1.0_f32, 0.0];
+        let mut keys = Vec::new();
+        let mut order = Vec::new();
+        fill_hinge_order(BatchView::new(&s, &p), 1.0, &mut keys, &mut order, true);
+        assert_eq!(order, vec![1, 0], "negative first within the tie group");
+    }
+}

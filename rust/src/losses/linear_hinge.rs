@@ -26,6 +26,7 @@
 //! Ties in the sort are then benign exactly as in Algorithm 2 (a pair at
 //! equality adds 0 to the loss and 0 to the chosen subgradient).
 
+use super::kernel::{fill_hinge_order, pair_norm, BatchView, LossFn, LossWorkspace};
 use super::PairwiseLoss;
 
 /// O(n log n) all-pairs linear hinge loss with subgradient.
@@ -88,6 +89,77 @@ impl PairwiseLoss for NaiveLinearHinge {
     }
 }
 
+impl LossFn for LinearHinge {
+    fn loss_and_grad(&self, batch: BatchView<'_>, ws: &mut LossWorkspace) -> f64 {
+        let n = batch.len();
+        let m = self.margin as f64;
+        ws.grad.clear();
+        ws.grad.resize(n, 0.0);
+        if n == 0 {
+            return 0.0;
+        }
+        // Augmented sort keys, as in Algorithm 2 (paper eq. 20), on
+        // exact f64 keys.  The strictness choice (pairs exactly at the
+        // margin are inactive) requires breaking ties so that an
+        // equal-key *negative* precedes an equal-key *positive*: the
+        // negative's evaluation then excludes that positive.  For the
+        // loss this is immaterial (the term is 0); for the subgradient
+        // it selects the minimal-norm element.
+        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, true);
+
+        // Ascending sweep: degree-1 coefficients over active positives.
+        let (mut a_cnt, mut c_sum) = (0.0_f64, 0.0_f64);
+        let mut loss = 0.0_f64;
+        for &i in &ws.order {
+            let i = i as usize;
+            let y = batch.scores[i] as f64;
+            if batch.is_pos[i] != 0.0 {
+                a_cnt += 1.0;
+                c_sum += m - y;
+            } else {
+                loss += a_cnt * y + c_sum;
+                ws.grad[i] = a_cnt as f32; // subgradient: count of active positives
+            }
+        }
+        // Descending sweep: counts of active negatives for positives.
+        let mut n_cnt = 0.0_f64;
+        for &i in ws.order.iter().rev() {
+            let i = i as usize;
+            if batch.is_pos[i] != 0.0 {
+                ws.grad[i] = -(n_cnt as f32);
+            } else {
+                n_cnt += 1.0;
+            }
+        }
+        loss
+    }
+
+    fn loss_only(&self, batch: BatchView<'_>, ws: &mut LossWorkspace) -> f64 {
+        let m = self.margin as f64;
+        if batch.is_empty() {
+            return 0.0;
+        }
+        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, true);
+        let (mut a_cnt, mut c_sum) = (0.0_f64, 0.0_f64);
+        let mut loss = 0.0_f64;
+        for &i in &ws.order {
+            let i = i as usize;
+            let y = batch.scores[i] as f64;
+            if batch.is_pos[i] != 0.0 {
+                a_cnt += 1.0;
+                c_sum += m - y;
+            } else {
+                loss += a_cnt * y + c_sum;
+            }
+        }
+        loss
+    }
+
+    fn norm(&self, batch: BatchView<'_>) -> f64 {
+        pair_norm(batch)
+    }
+}
+
 impl PairwiseLoss for LinearHinge {
     fn name(&self) -> &'static str {
         "functional_linear_hinge"
@@ -97,64 +169,14 @@ impl PairwiseLoss for LinearHinge {
         "O(n log n)"
     }
 
-    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
-        assert_eq!(scores.len(), is_pos.len());
-        let n = scores.len();
-        let m = self.margin as f64;
-        let mut grad = vec![0.0_f32; n];
-        if n == 0 {
-            return (0.0, grad);
-        }
-        // Augmented sort keys, as in Algorithm 2 (paper eq. 20).  The
-        // strictness choice (pairs exactly at the margin are inactive)
-        // requires breaking ties so that an equal-key *negative* precedes
-        // an equal-key *positive*: the negative's evaluation then excludes
-        // that positive.  For the loss this is immaterial (the term is 0);
-        // for the subgradient it selects the minimal-norm element.
-        // f64 keys so key order matches the f64 sweep exactly (see
-        // `functional::HingeScratch` for the rounding failure mode).
-        let mut order: Vec<u32> = (0..n as u32).collect();
-        let keys: Vec<f64> = scores
-            .iter()
-            .zip(is_pos)
-            .map(|(&y, &p)| if p != 0.0 { y as f64 } else { y as f64 + m })
-            .collect();
-        order.sort_unstable_by(|&a, &b| {
-            keys[a as usize]
-                .total_cmp(&keys[b as usize])
-                // negatives (is_pos == 0) first within a tie group
-                .then_with(|| {
-                    is_pos[a as usize]
-                        .partial_cmp(&is_pos[b as usize])
-                        .unwrap()
-                })
-        });
+    fn loss(&self, scores: &[f32], is_pos: &[f32]) -> f64 {
+        LossFn::loss_only(self, BatchView::new(scores, is_pos), &mut LossWorkspace::default())
+    }
 
-        // Ascending sweep: degree-1 coefficients over active positives.
-        let (mut a_cnt, mut c_sum) = (0.0_f64, 0.0_f64);
-        let mut loss = 0.0_f64;
-        for &i in &order {
-            let i = i as usize;
-            let y = scores[i] as f64;
-            if is_pos[i] != 0.0 {
-                a_cnt += 1.0;
-                c_sum += m - y;
-            } else {
-                loss += a_cnt * y + c_sum;
-                grad[i] = a_cnt as f32; // subgradient: count of active positives
-            }
-        }
-        // Descending sweep: counts of active negatives for positives.
-        let mut n_cnt = 0.0_f64;
-        for &i in order.iter().rev() {
-            let i = i as usize;
-            if is_pos[i] != 0.0 {
-                grad[i] = -(n_cnt as f32);
-            } else {
-                n_cnt += 1.0;
-            }
-        }
-        (loss, grad)
+    fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
+        let mut ws = LossWorkspace::default();
+        let loss = LossFn::loss_and_grad(self, BatchView::new(scores, is_pos), &mut ws);
+        (loss, std::mem::take(&mut ws.grad))
     }
 }
 
@@ -182,7 +204,7 @@ mod tests {
         for seed in 0..25 {
             let (s, p) = random_case(seed, 80, 0.3);
             let (ln, _) = NaiveLinearHinge::new(1.0).loss_and_grad(&s, &p);
-            let (lf, _) = LinearHinge::new(1.0).loss_and_grad(&s, &p);
+            let (lf, _) = PairwiseLoss::loss_and_grad(&LinearHinge::new(1.0), &s, &p);
             let scale = ln.abs().max(1.0);
             assert!((ln - lf).abs() < 1e-9 * scale, "{ln} vs {lf}");
         }
@@ -195,7 +217,7 @@ mod tests {
         for seed in 0..25 {
             let (s, p) = random_case(seed + 100, 60, 0.4);
             let (_, gn) = NaiveLinearHinge::new(1.0).loss_and_grad(&s, &p);
-            let (_, gf) = LinearHinge::new(1.0).loss_and_grad(&s, &p);
+            let (_, gf) = PairwiseLoss::loss_and_grad(&LinearHinge::new(1.0), &s, &p);
             assert_eq!(gn, gf);
         }
     }
@@ -205,7 +227,7 @@ mod tests {
         // pos at exactly neg + m: loss 0, subgradient 0 (minimal norm).
         let s = vec![1.0, 0.0];
         let p = vec![1.0, 0.0];
-        let (l, g) = LinearHinge::new(1.0).loss_and_grad(&s, &p);
+        let (l, g) = PairwiseLoss::loss_and_grad(&LinearHinge::new(1.0), &s, &p);
         assert_eq!(l, 0.0);
         assert_eq!(g, vec![0.0, 0.0]);
     }
@@ -215,7 +237,7 @@ mod tests {
         // pos 0.2, neg 0.5, m=1: d = 1 - 0.2 + 0.5 = 1.3; grad ±1.
         let s = vec![0.2, 0.5];
         let p = vec![1.0, 0.0];
-        let (l, g) = LinearHinge::new(1.0).loss_and_grad(&s, &p);
+        let (l, g) = PairwiseLoss::loss_and_grad(&LinearHinge::new(1.0), &s, &p);
         assert!((l - 1.3).abs() < 1e-6);
         assert_eq!(g, vec![-1.0, 1.0]);
     }
@@ -223,7 +245,7 @@ mod tests {
     #[test]
     fn subgradient_counts_are_integers() {
         let (s, p) = random_case(7, 200, 0.2);
-        let (_, g) = LinearHinge::new(1.0).loss_and_grad(&s, &p);
+        let (_, g) = PairwiseLoss::loss_and_grad(&LinearHinge::new(1.0), &s, &p);
         for v in g {
             assert_eq!(v, v.round());
         }
@@ -236,7 +258,16 @@ mod tests {
             *y = (*y * 2.0).round() / 2.0;
         }
         let (ln, _) = NaiveLinearHinge::new(0.5).loss_and_grad(&s, &p);
-        let (lf, _) = LinearHinge::new(0.5).loss_and_grad(&s, &p);
+        let (lf, _) = PairwiseLoss::loss_and_grad(&LinearHinge::new(0.5), &s, &p);
         assert!((ln - lf).abs() < 1e-9 * ln.abs().max(1.0));
+    }
+
+    #[test]
+    fn loss_only_matches_full() {
+        let (s, p) = random_case(19, 120, 0.3);
+        let lh = LinearHinge::new(1.0);
+        let (full, _) = PairwiseLoss::loss_and_grad(&lh, &s, &p);
+        let only = PairwiseLoss::loss(&lh, &s, &p);
+        assert!((full - only).abs() < 1e-12 * full.abs().max(1.0));
     }
 }

@@ -5,6 +5,7 @@
 //! sort factor.  We use the numerically-stable logits formulation
 //! `log(1 + exp(-y f))` with `y ∈ {−1, +1}` on raw scores.
 
+use super::kernel::{BatchView, LossFn, LossWorkspace};
 use super::PairwiseLoss;
 
 /// Per-example logistic loss on raw (unbounded) scores.
@@ -21,22 +22,37 @@ pub fn log1p_exp_neg(z: f64) -> f64 {
     }
 }
 
-impl Logistic {
-    /// Loss + gradient written into `grad` (cleared and refilled) — the
-    /// allocation-free hot path.
-    pub fn loss_and_grad_into(&self, scores: &[f32], is_pos: &[f32], grad: &mut Vec<f32>) -> f64 {
-        assert_eq!(scores.len(), is_pos.len());
+impl LossFn for Logistic {
+    fn loss_and_grad(&self, batch: BatchView<'_>, ws: &mut LossWorkspace) -> f64 {
         let mut loss = 0.0_f64;
-        grad.clear();
-        grad.extend(scores.iter().zip(is_pos).map(|(&s, &p)| {
-            let y = if p != 0.0 { 1.0 } else { -1.0 };
-            let z = y * s as f64;
-            loss += log1p_exp_neg(z);
-            // d/ds log(1+exp(-ys)) = -y sigmoid(-ys)
-            let sig = 1.0 / (1.0 + z.exp());
-            (-y * sig) as f32
-        }));
+        ws.grad.clear();
+        ws.grad
+            .extend(batch.scores.iter().zip(batch.is_pos).map(|(&s, &p)| {
+                let y = if p != 0.0 { 1.0 } else { -1.0 };
+                let z = y * s as f64;
+                loss += log1p_exp_neg(z);
+                // d/ds log(1+exp(-ys)) = -y sigmoid(-ys)
+                let sig = 1.0 / (1.0 + z.exp());
+                (-y * sig) as f32
+            }));
         loss
+    }
+
+    fn loss_only(&self, batch: BatchView<'_>, _ws: &mut LossWorkspace) -> f64 {
+        batch
+            .scores
+            .iter()
+            .zip(batch.is_pos)
+            .map(|(&s, &p)| {
+                let y = if p != 0.0 { 1.0 } else { -1.0 };
+                log1p_exp_neg(y * s as f64)
+            })
+            .sum()
+    }
+
+    /// Pointwise loss: normalized per example, not per pair.
+    fn norm(&self, batch: BatchView<'_>) -> f64 {
+        (batch.len() as f64).max(1.0)
     }
 }
 
@@ -49,10 +65,14 @@ impl PairwiseLoss for Logistic {
         "O(n)"
     }
 
+    fn loss(&self, scores: &[f32], is_pos: &[f32]) -> f64 {
+        LossFn::loss_only(self, BatchView::new(scores, is_pos), &mut LossWorkspace::default())
+    }
+
     fn loss_and_grad(&self, scores: &[f32], is_pos: &[f32]) -> (f64, Vec<f32>) {
-        let mut grad = Vec::new();
-        let loss = self.loss_and_grad_into(scores, is_pos, &mut grad);
-        (loss, grad)
+        let mut ws = LossWorkspace::default();
+        let loss = LossFn::loss_and_grad(self, BatchView::new(scores, is_pos), &mut ws);
+        (loss, std::mem::take(&mut ws.grad))
     }
 }
 
@@ -64,23 +84,25 @@ mod tests {
     fn zero_scores_give_log2() {
         let s = vec![0.0; 10];
         let p = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
-        let (l, g) = Logistic.loss_and_grad(&s, &p);
+        let (l, g) = PairwiseLoss::loss_and_grad(&Logistic, &s, &p);
         assert!((l - 10.0 * (2.0_f64).ln()).abs() < 1e-9);
         for (gi, pi) in g.iter().zip(&p) {
             let expect = if *pi != 0.0 { -0.5 } else { 0.5 };
             assert!((gi - expect).abs() < 1e-6);
         }
+        // the gradient-free path agrees
+        assert!((PairwiseLoss::loss(&Logistic, &s, &p) - l).abs() < 1e-12);
     }
 
     #[test]
     fn stable_for_extreme_scores() {
         let s = vec![1e4, -1e4];
         let p = vec![1.0, 0.0];
-        let (l, g) = Logistic.loss_and_grad(&s, &p);
+        let (l, g) = PairwiseLoss::loss_and_grad(&Logistic, &s, &p);
         assert!(l.is_finite() && l < 1e-6);
         assert!(g.iter().all(|x| x.is_finite()));
         // Misclassified extremes: loss ~ |z|, grad saturates at ±1.
-        let (l, g) = Logistic.loss_and_grad(&s, &[0.0, 1.0]);
+        let (l, g) = PairwiseLoss::loss_and_grad(&Logistic, &s, &[0.0, 1.0]);
         assert!(l.is_finite() && (l - 2e4).abs() / 2e4 < 1e-6);
         assert!((g[0] - 1.0).abs() < 1e-6 && (g[1] + 1.0).abs() < 1e-6);
     }
@@ -89,14 +111,15 @@ mod tests {
     fn grad_matches_finite_difference() {
         let s = vec![0.3_f32, -0.7, 1.2];
         let p = vec![1.0, 0.0, 0.0];
-        let (_, g) = Logistic.loss_and_grad(&s, &p);
+        let (_, g) = PairwiseLoss::loss_and_grad(&Logistic, &s, &p);
         let eps = 1e-3_f32;
         for i in 0..s.len() {
             let mut sp = s.clone();
             sp[i] += eps;
             let mut sm = s.clone();
             sm[i] -= eps;
-            let fd = (Logistic.loss_and_grad(&sp, &p).0 - Logistic.loss_and_grad(&sm, &p).0)
+            let fd = (PairwiseLoss::loss_and_grad(&Logistic, &sp, &p).0
+                - PairwiseLoss::loss_and_grad(&Logistic, &sm, &p).0)
                 / (2.0 * eps as f64);
             assert!((fd - g[i] as f64).abs() < 1e-3, "i={i}: {fd} vs {}", g[i]);
         }

@@ -1,6 +1,18 @@
-//! Native Rust implementations of the paper's loss algorithms.
+//! Native Rust implementations of the paper's loss algorithms, behind
+//! the typed loss API.
 //!
-//! Three families, all computing the same mathematical objects:
+//! Two seams, layered:
+//!
+//! * [`spec::LossSpec`] — the typed loss *identity*: what crosses every
+//!   API boundary (CLI, configs, Job JSON, `Backend::open`).  Parsed
+//!   and validated once, at the edge (`"hinge"`, `"hinge@margin=2"`,
+//!   ...); see the spec-grammar docs in [`spec`].
+//! * [`kernel::LossFn`] — the allocation-free loss *kernel*: one entry
+//!   point (`loss_and_grad(BatchView, &mut LossWorkspace)`) plus a
+//!   gradient-free `loss_only` path, implemented by every native loss
+//!   and consumed by the backend, trainer, L-BFGS oracle and benches.
+//!
+//! The loss families, all computing the same mathematical objects:
 //!
 //! * [`naive`] — the O(n²) brute-force double sum over all (positive,
 //!   negative) pairs, the paper's equation (2) taken literally.  This is
@@ -9,20 +21,28 @@
 //! * [`functional`] — the paper's contribution: Algorithm 1 (all-pairs
 //!   square loss, O(n)) and Algorithm 2 (all-pairs squared hinge loss,
 //!   O(n log n)) plus the closed-form gradients derived in DESIGN.md §3.
+//! * [`linear_hinge`] — the §5 linear-hinge extension with subgradients.
+//! * [`weighted`] — the weighted squared hinge (class-balanced
+//!   reweighting, spec `"whinge"`).
 //! * [`logistic`] — the linear-time per-example logistic loss, the
 //!   paper's "Logistic" timing baseline.
 //!
-//! The [`PairwiseLoss`] trait unifies them for the Figure 2 harness; every
-//! implementation returns both the loss value and the full gradient
-//! vector, because that is what one gradient-descent step needs.
+//! The [`PairwiseLoss`] trait unifies them for the Figure 2 harness.
 
 pub mod functional;
+pub mod kernel;
 pub mod linear_hinge;
 pub mod logistic;
 pub mod naive;
+pub mod spec;
 pub mod weighted;
 
-/// A loss over predicted scores with {0,1} positive-class indicators.
+pub use kernel::{BatchView, LossFn, LossWorkspace};
+pub use spec::LossSpec;
+
+/// A loss over predicted scores with {0,1} positive-class indicators —
+/// the *allocating* comparison interface of the Figure 2 timing harness
+/// (training paths use [`LossFn`] instead).
 ///
 /// `is_pos[i] == 1.0` marks example *i* positive; `0.0` marks it negative.
 /// (The Rust layer never needs the padding convention of the AOT kernels —
@@ -31,7 +51,9 @@ pub trait PairwiseLoss {
     /// Human-readable name used in reports and benches.
     fn name(&self) -> &'static str;
 
-    /// Loss value only.
+    /// Loss value only.  The default computes (and discards) a full
+    /// gradient; every functional implementation overrides it with its
+    /// gradient-free [`LossFn::loss_only`] path.
     fn loss(&self, scores: &[f32], is_pos: &[f32]) -> f64 {
         self.loss_and_grad(scores, is_pos).0
     }
@@ -78,7 +100,41 @@ mod tests {
         let l = functional::SquaredHinge::new(1.0);
         let s = vec![0.3, -0.2, 0.8, 0.1];
         let p = vec![1.0, 0.0, 1.0, 0.0];
-        let (v, _) = l.loss_and_grad(&s, &p);
-        assert!((l.loss(&s, &p) - v).abs() < 1e-12);
+        let (v, _) = PairwiseLoss::loss_and_grad(&l, &s, &p);
+        assert!((PairwiseLoss::loss(&l, &s, &p) - v).abs() < 1e-12);
+    }
+
+    #[test]
+    fn every_spec_kernel_agrees_with_pairwise_trait() {
+        // The LossFn seam and the Figure-2 trait compute the same values
+        // for every spec that has both.
+        let s = vec![0.9_f32, -0.3, 0.4, 0.1, -0.8];
+        let p = vec![1.0_f32, 0.0, 1.0, 0.0, 0.0];
+        for (spec, reference) in [
+            (
+                LossSpec::hinge(),
+                PairwiseLoss::loss_and_grad(&functional::SquaredHinge::new(1.0), &s, &p),
+            ),
+            (
+                LossSpec::square(),
+                PairwiseLoss::loss_and_grad(&functional::Square::new(1.0), &s, &p),
+            ),
+            (
+                LossSpec::logistic(),
+                PairwiseLoss::loss_and_grad(&logistic::Logistic, &s, &p),
+            ),
+            (
+                LossSpec::linear_hinge(),
+                PairwiseLoss::loss_and_grad(&linear_hinge::LinearHinge::new(1.0), &s, &p),
+            ),
+        ] {
+            let kernel = spec.build().unwrap();
+            let mut ws = LossWorkspace::default();
+            let view = BatchView::new(&s, &p);
+            let loss = kernel.loss_and_grad(view, &mut ws);
+            assert_eq!(loss, reference.0, "{spec}");
+            assert_eq!(ws.grad, reference.1, "{spec}");
+            assert_eq!(kernel.loss_only(view, &mut ws), loss, "{spec}");
+        }
     }
 }

@@ -1,0 +1,307 @@
+//! Typed loss specification: the [`LossSpec`] enum and its spec-string
+//! grammar.
+//!
+//! A `LossSpec` is the *only* form in which a loss crosses an API
+//! boundary — CLI flags, sweep configs, Job JSON, `Backend::open`,
+//! `Backend::eval_loss` — replacing the stringly-typed `"hinge"`-style
+//! dispatch that used to be re-matched (and re-validated) inside every
+//! layer.  Strings exist only at the edges, via the [`FromStr`] /
+//! [`fmt::Display`] round-trip:
+//!
+//! ```text
+//! spec   := name | name "@margin=" FLOAT
+//! name   := "hinge" | "square" | "logistic" | "lhinge" | "whinge" | "aucm"
+//! ```
+//!
+//! `"hinge"` parses to the default margin (1.0); `"hinge@margin=2"`
+//! carries an explicit one — which makes the per-loss margin a sweepable
+//! axis (`"losses": ["hinge", "hinge@margin=2"]` in a sweep config).
+//! `logistic` and `aucm` take no margin and reject one at parse time.
+//! Parsing validates everything (unknown names, malformed or negative
+//! margins) immediately, so a typo'd `--loss` or config entry fails
+//! before any data is generated, not inside `Backend::open`.
+//!
+//! `Aucm` (the LIBAUC PESG baseline) is pjrt-gated at *execution* time:
+//! the variant always parses — mirroring how [`crate::runtime::BackendSpec::Pjrt`]
+//! exists without the `pjrt` cargo feature — but it has no native
+//! kernel, so [`LossSpec::build`] (and therefore the native backend)
+//! rejects it with a pointer to `--backend pjrt`.
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::functional::{Square, SquaredHinge};
+use super::kernel::LossFn;
+use super::linear_hinge::LinearHinge;
+use super::logistic::Logistic;
+use super::weighted::WeightedSquaredHinge;
+
+/// Margin applied when a spec string carries no explicit `@margin=`.
+pub const DEFAULT_MARGIN: f32 = 1.0;
+
+/// The grammar summary used in parse-error messages.
+pub const VALID_SPECS: &str = "hinge | square | logistic | lhinge | whinge | aucm \
+                               (pairwise losses accept an optional margin, e.g. \"hinge@margin=2\"; \
+                               aucm requires the pjrt backend)";
+
+/// A fully-validated training-loss specification.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LossSpec {
+    /// All-pairs squared hinge (paper Algorithm 2, O(n log n)).
+    Hinge { margin: f32 },
+    /// All-pairs square loss (paper Algorithm 1, O(n)).
+    Square { margin: f32 },
+    /// Per-example logistic loss (pointwise O(n) baseline).
+    Logistic,
+    /// All-pairs *linear* hinge with subgradient (paper §5 extension).
+    LinearHinge { margin: f32 },
+    /// Class-balanced weighted all-pairs squared hinge (Airola et al.
+    /// 2011 / Cui et al. 2019 flavor): per-batch inverse-class-frequency
+    /// weights on top of the pairwise objective.
+    WeightedHinge { margin: f32 },
+    /// The LIBAUC PESG baseline — exists only as an AOT artifact, so it
+    /// runs through the pjrt backend only.
+    Aucm,
+}
+
+impl LossSpec {
+    /// `hinge` at the default margin.
+    pub fn hinge() -> Self {
+        LossSpec::Hinge {
+            margin: DEFAULT_MARGIN,
+        }
+    }
+
+    /// `square` at the default margin.
+    pub fn square() -> Self {
+        LossSpec::Square {
+            margin: DEFAULT_MARGIN,
+        }
+    }
+
+    /// `logistic`.
+    pub fn logistic() -> Self {
+        LossSpec::Logistic
+    }
+
+    /// `lhinge` at the default margin.
+    pub fn linear_hinge() -> Self {
+        LossSpec::LinearHinge {
+            margin: DEFAULT_MARGIN,
+        }
+    }
+
+    /// `whinge` at the default margin.
+    pub fn weighted_hinge() -> Self {
+        LossSpec::WeightedHinge {
+            margin: DEFAULT_MARGIN,
+        }
+    }
+
+    /// `aucm` (pjrt backend only).
+    pub fn aucm() -> Self {
+        LossSpec::Aucm
+    }
+
+    /// The bare loss name — the AOT artifact-name component and the
+    /// report/lr-grid key (`"hinge"`, `"whinge"`, ...).
+    pub fn base_name(&self) -> &'static str {
+        match self {
+            LossSpec::Hinge { .. } => "hinge",
+            LossSpec::Square { .. } => "square",
+            LossSpec::Logistic => "logistic",
+            LossSpec::LinearHinge { .. } => "lhinge",
+            LossSpec::WeightedHinge { .. } => "whinge",
+            LossSpec::Aucm => "aucm",
+        }
+    }
+
+    /// Margin of the pairwise hinge-family losses (`None` for the
+    /// margin-free `logistic` / `aucm`).
+    pub fn margin(&self) -> Option<f32> {
+        match *self {
+            LossSpec::Hinge { margin }
+            | LossSpec::Square { margin }
+            | LossSpec::LinearHinge { margin }
+            | LossSpec::WeightedHinge { margin } => Some(margin),
+            LossSpec::Logistic | LossSpec::Aucm => None,
+        }
+    }
+
+    /// Whether the loss sums over (positive, negative) pairs (vs per
+    /// example).
+    pub fn is_pairwise(&self) -> bool {
+        !matches!(self, LossSpec::Logistic)
+    }
+
+    /// Instantiate the native kernel for this spec.  Errors for `aucm`,
+    /// which exists only as a pjrt artifact — the one spec with no
+    /// native [`LossFn`].
+    pub fn build(&self) -> crate::Result<Box<dyn LossFn>> {
+        match *self {
+            LossSpec::Hinge { margin } => Ok(Box::new(SquaredHinge::new(margin))),
+            LossSpec::Square { margin } => Ok(Box::new(Square::new(margin))),
+            LossSpec::Logistic => Ok(Box::new(Logistic)),
+            LossSpec::LinearHinge { margin } => Ok(Box::new(LinearHinge::new(margin))),
+            LossSpec::WeightedHinge { margin } => Ok(Box::new(WeightedSquaredHinge::new(margin))),
+            LossSpec::Aucm => anyhow::bail!(
+                "loss \"aucm\" has no native kernel (the LIBAUC baseline exists only as \
+                 an AOT artifact); use the pjrt backend"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for LossSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.margin() {
+            Some(m) if m != DEFAULT_MARGIN => write!(f, "{}@margin={m}", self.base_name()),
+            _ => f.write_str(self.base_name()),
+        }
+    }
+}
+
+impl FromStr for LossSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (name, args) = match s.split_once('@') {
+            None => (s, None),
+            Some((name, args)) => (name, Some(args)),
+        };
+        let margin = match args {
+            None => None,
+            Some(args) => {
+                let value = args.strip_prefix("margin=").ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "bad loss spec {s:?}: expected \"{name}@margin=M\" (valid specs: {VALID_SPECS})"
+                    )
+                })?;
+                let m: f32 = value
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad margin in loss spec {s:?}: {e}"))?;
+                anyhow::ensure!(
+                    m.is_finite() && m >= 0.0,
+                    "bad loss spec {s:?}: margin must be a finite non-negative number"
+                );
+                Some(m)
+            }
+        };
+        let with_margin = |mk: fn(f32) -> LossSpec| Ok(mk(margin.unwrap_or(DEFAULT_MARGIN)));
+        let margin_free = |spec: LossSpec| {
+            anyhow::ensure!(
+                margin.is_none(),
+                "loss {name:?} takes no margin (got {s:?}); valid specs: {VALID_SPECS}"
+            );
+            Ok(spec)
+        };
+        match name {
+            "hinge" => with_margin(|margin| LossSpec::Hinge { margin }),
+            "square" => with_margin(|margin| LossSpec::Square { margin }),
+            "lhinge" => with_margin(|margin| LossSpec::LinearHinge { margin }),
+            "whinge" => with_margin(|margin| LossSpec::WeightedHinge { margin }),
+            "logistic" => margin_free(LossSpec::Logistic),
+            "aucm" => margin_free(LossSpec::Aucm),
+            other => anyhow::bail!("unknown loss {other:?}; valid specs: {VALID_SPECS}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_names_parse_to_default_margin() {
+        assert_eq!("hinge".parse::<LossSpec>().unwrap(), LossSpec::hinge());
+        assert_eq!("square".parse::<LossSpec>().unwrap(), LossSpec::square());
+        assert_eq!("logistic".parse::<LossSpec>().unwrap(), LossSpec::Logistic);
+        assert_eq!(
+            "lhinge".parse::<LossSpec>().unwrap(),
+            LossSpec::linear_hinge()
+        );
+        assert_eq!(
+            "whinge".parse::<LossSpec>().unwrap(),
+            LossSpec::weighted_hinge()
+        );
+        assert_eq!("aucm".parse::<LossSpec>().unwrap(), LossSpec::Aucm);
+    }
+
+    #[test]
+    fn explicit_margin_parses() {
+        assert_eq!(
+            "hinge@margin=2".parse::<LossSpec>().unwrap(),
+            LossSpec::Hinge { margin: 2.0 }
+        );
+        assert_eq!(
+            "whinge@margin=0.5".parse::<LossSpec>().unwrap(),
+            LossSpec::WeightedHinge { margin: 0.5 }
+        );
+        // margin equal to the default round-trips to the bare name
+        assert_eq!("square@margin=1".parse::<LossSpec>().unwrap(), LossSpec::square());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for spec in [
+            LossSpec::hinge(),
+            LossSpec::Hinge { margin: 2.0 },
+            LossSpec::Square { margin: 0.25 },
+            LossSpec::Logistic,
+            LossSpec::LinearHinge { margin: 0.0 },
+            LossSpec::WeightedHinge { margin: 3.5 },
+            LossSpec::Aucm,
+        ] {
+            let text = spec.to_string();
+            assert_eq!(text.parse::<LossSpec>().unwrap(), spec, "{text}");
+        }
+        assert_eq!(LossSpec::hinge().to_string(), "hinge");
+        assert_eq!(LossSpec::Hinge { margin: 2.0 }.to_string(), "hinge@margin=2");
+    }
+
+    #[test]
+    fn invalid_specs_fail_listing_the_grammar() {
+        for bad in [
+            "typo",
+            "hinge@m=2",
+            "hinge@margin=",
+            "hinge@margin=-1",
+            "hinge@margin=nope",
+            "hinge@margin=inf",
+            "logistic@margin=2",
+            "aucm@margin=1",
+            "",
+        ] {
+            let err = bad.parse::<LossSpec>().unwrap_err().to_string();
+            assert!(
+                err.contains("hinge") || err.contains("margin"),
+                "{bad:?}: error should name the valid specs, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn build_covers_every_native_loss_and_rejects_aucm() {
+        for spec in [
+            LossSpec::hinge(),
+            LossSpec::square(),
+            LossSpec::logistic(),
+            LossSpec::linear_hinge(),
+            LossSpec::weighted_hinge(),
+        ] {
+            assert!(spec.build().is_ok(), "{spec}");
+        }
+        let err = LossSpec::Aucm.build().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn accessors() {
+        assert_eq!(LossSpec::hinge().base_name(), "hinge");
+        assert_eq!(LossSpec::weighted_hinge().base_name(), "whinge");
+        assert_eq!(LossSpec::Hinge { margin: 2.0 }.margin(), Some(2.0));
+        assert_eq!(LossSpec::Logistic.margin(), None);
+        assert!(LossSpec::Aucm.is_pairwise());
+        assert!(!LossSpec::Logistic.is_pairwise());
+    }
+}

@@ -12,9 +12,19 @@
 //! The Algorithm-2 sweep carries *weighted* coefficients —
 //! `a = Σ wⱼ`, `b = Σ wⱼ·2(m−ŷⱼ)`, `c = Σ wⱼ(m−ŷⱼ)²`, `t = Σ wⱼŷⱼ` —
 //! and every negative evaluation is scaled by `wₖ`.  Setting all weights
-//! to 1 recovers the unweighted loss exactly (tested).  This is also the
-//! building block for cost-sensitive / class-balanced reweighting
-//! (Cui et al. 2019) on top of the pairwise objective.
+//! to 1 recovers the unweighted loss exactly (tested).
+//!
+//! As a [`LossFn`] (spec string `"whinge"`) this is the **class-balanced**
+//! scenario (Cui et al. 2019 flavor): when the [`BatchView`] carries no
+//! explicit weights, every example of a class gets `n / (2·n_class)` —
+//! derived per batch into the workspace, allocation-free — so the
+//! minority class contributes half the total pair mass regardless of the
+//! imbalance ratio.  The normalizer is the weighted pair mass
+//! `(Σ_pos w)(Σ_neg w)`, which reduces to the plain pair count at unit
+//! weights.  This makes cost-sensitive reweighting trainable end to end
+//! (`--loss whinge`) rather than a standalone kernel.
+
+use super::kernel::{fill_hinge_order, BatchView, LossFn, LossWorkspace};
 
 /// Weighted all-pairs squared hinge loss, O(n log n).
 #[derive(Debug, Clone, Copy)]
@@ -28,40 +38,88 @@ impl WeightedSquaredHinge {
         Self { margin }
     }
 
-    /// Loss + gradient w.r.t. scores.  `weights[i] >= 0`; an example with
-    /// weight 0 is ignored entirely.
+    /// Loss + gradient w.r.t. scores with explicit weights
+    /// (`weights[i] >= 0`; a weight-0 example is ignored entirely).
+    /// Allocating convenience form of the [`LossFn`] entry point.
     pub fn loss_and_grad(
         &self,
         scores: &[f32],
         is_pos: &[f32],
         weights: &[f32],
     ) -> (f64, Vec<f32>) {
-        assert_eq!(scores.len(), is_pos.len());
-        assert_eq!(scores.len(), weights.len());
-        let n = scores.len();
+        let mut ws = LossWorkspace::default();
+        let loss =
+            LossFn::loss_and_grad(self, BatchView::weighted(scores, is_pos, weights), &mut ws);
+        (loss, std::mem::take(&mut ws.grad))
+    }
+
+    /// O(n²) loss reference (tests only).
+    pub fn loss_naive(&self, scores: &[f32], is_pos: &[f32], weights: &[f32]) -> f64 {
+        self.loss_and_grad_naive(scores, is_pos, weights).0
+    }
+
+    /// O(n²) loss *and gradient* reference (tests only): the double sum
+    /// taken literally, differentiated pair by pair.
+    pub fn loss_and_grad_naive(
+        &self,
+        scores: &[f32],
+        is_pos: &[f32],
+        weights: &[f32],
+    ) -> (f64, Vec<f32>) {
         let m = self.margin as f64;
-        let mut grad = vec![0.0_f32; n];
-        if n == 0 {
-            return (0.0, grad);
+        let mut loss = 0.0_f64;
+        let mut grad = vec![0.0_f64; scores.len()];
+        for (j, (&yj, &pj)) in scores.iter().zip(is_pos).enumerate() {
+            if pj == 0.0 {
+                continue;
+            }
+            for (k, (&yk, &pk)) in scores.iter().zip(is_pos).enumerate() {
+                if pk != 0.0 {
+                    continue;
+                }
+                let d = (m - yj as f64 + yk as f64).max(0.0);
+                let w = weights[j] as f64 * weights[k] as f64;
+                loss += w * d * d;
+                grad[j] -= w * 2.0 * d;
+                grad[k] += w * 2.0 * d;
+            }
         }
-        // f64 keys so key order matches the f64 sweep exactly (see
-        // `functional::HingeScratch` for the rounding failure mode).
-        let mut order: Vec<u32> = (0..n as u32).collect();
-        let keys: Vec<f64> = scores
-            .iter()
-            .zip(is_pos)
-            .map(|(&y, &p)| if p != 0.0 { y as f64 } else { y as f64 + m })
-            .collect();
-        order.sort_unstable_by(|&a, &b| keys[a as usize].total_cmp(&keys[b as usize]));
+        (loss, grad.into_iter().map(|g| g as f32).collect())
+    }
+}
+
+impl LossFn for WeightedSquaredHinge {
+    fn loss_and_grad(&self, batch: BatchView<'_>, ws: &mut LossWorkspace) -> f64 {
+        let n = batch.len();
+        let m = self.margin as f64;
+        let LossWorkspace {
+            grad,
+            order,
+            keys,
+            weights: derived,
+        } = ws;
+        grad.clear();
+        grad.resize(n, 0.0);
+        if n == 0 {
+            return 0.0;
+        }
+        let weights: &[f32] = match batch.weights {
+            Some(w) => w,
+            None => {
+                fill_class_balanced(batch.is_pos, derived);
+                &derived[..]
+            }
+        };
+        fill_hinge_order(batch, m, keys, order, false);
 
         // Ascending sweep with weighted coefficients.
         let (mut a, mut b, mut c, mut t) = (0.0_f64, 0.0_f64, 0.0_f64, 0.0_f64);
         let mut loss = 0.0_f64;
-        for &i in &order {
+        for &i in order.iter() {
             let i = i as usize;
-            let y = scores[i] as f64;
+            let y = batch.scores[i] as f64;
             let w = weights[i] as f64;
-            if is_pos[i] != 0.0 {
+            if batch.is_pos[i] != 0.0 {
                 let z = m - y;
                 a += w;
                 b += w * 2.0 * z;
@@ -76,54 +134,106 @@ impl WeightedSquaredHinge {
         let (mut n_w, mut t_w) = (0.0_f64, 0.0_f64);
         for &i in order.iter().rev() {
             let i = i as usize;
-            let y = scores[i] as f64;
+            let y = batch.scores[i] as f64;
             let w = weights[i] as f64;
-            if is_pos[i] != 0.0 {
+            if batch.is_pos[i] != 0.0 {
                 grad[i] = (-w * 2.0 * (n_w * (m - y) + t_w)) as f32;
             } else {
                 n_w += w;
                 t_w += w * y;
             }
         }
-        (loss, grad)
+        loss
     }
 
-    /// O(n²) reference (tests only).
-    pub fn loss_naive(&self, scores: &[f32], is_pos: &[f32], weights: &[f32]) -> f64 {
+    fn loss_only(&self, batch: BatchView<'_>, ws: &mut LossWorkspace) -> f64 {
         let m = self.margin as f64;
-        let mut loss = 0.0_f64;
-        for (j, (&yj, &pj)) in scores.iter().zip(is_pos).enumerate() {
-            if pj == 0.0 {
-                continue;
+        if batch.is_empty() {
+            return 0.0;
+        }
+        let LossWorkspace {
+            order,
+            keys,
+            weights: derived,
+            ..
+        } = ws;
+        let weights: &[f32] = match batch.weights {
+            Some(w) => w,
+            None => {
+                fill_class_balanced(batch.is_pos, derived);
+                &derived[..]
             }
-            for (k, (&yk, &pk)) in scores.iter().zip(is_pos).enumerate() {
-                if pk != 0.0 {
-                    continue;
-                }
-                let d = (m - yj as f64 + yk as f64).max(0.0);
-                loss += weights[j] as f64 * weights[k] as f64 * d * d;
+        };
+        fill_hinge_order(batch, m, keys, order, false);
+        let (mut a, mut b, mut c) = (0.0_f64, 0.0_f64, 0.0_f64);
+        let mut loss = 0.0_f64;
+        for &i in order.iter() {
+            let i = i as usize;
+            let y = batch.scores[i] as f64;
+            let w = weights[i] as f64;
+            if batch.is_pos[i] != 0.0 {
+                let z = m - y;
+                a += w;
+                b += w * 2.0 * z;
+                c += w * z * z;
+            } else {
+                loss += w * (a * y * y + b * y + c);
             }
         }
         loss
     }
+
+    /// Weighted pair mass `(Σ_pos w)(Σ_neg w)`, floored at 1.  At unit
+    /// weights this is the plain pair count; with the derived
+    /// class-balanced weights it is `(n/2)²` whenever both classes are
+    /// present.
+    fn norm(&self, batch: BatchView<'_>) -> f64 {
+        let (pos_mass, neg_mass) = match batch.weights {
+            Some(w) => {
+                let (mut pos, mut neg) = (0.0_f64, 0.0_f64);
+                for (&wi, &p) in w.iter().zip(batch.is_pos) {
+                    if p != 0.0 {
+                        pos += wi as f64;
+                    } else {
+                        neg += wi as f64;
+                    }
+                }
+                (pos, neg)
+            }
+            None => {
+                // Closed form of the class-balanced masses: each class
+                // present contributes exactly n/2.
+                let n = batch.len() as f64;
+                let n_pos = batch.is_pos.iter().filter(|&&p| p != 0.0).count() as f64;
+                let n_neg = n - n_pos;
+                (
+                    if n_pos > 0.0 { n / 2.0 } else { 0.0 },
+                    if n_neg > 0.0 { n / 2.0 } else { 0.0 },
+                )
+            }
+        };
+        (pos_mass * neg_mass).max(1.0)
+    }
 }
 
-/// Class-balanced weights (inverse class frequency, Cui et al. 2019
-/// flavor): every example of a class gets `n / (2 * n_class)`.
-pub fn class_balanced_weights(is_pos: &[f32]) -> Vec<f32> {
+/// Fill `out` with class-balanced weights (inverse class frequency,
+/// Cui et al. 2019 flavor): every example of a class gets
+/// `n / (2 * n_class)`.  Allocation-free when `out` has capacity.
+pub fn fill_class_balanced(is_pos: &[f32], out: &mut Vec<f32>) {
     let n = is_pos.len() as f64;
     let n_pos = is_pos.iter().filter(|&&p| p != 0.0).count() as f64;
     let n_neg = n - n_pos;
-    is_pos
-        .iter()
-        .map(|&p| {
-            if p != 0.0 {
-                (n / (2.0 * n_pos.max(1.0))) as f32
-            } else {
-                (n / (2.0 * n_neg.max(1.0))) as f32
-            }
-        })
-        .collect()
+    let w_pos = (n / (2.0 * n_pos.max(1.0))) as f32;
+    let w_neg = (n / (2.0 * n_neg.max(1.0))) as f32;
+    out.clear();
+    out.extend(is_pos.iter().map(|&p| if p != 0.0 { w_pos } else { w_neg }));
+}
+
+/// Class-balanced weights as a fresh vector (see [`fill_class_balanced`]).
+pub fn class_balanced_weights(is_pos: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    fill_class_balanced(is_pos, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -154,7 +264,7 @@ mod tests {
             let (s, p, _) = random_case(seed, 120);
             let ones = vec![1.0; s.len()];
             let (lw, gw) = WeightedSquaredHinge::new(1.0).loss_and_grad(&s, &p, &ones);
-            let (lu, gu) = SquaredHinge::new(1.0).loss_and_grad(&s, &p);
+            let (lu, gu) = PairwiseLoss::loss_and_grad(&SquaredHinge::new(1.0), &s, &p);
             assert!((lw - lu).abs() < 1e-9 * lu.abs().max(1.0));
             for (a, b) in gw.iter().zip(&gu) {
                 assert!((a - b).abs() < 1e-4);
@@ -207,7 +317,7 @@ mod tests {
         let keep: Vec<usize> = (0..60).filter(|i| i % 3 != 0).collect();
         let s2: Vec<f32> = keep.iter().map(|&i| s[i]).collect();
         let p2: Vec<f32> = keep.iter().map(|&i| p[i]).collect();
-        let (lu, gu) = SquaredHinge::new(1.0).loss_and_grad(&s2, &p2);
+        let (lu, gu) = PairwiseLoss::loss_and_grad(&SquaredHinge::new(1.0), &s2, &p2);
         assert!((lw - lu).abs() < 1e-9 * lu.abs().max(1.0));
         for (slot, &i) in keep.iter().enumerate() {
             assert!((gw[i] - gu[slot]).abs() < 1e-4);
@@ -224,5 +334,48 @@ mod tests {
         let total: f32 = w.iter().sum();
         assert!((total - 8.0).abs() < 1e-5);
         assert!(w[0] > w[1]); // minority class upweighted
+    }
+
+    #[test]
+    fn derived_weights_equal_explicit_class_balanced() {
+        // The `whinge` scenario: a weight-free BatchView must behave
+        // exactly as if class-balanced weights were passed explicitly.
+        let (s, p, _) = random_case(21, 150);
+        let wh = WeightedSquaredHinge::new(1.0);
+        let w = class_balanced_weights(&p);
+        let mut ws = LossWorkspace::default();
+        let implicit = LossFn::loss_and_grad(&wh, BatchView::new(&s, &p), &mut ws);
+        let g_implicit = ws.grad.clone();
+        let (explicit, g_explicit) = wh.loss_and_grad(&s, &p, &w);
+        assert_eq!(implicit, explicit);
+        assert_eq!(g_implicit, g_explicit);
+        // and the normalizers agree to rounding
+        let n_implicit = LossFn::norm(&wh, BatchView::new(&s, &p));
+        let n_explicit = LossFn::norm(&wh, BatchView::weighted(&s, &p, &w));
+        assert!((n_implicit - n_explicit).abs() < 1e-6 * n_implicit);
+    }
+
+    #[test]
+    fn loss_only_matches_full_weighted() {
+        let (s, p, w) = random_case(33, 200);
+        let wh = WeightedSquaredHinge::new(1.0);
+        let mut ws = LossWorkspace::default();
+        let full = LossFn::loss_and_grad(&wh, BatchView::weighted(&s, &p, &w), &mut ws);
+        let only = LossFn::loss_only(&wh, BatchView::weighted(&s, &p, &w), &mut ws);
+        assert_eq!(full, only);
+    }
+
+    #[test]
+    fn norm_is_weighted_pair_mass() {
+        let s = [0.0_f32; 4];
+        let p = [1.0_f32, 0.0, 0.0, 0.0];
+        let w = [2.0_f32, 1.0, 1.0, 1.0];
+        let wh = WeightedSquaredHinge::new(1.0);
+        assert_eq!(LossFn::norm(&wh, BatchView::weighted(&s, &p, &w)), 6.0);
+        // derived class-balanced masses: (4/2) * (4/2)
+        assert_eq!(LossFn::norm(&wh, BatchView::new(&s, &p)), 4.0);
+        // single-class batches floor at 1
+        let all_neg = [0.0_f32; 4];
+        assert_eq!(LossFn::norm(&wh, BatchView::new(&s, &all_neg)), 1.0);
     }
 }

@@ -23,6 +23,7 @@ use std::path::{Path, PathBuf};
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::{cv, perf, timing};
 use allpairs::data::{Rng, SamplingMode, Split};
+use allpairs::losses::LossSpec;
 use allpairs::report::figures::{ascii_loglog, write_csv};
 use allpairs::runtime::BackendSpec;
 use allpairs::sweep::results;
@@ -52,8 +53,11 @@ COMMANDS
       --sampling MODES  comma-separated batch sampling axis
                         (preserve | rebalance | rebalance:F)
   train             one training run (streaming epoch loop)
-      --dataset D --loss L --model M --batch B --lr LR
+      --dataset D --model M --batch B --lr LR
       --imratio R --epochs E --seed S --max-train N
+      --loss L          loss spec: hinge | square | logistic | lhinge
+                        | whinge (class-balanced) | aucm (pjrt only);
+                        pairwise specs take "@margin=M"  [hinge]
       --patience P      early-stop after P stale epochs  [off]
       --sampling MODE   preserve | rebalance | rebalance:F  [preserve]
   bench             train-step/loss/AUC perf trajectory (native backend)
@@ -160,7 +164,7 @@ fn cmd_sweep(args: &Args, artifacts: &Path, out: &Path) -> allpairs::Result<()> 
     if args.flag("smoke") {
         cfg.datasets = vec!["synth-pets".into()];
         cfg.imratios = vec![0.1];
-        cfg.losses = vec!["hinge".into(), "logistic".into()];
+        cfg.losses = vec![LossSpec::hinge(), LossSpec::logistic()];
         cfg.batch_sizes = vec![50, 100];
         cfg.seeds = vec![0, 1];
         cfg.epochs = 3;
@@ -172,7 +176,7 @@ fn cmd_sweep(args: &Args, artifacts: &Path, out: &Path) -> allpairs::Result<()> 
     if cfg.adapt_losses_to_backend(args.get_opt("config").is_none()) {
         eprintln!(
             "note: aucm requires the pjrt backend; sweeping losses {:?}",
-            cfg.losses
+            cfg.losses.iter().map(|l| l.to_string()).collect::<Vec<_>>()
         );
     }
     cfg.workers = args.get("workers", cfg.workers)?;
@@ -221,7 +225,9 @@ fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
         "epochs", "seed", "max-train", "patience", "sampling",
     ])?;
     let dataset = args.get_str("dataset", "synth-cifar");
-    let loss = args.get_str("loss", "hinge");
+    // Parsed (and validated) before any data is generated: a typo'd
+    // --loss fails right here, listing the valid specs.
+    let loss: LossSpec = args.get_str("loss", "hinge").parse()?;
     let model = args.get_str("model", "resnet");
     let batch: usize = args.get("batch", 100)?;
     let lr: f64 = args.get("lr", 0.01)?;

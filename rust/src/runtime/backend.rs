@@ -4,6 +4,10 @@
 //! above (trainer, sweep, coordinator, CLI) is written against the trait.
 //! See DESIGN.md §5 for the layering argument.
 //!
+//! Losses cross this boundary as a typed [`LossSpec`] — validated at
+//! the API edge (CLI / config parse), never re-parsed from a string
+//! inside a backend (DESIGN.md §8).
+//!
 //! Threading contract: a [`BackendSpec`] is plain `Send + Sync` data that
 //! can cross threads freely; a connected [`Backend`] may be thread-bound
 //! (the PJRT client is `Rc`-based), so the sweep scheduler ships the
@@ -13,6 +17,7 @@
 
 use std::path::PathBuf;
 
+use crate::losses::LossSpec;
 use crate::util::json::Json;
 
 use super::native::{NativeBackend, NativeSpec};
@@ -31,14 +36,14 @@ pub trait Backend {
     fn open<'a>(
         &'a self,
         model: &str,
-        loss: &str,
+        loss: &LossSpec,
         batch: usize,
     ) -> crate::Result<Box<dyn ModelExecutor + 'a>>;
 
-    /// Full-set training-loss evaluation (paper §5 monitoring): the loss
-    /// named `loss` over `scores`/`is_pos`, normalized per pair (or per
-    /// example for pointwise losses).
-    fn eval_loss(&self, loss: &str, scores: &[f32], is_pos: &[f32]) -> crate::Result<f64>;
+    /// Full-set training-loss evaluation (paper §5 monitoring): the
+    /// specified loss over `scores`/`is_pos`, normalized per pair (or
+    /// per example for pointwise losses).
+    fn eval_loss(&self, loss: &LossSpec, scores: &[f32], is_pos: &[f32]) -> crate::Result<f64>;
 }
 
 /// One model bound to one (loss, batch): holds the training state and
@@ -144,7 +149,6 @@ impl BackendSpec {
                 ("kind", Json::str("native")),
                 ("input_dim", Json::num(s.input_dim as f64)),
                 ("hidden", Json::num(s.hidden as f64)),
-                ("margin", Json::num(s.margin as f64)),
                 ("threads", Json::num(s.threads as f64)),
             ]),
             BackendSpec::Pjrt { artifacts_dir } => Json::obj([
@@ -155,6 +159,13 @@ impl BackendSpec {
     }
 
     /// Parse the JSON form; absent native fields keep their defaults.
+    ///
+    /// Back-compat: pre-LossSpec configs carried a `margin` field here.
+    /// The margin now travels with the loss spec (`"hinge@margin=2"`),
+    /// so a legacy `margin` key at the old default (1.0) is accepted and
+    /// ignored — but a *non-default* legacy margin is rejected rather
+    /// than silently dropped, which would reproduce different losses
+    /// than the config's original run.
     pub fn from_json(j: &Json) -> crate::Result<Self> {
         let kind = j
             .req("kind")?
@@ -173,16 +184,20 @@ impl BackendSpec {
                         .as_usize()
                         .ok_or_else(|| anyhow::anyhow!("hidden must be a non-negative integer"))?;
                 }
-                if let Some(v) = j.get("margin") {
-                    spec.margin = v
-                        .as_f64()
-                        .ok_or_else(|| anyhow::anyhow!("margin must be a number"))?
-                        as f32;
-                }
                 if let Some(v) = j.get("threads") {
                     spec.threads = v
                         .as_usize()
                         .ok_or_else(|| anyhow::anyhow!("threads must be a non-negative integer"))?;
+                }
+                if let Some(v) = j.get("margin") {
+                    let m = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("margin must be a number"))?;
+                    anyhow::ensure!(
+                        m == crate::losses::spec::DEFAULT_MARGIN as f64,
+                        "the backend no longer carries a margin; move the legacy \
+                         \"margin\": {m} into the loss specs (e.g. \"hinge@margin={m}\")"
+                    );
                 }
                 Ok(BackendSpec::Native(spec))
             }
@@ -207,7 +222,6 @@ mod tests {
         let native = BackendSpec::Native(NativeSpec {
             input_dim: 64,
             hidden: 16,
-            margin: 0.5,
             threads: 2,
         });
         let back = BackendSpec::from_json(&native.to_json()).unwrap();
@@ -216,6 +230,29 @@ mod tests {
         let pjrt = BackendSpec::pjrt("artifacts");
         let back = BackendSpec::from_json(&pjrt.to_json()).unwrap();
         assert_eq!(back, pjrt);
+    }
+
+    #[test]
+    fn legacy_margin_field_default_ignored_nondefault_rejected() {
+        // pre-LossSpec configs serialized the margin on the backend; the
+        // old default parses (and is dropped), a non-default one must
+        // fail loudly instead of silently training at margin 1
+        let j = Json::parse(
+            r#"{"kind": "native", "input_dim": 8, "hidden": 4, "margin": 1.0, "threads": 1}"#,
+        )
+        .unwrap();
+        let spec = BackendSpec::from_json(&j).unwrap();
+        assert_eq!(
+            spec,
+            BackendSpec::Native(NativeSpec {
+                input_dim: 8,
+                hidden: 4,
+                threads: 1,
+            })
+        );
+        let j = Json::parse(r#"{"kind": "native", "margin": 0.5}"#).unwrap();
+        let err = BackendSpec::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("hinge@margin=0.5"), "{err}");
     }
 
     #[test]

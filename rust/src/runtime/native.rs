@@ -1,7 +1,12 @@
 //! The pure-Rust native backend: forward/gradient execution built
-//! directly on [`crate::losses::functional`] and [`HostTensor`], with
-//! the parallel train-step data path delegated to the deterministic
+//! directly on the [`crate::losses`] kernel layer and [`HostTensor`],
+//! with the parallel train-step data path delegated to the deterministic
 //! chunked [`Engine`] (`runtime/engine.rs`, DESIGN.md §7).
+//!
+//! Losses arrive as a typed [`LossSpec`] (validated at the API edge) and
+//! are instantiated once, at `open`, into a boxed allocation-free
+//! [`LossFn`] kernel — there is no loss-name dispatch anywhere in this
+//! module (DESIGN.md §8).
 //!
 //! Models are the reproduction-scale stand-ins for the paper's networks:
 //! a linear scorer (`"linear"`) and a one-hidden-layer tanh MLP (every
@@ -20,9 +25,7 @@
 use std::ops::Range;
 
 use crate::data::Rng;
-use crate::losses::functional::{HingeScratch, Square, SquaredHinge};
-use crate::losses::logistic;
-use crate::losses::PairwiseLoss;
+use crate::losses::{BatchView, LossFn, LossSpec, LossWorkspace};
 
 use super::backend::{Backend, ModelExecutor};
 use super::engine::{ChunkModel, Engine};
@@ -32,14 +35,15 @@ use super::tensor::HostTensor;
 const MOMENTUM: f32 = 0.9;
 
 /// Configuration of the native backend.
+///
+/// Loss identity (including the margin) lives in [`LossSpec`], not here:
+/// the same backend serves every loss an executor is opened with.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NativeSpec {
     /// Scalars per example (the flattened input row length).
     pub input_dim: usize,
     /// Hidden units of the MLP stand-in (0 = every model is linear).
     pub hidden: usize,
-    /// Margin of the pairwise losses.
-    pub margin: f32,
     /// Worker threads for forward/gradient (0 = one per available core).
     pub threads: usize,
 }
@@ -52,7 +56,6 @@ impl Default for NativeSpec {
                 * crate::data::synth::IMAGE_HW
                 * crate::data::synth::CHANNELS,
             hidden: 32,
-            margin: 1.0,
             threads: 0,
         }
     }
@@ -80,12 +83,12 @@ impl NativeBackend {
     pub fn objective(
         &self,
         model: &str,
-        loss: &str,
+        loss: &LossSpec,
         rows: &[f32],
         labels: &[f32],
     ) -> crate::Result<NativeObjective> {
         let arch = ModelArch::parse(model, &self.spec);
-        let loss = LossKind::parse(loss, self.spec.margin)?;
+        let loss = loss.build()?;
         anyhow::ensure!(
             rows.len() == labels.len() * arch.dim(),
             "rows/labels mismatch: {} scalars for {} examples of dim {}",
@@ -103,8 +106,7 @@ impl NativeBackend {
             scores: Vec::new(),
             hidden: Vec::new(),
             dscores: Vec::new(),
-            grad_scores: Vec::new(),
-            hinge_scratch: HingeScratch::default(),
+            ws: LossWorkspace::default(),
             evals: 0,
         })
     }
@@ -118,19 +120,22 @@ impl Backend for NativeBackend {
     fn open<'a>(
         &'a self,
         model: &str,
-        loss: &str,
+        loss: &LossSpec,
         batch: usize,
     ) -> crate::Result<Box<dyn ModelExecutor + 'a>> {
         anyhow::ensure!(batch > 0, "batch size must be positive");
         let arch = ModelArch::parse(model, &self.spec);
-        let loss = LossKind::parse(loss, self.spec.margin)?;
+        let loss = loss.build()?;
         Ok(Box::new(NativeExecutor::new(arch, loss, batch, self.spec.threads)))
     }
 
-    fn eval_loss(&self, loss: &str, scores: &[f32], is_pos: &[f32]) -> crate::Result<f64> {
+    fn eval_loss(&self, loss: &LossSpec, scores: &[f32], is_pos: &[f32]) -> crate::Result<f64> {
         anyhow::ensure!(scores.len() == is_pos.len(), "scores/is_pos length mismatch");
-        let kind = LossKind::parse(loss, self.spec.margin)?;
-        Ok(kind.normalized_loss(scores, is_pos))
+        let kernel = loss.build()?;
+        let mut ws = LossWorkspace::default();
+        let view = BatchView::new(scores, is_pos);
+        // The §5 monitoring entry point: the gradient-free sweep.
+        Ok(kernel.loss_only(view, &mut ws) / kernel.norm(view))
     }
 }
 
@@ -336,87 +341,18 @@ impl ChunkModel for ModelArch {
 }
 
 // ---------------------------------------------------------------------------
-// Losses
-// ---------------------------------------------------------------------------
-
-/// Training losses the native backend implements.
-#[derive(Debug, Clone, Copy)]
-enum LossKind {
-    Hinge(SquaredHinge),
-    Square(Square),
-    Logistic,
-}
-
-impl LossKind {
-    fn parse(name: &str, margin: f32) -> crate::Result<Self> {
-        match name {
-            "hinge" => Ok(LossKind::Hinge(SquaredHinge::new(margin))),
-            "square" => Ok(LossKind::Square(Square::new(margin))),
-            "logistic" => Ok(LossKind::Logistic),
-            other => anyhow::bail!(
-                "native backend does not implement loss {other:?} \
-                 (available: hinge, square, logistic; aucm needs the pjrt backend)"
-            ),
-        }
-    }
-
-    /// Normalizer: pair count for pairwise losses, example count for
-    /// pointwise ones — floored at 1, matching the L2 loss wrappers.
-    fn norm(&self, is_pos: &[f32]) -> f64 {
-        match self {
-            LossKind::Logistic => (is_pos.len() as f64).max(1.0),
-            _ => {
-                let n_pos = is_pos.iter().filter(|&&p| p != 0.0).count() as f64;
-                let n_neg = is_pos.len() as f64 - n_pos;
-                (n_pos * n_neg).max(1.0)
-            }
-        }
-    }
-
-    /// Unnormalized loss, gradient written into `grad`.  Every arm
-    /// reuses the caller's buffers, so the train-step hot loop performs
-    /// no per-batch allocation regardless of the loss (see
-    /// EXPERIMENTS.md §Perf).
-    fn loss_and_grad_into(
-        &self,
-        scores: &[f32],
-        is_pos: &[f32],
-        grad: &mut Vec<f32>,
-        scratch: &mut HingeScratch,
-    ) -> f64 {
-        match self {
-            LossKind::Hinge(h) => h.loss_and_grad_with(scores, is_pos, grad, scratch),
-            LossKind::Square(s) => s.loss_and_grad_into(scores, is_pos, grad),
-            LossKind::Logistic => logistic::Logistic.loss_and_grad_into(scores, is_pos, grad),
-        }
-    }
-
-    /// Normalized loss value only (the §5 monitoring entry point).
-    fn normalized_loss(&self, scores: &[f32], is_pos: &[f32]) -> f64 {
-        let norm = self.norm(is_pos);
-        let raw = match self {
-            LossKind::Hinge(h) => h.loss_only(scores, is_pos),
-            LossKind::Square(s) => s.loss_and_grad(scores, is_pos).0,
-            LossKind::Logistic => logistic::Logistic.loss_and_grad(scores, is_pos).0,
-        };
-        raw / norm
-    }
-}
-
-// ---------------------------------------------------------------------------
 // Executor
 // ---------------------------------------------------------------------------
 
-/// Native [`ModelExecutor`]: flat parameter + momentum vectors, reusable
-/// scratch buffers, and a per-executor [`Engine`] driving the parallel
-/// data path.  The train step is allocation-free after warm-up for
-/// every loss — hinge via [`SquaredHinge::loss_and_grad_with`],
-/// square/logistic via their `loss_and_grad_into` paths (see
-/// EXPERIMENTS.md §Perf) — and bit-identical across thread counts
-/// (DESIGN.md §7).
+/// Native [`ModelExecutor`]: flat parameter + momentum vectors, a boxed
+/// [`LossFn`] kernel with its [`LossWorkspace`], reusable scratch
+/// buffers, and a per-executor [`Engine`] driving the parallel data
+/// path.  The train step is allocation-free after warm-up for every
+/// loss (see EXPERIMENTS.md §Perf) and bit-identical across thread
+/// counts (DESIGN.md §7).
 struct NativeExecutor {
     arch: ModelArch,
-    loss: LossKind,
+    loss: Box<dyn LossFn>,
     batch: usize,
     engine: Engine,
     initialized: bool,
@@ -430,12 +366,11 @@ struct NativeExecutor {
     compact_scores: Vec<f32>,
     compact_pos: Vec<f32>,
     compact_idx: Vec<u32>,
-    compact_grad: Vec<f32>,
-    hinge_scratch: HingeScratch,
+    ws: LossWorkspace,
 }
 
 impl NativeExecutor {
-    fn new(arch: ModelArch, loss: LossKind, batch: usize, threads: usize) -> Self {
+    fn new(arch: ModelArch, loss: Box<dyn LossFn>, batch: usize, threads: usize) -> Self {
         let n = arch.n_params();
         Self {
             arch,
@@ -452,8 +387,7 @@ impl NativeExecutor {
             compact_scores: Vec::new(),
             compact_pos: Vec::new(),
             compact_idx: Vec::new(),
-            compact_grad: Vec::new(),
-            hinge_scratch: HingeScratch::default(),
+            ws: LossWorkspace::default(),
         }
     }
 
@@ -507,7 +441,6 @@ impl ModelExecutor for NativeExecutor {
         anyhow::ensure!(is_pos.len() == b && is_neg.len() == b, "mask buffer size");
 
         let arch = self.arch;
-        let loss = self.loss;
         self.scores.clear();
         self.scores.resize(b, 0.0);
         self.hidden.clear();
@@ -521,6 +454,7 @@ impl ModelExecutor for NativeExecutor {
         // chunked backward with the fixed-order f64 reduction.
         let Self {
             engine,
+            loss,
             params,
             scores,
             hidden,
@@ -529,8 +463,7 @@ impl ModelExecutor for NativeExecutor {
             compact_scores,
             compact_pos,
             compact_idx,
-            compact_grad,
-            hinge_scratch,
+            ws,
             ..
         } = self;
         let normalized = engine.fused_step(
@@ -554,17 +487,13 @@ impl ModelExecutor for NativeExecutor {
                         compact_idx.push(i as u32);
                     }
                 }
-                let norm = loss.norm(compact_pos);
-                let raw = loss.loss_and_grad_into(
-                    compact_scores,
-                    compact_pos,
-                    compact_grad,
-                    hinge_scratch,
-                );
+                let view = BatchView::new(&compact_scores[..], &compact_pos[..]);
+                let norm = loss.norm(view);
+                let raw = loss.loss_and_grad(view, ws);
                 // Scatter normalized score gradients to batch positions.
                 let inv = 1.0 / norm;
                 for (slot, &i) in compact_idx.iter().enumerate() {
-                    dscores[i as usize] = (compact_grad[slot] as f64 * inv) as f32;
+                    dscores[i as usize] = (ws.grad[slot] as f64 * inv) as f32;
                 }
                 raw / norm
             },
@@ -656,10 +585,11 @@ fn flat_from_tensors(shapes: &[Vec<i64>], tensors: &[HostTensor]) -> crate::Resu
 /// Native full-batch (loss, gradient) oracle over flat parameters —
 /// the [`crate::train::lbfgs::Objective`] the deterministic optimizers
 /// consume.  Built via [`NativeBackend::objective`]; executes through
-/// the same deterministic chunked [`Engine`] as the train step.
+/// the same deterministic chunked [`Engine`] and [`LossFn`] kernel as
+/// the train step.
 pub struct NativeObjective {
     arch: ModelArch,
-    loss: LossKind,
+    loss: Box<dyn LossFn>,
     engine: Engine,
     x: Vec<f32>,
     is_pos: Vec<f32>,
@@ -667,8 +597,7 @@ pub struct NativeObjective {
     scores: Vec<f32>,
     hidden: Vec<f32>,
     dscores: Vec<f32>,
-    grad_scores: Vec<f32>,
-    hinge_scratch: HingeScratch,
+    ws: LossWorkspace,
     /// Number of oracle evaluations performed (diagnostics).
     pub evals: usize,
 }
@@ -712,17 +641,13 @@ impl crate::train::lbfgs::Objective for NativeObjective {
     fn eval(&mut self, theta: &[f32]) -> crate::Result<(f64, Vec<f32>)> {
         self.forward(theta)?;
         self.evals += 1;
-        let norm = self.loss.norm(&self.is_pos);
-        let raw = self.loss.loss_and_grad_into(
-            &self.scores,
-            &self.is_pos,
-            &mut self.grad_scores,
-            &mut self.hinge_scratch,
-        );
+        let view = BatchView::new(&self.scores, &self.is_pos);
+        let norm = self.loss.norm(view);
+        let raw = self.loss.loss_and_grad(view, &mut self.ws);
         let inv = 1.0 / norm;
         self.dscores.clear();
         self.dscores
-            .extend(self.grad_scores.iter().map(|&g| (g as f64 * inv) as f32));
+            .extend(self.ws.grad.iter().map(|&g| (g as f64 * inv) as f32));
         let mut grad = vec![0.0_f32; self.arch.n_params()];
         self.engine.backward(
             &self.arch,
@@ -749,9 +674,12 @@ mod tests {
         NativeSpec {
             input_dim: dim,
             hidden,
-            margin: 1.0,
             threads,
         }
+    }
+
+    fn hinge() -> LossSpec {
+        LossSpec::hinge()
     }
 
     fn toy_batch(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
@@ -767,7 +695,7 @@ mod tests {
     #[test]
     fn linear_forward_matches_manual() {
         let backend = NativeBackend::new(spec(3, 0, 1));
-        let mut exec = backend.open("linear", "hinge", 2).unwrap();
+        let mut exec = backend.open("linear", &hinge(), 2).unwrap();
         exec.init(0).unwrap();
         let state = exec.state_to_host().unwrap();
         let w = &state[0].data;
@@ -783,7 +711,7 @@ mod tests {
     #[test]
     fn mlp_forward_matches_manual() {
         let backend = NativeBackend::new(spec(4, 3, 1));
-        let mut exec = backend.open("mlp", "hinge", 1).unwrap();
+        let mut exec = backend.open("mlp", &hinge(), 1).unwrap();
         exec.init(7).unwrap();
         let state = exec.state_to_host().unwrap();
         let (w1, b1, w2, b2) = (&state[0].data, &state[1].data, &state[2].data, state[3].data[0]);
@@ -800,8 +728,8 @@ mod tests {
     #[test]
     fn init_is_deterministic_and_seed_sensitive() {
         let backend = NativeBackend::new(spec(8, 4, 1));
-        let mut a = backend.open("mlp", "hinge", 2).unwrap();
-        let mut b = backend.open("mlp", "hinge", 2).unwrap();
+        let mut a = backend.open("mlp", &hinge(), 2).unwrap();
+        let mut b = backend.open("mlp", &hinge(), 2).unwrap();
         a.init(3).unwrap();
         b.init(3).unwrap();
         assert_eq!(a.state_to_host().unwrap(), b.state_to_host().unwrap());
@@ -812,8 +740,8 @@ mod tests {
     #[test]
     fn padding_rows_are_ignored() {
         let backend = NativeBackend::new(spec(4, 0, 1));
-        let mut full = backend.open("linear", "hinge", 4).unwrap();
-        let mut padded = backend.open("linear", "hinge", 6).unwrap();
+        let mut full = backend.open("linear", &hinge(), 4).unwrap();
+        let mut padded = backend.open("linear", &hinge(), 6).unwrap();
         full.init(1).unwrap();
         padded.init(1).unwrap();
         let (x, p, q) = toy_batch(4, 4, 9);
@@ -842,8 +770,8 @@ mod tests {
         let (x, p, q) = toy_batch(n, 16, 5);
         let serial = NativeBackend::new(spec(16, 8, 1));
         let parallel = NativeBackend::new(spec(16, 8, 4));
-        let mut a = serial.open("mlp", "hinge", n).unwrap();
-        let mut c = parallel.open("mlp", "hinge", n).unwrap();
+        let mut a = serial.open("mlp", &hinge(), n).unwrap();
+        let mut c = parallel.open("mlp", &hinge(), n).unwrap();
         a.init(2).unwrap();
         c.init(2).unwrap();
         for _ in 0..3 {
@@ -857,7 +785,7 @@ mod tests {
     #[test]
     fn checkpoint_roundtrip_restores_predictions() {
         let backend = NativeBackend::new(spec(8, 4, 1));
-        let mut exec = backend.open("mlp", "hinge", 16).unwrap();
+        let mut exec = backend.open("mlp", &hinge(), 16).unwrap();
         exec.init(11).unwrap();
         let (x, p, q) = toy_batch(16, 8, 13);
         exec.train_step(&x, &p, &q, 0.1).unwrap();
@@ -869,18 +797,72 @@ mod tests {
     }
 
     #[test]
-    fn unknown_loss_rejected() {
+    fn aucm_rejected_with_pjrt_pointer() {
         let backend = NativeBackend::new(spec(4, 0, 1));
-        assert!(backend.open("linear", "aucm", 4).is_err());
-        assert!(backend.open("linear", "hinge", 4).is_ok());
+        let err = backend.open("linear", &LossSpec::Aucm, 4).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err:#}");
+        assert!(backend.open("linear", &hinge(), 4).is_ok());
+    }
+
+    #[test]
+    fn every_native_spec_opens_and_trains() {
+        // The typed API's promise: every spec with a native kernel —
+        // including the weighted hinge, previously dead code — opens,
+        // initializes and takes a finite train step.
+        let backend = NativeBackend::new(spec(6, 4, 1));
+        let (x, p, q) = toy_batch(32, 6, 17);
+        for loss in [
+            LossSpec::hinge(),
+            LossSpec::square(),
+            LossSpec::logistic(),
+            LossSpec::linear_hinge(),
+            LossSpec::weighted_hinge(),
+            LossSpec::Hinge { margin: 2.0 },
+        ] {
+            let mut exec = backend.open("mlp", &loss, 32).unwrap();
+            exec.init(0).unwrap();
+            let l = exec.train_step(&x, &p, &q, 0.01).unwrap();
+            assert!(l.is_finite() && l >= 0.0, "{loss}: {l}");
+        }
     }
 
     #[test]
     fn eval_loss_matches_monitor_convention() {
         // 1 pos, 1 neg, equal scores, m = 1: one pair of loss 1.
         let backend = NativeBackend::new(NativeSpec::default());
-        let loss = backend.eval_loss("hinge", &[0.0, 0.0], &[1.0, 0.0]).unwrap();
+        let loss = backend
+            .eval_loss(&LossSpec::hinge(), &[0.0, 0.0], &[1.0, 0.0])
+            .unwrap();
         assert!((loss - 1.0).abs() < 1e-9);
+        // margins travel with the spec: m = 2 doubles the violation
+        let loss2 = backend
+            .eval_loss(&LossSpec::Hinge { margin: 2.0 }, &[0.0, 0.0], &[1.0, 0.0])
+            .unwrap();
+        assert!((loss2 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn whinge_step_matches_explicit_class_balanced_reference() {
+        // One linear whinge train step == hand-built step using the
+        // explicit class-balanced weighted kernel on the same scores.
+        use crate::losses::weighted::{class_balanced_weights, WeightedSquaredHinge};
+        let dim = 5;
+        let n = 24;
+        let (x, p, q) = toy_batch(n, dim, 23);
+        let backend = NativeBackend::new(spec(dim, 0, 1));
+        let mut exec = backend.open("linear", &LossSpec::weighted_hinge(), n).unwrap();
+        exec.init(3).unwrap();
+        let scores = exec.predict(&x, n).unwrap();
+        let wh = WeightedSquaredHinge::new(1.0);
+        let w = class_balanced_weights(&p);
+        let (raw, _) = wh.loss_and_grad(&scores, &p, &w);
+        // Same normalizer the executor uses (derived class-balanced masses).
+        let want = raw / LossFn::norm(&wh, BatchView::new(&scores, &p));
+        let got = exec.train_step(&x, &p, &q, 0.0).unwrap();
+        assert!(
+            (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+            "{got} vs {want}"
+        );
     }
 
     #[test]
@@ -902,7 +884,7 @@ mod tests {
         }
         let q: Vec<f32> = p.iter().map(|&v| 1.0 - v).collect();
         let backend = NativeBackend::new(spec(dim, 0, 1));
-        let mut exec = backend.open("linear", "hinge", n).unwrap();
+        let mut exec = backend.open("linear", &hinge(), n).unwrap();
         exec.init(0).unwrap();
         let first = exec.train_step(&x, &p, &q, 0.05).unwrap();
         let mut last = first;

@@ -219,16 +219,38 @@ impl std::fmt::Debug for Runtime {
     }
 }
 
+/// Ensure a loss spec's margin matches the margin the artifacts were
+/// compiled with (the AOT kernels bake it in at lowering time).  The
+/// comparison rounds the manifest's f64 margin to f32 — the spec's
+/// precision — so a matching non-dyadic margin (e.g. 0.3) is not
+/// rejected over f32→f64 representation error.
+pub(crate) fn check_artifact_margin(
+    runtime: &Runtime,
+    loss: &crate::losses::LossSpec,
+) -> crate::Result<()> {
+    if let Some(m) = loss.margin() {
+        let compiled = runtime.manifest().margin;
+        anyhow::ensure!(
+            m == compiled as f32,
+            "the artifacts were compiled at margin {compiled}; loss spec {loss} requests a \
+             different one (recompile the artifacts or drop the @margin override)"
+        );
+    }
+    Ok(())
+}
+
 /// Full-set loss via the `loss_eval_<loss>_n<N>` artifact.  Scores are
 /// padded (mask zero) up to the artifact's static size N; inputs longer
 /// than N are an error.  The returned value is normalized per pair (the
 /// L2 training losses normalize internally).
 pub fn loss_eval(
     runtime: &Runtime,
-    loss: &str,
+    spec: &crate::losses::LossSpec,
     scores: &[f32],
     is_pos: &[f32],
 ) -> crate::Result<f64> {
+    check_artifact_margin(runtime, spec)?;
+    let loss = spec.base_name();
     let art = runtime
         .manifest()
         .artifacts
@@ -285,13 +307,18 @@ impl Backend for PjrtBackend {
     fn open<'a>(
         &'a self,
         model: &str,
-        loss: &str,
+        loss: &crate::losses::LossSpec,
         batch: usize,
     ) -> crate::Result<Box<dyn ModelExecutor + 'a>> {
         Ok(Box::new(PjrtExecutor::new(&self.runtime, model, loss, batch)?))
     }
 
-    fn eval_loss(&self, loss: &str, scores: &[f32], is_pos: &[f32]) -> crate::Result<f64> {
+    fn eval_loss(
+        &self,
+        loss: &crate::losses::LossSpec,
+        scores: &[f32],
+        is_pos: &[f32],
+    ) -> crate::Result<f64> {
         loss_eval(&self.runtime, loss, scores, is_pos)
     }
 }
@@ -319,9 +346,11 @@ impl<'rt> PjrtExecutor<'rt> {
     pub fn new(
         runtime: &'rt Runtime,
         model: &str,
-        loss: &str,
+        spec: &crate::losses::LossSpec,
         batch: usize,
     ) -> crate::Result<Self> {
+        check_artifact_margin(runtime, spec)?;
+        let loss = spec.base_name();
         let manifest = runtime.manifest();
         let train_name = Manifest::train_name(model, loss, batch);
         let train_art = manifest.get(&train_name)?.clone();

@@ -1,6 +1,7 @@
 //! Cartesian expansion of the sweep configuration into jobs.
 
 use crate::config::SweepConfig;
+use crate::losses::LossSpec;
 use crate::util::json::Json;
 
 /// One training run to schedule.
@@ -8,7 +9,9 @@ use crate::util::json::Json;
 pub struct Job {
     pub dataset: String,
     pub imratio: f64,
-    pub loss: String,
+    /// Typed loss spec (serialized as its spec string, e.g. `"hinge"` or
+    /// `"hinge@margin=2"` — pre-redesign JSONL lines parse unchanged).
+    pub loss: LossSpec,
     pub batch: usize,
     pub lr: f64,
     pub seed: u32,
@@ -26,7 +29,7 @@ impl Job {
         Json::obj([
             ("dataset", Json::str(&self.dataset)),
             ("imratio", Json::num(self.imratio)),
-            ("loss", Json::str(&self.loss)),
+            ("loss", Json::str(self.loss.to_string())),
             ("batch", Json::num(self.batch as f64)),
             ("lr", Json::num(self.lr)),
             ("seed", Json::num(self.seed as f64)),
@@ -58,7 +61,8 @@ impl Job {
         Ok(Job {
             dataset: s("dataset")?,
             imratio: n("imratio")?,
-            loss: s("loss")?,
+            // spec strings are validated right here, at parse time
+            loss: s("loss")?.parse::<LossSpec>()?,
             batch: n("batch")? as usize,
             lr: n("lr")?,
             seed: n("seed")? as u32,
@@ -106,7 +110,7 @@ impl Job {
         (
             self.dataset.clone(),
             format!("{}", self.imratio),
-            self.loss.clone(),
+            self.loss.to_string(),
             self.seed,
         )
     }
@@ -142,7 +146,7 @@ pub fn expand(config: &SweepConfig) -> Vec<Job> {
                                 jobs.push(Job {
                                     dataset: dataset.clone(),
                                     imratio,
-                                    loss: loss.clone(),
+                                    loss: *loss,
                                     batch,
                                     lr,
                                     seed,
@@ -169,7 +173,7 @@ mod tests {
         SweepConfig {
             datasets: vec!["synth-cifar".into()],
             imratios: vec![0.1, 0.01],
-            losses: vec!["hinge".into(), "logistic".into()],
+            losses: vec![LossSpec::hinge(), LossSpec::logistic()],
             batch_sizes: vec![10, 100],
             seeds: vec![0, 1],
             ..Default::default()
@@ -195,7 +199,7 @@ mod tests {
         // spot-check presence of a specific combination
         assert!(jobs.iter().any(|j| j.dataset == "synth-cifar"
             && j.imratio == 0.01
-            && j.loss == "logistic"
+            && j.loss == LossSpec::logistic()
             && j.batch == 100
             && j.seed == 1));
     }
@@ -205,12 +209,12 @@ mod tests {
         let jobs = expand(&small_config());
         let hinge_lrs: std::collections::BTreeSet<_> = jobs
             .iter()
-            .filter(|j| j.loss == "hinge")
+            .filter(|j| j.loss == LossSpec::hinge())
             .map(|j| format!("{:.0e}", j.lr))
             .collect();
         let logistic_lrs: std::collections::BTreeSet<_> = jobs
             .iter()
-            .filter(|j| j.loss == "logistic")
+            .filter(|j| j.loss == LossSpec::logistic())
             .map(|j| format!("{:.0e}", j.lr))
             .collect();
         assert!(logistic_lrs.contains("1e0"));
@@ -224,7 +228,7 @@ mod tests {
         let c = SweepConfig {
             datasets: vec!["a".into(), "b".into()],
             imratios: vec![0.1, 0.01],
-            losses: vec!["hinge".into(), "logistic".into()],
+            losses: vec![LossSpec::hinge(), LossSpec::logistic()],
             batch_sizes: vec![10, 1000],
             seeds: vec![0, 1],
             ..Default::default()
@@ -233,7 +237,7 @@ mod tests {
         let n_cells = 2 * 2 * 2;
         let first: std::collections::BTreeSet<_> = jobs[..n_cells]
             .iter()
-            .map(|j| (j.dataset.clone(), format!("{}", j.imratio), j.loss.clone()))
+            .map(|j| (j.dataset.clone(), format!("{}", j.imratio), j.loss.to_string()))
             .collect();
         assert_eq!(first.len(), n_cells, "first block must cover all cells");
         // and both batch sizes appear before the second seed
@@ -248,7 +252,7 @@ mod tests {
         let mut j = Job {
             dataset: "d".into(),
             imratio: 0.01,
-            loss: "hinge".into(),
+            loss: LossSpec::hinge(),
             batch: 500,
             lr: 0.0316,
             seed: 3,
@@ -270,7 +274,7 @@ mod tests {
         let a = Job {
             dataset: "d".into(),
             imratio: 0.01,
-            loss: "hinge".into(),
+            loss: LossSpec::hinge(),
             batch: 50,
             lr: 0.01,
             seed: 3,
@@ -280,7 +284,7 @@ mod tests {
             sampling: "preserve".into(),
         };
         let mut b = a.clone();
-        b.loss = "logistic".into();
+        b.loss = LossSpec::logistic();
         b.batch = 1000;
         b.lr = 1.0;
         b.sampling = "rebalance:0.5".into();

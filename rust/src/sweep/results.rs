@@ -131,7 +131,7 @@ mod tests {
             job: Job {
                 dataset: "synth-cifar".into(),
                 imratio: 0.1,
-                loss: "hinge".into(),
+                loss: "hinge".parse().unwrap(),
                 batch: 50,
                 lr: 0.01,
                 seed,

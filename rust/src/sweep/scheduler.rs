@@ -182,7 +182,7 @@ mod tests {
         Job {
             dataset: "toy".into(),
             imratio: 0.2,
-            loss: "hinge".into(),
+            loss: "hinge".parse().unwrap(),
             batch: 16,
             lr: 0.01,
             seed,
@@ -197,7 +197,6 @@ mod tests {
         BackendSpec::Native(NativeSpec {
             input_dim: dim,
             hidden: 4,
-            margin: 1.0,
             threads: 1,
         })
     }

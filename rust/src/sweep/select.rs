@@ -63,7 +63,7 @@ pub fn select_per_seed(results: &[RunResult]) -> Vec<SeedSelection> {
         let key = (
             r.job.dataset.clone(),
             -(r.job.imratio * 1e9) as i64,
-            r.job.loss.clone(),
+            r.job.loss.to_string(),
             r.job.seed,
         );
         let replace = match best.get(&key) {
@@ -78,7 +78,7 @@ pub fn select_per_seed(results: &[RunResult]) -> Vec<SeedSelection> {
         .map(|r| SeedSelection {
             dataset: r.job.dataset.clone(),
             imratio: r.job.imratio,
-            loss: r.job.loss.clone(),
+            loss: r.job.loss.to_string(),
             seed: r.job.seed,
             batch: r.job.batch,
             lr: r.job.lr,
@@ -136,7 +136,7 @@ mod tests {
             job: Job {
                 dataset: "d".into(),
                 imratio,
-                loss: loss.into(),
+                loss: loss.parse().unwrap(),
                 batch,
                 lr,
                 seed,

@@ -109,10 +109,12 @@ impl<'rt> FullBatchObjective<'rt> {
     pub fn new(
         runtime: &'rt Runtime,
         model: &str,
-        loss: &str,
+        spec: &crate::losses::LossSpec,
         rows: &[f32],
         labels: &[f32],
     ) -> crate::Result<Self> {
+        crate::runtime::pjrt::check_artifact_margin(runtime, spec)?;
+        let loss = spec.base_name();
         let art = runtime
             .manifest()
             .artifacts
@@ -157,8 +159,13 @@ impl<'rt> FullBatchObjective<'rt> {
     }
 
     /// Initial parameters from the matching init artifact, flattened.
-    pub fn init_params(&self, model: &str, loss: &str, seed: u32) -> crate::Result<Vec<f32>> {
-        let init_name = crate::runtime::Manifest::init_name(model, loss);
+    pub fn init_params(
+        &self,
+        model: &str,
+        spec: &crate::losses::LossSpec,
+        seed: u32,
+    ) -> crate::Result<Vec<f32>> {
+        let init_name = crate::runtime::Manifest::init_name(model, spec.base_name());
         let outs = self.runtime.execute(&init_name, &[Literal::scalar(seed)])?;
         // init returns the full state (params + optimizer slots); the
         // params are the leading tensors whose shapes match ours.

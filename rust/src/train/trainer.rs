@@ -25,6 +25,7 @@
 //! speed knob, never a result knob (`tests/proptest_engine.rs`).
 
 use crate::data::{BatchPlan, Dataset, EpochSampler, Rng, SamplingMode};
+use crate::losses::LossSpec;
 use crate::metrics::auc;
 use crate::runtime::{Backend, HostTensor, ModelExecutor};
 
@@ -107,7 +108,7 @@ impl<'b> Trainer<'b> {
     pub fn new(
         backend: &'b dyn Backend,
         model: &str,
-        loss: &str,
+        loss: &LossSpec,
         batch: usize,
     ) -> crate::Result<Self> {
         let exec = backend.open(model, loss, batch)?;
@@ -338,6 +339,10 @@ mod tests {
     use super::*;
     use crate::runtime::{BackendSpec, NativeSpec};
 
+    fn hinge() -> LossSpec {
+        LossSpec::hinge()
+    }
+
     fn toy_dataset(n: usize, dim: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);
         let mut x = Vec::with_capacity(n * dim);
@@ -357,7 +362,6 @@ mod tests {
         BackendSpec::Native(NativeSpec {
             input_dim: dim,
             hidden: 8,
-            margin: 1.0,
             threads: 1,
         })
         .connect()
@@ -367,7 +371,7 @@ mod tests {
     #[test]
     fn epoch_counts_batches_and_examples() {
         let backend = native_backend(6);
-        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 8).unwrap();
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", &hinge(), 8).unwrap();
         trainer.init(0).unwrap();
         let data = toy_dataset(25, 6, 1);
         let idx: Vec<u32> = (0..25).collect();
@@ -382,7 +386,7 @@ mod tests {
     #[test]
     fn row_length_mismatch_is_error() {
         let backend = native_backend(6);
-        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 8).unwrap();
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", &hinge(), 8).unwrap();
         trainer.init(0).unwrap();
         let data = toy_dataset(10, 4, 3);
         let idx: Vec<u32> = (0..10).collect();
@@ -398,7 +402,7 @@ mod tests {
     #[test]
     fn fit_records_epochs_and_val_auc() {
         let backend = native_backend(6);
-        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 16).unwrap();
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", &hinge(), 16).unwrap();
         let data = toy_dataset(80, 6, 5);
         let idx: Vec<u32> = (0..80).collect();
         let history = trainer
@@ -411,7 +415,7 @@ mod tests {
     #[test]
     fn fit_stream_tracks_best_checkpoint() {
         let backend = native_backend(6);
-        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 16).unwrap();
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", &hinge(), 16).unwrap();
         let data = toy_dataset(120, 6, 7);
         let idx: Vec<u32> = (0..120).collect();
         let cfg = FitConfig {
@@ -438,7 +442,7 @@ mod tests {
     #[test]
     fn fit_stream_early_stops_on_plateau() {
         let backend = native_backend(6);
-        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 16).unwrap();
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", &hinge(), 16).unwrap();
         let data = toy_dataset(80, 6, 9);
         let idx: Vec<u32> = (0..80).collect();
         // lr = 0: the model never changes, so validation AUC never
@@ -468,7 +472,7 @@ mod tests {
             ..Default::default()
         };
         let run = || {
-            let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 16).unwrap();
+            let mut trainer = Trainer::new(backend.as_ref(), "mlp", &hinge(), 16).unwrap();
             trainer
                 .fit_stream(&data, &idx, &idx, &cfg, &mut Rng::new(12))
                 .unwrap()
@@ -484,7 +488,7 @@ mod tests {
     #[test]
     fn predict_order_matches_indices() {
         let backend = native_backend(6);
-        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 8).unwrap();
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", &hinge(), 8).unwrap();
         trainer.init(1).unwrap();
         let data = toy_dataset(30, 6, 7);
         let all: Vec<u32> = (0..30).collect();

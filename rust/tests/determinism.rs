@@ -8,6 +8,7 @@
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::cv;
 use allpairs::data::{features, FeatureSpec, Rng, SamplingMode, Split};
+use allpairs::losses::LossSpec;
 use allpairs::runtime::{BackendSpec, NativeSpec};
 use allpairs::sweep::results::{load_jsonl, RunResult};
 use allpairs::train::{FitConfig, Trainer};
@@ -16,7 +17,7 @@ fn micro_config() -> SweepConfig {
     SweepConfig {
         datasets: vec!["synth-pets".into()],
         imratios: vec![0.1],
-        losses: vec!["hinge".into()],
+        losses: vec![LossSpec::hinge()],
         batch_sizes: vec![50, 100],
         sampling_modes: vec!["preserve".into(), "rebalance:0.5".into()],
         seeds: vec![0],
@@ -30,7 +31,6 @@ fn micro_config() -> SweepConfig {
         backend: BackendSpec::Native(NativeSpec {
             input_dim: 16 * 16 * 3,
             hidden: 8,
-            margin: 1.0,
             threads: 1,
         }),
         ..Default::default()
@@ -88,7 +88,6 @@ fn epoch_history_is_identical_across_runs() {
     let backend = BackendSpec::Native(NativeSpec {
         input_dim: spec.dim,
         hidden: 16,
-        margin: 1.0,
         threads: 1,
     })
     .connect()
@@ -101,7 +100,7 @@ fn epoch_history_is_identical_across_runs() {
         seed: 3,
     };
     let run = || {
-        let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 64).unwrap();
+        let mut trainer = Trainer::new(backend.as_ref(), "mlp", &LossSpec::hinge(), 64).unwrap();
         trainer
             .fit_stream(
                 &train,

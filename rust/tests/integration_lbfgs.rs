@@ -2,6 +2,7 @@
 //! build) and the PJRT `grad_*` artifacts (feature `pjrt` + artifacts).
 
 use allpairs::data::Rng;
+use allpairs::losses::LossSpec;
 use allpairs::metrics::auc;
 use allpairs::runtime::{NativeBackend, NativeSpec};
 use allpairs::train::lbfgs::{minimize, LbfgsConfig, Objective};
@@ -26,7 +27,6 @@ fn native_backend() -> NativeBackend {
     NativeBackend::new(NativeSpec {
         input_dim: 64,
         hidden: 16,
-        margin: 1.0,
         threads: 1,
     })
 }
@@ -35,7 +35,7 @@ fn native_backend() -> NativeBackend {
 fn lbfgs_descends_and_stays_monotone() {
     let backend = native_backend();
     let (rows, labels) = feature_batch(600, 1);
-    let mut objective = backend.objective("mlp", "hinge", &rows, &labels).unwrap();
+    let mut objective = backend.objective("mlp", &LossSpec::hinge(), &rows, &labels).unwrap();
     let theta0 = objective.init_params(0);
     let (l0, _) = objective.eval(&theta0).unwrap();
     let config = LbfgsConfig {
@@ -68,7 +68,7 @@ fn lbfgs_matches_gd_budget_and_descends_further() {
     // momentum-free full-batch gradient descent with an untuned step.
     let backend = native_backend();
     let (rows, labels) = feature_batch(600, 2);
-    let mut objective = backend.objective("mlp", "hinge", &rows, &labels).unwrap();
+    let mut objective = backend.objective("mlp", &LossSpec::hinge(), &rows, &labels).unwrap();
     let theta0 = objective.init_params(1);
 
     let config = LbfgsConfig {
@@ -101,7 +101,7 @@ fn lbfgs_matches_gd_budget_and_descends_further() {
 fn lbfgs_solution_ranks_well() {
     let backend = native_backend();
     let (rows, labels) = feature_batch(500, 3);
-    let mut objective = backend.objective("mlp", "hinge", &rows, &labels).unwrap();
+    let mut objective = backend.objective("mlp", &LossSpec::hinge(), &rows, &labels).unwrap();
     let theta0 = objective.init_params(2);
     let (theta, _) = minimize(
         &mut objective,
@@ -151,8 +151,8 @@ mod pjrt {
         let runtime = require_runtime!();
         let (rows, labels) = feature_batch(600, 1);
         let mut objective =
-            FullBatchObjective::new(&runtime, "mlp", "hinge", &rows, &labels).unwrap();
-        let theta0 = objective.init_params("mlp", "hinge", 0).unwrap();
+            FullBatchObjective::new(&runtime, "mlp", &LossSpec::hinge(), &rows, &labels).unwrap();
+        let theta0 = objective.init_params("mlp", &LossSpec::hinge(), 0).unwrap();
         let (l0, _) = objective.eval(&theta0).unwrap();
         let config = LbfgsConfig {
             max_iters: 15,

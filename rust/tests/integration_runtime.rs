@@ -7,6 +7,7 @@
 //! the same batch.
 
 use allpairs::data::{Dataset, Rng};
+use allpairs::losses::LossSpec;
 use allpairs::runtime::{Backend, BackendSpec, NativeSpec};
 use allpairs::train::Trainer;
 
@@ -14,11 +15,14 @@ fn native_backend() -> Box<dyn Backend> {
     BackendSpec::Native(NativeSpec {
         input_dim: 64,
         hidden: 16,
-        margin: 1.0,
         threads: 1,
     })
     .connect()
     .unwrap()
+}
+
+fn hinge() -> LossSpec {
+    LossSpec::hinge()
 }
 
 fn feature_dataset(n: usize, seed: u64) -> Dataset {
@@ -39,8 +43,8 @@ fn feature_dataset(n: usize, seed: u64) -> Dataset {
 #[test]
 fn init_is_deterministic_and_seed_sensitive() {
     let backend = native_backend();
-    let mut a = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
-    let mut b = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
+    let mut a = Trainer::new(backend.as_ref(), "mlp", &hinge(), 100).unwrap();
+    let mut b = Trainer::new(backend.as_ref(), "mlp", &hinge(), 100).unwrap();
     a.init(3).unwrap();
     b.init(3).unwrap();
     let cat = |t: &Trainer| -> Vec<f32> {
@@ -58,7 +62,7 @@ fn init_is_deterministic_and_seed_sensitive() {
 #[test]
 fn single_train_step_runs_and_returns_finite_loss() {
     let backend = native_backend();
-    let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
+    let mut trainer = Trainer::new(backend.as_ref(), "mlp", &hinge(), 100).unwrap();
     trainer.init(0).unwrap();
     let data = feature_dataset(100, 1);
     let idx: Vec<u32> = (0..100).collect();
@@ -73,7 +77,7 @@ fn single_train_step_runs_and_returns_finite_loss() {
 #[test]
 fn training_reduces_loss_and_improves_auc() {
     let backend = native_backend();
-    let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
+    let mut trainer = Trainer::new(backend.as_ref(), "mlp", &hinge(), 100).unwrap();
     let data = feature_dataset(400, 3);
     let idx: Vec<u32> = (0..400).collect();
     let mut rng = Rng::new(4);
@@ -89,7 +93,7 @@ fn training_reduces_loss_and_improves_auc() {
 #[test]
 fn predict_is_chunking_invariant() {
     let backend = native_backend();
-    let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
+    let mut trainer = Trainer::new(backend.as_ref(), "mlp", &hinge(), 100).unwrap();
     trainer.init(1).unwrap();
     let data = feature_dataset(300, 5);
     let all: Vec<u32> = (0..300).collect();
@@ -105,7 +109,7 @@ fn predict_is_chunking_invariant() {
 #[test]
 fn checkpoint_roundtrip_preserves_predictions() {
     let backend = native_backend();
-    let mut trainer = Trainer::new(backend.as_ref(), "mlp", "hinge", 100).unwrap();
+    let mut trainer = Trainer::new(backend.as_ref(), "mlp", &hinge(), 100).unwrap();
     trainer.init(7).unwrap();
     let data = feature_dataset(120, 8);
     let idx: Vec<u32> = (0..120).collect();
@@ -139,7 +143,7 @@ fn backend_monitor_matches_direct_algorithm2() {
         .collect();
     let native = monitor::monitor_native(&scores, &is_pos, 1.0);
     let via_backend =
-        monitor::monitor_backend(backend.as_ref(), "hinge", &scores, &is_pos).unwrap();
+        monitor::monitor_backend(backend.as_ref(), &hinge(), &scores, &is_pos).unwrap();
     let rel = (native - via_backend).abs() / native.abs().max(1e-9);
     assert!(rel < 1e-9, "direct {native} vs backend {via_backend}");
 }
@@ -172,7 +176,7 @@ mod pjrt {
     #[test]
     fn pjrt_training_reduces_loss_and_improves_auc() {
         let backend = require_backend!();
-        let mut trainer = Trainer::new(&backend, "mlp", "hinge", 100).unwrap();
+        let mut trainer = Trainer::new(&backend, "mlp", &hinge(), 100).unwrap();
         let data = feature_dataset(400, 3);
         let idx: Vec<u32> = (0..400).collect();
         let mut rng = Rng::new(4);
@@ -200,7 +204,7 @@ mod pjrt {
         // eval_loss is pair-normalized (the L2 loss wrappers normalize
         // internally), matching monitor_native's convention.
         let pjrt = allpairs::coordinator::monitor::monitor_backend(
-            &backend, "hinge", &scores, &is_pos,
+            &backend, &hinge(), &scores, &is_pos,
         )
         .unwrap();
         let rel = (native - pjrt).abs() / native.abs().max(1e-9);

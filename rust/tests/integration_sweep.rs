@@ -8,6 +8,7 @@ use std::sync::Arc;
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::cv;
 use allpairs::data::synth::{generate, SynthSpec, SYNTH_DATASETS};
+use allpairs::losses::LossSpec;
 use allpairs::runtime::{Backend, BackendSpec, NativeSpec};
 use allpairs::sweep::runner::{run_job, JobData};
 use allpairs::sweep::scheduler::run_sweep;
@@ -19,7 +20,6 @@ fn native_spec() -> BackendSpec {
     BackendSpec::Native(NativeSpec {
         input_dim: 16 * 16 * 3,
         hidden: 8,
-        margin: 1.0,
         threads: 1,
     })
 }
@@ -41,7 +41,7 @@ fn tiny_job(loss: &str, batch: usize, seed: u32) -> Job {
     Job {
         dataset: "synth-pets".into(),
         imratio: 0.2,
-        loss: loss.into(),
+        loss: loss.parse().unwrap(),
         batch,
         lr: 0.01,
         seed,
@@ -139,6 +139,58 @@ fn multiworker_sweep_selection_and_persistence() {
 }
 
 #[test]
+fn whinge_job_runs_end_to_end_through_the_sweep() {
+    // The weighted hinge is a schedulable scenario, not dead code: a
+    // whinge job runs the full imbalance → split → fit → select path.
+    let backend = native_spec().connect().unwrap();
+    let data = tiny_data();
+    let result = run_job(backend.as_ref(), &tiny_job("whinge", 50, 0), &data).unwrap();
+    assert!(!result.diverged);
+    assert!(result.best_val_auc.is_some());
+    assert!(result.test_auc.is_some());
+}
+
+#[test]
+fn pre_redesign_jsonl_fixture_still_parses() {
+    // Verbatim lines captured from pre-LossSpec writers.  The first is
+    // a PR-3-era line (streaming fields present); the second predates
+    // the streaming pipeline (no patience/sampling keys).  Both must
+    // keep parsing, with the loss string landing in a typed spec and
+    // the job id unchanged.
+    let fixture = concat!(
+        r#"{"best_epoch":1,"best_val_auc":0.9125,"diverged":false,"final_train_loss":0.412,"#,
+        r#""achieved_imratio":0.1,"job":{"batch":50,"dataset":"synth-cifar","epochs":2,"#,
+        r#""imratio":0.1,"loss":"hinge","lr":0.01,"model":"resnet","patience":null,"#,
+        r#""sampling":"preserve","seed":0},"seconds":1.5,"test_auc":0.88}"#,
+        "
+",
+        r#"{"best_epoch":0,"best_val_auc":0.8,"diverged":false,"final_train_loss":0.6,"#,
+        r#""achieved_imratio":0.01,"job":{"batch":100,"dataset":"synth-pets","epochs":3,"#,
+        r#""imratio":0.01,"loss":"logistic","lr":0.1,"model":"resnet","seed":2},"#,
+        r#""seconds":2.0,"test_auc":0.79}"#,
+        "
+"
+    );
+    let path = std::env::temp_dir().join("allpairs_pre_redesign.jsonl");
+    std::fs::write(&path, fixture).unwrap();
+    let loaded = results::load_jsonl(&path).unwrap();
+    assert_eq!(loaded.len(), 2);
+    assert_eq!(loaded[0].job.loss, LossSpec::hinge());
+    assert_eq!(loaded[0].job.id(), "synth-cifar_im0.1_hinge_bs50_lr1e-2_s0");
+    assert_eq!(loaded[1].job.loss, LossSpec::logistic());
+    assert_eq!(loaded[1].job.sampling, "preserve"); // pre-streaming default
+    assert_eq!(loaded[1].job.patience, None);
+    // a bad loss in a job line is rejected at parse time, naming the specs
+    std::fs::write(
+        &path,
+        r#"{"job":{"batch":50,"dataset":"d","epochs":2,"imratio":0.1,"loss":"typo","lr":0.01,"model":"resnet","seed":0},"final_train_loss":0.1,"diverged":false,"seconds":1.0,"achieved_imratio":0.1}"#,
+    )
+    .unwrap();
+    let err = results::load_jsonl(&path).unwrap_err().to_string();
+    assert!(err.contains("hinge"), "{err}");
+}
+
+#[test]
 fn cv_summarize_writes_reports() {
     let backend = native_spec().connect().unwrap();
     let data = tiny_data();
@@ -163,7 +215,7 @@ fn cv_run_executes_a_micro_sweep_end_to_end() {
     let cfg = SweepConfig {
         datasets: vec!["synth-pets".into()],
         imratios: vec![0.2],
-        losses: vec!["hinge".into()],
+        losses: vec![LossSpec::hinge()],
         batch_sizes: vec![50],
         seeds: vec![0],
         epochs: 1,
@@ -190,12 +242,12 @@ fn native_backend_opens_every_scheduled_combination() {
     let jobs = allpairs::sweep::grid::expand(&cfg);
     let mut checked = std::collections::BTreeSet::new();
     for job in jobs {
-        let key = (job.model.clone(), job.loss.clone(), job.batch);
+        let key = (job.model.clone(), job.loss.to_string(), job.batch);
         if !checked.insert(key) {
             continue;
         }
         let opened = backend.open(&job.model, &job.loss, job.batch);
-        if job.loss == "aucm" {
+        if job.loss == LossSpec::aucm() {
             let msg = opened.err().unwrap().to_string();
             assert!(msg.contains("aucm"), "unhelpful error: {msg}");
         } else {
@@ -219,13 +271,15 @@ fn scheduled_grid_has_matching_artifacts_when_present() {
     let cfg = SweepConfig::default();
     let mut checked = std::collections::BTreeSet::new();
     for job in allpairs::sweep::grid::expand(&cfg) {
-        let key = (job.model.clone(), job.loss.clone(), job.batch);
+        let key = (job.model.clone(), job.loss.to_string(), job.batch);
         if !checked.insert(key) {
             continue;
         }
         manifest
             .get(&allpairs::runtime::Manifest::train_name(
-                &job.model, &job.loss, job.batch,
+                &job.model,
+                job.loss.base_name(),
+                job.batch,
             ))
             .unwrap_or_else(|e| panic!("missing artifact for {}: {e}", job.id()));
     }

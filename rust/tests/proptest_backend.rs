@@ -6,7 +6,7 @@
 
 use allpairs::data::Rng;
 use allpairs::losses::functional::SquaredHinge;
-use allpairs::losses::PairwiseLoss;
+use allpairs::losses::{LossSpec, PairwiseLoss};
 use allpairs::runtime::{Backend, ModelExecutor, NativeBackend, NativeSpec};
 
 const CASES: usize = 40;
@@ -117,10 +117,9 @@ fn prop_native_train_step_equals_functional_plus_manual_sgd() {
         let backend = NativeBackend::new(NativeSpec {
             input_dim: case.dim,
             hidden: 0, // linear: the reference is exactly re-derivable
-            margin: 1.0,
             threads: 1,
         });
-        let mut exec = backend.open("linear", "hinge", case.batch).unwrap();
+        let mut exec = backend.open("linear", &LossSpec::hinge(), case.batch).unwrap();
         exec.init(case_idx as u32).unwrap();
 
         // two steps: the second exercises non-zero momentum state
@@ -166,10 +165,9 @@ fn prop_native_loss_matches_functional_loss_value() {
         let backend = NativeBackend::new(NativeSpec {
             input_dim: case.dim,
             hidden: 4,
-            margin: 1.0,
             threads: 1,
         });
-        let mut exec = backend.open("mlp", "hinge", case.batch).unwrap();
+        let mut exec = backend.open("mlp", &LossSpec::hinge(), case.batch).unwrap();
         exec.init(0).unwrap();
         let scores = exec.predict(&case.x, case.batch).unwrap();
         let mut c_scores = Vec::new();
@@ -205,14 +203,13 @@ fn prop_predict_is_deterministic_across_thread_counts() {
             NativeBackend::new(NativeSpec {
                 input_dim: dim,
                 hidden: 8,
-                margin: 1.0,
                 threads,
             })
         };
         let b1 = mk(1);
         let b4 = mk(4);
-        let mut e1 = b1.open("mlp", "hinge", 8).unwrap();
-        let mut e4 = b4.open("mlp", "hinge", 8).unwrap();
+        let mut e1 = b1.open("mlp", &LossSpec::hinge(), 8).unwrap();
+        let mut e4 = b4.open("mlp", &LossSpec::hinge(), 8).unwrap();
         e1.init(5).unwrap();
         e4.init(5).unwrap();
         // forward is row-independent: bit-identical across thread counts

@@ -7,6 +7,7 @@
 //! is unavailable offline).
 
 use allpairs::data::Rng;
+use allpairs::losses::LossSpec;
 use allpairs::runtime::{NativeBackend, NativeSpec};
 use allpairs::train::lbfgs::Objective;
 
@@ -21,7 +22,7 @@ struct Case {
     dim: usize,
     hidden: usize,
     model: &'static str,
-    loss: &'static str,
+    loss: LossSpec,
     x: Vec<f32>,
     is_pos: Vec<f32>,
     is_neg: Vec<f32>,
@@ -34,7 +35,15 @@ fn gen_case(n: usize, case_idx: usize, rng: &mut Rng) -> Case {
     } else {
         ("mlp", 2 + rng.below(6))
     };
-    let loss = ["hinge", "square", "logistic"][case_idx % 3];
+    // every native kernel, the weighted hinge included, must be
+    // bit-identical across thread counts
+    let loss = [
+        LossSpec::hinge(),
+        LossSpec::square(),
+        LossSpec::logistic(),
+        LossSpec::weighted_hinge(),
+        LossSpec::linear_hinge(),
+    ][case_idx % 5];
     let pad_frac = [0.0, 0.15][rng.below(2)];
     let mut x = Vec::with_capacity(n * dim);
     let mut is_pos = Vec::with_capacity(n);
@@ -69,7 +78,6 @@ fn backend(case: &Case, threads: usize) -> NativeBackend {
     NativeBackend::new(NativeSpec {
         input_dim: case.dim,
         hidden: case.hidden,
-        margin: 1.0,
         threads,
     })
 }
@@ -85,7 +93,7 @@ fn prop_train_step_is_bit_identical_across_thread_counts() {
             let mut outputs = Vec::new();
             for &threads in &THREAD_COUNTS {
                 let b = backend(&case, threads);
-                let mut exec = b.open(case.model, case.loss, case.n).unwrap();
+                let mut exec = b.open(case.model, &case.loss, case.n).unwrap();
                 exec.init(round as u32).unwrap();
                 let mut losses = Vec::new();
                 for _ in 0..2 {
@@ -117,13 +125,13 @@ fn prop_objective_gradient_is_bit_identical_across_thread_counts() {
     for (case_idx, &n) in [100usize, 257, 600, 1023].iter().enumerate() {
         let case = gen_case(n, case_idx, &mut rng);
         let theta = backend(&case, 1)
-            .objective(case.model, case.loss, &case.x, &case.is_pos)
+            .objective(case.model, &case.loss, &case.x, &case.is_pos)
             .unwrap()
             .init_params(7);
         let mut outputs = Vec::new();
         for &threads in &THREAD_COUNTS {
             let b = backend(&case, threads);
-            let mut obj = b.objective(case.model, case.loss, &case.x, &case.is_pos).unwrap();
+            let mut obj = b.objective(case.model, &case.loss, &case.x, &case.is_pos).unwrap();
             outputs.push(obj.eval(&theta).unwrap());
         }
         let (ref_loss, ref_grad) = &outputs[0];

@@ -7,10 +7,14 @@
 //! ties, extreme magnitudes).
 
 use allpairs::data::Rng;
-use allpairs::losses::functional::{HingeScratch, Square, SquaredHinge};
+use allpairs::losses::functional::{Square, SquaredHinge};
 use allpairs::losses::logistic::Logistic;
 use allpairs::losses::naive::{NaiveSquare, NaiveSquaredHinge};
-use allpairs::losses::PairwiseLoss;
+use allpairs::losses::weighted::WeightedSquaredHinge;
+// NOTE: `LossFn` is imported per-test below — importing it at file scope
+// alongside `PairwiseLoss` would make `loss_and_grad` method calls on the
+// functional losses (which implement both traits) ambiguous.
+use allpairs::losses::{BatchView, LossSpec, LossWorkspace, PairwiseLoss};
 use allpairs::metrics::auc::auc;
 
 const CASES: usize = 120;
@@ -168,17 +172,142 @@ fn prop_gradient_descent_direction_reduces_loss() {
 }
 
 #[test]
-fn prop_scratch_reuse_equals_fresh() {
+fn prop_workspace_reuse_equals_fresh() {
+    // One LossWorkspace reused across every case must reproduce the
+    // allocating Figure-2 path bit for bit — for each LossFn kernel.
+    use allpairs::losses::LossFn;
     let mut gen = CaseGen::new(7);
-    let hinge = SquaredHinge::new(1.0);
-    let mut grad = Vec::new();
-    let mut scratch = HingeScratch::default();
+    let mut ws = LossWorkspace::default();
     for _ in 0..CASES {
-        let (scores, is_pos, _) = gen.next_case();
-        let with_scratch = hinge.loss_and_grad_with(&scores, &is_pos, &mut grad, &mut scratch);
-        let (fresh, fresh_grad) = hinge.loss_and_grad(&scores, &is_pos);
-        assert_eq!(with_scratch, fresh);
-        assert_eq!(grad, fresh_grad);
+        let (scores, is_pos, margin) = gen.next_case();
+        for spec in [
+            LossSpec::Hinge { margin },
+            LossSpec::Square { margin },
+            LossSpec::Logistic,
+            LossSpec::LinearHinge { margin },
+        ] {
+            let kernel = spec.build().unwrap();
+            let reused = kernel.loss_and_grad(BatchView::new(&scores, &is_pos), &mut ws);
+            let fresh = kernel.loss_and_grad(
+                BatchView::new(&scores, &is_pos),
+                &mut LossWorkspace::default(),
+            );
+            assert_eq!(reused, fresh, "{spec}");
+            assert_eq!(
+                kernel.loss_only(BatchView::new(&scores, &is_pos), &mut ws),
+                reused,
+                "{spec}: loss_only"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_loss_spec_display_from_str_roundtrip() {
+    // Property over all variants x a wide margin set: Display output
+    // parses back to the identical spec, and the bare names hit the
+    // default margin.
+    let margins = [
+        0.0_f32, 1e-3, 0.1, 0.25, 0.5, 1.0, 1.5, 2.0, 3.25, 10.0, 123.456, 1e6,
+    ];
+    let mk: [fn(f32) -> LossSpec; 4] = [
+        |margin| LossSpec::Hinge { margin },
+        |margin| LossSpec::Square { margin },
+        |margin| LossSpec::LinearHinge { margin },
+        |margin| LossSpec::WeightedHinge { margin },
+    ];
+    for make in mk {
+        for &m in &margins {
+            let spec = make(m);
+            let text = spec.to_string();
+            let back: LossSpec = text.parse().unwrap_or_else(|e| panic!("{text}: {e}"));
+            assert_eq!(back, spec, "{text}");
+        }
+    }
+    for spec in [LossSpec::Logistic, LossSpec::Aucm] {
+        assert_eq!(spec.to_string().parse::<LossSpec>().unwrap(), spec);
+    }
+    // and randomized f32 margins round-trip through the shortest-float
+    // Display formatting
+    let mut rng = Rng::new(0x5bec);
+    for _ in 0..200 {
+        let m = (rng.uniform() * 8.0) as f32;
+        let spec = LossSpec::Hinge { margin: m };
+        assert_eq!(spec.to_string().parse::<LossSpec>().unwrap(), spec, "m={m}");
+    }
+}
+
+#[test]
+fn prop_weighted_hinge_matches_naive_weighted_reference() {
+    // Differential property for the weighted kernel: loss AND gradient
+    // against the O(n²) weighted double sum, under random weights,
+    // margins and imbalance (previously only the loss value was
+    // cross-checked).
+    use allpairs::losses::LossFn;
+    let mut gen = CaseGen::new(11);
+    let mut rng = Rng::new(0x3e16);
+    let mut ws = LossWorkspace::default();
+    for case in 0..CASES {
+        let (scores, is_pos, margin) = gen.next_case();
+        if scores.len() > 400 {
+            continue; // naive is quadratic; keep the oracle cheap
+        }
+        let weights: Vec<f32> = scores
+            .iter()
+            .map(|_| {
+                // mixture: mostly O(1) weights, some zeros, some large
+                match rng.below(10) {
+                    0 => 0.0,
+                    1 => (rng.uniform() * 20.0) as f32,
+                    _ => (rng.uniform() * 2.0) as f32,
+                }
+            })
+            .collect();
+        let wh = WeightedSquaredHinge::new(margin);
+        let (ln, gn) = wh.loss_and_grad_naive(&scores, &is_pos, &weights);
+        let lf = LossFn::loss_and_grad(
+            &wh,
+            BatchView::weighted(&scores, &is_pos, &weights),
+            &mut ws,
+        );
+        assert_rel(ln, lf, 1e-6, &format!("case {case} weighted loss"));
+        let gscale = gn.iter().fold(1.0_f32, |m, g| m.max(g.abs()));
+        for (i, (a, b)) in gn.iter().zip(&ws.grad).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * gscale,
+                "case {case} weighted grad[{i}]: {a} vs {b} (scale {gscale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn diff_large_n_weighted_hinge() {
+    // Paper-scale differential check for the weighted kernel (release
+    // runs at n = 10^4; debug shrinks like the unweighted suite).
+    use allpairs::losses::LossFn;
+    let n = differential_n();
+    let mut rng = Rng::new(0x9e1d);
+    for (case, pos_frac) in [0.5, 0.05].into_iter().enumerate() {
+        let scores: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let is_pos = labels_with(n, (((n as f64) * pos_frac) as usize).max(1), &mut rng);
+        let weights: Vec<f32> = (0..n).map(|_| (rng.uniform() * 2.0) as f32).collect();
+        let wh = WeightedSquaredHinge::new(1.0);
+        let (ln, gn) = wh.loss_and_grad_naive(&scores, &is_pos, &weights);
+        let mut ws = LossWorkspace::default();
+        let lf = LossFn::loss_and_grad(
+            &wh,
+            BatchView::weighted(&scores, &is_pos, &weights),
+            &mut ws,
+        );
+        assert_rel(ln, lf, 1e-8, &format!("weighted case {case} loss"));
+        let gscale = gn.iter().fold(1.0_f32, |m, g| m.max(g.abs()));
+        for (i, (a, b)) in gn.iter().zip(&ws.grad).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * gscale,
+                "weighted case {case} grad[{i}]: {a} vs {b}"
+            );
+        }
     }
 }
 
