@@ -60,6 +60,7 @@ fn main() -> allpairs::Result<()> {
         input_dim: spec.dim,
         hidden: 32,
         threads: 0, // one per core: large batches parallelize well
+        ..NativeSpec::default()
     })
     .connect()?;
     let cfg = FitConfig {

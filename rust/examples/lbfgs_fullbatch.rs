@@ -45,6 +45,7 @@ fn main() -> allpairs::Result<()> {
         input_dim: 64,
         hidden,
         threads: 0,
+        ..NativeSpec::default()
     });
     let (rows, labels) = feature_batch(n, pos_frac, 7);
     println!(

@@ -53,6 +53,7 @@ fn main() -> allpairs::Result<()> {
         input_dim: spec.dim,
         hidden: 32,
         threads: 0, // one per core
+        ..NativeSpec::default()
     })
     .connect()?;
     let mut trainer = Trainer::new(backend.as_ref(), "mlp", &LossSpec::hinge(), 100)?;

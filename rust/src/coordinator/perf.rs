@@ -15,12 +15,21 @@
 //! paper times; MLP numbers would mostly measure the tanh layer.
 //! `ALLPAIRS_BENCH_QUICK=1` shrinks the iteration budget (CI smoke),
 //! not the sizes, so quick-mode files stay schema-identical.
+//!
+//! The competitive sort table ("beat the sort", ROADMAP item 2) times
+//! the [`SortEngine`] strategies head-to-head on the hinge keys at
+//! `sort_sizes` (default up to 10⁷): the comparison reference, LSD
+//! radix, the adaptive re-sort in its near-sorted steady state, and —
+//! as the no-sort speed floor — the O(n) univariate linear-hinge bound
+//! of Lyu & Ying (arXiv 1804.05981), which decouples the pairwise
+//! hinge through per-class thresholds and needs no ordering at all
+//! (records `sort/{comparison,radix,adaptive,nosort_lhinge}/nN`).
 
 use std::path::Path;
 
 use crate::data::Rng;
 use crate::losses::functional::SquaredHinge;
-use crate::losses::{BatchView, LossFn, LossSpec, LossWorkspace};
+use crate::losses::{BatchView, LossFn, LossSpec, LossWorkspace, SortEngine, SortStrategy};
 use crate::metrics::auc;
 use crate::runtime::{Backend, NativeBackend, NativeSpec};
 use crate::util::bench::Bench;
@@ -36,6 +45,8 @@ pub struct PerfConfig {
     pub threads: Vec<usize>,
     /// Features per example for the train-step bench.
     pub dim: usize,
+    /// Key counts for the competitive sort table (empty = skip it).
+    pub sort_sizes: Vec<usize>,
 }
 
 impl Default for PerfConfig {
@@ -44,6 +55,7 @@ impl Default for PerfConfig {
             sizes: vec![10_000, 100_000, 1_000_000],
             threads: vec![1, 8],
             dim: 32,
+            sort_sizes: vec![100_000, 1_000_000, 10_000_000],
         }
     }
 }
@@ -102,6 +114,7 @@ pub fn run(cfg: &PerfConfig) -> crate::Result<Vec<PerfRecord>> {
                 input_dim: cfg.dim,
                 hidden: 0,
                 threads,
+                ..NativeSpec::default()
             });
             let mut exec = backend.open("linear", &LossSpec::hinge(), n)?;
             exec.init(0)?;
@@ -131,7 +144,102 @@ pub fn run(cfg: &PerfConfig) -> crate::Result<Vec<PerfRecord>> {
         let m = bench.run(format!("auc/n{n}"), || auc(&scores, &is_pos));
         records.push(record(m, n, 1));
     }
+
+    // The competitive sort table (ROADMAP item 2): every SortEngine
+    // strategy against the comparison reference and the O(n) no-sort
+    // floor, on the exact hinge keys the kernels sort.
+    for &n in &cfg.sort_sizes {
+        sort_suite(&mut bench, &mut records, n)?;
+    }
     Ok(records)
+}
+
+/// One size of the competitive sort table.  The permutations of all
+/// three strategies are asserted identical at full bench scale before
+/// any timing — the same invariant `tests/proptest_sort.rs` pins on
+/// adversarial distributions, checked here on the real 10⁷-key layout.
+fn sort_suite(bench: &mut Bench, records: &mut Vec<PerfRecord>, n: usize) -> crate::Result<()> {
+    let mut rng = Rng::new(0x50B7 ^ n as u64);
+    let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let is_pos: Vec<f32> = (0..n)
+        .map(|_| if rng.uniform() < 0.1 { 1.0 } else { 0.0 })
+        .collect();
+    // the augmented-value keys of `fill_hinge_order` at margin 1
+    let keys: Vec<f64> = scores
+        .iter()
+        .zip(&is_pos)
+        .map(|(&y, &p)| if p != 0.0 { y as f64 } else { y as f64 + 1.0 })
+        .collect();
+
+    // Reference permutation (untimed) + full-scale differential check.
+    let mut reference = Vec::new();
+    SortEngine::new(SortStrategy::Comparison).order_by_keys(&keys, &is_pos, false, &mut reference);
+    let mut order = Vec::new();
+    for strategy in [SortStrategy::Radix, SortStrategy::Adaptive] {
+        SortEngine::new(strategy).order_by_keys(&keys, &is_pos, false, &mut order);
+        anyhow::ensure!(
+            order == reference,
+            "{strategy} permutation diverged from the comparison reference at n={n}"
+        );
+    }
+
+    // The adaptive steady state: the previous SGD step's permutation is
+    // near-sorted for the current keys.  Model it as the canonical
+    // order with 100 random adjacent transpositions (≤ 101 runs, well
+    // inside the merge regime); re-seed every iteration so each timed
+    // call does the full detect-and-merge work, not a no-op verify.
+    let mut stale = reference.clone();
+    if n >= 2 {
+        for _ in 0..100 {
+            let i = rng.below(n - 1);
+            stale.swap(i, i + 1);
+        }
+    }
+
+    for strategy in [SortStrategy::Comparison, SortStrategy::Radix] {
+        let mut engine = SortEngine::new(strategy);
+        let m = bench.run(format!("sort/{strategy}/n{n}"), || {
+            engine.order_by_keys(&keys, &is_pos, false, &mut order);
+            order.len()
+        });
+        records.push(record(m, n, 1));
+    }
+    let mut engine = SortEngine::new(SortStrategy::Adaptive);
+    let m = bench.run(format!("sort/adaptive/n{n}"), || {
+        engine.seed_prev(&stale);
+        engine.order_by_keys(&keys, &is_pos, false, &mut order);
+        order.len()
+    });
+    records.push(record(m, n, 1));
+
+    // The no-sort floor: the O(n) univariate bound needs no ordering.
+    let m = bench.run(format!("sort/nosort_lhinge/n{n}"), || {
+        univariate_lhinge_bound(&scores, &is_pos, 1.0)
+    });
+    records.push(record(m, n, 1));
+    Ok(())
+}
+
+/// The univariate linear-hinge *upper bound* of Lyu & Ying (arXiv
+/// 1804.05981): decouple each pairwise term through a fixed pivot at
+/// the margin midpoint, `(m − ŷⱼ + ŷₖ)₊ ≤ (m/2 − ŷⱼ)₊ + (m/2 + ŷₖ)₊`,
+/// so the double sum collapses to two per-class single passes — O(n),
+/// no sort.  A speed floor for the table, not a drop-in replacement:
+/// it bounds (rather than equals) the all-pairs objective.
+pub fn univariate_lhinge_bound(scores: &[f32], is_pos: &[f32], margin: f64) -> f64 {
+    let (mut n_pos, mut n_neg) = (0.0_f64, 0.0_f64);
+    let (mut pos_sum, mut neg_sum) = (0.0_f64, 0.0_f64);
+    for (&y, &p) in scores.iter().zip(is_pos) {
+        let y = y as f64;
+        if p != 0.0 {
+            n_pos += 1.0;
+            pos_sum += (margin / 2.0 - y).max(0.0);
+        } else {
+            n_neg += 1.0;
+            neg_sum += (margin / 2.0 + y).max(0.0);
+        }
+    }
+    n_neg * pos_sum + n_pos * neg_sum
 }
 
 fn record(m: &crate::util::bench::Measurement, n: usize, threads: usize) -> PerfRecord {
@@ -169,6 +277,58 @@ pub fn speedups(records: &[PerfRecord]) -> Vec<(usize, f64, usize, f64, f64)> {
         }
     }
     out
+}
+
+/// One row of the competitive sort table: medians per strategy at one
+/// size (a field is `None` when its record is absent).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SortTableRow {
+    pub n: usize,
+    pub comparison_s: Option<f64>,
+    pub radix_s: Option<f64>,
+    pub adaptive_s: Option<f64>,
+    pub nosort_s: Option<f64>,
+}
+
+impl SortTableRow {
+    /// Speedup of the best full-sort strategy over the comparison
+    /// reference (the "beat the sort" headline number).
+    pub fn best_speedup(&self) -> Option<f64> {
+        let best = match (self.radix_s, self.adaptive_s) {
+            (Some(r), Some(a)) => r.min(a),
+            (Some(r), None) => r,
+            (None, Some(a)) => a,
+            (None, None) => return None,
+        };
+        Some(self.comparison_s? / best)
+    }
+}
+
+/// Assemble the `sort/*` records into per-size table rows, ascending n.
+pub fn sort_table(records: &[PerfRecord]) -> Vec<SortTableRow> {
+    let median_of = |strategy: &str, n: usize| -> Option<f64> {
+        records
+            .iter()
+            .find(|r| r.n == n && r.name == format!("sort/{strategy}/n{n}"))
+            .map(|r| r.median_s)
+    };
+    let mut sizes: Vec<usize> = records
+        .iter()
+        .filter(|r| r.name.starts_with("sort/"))
+        .map(|r| r.n)
+        .collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    sizes
+        .into_iter()
+        .map(|n| SortTableRow {
+            n,
+            comparison_s: median_of("comparison", n),
+            radix_s: median_of("radix", n),
+            adaptive_s: median_of("adaptive", n),
+            nosort_s: median_of("nosort_lhinge", n),
+        })
+        .collect()
 }
 
 /// Write the records as `BENCH_train.json`: a versioned envelope so
@@ -249,6 +409,28 @@ mod tests {
     }
 
     #[test]
+    fn sort_table_assembles_rows_per_size() {
+        let records = vec![
+            rec("sort/comparison/n100", 100, 1, 0.8),
+            rec("sort/radix/n100", 100, 1, 0.2),
+            rec("sort/adaptive/n100", 100, 1, 0.1),
+            rec("sort/nosort_lhinge/n100", 100, 1, 0.01),
+            rec("sort/comparison/n50", 50, 1, 0.4),
+            rec("train_step/hinge/n100/t1", 100, 1, 0.5), // not a sort row
+        ];
+        let rows = sort_table(&records);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].n, 50, "rows come back in ascending n");
+        assert_eq!(rows[0].comparison_s, Some(0.4));
+        assert_eq!(rows[0].radix_s, None);
+        assert_eq!(rows[0].best_speedup(), None);
+        assert_eq!(rows[1].n, 100);
+        assert_eq!(rows[1].nosort_s, Some(0.01));
+        let speedup = rows[1].best_speedup().unwrap();
+        assert!((speedup - 8.0).abs() < 1e-12, "0.8 / min(0.2, 0.1) = 8");
+    }
+
+    #[test]
     fn tiny_suite_runs_end_to_end() {
         // Keep it seconds-scale: small n, quick-ish budget comes from
         // the default Bench (each point still takes min_iters runs).
@@ -256,10 +438,42 @@ mod tests {
             sizes: vec![500],
             threads: vec![1],
             dim: 4,
+            sort_sizes: vec![300],
         };
         let records = run(&cfg).unwrap();
-        assert_eq!(records.len(), 3); // train_step + loss + auc
+        // train_step + loss + auc, then the four-strategy sort suite
+        assert_eq!(records.len(), 7);
         assert!(records.iter().all(|r| r.min_s >= 0.0 && r.median_s >= r.min_s));
         assert!(records.iter().any(|r| r.name == "train_step/hinge/n500/t1"));
+        for strategy in ["comparison", "radix", "adaptive", "nosort_lhinge"] {
+            let name = format!("sort/{strategy}/n300");
+            assert!(records.iter().any(|r| r.name == name), "missing {name}");
+        }
+        assert_eq!(sort_table(&records).len(), 1);
+    }
+
+    #[test]
+    fn univariate_bound_dominates_the_pairwise_linear_hinge() {
+        let mut rng = Rng::new(7);
+        let scores: Vec<f32> = (0..200).map(|_| rng.normal() as f32).collect();
+        let is_pos: Vec<f32> = (0..200)
+            .map(|_| if rng.uniform() < 0.25 { 1.0 } else { 0.0 })
+            .collect();
+        let margin = 1.0;
+        let mut exact = 0.0_f64;
+        for (&yp, &pp) in scores.iter().zip(&is_pos) {
+            if pp == 0.0 {
+                continue;
+            }
+            for (&yn, &pn) in scores.iter().zip(&is_pos) {
+                if pn != 0.0 {
+                    continue;
+                }
+                exact += (margin - yp as f64 + yn as f64).max(0.0);
+            }
+        }
+        let bound = univariate_lhinge_bound(&scores, &is_pos, margin);
+        assert!(bound >= exact, "bound {bound} < exact {exact}");
+        assert!(bound.is_finite() && bound > 0.0);
     }
 }

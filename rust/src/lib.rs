@@ -59,6 +59,7 @@
 //!     input_dim: 4,
 //!     hidden: 8,
 //!     threads: 1,
+//!     ..NativeSpec::default()
 //! });
 //! let backend = spec.connect()?;
 //! let loss: LossSpec = "whinge".parse()?;

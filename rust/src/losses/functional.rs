@@ -147,7 +147,7 @@ impl LossFn for SquaredHinge {
         // (see `kernel::fill_hinge_order`).  Exact-tie order is benign:
         // a (pos, neg) pair at equal v contributes zero loss and zero
         // gradient.
-        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, false);
+        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, &mut ws.sort, false);
 
         // Ascending sweep (paper eqs. 22-25) + negative gradients.
         let (mut a, mut b, mut c, mut t) = (0.0_f64, 0.0_f64, 0.0_f64, 0.0_f64);
@@ -189,7 +189,7 @@ impl LossFn for SquaredHinge {
         if batch.is_empty() {
             return 0.0;
         }
-        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, false);
+        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, &mut ws.sort, false);
         let (mut a, mut b, mut c) = (0.0_f64, 0.0_f64, 0.0_f64);
         let mut loss = 0.0_f64;
         for &i in &ws.order {

@@ -14,6 +14,8 @@
 //! which maps a validated spec onto a boxed [`LossFn`]; nothing above
 //! the losses module matches on loss-name strings.
 
+use super::sort::{SortEngine, SortStrategy};
+
 /// One batch of predictions as the loss kernels see it: predicted
 /// scores, {0,1} positive-class indicators, and optional per-example
 /// weights.
@@ -84,12 +86,44 @@ pub struct LossWorkspace {
     pub(crate) keys: Vec<f64>,
     /// Derived per-example weights (class-balanced reweighting).
     pub(crate) weights: Vec<f32>,
+    /// Sort engine of the hinge-family sweeps (DESIGN.md §9): holds the
+    /// strategy, its scratch, and the previous step's permutation (the
+    /// adaptive seed) — which is why hot loops should reuse one
+    /// workspace instead of rebuilding it per step.
+    pub(crate) sort: SortEngine,
 }
 
 impl LossWorkspace {
     /// An empty workspace (buffers grow on first use).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An empty workspace whose hinge sorts use the given strategy.
+    /// Every strategy produces the identical permutation (and therefore
+    /// bit-identical losses and gradients); the choice is purely about
+    /// speed — see DESIGN.md §9.
+    pub fn with_sort_strategy(strategy: SortStrategy) -> Self {
+        Self {
+            sort: SortEngine::new(strategy),
+            ..Self::default()
+        }
+    }
+
+    /// The active hinge-sort strategy.
+    pub fn sort_strategy(&self) -> SortStrategy {
+        self.sort.strategy()
+    }
+
+    /// Switch the hinge-sort strategy in place (safe mid-training: the
+    /// permutation, and hence every result bit, is strategy-invariant).
+    pub fn set_sort_strategy(&mut self, strategy: SortStrategy) {
+        self.sort.set_strategy(strategy);
+    }
+
+    /// Direct access to the sort engine (bench / test seam).
+    pub fn sort_engine_mut(&mut self) -> &mut SortEngine {
+        &mut self.sort
     }
 }
 
@@ -144,14 +178,22 @@ pub(crate) fn pair_norm(batch: BatchView<'_>) -> f64 {
 /// minimal-norm subgradient choice at exact-margin pairs.  The squared
 /// hinges pass `false`: their exact-tie pairs contribute zero loss and
 /// zero gradient in any order.
+///
+/// The actual ordering is delegated to [`SortEngine::order_by_keys`],
+/// which pins the canonical permutation (key ascending under
+/// `total_cmp` — so a -0.0 score sorts before +0.0 — then the class
+/// tie-break, then index ascending) and produces it with whichever
+/// strategy the workspace carries.  The trailing index tie-break makes
+/// the permutation unique, so the f64 sweep accumulation order — and
+/// therefore every loss/gradient bit — is independent of the strategy.
 pub(crate) fn fill_hinge_order(
     batch: BatchView<'_>,
     margin: f64,
     keys: &mut Vec<f64>,
     order: &mut Vec<u32>,
+    sort: &mut SortEngine,
     negatives_first_on_ties: bool,
 ) {
-    let n = batch.len();
     keys.clear();
     keys.extend(batch.scores.iter().zip(batch.is_pos).map(|(&y, &p)| {
         if p != 0.0 {
@@ -160,20 +202,7 @@ pub(crate) fn fill_hinge_order(
             y as f64 + margin
         }
     }));
-    order.clear();
-    order.extend(0..n as u32);
-    let keys = &*keys;
-    let is_pos = batch.is_pos;
-    if negatives_first_on_ties {
-        order.sort_unstable_by(|&a, &b| {
-            keys[a as usize]
-                .total_cmp(&keys[b as usize])
-                // negatives (is_pos == 0) first within a tie group
-                .then_with(|| is_pos[a as usize].partial_cmp(&is_pos[b as usize]).unwrap())
-        });
-    } else {
-        order.sort_unstable_by(|&a, &b| keys[a as usize].total_cmp(&keys[b as usize]));
-    }
+    sort.order_by_keys(keys, batch.is_pos, negatives_first_on_ties, order);
 }
 
 #[cfg(test)]
@@ -206,16 +235,37 @@ mod tests {
         assert_eq!(pair_norm(BatchView::new(&[], &[])), 1.0);
     }
 
+    fn hinge_order(
+        s: &[f32],
+        p: &[f32],
+        margin: f64,
+        strategy: SortStrategy,
+        neg_first: bool,
+    ) -> (Vec<f64>, Vec<u32>) {
+        let mut keys = Vec::new();
+        let mut order = Vec::new();
+        let mut sort = SortEngine::new(strategy);
+        fill_hinge_order(
+            BatchView::new(s, p),
+            margin,
+            &mut keys,
+            &mut order,
+            &mut sort,
+            neg_first,
+        );
+        (keys, order)
+    }
+
     #[test]
     fn hinge_order_sorts_augmented_values() {
         // pos 0.5 (key 0.5), neg 0.0 (key 1.0), neg -2.0 (key -1.0)
         let s = [0.5_f32, 0.0, -2.0];
         let p = [1.0_f32, 0.0, 0.0];
-        let mut keys = Vec::new();
-        let mut order = Vec::new();
-        fill_hinge_order(BatchView::new(&s, &p), 1.0, &mut keys, &mut order, false);
-        assert_eq!(order, vec![2, 0, 1]);
-        assert_eq!(keys, vec![0.5, 1.0, -1.0]);
+        for strategy in SortStrategy::ALL {
+            let (keys, order) = hinge_order(&s, &p, 1.0, strategy, false);
+            assert_eq!(order, vec![2, 0, 1], "{strategy}");
+            assert_eq!(keys, vec![0.5, 1.0, -1.0], "{strategy}");
+        }
     }
 
     #[test]
@@ -223,9 +273,66 @@ mod tests {
         // pos 1.0 (key 1.0) ties with neg 0.0 (key 1.0) at margin 1
         let s = [1.0_f32, 0.0];
         let p = [1.0_f32, 0.0];
-        let mut keys = Vec::new();
-        let mut order = Vec::new();
-        fill_hinge_order(BatchView::new(&s, &p), 1.0, &mut keys, &mut order, true);
-        assert_eq!(order, vec![1, 0], "negative first within the tie group");
+        for strategy in SortStrategy::ALL {
+            let (_, order) = hinge_order(&s, &p, 1.0, strategy, true);
+            assert_eq!(order, vec![1, 0], "negative first within ties: {strategy}");
+        }
+    }
+
+    #[test]
+    fn equal_key_ties_fall_back_to_index_order() {
+        // three identical positives and two identical negatives at the
+        // same augmented value: the canonical order within each class is
+        // ascending index, for every strategy — the uniqueness property
+        // that makes strategies interchangeable bit-for-bit.
+        let s = [1.0_f32, 0.0, 1.0, 0.0, 1.0];
+        let p = [1.0_f32, 0.0, 1.0, 0.0, 1.0];
+        for strategy in SortStrategy::ALL {
+            let (_, order) = hinge_order(&s, &p, 1.0, strategy, true);
+            assert_eq!(order, vec![1, 3, 0, 2, 4], "{strategy}");
+            let (_, order) = hinge_order(&s, &p, 1.0, strategy, false);
+            assert_eq!(order, vec![0, 1, 2, 3, 4], "{strategy}");
+        }
+    }
+
+    #[test]
+    fn negative_zero_scores_sort_before_positive_zero_in_every_strategy() {
+        // Pinned ±0.0 semantics: `total_cmp` orders -0.0 before +0.0,
+        // and the radix u64 transform agrees bit-for-bit, so a score of
+        // -0.0 can never reorder pairs between strategies.
+        assert_eq!((-0.0_f64).total_cmp(&0.0), std::cmp::Ordering::Less);
+        assert!(super::super::sort::key_bits(-0.0) < super::super::sort::key_bits(0.0));
+        // two positives scoring +0.0 and -0.0 (keys are the raw scores)
+        let s = [0.0_f32, -0.0];
+        let p = [1.0_f32, 1.0];
+        for strategy in SortStrategy::ALL {
+            let (keys, order) = hinge_order(&s, &p, 1.0, strategy, false);
+            assert_eq!(order, vec![1, 0], "-0.0 key sorts first: {strategy}");
+            assert_eq!(keys[1].to_bits(), (-0.0_f64).to_bits(), "{strategy}");
+        }
+        // margin 0: the neg's key is -0.0 + 0.0 = +0.0 (IEEE addition
+        // normalizes the zero sign), an exact tie with the pos at +0.0
+        // — resolved by the class tie-break, identically everywhere
+        let s = [0.0_f32, -0.0];
+        let p = [1.0_f32, 0.0];
+        for strategy in SortStrategy::ALL {
+            let (keys, order) = hinge_order(&s, &p, 0.0, strategy, true);
+            assert_eq!(keys[1].to_bits(), 0.0_f64.to_bits(), "{strategy}");
+            assert_eq!(order, vec![1, 0], "negative first on the tie: {strategy}");
+        }
+    }
+
+    #[test]
+    fn workspace_sort_strategy_accessors() {
+        let mut ws = LossWorkspace::with_sort_strategy(SortStrategy::Radix);
+        assert_eq!(ws.sort_strategy(), SortStrategy::Radix);
+        ws.set_sort_strategy(SortStrategy::Comparison);
+        assert_eq!(ws.sort_strategy(), SortStrategy::Comparison);
+        assert_eq!(
+            LossWorkspace::default().sort_strategy(),
+            SortStrategy::Adaptive,
+            "hot paths default to the adaptive strategy"
+        );
+        ws.sort_engine_mut().seed_prev(&[0]);
     }
 }

@@ -105,7 +105,7 @@ impl LossFn for LinearHinge {
         // negative's evaluation then excludes that positive.  For the
         // loss this is immaterial (the term is 0); for the subgradient
         // it selects the minimal-norm element.
-        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, true);
+        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, &mut ws.sort, true);
 
         // Ascending sweep: degree-1 coefficients over active positives.
         let (mut a_cnt, mut c_sum) = (0.0_f64, 0.0_f64);
@@ -139,7 +139,7 @@ impl LossFn for LinearHinge {
         if batch.is_empty() {
             return 0.0;
         }
-        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, true);
+        fill_hinge_order(batch, m, &mut ws.keys, &mut ws.order, &mut ws.sort, true);
         let (mut a_cnt, mut c_sum) = (0.0_f64, 0.0_f64);
         let mut loss = 0.0_f64;
         for &i in &ws.order {

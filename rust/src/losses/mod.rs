@@ -34,10 +34,12 @@ pub mod kernel;
 pub mod linear_hinge;
 pub mod logistic;
 pub mod naive;
+pub mod sort;
 pub mod spec;
 pub mod weighted;
 
 pub use kernel::{BatchView, LossFn, LossWorkspace};
+pub use sort::{SortEngine, SortStrategy};
 pub use spec::LossSpec;
 
 /// A loss over predicted scores with {0,1} positive-class indicators —

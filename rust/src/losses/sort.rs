@@ -1,0 +1,631 @@
+//! The `SortEngine` seam: interchangeable strategies for producing the
+//! hinge-family sort permutation (DESIGN.md §9).
+//!
+//! The log-linear hinge sweeps (Algorithm 2) are dominated by the sort
+//! over augmented-value keys, so "beat the sort" (ROADMAP item 2) is a
+//! kernel-speed priority.  This module pins one **canonical
+//! permutation** — ascending by `f64::total_cmp` on the key, then
+//! negatives before positives when requested, then index ascending —
+//! and provides three strategies that all produce it exactly:
+//!
+//! * [`SortStrategy::Comparison`] — `slice::sort_unstable_by` over the
+//!   composite comparator.  The reference implementation: obviously
+//!   correct, O(n log n) with a data-dependent constant.
+//! * [`SortStrategy::Radix`] — LSD radix sort over the order-preserving
+//!   monotone u64 transform of the f64 keys ([`key_bits`]), 8 bits per
+//!   pass with constant-byte passes skipped, followed by an O(n)
+//!   negatives-first tie pass.  O(n), branch-free inner loop.
+//! * [`SortStrategy::Adaptive`] — seeds from the previous call's
+//!   permutation (SGD moves scores little between steps, so the old
+//!   order is near-sorted), detects maximal ascending runs, and merges
+//!   them bottom-up in `ceil(log2 runs)` linear passes; falls back to
+//!   radix when disorder exceeds [`MAX_MERGE_RUNS`].
+//!
+//! Because the permutation is identical across strategies, the f64
+//! sweep accumulation order is identical, so losses, gradients and
+//! optimizer state are **bit-identical** regardless of strategy — the
+//! determinism guarantees of DESIGN.md §7 survive strategy selection.
+//! The differential layer in `tests/proptest_sort.rs` pins this.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// How many ascending runs the adaptive strategy will merge before
+/// falling back to radix.  A bottom-up merge of `k` runs costs
+/// `n · ceil(log2 k)` comparisons; radix costs at most 9 linear passes
+/// (1 histogram + 8 scatter) with no comparisons.  At 256 runs the
+/// merge does 8 passes — about radix parity — and beyond that radix
+/// only gets relatively cheaper, so the threshold errs toward radix.
+/// Tune against the `sort/*` records of `allpairs bench`.
+pub const MAX_MERGE_RUNS: usize = 256;
+
+/// Strategy selecting how the hinge-family sort permutation is
+/// produced.  All strategies yield the identical permutation; only
+/// speed differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SortStrategy {
+    /// Reference: `sort_unstable_by` over the composite comparator.
+    Comparison,
+    /// LSD radix over the monotone u64 key transform.
+    Radix,
+    /// Run-merge from the previous permutation; radix fallback.
+    #[default]
+    Adaptive,
+}
+
+impl SortStrategy {
+    /// Every strategy, comparison (the reference) first.
+    pub const ALL: [SortStrategy; 3] = [
+        SortStrategy::Comparison,
+        SortStrategy::Radix,
+        SortStrategy::Adaptive,
+    ];
+
+    /// Stable lower-case name (CLI flags, JSON specs, bench records).
+    pub fn name(self) -> &'static str {
+        match self {
+            SortStrategy::Comparison => "comparison",
+            SortStrategy::Radix => "radix",
+            SortStrategy::Adaptive => "adaptive",
+        }
+    }
+}
+
+impl fmt::Display for SortStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for SortStrategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "comparison" => Ok(SortStrategy::Comparison),
+            "radix" => Ok(SortStrategy::Radix),
+            "adaptive" => Ok(SortStrategy::Adaptive),
+            other => Err(anyhow::anyhow!(
+                "unknown sort strategy '{other}' (expected comparison | radix | adaptive)"
+            )),
+        }
+    }
+}
+
+/// Order-preserving monotone transform from f64 to u64: `a` sorts
+/// before `b` under [`f64::total_cmp`] iff `key_bits(a) < key_bits(b)`.
+///
+/// IEEE-754 doubles compare like sign-magnitude integers: for
+/// non-negative values the raw bit pattern already ascends with the
+/// value, and setting the sign bit lifts them above every negative;
+/// for negative values the pattern ascends as the value *descends*, and
+/// complementing reverses that while mapping them below the
+/// non-negatives.  This is exactly the flip `total_cmp` performs
+/// internally, so the transform agrees with it bit-for-bit on every
+/// input — -0.0 < +0.0, subnormals in order, and NaNs at the extremes
+/// by sign and payload.
+#[inline]
+pub fn key_bits(key: f64) -> u64 {
+    let b = key.to_bits();
+    if b & SIGN_BIT != 0 {
+        !b
+    } else {
+        b | SIGN_BIT
+    }
+}
+
+const SIGN_BIT: u64 = 1 << 63;
+
+/// Reusable state for one sort stream: the strategy, the previous
+/// permutation (the adaptive seed), and the scratch buffers of the
+/// radix and merge passes.  Lives inside
+/// [`super::kernel::LossWorkspace`] so the training hot loop stays
+/// allocation-free after warm-up and the adaptive path sees the prior
+/// step's order.
+#[derive(Debug, Default, Clone)]
+pub struct SortEngine {
+    strategy: SortStrategy,
+    /// Permutation produced by the previous [`Self::order_by_keys`]
+    /// call (or injected via [`Self::seed_prev`]); the adaptive seed.
+    prev: Vec<u32>,
+    /// Monotone u64 transform of the current keys, indexed by example.
+    bits: Vec<u64>,
+    /// Radix ping/pong key buffers, aligned with the order being built.
+    key_a: Vec<u64>,
+    key_b: Vec<u64>,
+    /// Order pong buffer (radix) / merge target buffer (adaptive).
+    ord_b: Vec<u32>,
+    /// Stable-partition scratch of the negatives-first tie pass.
+    ties: Vec<u32>,
+    /// Run boundaries of the adaptive merge (ping/pong).
+    runs: Vec<u32>,
+    runs_next: Vec<u32>,
+}
+
+impl SortEngine {
+    /// An engine with the given strategy and no previous permutation.
+    pub fn new(strategy: SortStrategy) -> Self {
+        Self {
+            strategy,
+            ..Self::default()
+        }
+    }
+
+    /// The active strategy.
+    pub fn strategy(&self) -> SortStrategy {
+        self.strategy
+    }
+
+    /// Switch strategy in place.  Safe mid-stream: every strategy
+    /// produces the identical permutation, and the previous-order seed
+    /// is kept (a stale or wrong-length seed only costs speed, never
+    /// correctness).
+    pub fn set_strategy(&mut self, strategy: SortStrategy) {
+        self.strategy = strategy;
+    }
+
+    /// Inject a previous permutation for the adaptive strategy (bench /
+    /// test entry point; training paths seed implicitly from the prior
+    /// step).  Must be a permutation of `0..order.len()` — validated in
+    /// debug builds, a plain copy in release so benches can seed
+    /// per-iteration without distorting the measurement.
+    pub fn seed_prev(&mut self, order: &[u32]) {
+        debug_assert!(is_permutation(order), "seed_prev: not a permutation");
+        self.prev.clear();
+        self.prev.extend_from_slice(order);
+    }
+
+    /// Fill `order` with the canonical permutation of `keys`: ascending
+    /// by `total_cmp`, then (when `negatives_first_on_ties`) negatives
+    /// — `is_pos[i] == 0.0` — before positives within an exact-key tie
+    /// group, then index ascending.  The index tie-break makes the
+    /// permutation unique, which is what lets every strategy match the
+    /// reference bit-for-bit.
+    pub fn order_by_keys(
+        &mut self,
+        keys: &[f64],
+        is_pos: &[f32],
+        negatives_first_on_ties: bool,
+        order: &mut Vec<u32>,
+    ) {
+        let n = keys.len();
+        assert_eq!(is_pos.len(), n, "keys/is_pos length mismatch");
+        assert!(n <= u32::MAX as usize, "batch too large for u32 order indices");
+        let Self {
+            strategy,
+            prev,
+            bits,
+            key_a,
+            key_b,
+            ord_b,
+            ties,
+            runs,
+            runs_next,
+        } = self;
+        match *strategy {
+            SortStrategy::Comparison => {
+                fill_identity(order, n);
+                comparison_sort(keys, is_pos, negatives_first_on_ties, order);
+            }
+            SortStrategy::Radix => {
+                fill_bits(bits, keys);
+                fill_identity(order, n);
+                lsd_radix(bits, order, key_a, key_b, ord_b);
+                if negatives_first_on_ties {
+                    negatives_first_pass(bits, is_pos, order, ties);
+                }
+            }
+            SortStrategy::Adaptive => {
+                fill_bits(bits, keys);
+                // Seed from the previous permutation when the length
+                // matches (it is a permutation by construction);
+                // identity otherwise.  The seed only affects speed: any
+                // permutation input merges to the unique canonical one.
+                if prev.len() == n {
+                    order.clear();
+                    order.extend_from_slice(prev);
+                } else {
+                    fill_identity(order, n);
+                }
+                // Maximal ascending runs under the canonical order.
+                runs.clear();
+                runs.push(0);
+                for j in 1..n {
+                    if lt(bits, is_pos, negatives_first_on_ties, order[j], order[j - 1]) {
+                        runs.push(j as u32);
+                    }
+                }
+                if runs.len() > 1 {
+                    if runs.len() > MAX_MERGE_RUNS {
+                        // Too disordered for the merge to beat radix.
+                        fill_identity(order, n);
+                        lsd_radix(bits, order, key_a, key_b, ord_b);
+                        if negatives_first_on_ties {
+                            negatives_first_pass(bits, is_pos, order, ties);
+                        }
+                    } else {
+                        runs.push(n as u32);
+                        merge_runs(
+                            bits,
+                            is_pos,
+                            negatives_first_on_ties,
+                            order,
+                            ord_b,
+                            runs,
+                            runs_next,
+                        );
+                    }
+                }
+            }
+        }
+        // Persist for the next adaptive call on this engine.
+        prev.clear();
+        prev.extend_from_slice(order);
+    }
+}
+
+fn is_permutation(order: &[u32]) -> bool {
+    let n = order.len();
+    let mut seen = vec![false; n];
+    order
+        .iter()
+        .all(|&i| (i as usize) < n && !std::mem::replace(&mut seen[i as usize], true))
+}
+
+fn fill_identity(order: &mut Vec<u32>, n: usize) {
+    order.clear();
+    order.extend(0..n as u32);
+}
+
+fn fill_bits(bits: &mut Vec<u64>, keys: &[f64]) {
+    bits.clear();
+    bits.extend(keys.iter().map(|&k| key_bits(k)));
+}
+
+/// The canonical strict order as a `<` predicate over example indices:
+/// key bits, then class (negatives first, when enabled), then index.
+/// Strict and total, so the sorted permutation is unique.
+#[inline]
+fn lt(bits: &[u64], is_pos: &[f32], neg_first: bool, a: u32, b: u32) -> bool {
+    let (ka, kb) = (bits[a as usize], bits[b as usize]);
+    if ka != kb {
+        return ka < kb;
+    }
+    if neg_first {
+        let (pa, pb) = (is_pos[a as usize] != 0.0, is_pos[b as usize] != 0.0);
+        if pa != pb {
+            return !pa;
+        }
+    }
+    a < b
+}
+
+/// Reference: comparison sort under the canonical composite order,
+/// phrased over the raw f64 keys via `total_cmp` (the definition the
+/// bit-transform strategies must match).
+fn comparison_sort(keys: &[f64], is_pos: &[f32], neg_first: bool, order: &mut [u32]) {
+    order.sort_unstable_by(|&a, &b| {
+        let by_key = keys[a as usize].total_cmp(&keys[b as usize]);
+        let by_class = if neg_first {
+            by_key.then_with(|| {
+                let pa = (is_pos[a as usize] != 0.0) as u8;
+                let pb = (is_pos[b as usize] != 0.0) as u8;
+                pa.cmp(&pb)
+            })
+        } else {
+            by_key
+        };
+        by_class.then_with(|| a.cmp(&b))
+    });
+}
+
+/// LSD radix sort of `order` by `bits[order[j]]`, 8 bits per pass.
+/// All 8 histograms are gathered in one pass; a pass whose digit is
+/// constant across the batch is skipped (a stable pass over a constant
+/// digit is the identity).  Stability plus the identity start makes the
+/// result ordered by (bits, index) — the canonical order minus the
+/// class tie-break, which [`negatives_first_pass`] restores.
+fn lsd_radix(
+    bits: &[u64],
+    order: &mut Vec<u32>,
+    key_a: &mut Vec<u64>,
+    key_b: &mut Vec<u64>,
+    ord_b: &mut Vec<u32>,
+) {
+    let n = order.len();
+    key_a.clear();
+    key_a.extend(order.iter().map(|&i| bits[i as usize]));
+    key_b.clear();
+    key_b.resize(n, 0);
+    ord_b.clear();
+    ord_b.resize(n, 0);
+    let mut hist = [[0u32; 256]; 8];
+    for &k in key_a.iter() {
+        for (level, h) in hist.iter_mut().enumerate() {
+            h[((k >> (level * 8)) & 0xFF) as usize] += 1;
+        }
+    }
+    for (level, h) in hist.iter().enumerate() {
+        if h.iter().any(|&c| c as usize == n) {
+            continue;
+        }
+        let mut offsets = [0u32; 256];
+        let mut sum = 0u32;
+        for (o, &c) in offsets.iter_mut().zip(h.iter()) {
+            *o = sum;
+            sum += c;
+        }
+        let shift = level * 8;
+        for (&k, &o) in key_a.iter().zip(order.iter()) {
+            let digit = ((k >> shift) & 0xFF) as usize;
+            let pos = offsets[digit] as usize;
+            offsets[digit] += 1;
+            key_b[pos] = k;
+            ord_b[pos] = o;
+        }
+        std::mem::swap(key_a, key_b);
+        std::mem::swap(order, ord_b);
+    }
+}
+
+/// Restore the negatives-first tie-break after a (bits, index) radix
+/// sort: within each maximal equal-bits group, stable-partition
+/// negatives before positives.  O(n) total; single-class groups (the
+/// common case under quantized ties) are left untouched.
+fn negatives_first_pass(bits: &[u64], is_pos: &[f32], order: &mut [u32], ties: &mut Vec<u32>) {
+    let n = order.len();
+    let mut i = 0;
+    while i < n {
+        let k = bits[order[i] as usize];
+        let mut j = i + 1;
+        while j < n && bits[order[j] as usize] == k {
+            j += 1;
+        }
+        let group = &order[i..j];
+        if group.len() > 1
+            && group.iter().any(|&e| is_pos[e as usize] != 0.0)
+            && group.iter().any(|&e| is_pos[e as usize] == 0.0)
+        {
+            ties.clear();
+            ties.extend(group.iter().filter(|&&e| is_pos[e as usize] == 0.0));
+            ties.extend(group.iter().filter(|&&e| is_pos[e as usize] != 0.0));
+            order[i..j].copy_from_slice(ties);
+        }
+        i = j;
+    }
+}
+
+/// Bottom-up natural merge of the ascending runs delimited by `runs`
+/// (which must end with the sentinel `n`), under the canonical
+/// composite order.  `ceil(log2 runs)` linear passes, ping-ponging
+/// between `order` and `tmp`.
+fn merge_runs(
+    bits: &[u64],
+    is_pos: &[f32],
+    neg_first: bool,
+    order: &mut Vec<u32>,
+    tmp: &mut Vec<u32>,
+    runs: &mut Vec<u32>,
+    runs_next: &mut Vec<u32>,
+) {
+    let n = order.len();
+    tmp.clear();
+    tmp.resize(n, 0);
+    while runs.len() > 2 {
+        runs_next.clear();
+        runs_next.push(0);
+        let mut p = 0;
+        while p + 2 < runs.len() {
+            let (lo, mid, hi) = (runs[p] as usize, runs[p + 1] as usize, runs[p + 2] as usize);
+            let (mut i, mut j) = (lo, mid);
+            for slot in tmp[lo..hi].iter_mut() {
+                let take_left =
+                    j >= hi || (i < mid && !lt(bits, is_pos, neg_first, order[j], order[i]));
+                *slot = if take_left {
+                    let v = order[i];
+                    i += 1;
+                    v
+                } else {
+                    let v = order[j];
+                    j += 1;
+                    v
+                };
+            }
+            runs_next.push(hi as u32);
+            p += 2;
+        }
+        if p + 1 < runs.len() {
+            // trailing lone run: carry it into the next round
+            let (lo, hi) = (runs[p] as usize, runs[p + 1] as usize);
+            tmp[lo..hi].copy_from_slice(&order[lo..hi]);
+            runs_next.push(hi as u32);
+        }
+        std::mem::swap(order, tmp);
+        std::mem::swap(runs, runs_next);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adversarial f64 values: signed zeros, subnormals, infinities,
+    /// NaNs of both signs and different payloads, powers of two around
+    /// the f32 precision cliff, and ordinary values.
+    fn adversarial_keys() -> Vec<f64> {
+        let mut ks = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            f64::MIN_POSITIVE,
+            -f64::MIN_POSITIVE,
+            f64::from_bits(1),             // smallest positive subnormal
+            f64::from_bits(SIGN_BIT | 1),  // smallest-magnitude negative subnormal
+            f64::from_bits(0x000F_FFFF_FFFF_FFFF), // largest subnormal
+            f32::MIN_POSITIVE as f64,
+            -(f32::MIN_POSITIVE as f64),
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MAX,
+            f64::MIN,
+            f64::NAN,
+            -f64::NAN,
+            f64::from_bits(0x7FF8_0000_0000_0001), // NaN, different payload
+            16_777_216.0, // 2^24: the f32-key regression family
+            16_777_217.0,
+            16_777_218.0,
+            16_777_215.0,
+            1e-300,
+            -1e-300,
+            0.1,
+            -0.1,
+        ];
+        // plus every value nudged one ulp in each direction
+        for k in ks.clone() {
+            if k.is_finite() {
+                ks.push(f64::from_bits(k.to_bits().wrapping_add(1)));
+                ks.push(f64::from_bits(k.to_bits().wrapping_sub(1)));
+            }
+        }
+        ks
+    }
+
+    #[test]
+    fn key_bits_agrees_with_total_cmp_on_adversarial_pairs() {
+        let ks = adversarial_keys();
+        for &a in &ks {
+            for &b in &ks {
+                assert_eq!(
+                    key_bits(a).cmp(&key_bits(b)),
+                    a.total_cmp(&b),
+                    "a={a:?} ({:#018x})  b={b:?} ({:#018x})",
+                    a.to_bits(),
+                    b.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn key_bits_orders_negative_zero_before_positive_zero() {
+        assert!(key_bits(-0.0) < key_bits(0.0));
+        assert_eq!((-0.0_f64).total_cmp(&0.0), std::cmp::Ordering::Less);
+    }
+
+    fn canonical(keys: &[f64], is_pos: &[f32], neg_first: bool) -> Vec<u32> {
+        let mut order = Vec::new();
+        let mut engine = SortEngine::new(SortStrategy::Comparison);
+        engine.order_by_keys(keys, is_pos, neg_first, &mut order);
+        order
+    }
+
+    #[test]
+    fn all_strategies_agree_on_adversarial_keys() {
+        let keys = adversarial_keys();
+        let is_pos: Vec<f32> = (0..keys.len()).map(|i| (i % 3 == 0) as u32 as f32).collect();
+        for neg_first in [false, true] {
+            let want = canonical(&keys, &is_pos, neg_first);
+            for strategy in [SortStrategy::Radix, SortStrategy::Adaptive] {
+                let mut engine = SortEngine::new(strategy);
+                let mut order = Vec::new();
+                engine.order_by_keys(&keys, &is_pos, neg_first, &mut order);
+                assert_eq!(order, want, "{strategy} neg_first={neg_first}");
+                // warm second call (adaptive now seeds from its own output)
+                engine.order_by_keys(&keys, &is_pos, neg_first, &mut order);
+                assert_eq!(order, want, "{strategy} warm neg_first={neg_first}");
+            }
+        }
+    }
+
+    #[test]
+    fn comparison_result_is_sorted_under_lt() {
+        let keys = adversarial_keys();
+        let is_pos: Vec<f32> = (0..keys.len()).map(|i| (i % 2) as f32).collect();
+        let mut bits = Vec::new();
+        fill_bits(&mut bits, &keys);
+        for neg_first in [false, true] {
+            let order = canonical(&keys, &is_pos, neg_first);
+            for w in order.windows(2) {
+                assert!(lt(&bits, &is_pos, neg_first, w[0], w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_is_exact_from_any_seed() {
+        let keys: Vec<f64> = (0..1000).map(|i| ((i * 37) % 100) as f64 * 0.25).collect();
+        let is_pos: Vec<f32> = (0..1000).map(|i| (i % 4 == 0) as u32 as f32).collect();
+        let want = canonical(&keys, &is_pos, true);
+        let n = keys.len() as u32;
+        let reversed: Vec<u32> = (0..n).rev().collect();
+        let rotated: Vec<u32> = (0..n).map(|i| (i + 917) % n).collect();
+        let sorted = want.clone();
+        for seed in [reversed, rotated, sorted] {
+            let mut engine = SortEngine::new(SortStrategy::Adaptive);
+            engine.seed_prev(&seed);
+            let mut order = Vec::new();
+            engine.order_by_keys(&keys, &is_pos, true, &mut order);
+            assert_eq!(order, want);
+        }
+        // wrong-length seed: falls back to the identity start, still exact
+        let mut engine = SortEngine::new(SortStrategy::Adaptive);
+        engine.seed_prev(&[0, 1, 2]);
+        let mut order = Vec::new();
+        engine.order_by_keys(&keys, &is_pos, true, &mut order);
+        assert_eq!(order, want);
+    }
+
+    #[test]
+    fn radix_skips_constant_byte_passes_correctly() {
+        // keys differing only in the low mantissa byte: 7 of 8 passes
+        // are constant and skipped
+        let keys: Vec<f64> = (0..200)
+            .map(|i| f64::from_bits(0x3FF0_0000_0000_0000 | ((199 - i) as u64 & 0xFF)))
+            .collect();
+        let is_pos = vec![0.0f32; 200];
+        let want = canonical(&keys, &is_pos, false);
+        let mut engine = SortEngine::new(SortStrategy::Radix);
+        let mut order = Vec::new();
+        engine.order_by_keys(&keys, &is_pos, false, &mut order);
+        assert_eq!(order, want);
+        // and the keys really are descending, so the permutation reverses
+        assert_eq!(order, (0..200u32).rev().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_singleton_batches() {
+        for strategy in SortStrategy::ALL {
+            let mut engine = SortEngine::new(strategy);
+            let mut order = vec![9, 9, 9];
+            engine.order_by_keys(&[], &[], true, &mut order);
+            assert!(order.is_empty(), "{strategy}");
+            engine.order_by_keys(&[4.2], &[1.0], true, &mut order);
+            assert_eq!(order, vec![0], "{strategy}");
+        }
+    }
+
+    #[test]
+    fn strategy_round_trips_through_strings() {
+        for strategy in SortStrategy::ALL {
+            assert_eq!(strategy.name().parse::<SortStrategy>().unwrap(), strategy);
+        }
+        assert!("quantum".parse::<SortStrategy>().is_err());
+        assert_eq!(SortStrategy::default(), SortStrategy::Adaptive);
+    }
+
+    #[test]
+    fn set_strategy_mid_stream_keeps_the_permutation() {
+        let keys: Vec<f64> = (0..500).map(|i| ((i * 7919) % 233) as f64).collect();
+        let is_pos: Vec<f32> = (0..500).map(|i| (i % 5 == 0) as u32 as f32).collect();
+        let want = canonical(&keys, &is_pos, true);
+        let mut engine = SortEngine::new(SortStrategy::Radix);
+        let mut order = Vec::new();
+        engine.order_by_keys(&keys, &is_pos, true, &mut order);
+        assert_eq!(order, want);
+        engine.set_strategy(SortStrategy::Adaptive);
+        assert_eq!(engine.strategy(), SortStrategy::Adaptive);
+        engine.order_by_keys(&keys, &is_pos, true, &mut order);
+        assert_eq!(order, want);
+    }
+}

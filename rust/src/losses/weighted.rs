@@ -97,6 +97,7 @@ impl LossFn for WeightedSquaredHinge {
             order,
             keys,
             weights: derived,
+            sort,
         } = ws;
         grad.clear();
         grad.resize(n, 0.0);
@@ -110,7 +111,7 @@ impl LossFn for WeightedSquaredHinge {
                 &derived[..]
             }
         };
-        fill_hinge_order(batch, m, keys, order, false);
+        fill_hinge_order(batch, m, keys, order, sort, false);
 
         // Ascending sweep with weighted coefficients.
         let (mut a, mut b, mut c, mut t) = (0.0_f64, 0.0_f64, 0.0_f64, 0.0_f64);
@@ -155,6 +156,7 @@ impl LossFn for WeightedSquaredHinge {
             order,
             keys,
             weights: derived,
+            sort,
             ..
         } = ws;
         let weights: &[f32] = match batch.weights {
@@ -164,7 +166,7 @@ impl LossFn for WeightedSquaredHinge {
                 &derived[..]
             }
         };
-        fill_hinge_order(batch, m, keys, order, false);
+        fill_hinge_order(batch, m, keys, order, sort, false);
         let (mut a, mut b, mut c) = (0.0_f64, 0.0_f64, 0.0_f64);
         let mut loss = 0.0_f64;
         for &i in order.iter() {

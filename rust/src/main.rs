@@ -65,6 +65,8 @@ COMMANDS
       --sizes LIST      comma-separated n       [10000,100000,1000000]
       --threads LIST    train-step worker counts [1,8]
       --dim D           features per row        [32]
+      --sort-sizes LIST competitive sort-table n (0 to skip)
+                        [100000,1000000,10000000]
       (ALLPAIRS_BENCH_QUICK=1 shrinks the iteration budget, not sizes)
   report            re-aggregate a saved results file
       --results FILE    sweep_results.jsonl path
@@ -303,7 +305,16 @@ fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> allpairs::Result<()> {
-    args.expect_known(&["artifacts", "out", "backend", "json", "sizes", "threads", "dim"])?;
+    args.expect_known(&[
+        "artifacts",
+        "out",
+        "backend",
+        "json",
+        "sizes",
+        "threads",
+        "dim",
+        "sort-sizes",
+    ])?;
     let parse_list = |name: &str, default: &[usize]| -> allpairs::Result<Vec<usize>> {
         match args.get_opt(name) {
             None => Ok(default.to_vec()),
@@ -317,10 +328,14 @@ fn cmd_bench(args: &Args) -> allpairs::Result<()> {
                 .collect(),
         }
     };
+    // `--sort-sizes 0` skips the sort suite entirely (zeros are dropped).
+    let mut sort_sizes = parse_list("sort-sizes", &[100_000, 1_000_000, 10_000_000])?;
+    sort_sizes.retain(|&n| n > 0);
     let cfg = perf::PerfConfig {
         sizes: parse_list("sizes", &[10_000, 100_000, 1_000_000])?,
         threads: parse_list("threads", &[1, 8])?,
         dim: args.get("dim", 32)?,
+        sort_sizes,
     };
     anyhow::ensure!(
         !cfg.sizes.is_empty() && !cfg.threads.is_empty() && cfg.dim > 0,
@@ -334,10 +349,11 @@ fn cmd_bench(args: &Args) -> allpairs::Result<()> {
     );
     let quick = allpairs::util::bench::Bench::quick_from_env();
     eprintln!(
-        "bench: train-step/loss/AUC at n {:?}, threads {:?}, dim {}{} ...",
+        "bench: train-step/loss/AUC at n {:?}, threads {:?}, dim {}, sort n {:?}{} ...",
         cfg.sizes,
         cfg.threads,
         cfg.dim,
+        cfg.sort_sizes,
         if quick { " (quick mode)" } else { "" }
     );
     let records = perf::run(&cfg)?;
@@ -350,6 +366,32 @@ fn cmd_bench(args: &Args) -> allpairs::Result<()> {
         );
         for (n, serial, threads, parallel, speedup) in rows {
             println!("{n:>10} {serial:>14.6} {threads:>8} {parallel:>14.6} {speedup:>8.2}x");
+        }
+    }
+    let sort_rows = perf::sort_table(&records);
+    if !sort_rows.is_empty() {
+        let cell = |v: Option<f64>| match v {
+            Some(s) => format!("{s:>14.6}"),
+            None => format!("{:>14}", "-"),
+        };
+        println!("\nhinge-key sort (median seconds; nosort = O(n) lhinge bound floor):");
+        println!(
+            "{:>10} {:>14} {:>14} {:>14} {:>14} {:>9}",
+            "n", "comparison_s", "radix_s", "adaptive_s", "nosort_s", "speedup"
+        );
+        for row in sort_rows {
+            let speedup = match row.best_speedup() {
+                Some(s) => format!("{s:>8.2}x"),
+                None => format!("{:>9}", "-"),
+            };
+            println!(
+                "{:>10} {} {} {} {} {speedup}",
+                row.n,
+                cell(row.comparison_s),
+                cell(row.radix_s),
+                cell(row.adaptive_s),
+                cell(row.nosort_s)
+            );
         }
     }
     let json_path = args.get_str("json", "BENCH_train.json");

@@ -150,6 +150,7 @@ impl BackendSpec {
                 ("input_dim", Json::num(s.input_dim as f64)),
                 ("hidden", Json::num(s.hidden as f64)),
                 ("threads", Json::num(s.threads as f64)),
+                ("sort", Json::str(s.sort.name())),
             ]),
             BackendSpec::Pjrt { artifacts_dir } => Json::obj([
                 ("kind", Json::str("pjrt")),
@@ -189,6 +190,12 @@ impl BackendSpec {
                         .as_usize()
                         .ok_or_else(|| anyhow::anyhow!("threads must be a non-negative integer"))?;
                 }
+                if let Some(v) = j.get("sort") {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("sort must be a strategy name string"))?;
+                    spec.sort = s.parse()?;
+                }
                 if let Some(v) = j.get("margin") {
                     let m = v
                         .as_f64()
@@ -219,13 +226,18 @@ mod tests {
 
     #[test]
     fn spec_json_roundtrip() {
+        // a non-default sort strategy must survive the round trip
         let native = BackendSpec::Native(NativeSpec {
             input_dim: 64,
             hidden: 16,
             threads: 2,
+            sort: crate::losses::SortStrategy::Radix,
         });
         let back = BackendSpec::from_json(&native.to_json()).unwrap();
         assert_eq!(back, native);
+
+        let j = Json::parse(r#"{"kind": "native", "sort": "quantum"}"#).unwrap();
+        assert!(BackendSpec::from_json(&j).is_err(), "bad strategy rejected");
 
         let pjrt = BackendSpec::pjrt("artifacts");
         let back = BackendSpec::from_json(&pjrt.to_json()).unwrap();
@@ -248,6 +260,7 @@ mod tests {
                 input_dim: 8,
                 hidden: 4,
                 threads: 1,
+                ..NativeSpec::default()
             })
         );
         let j = Json::parse(r#"{"kind": "native", "margin": 0.5}"#).unwrap();

@@ -15,9 +15,15 @@
 //! A result therefore depends only on the inputs, never on the thread
 //! count or on which worker happened to run which chunk: the parallel
 //! path is bit-identical to the serial path (threads = 1), which runs
-//! the very same chunk loop sequentially.  `tests/proptest_engine.rs`
-//! pins this across thread counts {1, 2, 8} and non-chunk-aligned row
-//! counts; this is what lets PR 3's bit-reproducibility guarantees
+//! the very same chunk loop sequentially.  The serial loss step has
+//! its own speed axis, the hinge-sort strategy (DESIGN.md §9): the
+//! executor's `LossWorkspace` persists across train steps precisely so
+//! the adaptive strategy can seed from the previous step's
+//! permutation, and because every strategy yields the identical
+//! canonical permutation this never perturbs results.
+//! `tests/proptest_engine.rs` pins bit-identity across the full
+//! thread-count {1, 2, 8} × sort-strategy matrix and non-chunk-aligned
+//! row counts; this is what lets PR 3's bit-reproducibility guarantees
 //! survive parallel execution.
 //!
 //! Workers are scoped threads (the offline build has no rayon; see

@@ -25,7 +25,7 @@
 use std::ops::Range;
 
 use crate::data::Rng;
-use crate::losses::{BatchView, LossFn, LossSpec, LossWorkspace};
+use crate::losses::{BatchView, LossFn, LossSpec, LossWorkspace, SortStrategy};
 
 use super::backend::{Backend, ModelExecutor};
 use super::engine::{ChunkModel, Engine};
@@ -46,6 +46,10 @@ pub struct NativeSpec {
     pub hidden: usize,
     /// Worker threads for forward/gradient (0 = one per available core).
     pub threads: usize,
+    /// Hinge-sort strategy of the loss kernels (DESIGN.md §9).  Every
+    /// strategy produces the identical permutation, so this is a pure
+    /// speed knob: results stay bit-identical across strategies.
+    pub sort: SortStrategy,
 }
 
 impl Default for NativeSpec {
@@ -57,6 +61,7 @@ impl Default for NativeSpec {
                 * crate::data::synth::CHANNELS,
             hidden: 32,
             threads: 0,
+            sort: SortStrategy::default(),
         }
     }
 }
@@ -106,7 +111,7 @@ impl NativeBackend {
             scores: Vec::new(),
             hidden: Vec::new(),
             dscores: Vec::new(),
-            ws: LossWorkspace::default(),
+            ws: LossWorkspace::with_sort_strategy(self.spec.sort),
             evals: 0,
         })
     }
@@ -126,13 +131,15 @@ impl Backend for NativeBackend {
         anyhow::ensure!(batch > 0, "batch size must be positive");
         let arch = ModelArch::parse(model, &self.spec);
         let loss = loss.build()?;
-        Ok(Box::new(NativeExecutor::new(arch, loss, batch, self.spec.threads)))
+        Ok(Box::new(NativeExecutor::new(arch, loss, batch, &self.spec)))
     }
 
     fn eval_loss(&self, loss: &LossSpec, scores: &[f32], is_pos: &[f32]) -> crate::Result<f64> {
         anyhow::ensure!(scores.len() == is_pos.len(), "scores/is_pos length mismatch");
         let kernel = loss.build()?;
-        let mut ws = LossWorkspace::default();
+        // Fresh workspace per call (no prior order to adapt from): the
+        // adaptive default simply falls back to radix here.
+        let mut ws = LossWorkspace::with_sort_strategy(self.spec.sort);
         let view = BatchView::new(scores, is_pos);
         // The §5 monitoring entry point: the gradient-free sweep.
         Ok(kernel.loss_only(view, &mut ws) / kernel.norm(view))
@@ -370,13 +377,13 @@ struct NativeExecutor {
 }
 
 impl NativeExecutor {
-    fn new(arch: ModelArch, loss: Box<dyn LossFn>, batch: usize, threads: usize) -> Self {
+    fn new(arch: ModelArch, loss: Box<dyn LossFn>, batch: usize, spec: &NativeSpec) -> Self {
         let n = arch.n_params();
         Self {
             arch,
             loss,
             batch,
-            engine: Engine::new(threads),
+            engine: Engine::new(spec.threads),
             initialized: false,
             params: vec![0.0; n],
             momentum: vec![0.0; n],
@@ -387,7 +394,10 @@ impl NativeExecutor {
             compact_scores: Vec::new(),
             compact_pos: Vec::new(),
             compact_idx: Vec::new(),
-            ws: LossWorkspace::default(),
+            // The workspace — and with it the sort engine's previous
+            // permutation, the adaptive seed — persists across train
+            // steps for the executor's lifetime.
+            ws: LossWorkspace::with_sort_strategy(spec.sort),
         }
     }
 
@@ -675,6 +685,7 @@ mod tests {
             input_dim: dim,
             hidden,
             threads,
+            ..NativeSpec::default()
         }
     }
 
@@ -779,6 +790,36 @@ mod tests {
             let lc = c.train_step(&x, &p, &q, 0.05).unwrap();
             assert_eq!(la.to_bits(), lc.to_bits());
             assert_eq!(a.state_to_host().unwrap(), c.state_to_host().unwrap());
+        }
+    }
+
+    #[test]
+    fn sort_strategies_train_bit_identically() {
+        // The spec's sort knob is speed-only: every strategy produces
+        // the canonical permutation, so multi-step training — loss AND
+        // parameter/momentum state — is bit-identical across them.
+        // (The full strategy × thread-count matrix lives in
+        // tests/proptest_engine.rs.)
+        let n = 300;
+        let (x, p, q) = toy_batch(n, 6, 31);
+        let mut outputs = Vec::new();
+        for strategy in SortStrategy::ALL {
+            let backend = NativeBackend::new(NativeSpec {
+                input_dim: 6,
+                hidden: 4,
+                threads: 1,
+                sort: strategy,
+            });
+            let mut exec = backend.open("mlp", &hinge(), n).unwrap();
+            exec.init(5).unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(exec.train_step(&x, &p, &q, 0.05).unwrap().to_bits());
+            }
+            outputs.push((losses, exec.state_to_host().unwrap()));
+        }
+        for (i, out) in outputs.iter().enumerate().skip(1) {
+            assert_eq!(out, &outputs[0], "strategy {}", SortStrategy::ALL[i]);
         }
     }
 

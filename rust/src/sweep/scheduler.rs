@@ -198,6 +198,7 @@ mod tests {
             input_dim: dim,
             hidden: 4,
             threads: 1,
+            ..NativeSpec::default()
         })
     }
 

@@ -363,6 +363,7 @@ mod tests {
             input_dim: dim,
             hidden: 8,
             threads: 1,
+            ..NativeSpec::default()
         })
         .connect()
         .unwrap()

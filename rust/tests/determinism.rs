@@ -32,6 +32,7 @@ fn micro_config() -> SweepConfig {
             input_dim: 16 * 16 * 3,
             hidden: 8,
             threads: 1,
+            ..NativeSpec::default()
         }),
         ..Default::default()
     }
@@ -89,6 +90,7 @@ fn epoch_history_is_identical_across_runs() {
         input_dim: spec.dim,
         hidden: 16,
         threads: 1,
+        ..NativeSpec::default()
     })
     .connect()
     .unwrap();

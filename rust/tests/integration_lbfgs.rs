@@ -28,6 +28,7 @@ fn native_backend() -> NativeBackend {
         input_dim: 64,
         hidden: 16,
         threads: 1,
+        ..NativeSpec::default()
     })
 }
 

@@ -16,6 +16,7 @@ fn native_backend() -> Box<dyn Backend> {
         input_dim: 64,
         hidden: 16,
         threads: 1,
+        ..NativeSpec::default()
     })
     .connect()
     .unwrap()

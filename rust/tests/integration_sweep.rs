@@ -21,6 +21,7 @@ fn native_spec() -> BackendSpec {
         input_dim: 16 * 16 * 3,
         hidden: 8,
         threads: 1,
+        ..NativeSpec::default()
     })
 }
 

@@ -35,6 +35,7 @@ fn fit_whinge(threads: usize) -> FitOutcome {
         input_dim: spec.dim,
         hidden: 16,
         threads,
+        ..NativeSpec::default()
     })
     .connect()
     .unwrap();

@@ -118,6 +118,7 @@ fn prop_native_train_step_equals_functional_plus_manual_sgd() {
             input_dim: case.dim,
             hidden: 0, // linear: the reference is exactly re-derivable
             threads: 1,
+            ..NativeSpec::default()
         });
         let mut exec = backend.open("linear", &LossSpec::hinge(), case.batch).unwrap();
         exec.init(case_idx as u32).unwrap();
@@ -166,6 +167,7 @@ fn prop_native_loss_matches_functional_loss_value() {
             input_dim: case.dim,
             hidden: 4,
             threads: 1,
+            ..NativeSpec::default()
         });
         let mut exec = backend.open("mlp", &LossSpec::hinge(), case.batch).unwrap();
         exec.init(0).unwrap();
@@ -204,6 +206,7 @@ fn prop_predict_is_deterministic_across_thread_counts() {
                 input_dim: dim,
                 hidden: 8,
                 threads,
+                ..NativeSpec::default()
             })
         };
         let b1 = mk(1);

@@ -1,13 +1,16 @@
 //! Property tests for the deterministic parallel train-step engine
-//! (DESIGN.md §7): at every thread count the native backend must
-//! produce **bit-identical** results — batch loss, score path, full
-//! parameter/momentum state, and the L-BFGS oracle's gradient — to the
-//! serial path, including non-chunk-aligned batch sizes.  In-tree
+//! (DESIGN.md §7): at every (thread count × sort strategy) combination
+//! the native backend must produce **bit-identical** results — batch
+//! loss, score path, full parameter/momentum state, and the L-BFGS
+//! oracle's gradient — to the serial comparison-sort path, including
+//! non-chunk-aligned batch sizes.  The sort axis leans on the canonical
+//! permutation invariant pinned by `proptest_sort.rs`: identical
+//! permutation ⇒ identical f64 sweep order ⇒ identical bits.  In-tree
 //! generator, same style as `proptest_losses.rs` (the `proptest` crate
 //! is unavailable offline).
 
 use allpairs::data::Rng;
-use allpairs::losses::LossSpec;
+use allpairs::losses::{LossSpec, SortStrategy};
 use allpairs::runtime::{NativeBackend, NativeSpec};
 use allpairs::train::lbfgs::Objective;
 
@@ -36,7 +39,7 @@ fn gen_case(n: usize, case_idx: usize, rng: &mut Rng) -> Case {
         ("mlp", 2 + rng.below(6))
     };
     // every native kernel, the weighted hinge included, must be
-    // bit-identical across thread counts
+    // bit-identical across thread counts and sort strategies
     let loss = [
         LossSpec::hinge(),
         LossSpec::square(),
@@ -74,74 +77,89 @@ fn gen_case(n: usize, case_idx: usize, rng: &mut Rng) -> Case {
     }
 }
 
-fn backend(case: &Case, threads: usize) -> NativeBackend {
+fn backend(case: &Case, threads: usize, sort: SortStrategy) -> NativeBackend {
     NativeBackend::new(NativeSpec {
         input_dim: case.dim,
         hidden: case.hidden,
         threads,
+        sort,
     })
 }
 
 #[test]
-fn prop_train_step_is_bit_identical_across_thread_counts() {
+fn prop_train_step_is_bit_identical_across_threads_and_sort_strategies() {
     let mut rng = Rng::new(0xE9617E);
     for (case_idx, &n) in SIZES.iter().enumerate() {
         for round in 0..3 {
             let case = gen_case(n, case_idx + round, &mut rng);
-            // Reference: the serial path (threads = 1), two steps so
-            // momentum state is exercised.
+            // Reference: outputs[0] is the serial comparison-sort path
+            // (THREAD_COUNTS[0] = 1, SortStrategy::ALL[0] = Comparison).
+            // Three steps so momentum state is exercised AND the
+            // adaptive strategy re-sorts from a genuinely stale
+            // previous-step order more than once.
             let mut outputs = Vec::new();
+            let mut labels = Vec::new();
             for &threads in &THREAD_COUNTS {
-                let b = backend(&case, threads);
-                let mut exec = b.open(case.model, &case.loss, case.n).unwrap();
-                exec.init(round as u32).unwrap();
-                let mut losses = Vec::new();
-                for _ in 0..2 {
-                    let l = exec.train_step(&case.x, &case.is_pos, &case.is_neg, 0.05).unwrap();
-                    losses.push(l);
+                for sort in SortStrategy::ALL {
+                    let b = backend(&case, threads, sort);
+                    let mut exec = b.open(case.model, &case.loss, case.n).unwrap();
+                    exec.init(round as u32).unwrap();
+                    let mut losses = Vec::new();
+                    for _ in 0..3 {
+                        let l = exec
+                            .train_step(&case.x, &case.is_pos, &case.is_neg, 0.05)
+                            .unwrap();
+                        losses.push(l.to_bits());
+                    }
+                    let scores = exec.predict(&case.x, case.n).unwrap();
+                    outputs.push((losses, exec.state_to_host().unwrap(), scores));
+                    labels.push(format!("threads={threads} sort={sort}"));
                 }
-                let scores = exec.predict(&case.x, case.n).unwrap();
-                outputs.push((losses, exec.state_to_host().unwrap(), scores));
             }
-            let (ref_losses, ref_state, ref_scores) = &outputs[0];
-            for (t_idx, (losses, state, scores)) in outputs.iter().enumerate().skip(1) {
-                let ctx = format!(
-                    "n={n} model={} loss={} threads={}",
-                    case.model, case.loss, THREAD_COUNTS[t_idx]
+            for (label, out) in labels.iter().zip(&outputs) {
+                assert_eq!(
+                    *out, outputs[0],
+                    "n={n} model={} loss={} {label} diverged from the serial \
+                     comparison reference",
+                    case.model, case.loss
                 );
-                for (a, b) in ref_losses.iter().zip(losses) {
-                    assert_eq!(a.to_bits(), b.to_bits(), "loss differs: {ctx}");
-                }
-                assert_eq!(ref_state, state, "state differs: {ctx}");
-                assert_eq!(ref_scores, scores, "scores differ: {ctx}");
             }
         }
     }
 }
 
 #[test]
-fn prop_objective_gradient_is_bit_identical_across_thread_counts() {
+fn prop_objective_gradient_is_bit_identical_across_threads_and_sorts() {
     let mut rng = Rng::new(0x0B1EC7);
     for (case_idx, &n) in [100usize, 257, 600, 1023].iter().enumerate() {
         let case = gen_case(n, case_idx, &mut rng);
-        let theta = backend(&case, 1)
+        let theta = backend(&case, 1, SortStrategy::Comparison)
             .objective(case.model, &case.loss, &case.x, &case.is_pos)
             .unwrap()
             .init_params(7);
         let mut outputs = Vec::new();
+        let mut labels = Vec::new();
         for &threads in &THREAD_COUNTS {
-            let b = backend(&case, threads);
-            let mut obj = b.objective(case.model, &case.loss, &case.x, &case.is_pos).unwrap();
-            outputs.push(obj.eval(&theta).unwrap());
+            for sort in SortStrategy::ALL {
+                let b = backend(&case, threads, sort);
+                let mut obj = b
+                    .objective(case.model, &case.loss, &case.x, &case.is_pos)
+                    .unwrap();
+                // two evals: the second reuses the workspace, so the
+                // adaptive engine starts from the previous permutation
+                let first = obj.eval(&theta).unwrap();
+                let second = obj.eval(&theta).unwrap();
+                outputs.push((first, second));
+                labels.push(format!("threads={threads} sort={sort}"));
+            }
         }
-        let (ref_loss, ref_grad) = &outputs[0];
-        for (t_idx, (loss, grad)) in outputs.iter().enumerate().skip(1) {
-            let ctx = format!(
-                "n={n} model={} loss={} threads={}",
-                case.model, case.loss, THREAD_COUNTS[t_idx]
-            );
-            assert_eq!(ref_loss.to_bits(), loss.to_bits(), "loss differs: {ctx}");
-            assert_eq!(ref_grad, grad, "gradient differs: {ctx}");
+        for (label, out) in labels.iter().zip(&outputs) {
+            let ctx = format!("n={n} model={} loss={} {label}", case.model, case.loss);
+            let passes = [(1, &out.0, &outputs[0].0), (2, &out.1, &outputs[0].1)];
+            for (pass, got, want) in passes {
+                assert_eq!(got.0.to_bits(), want.0.to_bits(), "loss differs: {ctx} pass {pass}");
+                assert_eq!(got.1, want.1, "gradient differs: {ctx} pass {pass}");
+            }
         }
     }
 }

@@ -14,7 +14,7 @@ use allpairs::losses::weighted::WeightedSquaredHinge;
 // NOTE: `LossFn` is imported per-test below — importing it at file scope
 // alongside `PairwiseLoss` would make `loss_and_grad` method calls on the
 // functional losses (which implement both traits) ambiguous.
-use allpairs::losses::{BatchView, LossSpec, LossWorkspace, PairwiseLoss};
+use allpairs::losses::{BatchView, LossSpec, LossWorkspace, PairwiseLoss, SortStrategy};
 use allpairs::metrics::auc::auc;
 
 const CASES: usize = 120;
@@ -59,20 +59,45 @@ fn assert_rel(a: f64, b: f64, tol: f64, ctx: &str) {
 
 #[test]
 fn prop_functional_hinge_equals_naive() {
+    use allpairs::losses::LossFn;
     let mut gen = CaseGen::new(1);
+    // One persistent workspace per sort strategy, reused across every
+    // case: the adaptive engine then sees stale previous orders of the
+    // wrong length each time sizes change, which must not matter.
+    let mut workspaces: Vec<LossWorkspace> = SortStrategy::ALL
+        .iter()
+        .map(|&s| LossWorkspace::with_sort_strategy(s))
+        .collect();
     for case in 0..CASES {
         let (scores, is_pos, margin) = gen.next_case();
         if scores.len() > 400 {
             continue; // naive is quadratic; keep the oracle cheap
         }
-        let (ln, gn) = NaiveSquaredHinge::new(margin).loss_and_grad(&scores, &is_pos);
-        let (lf, gf) = SquaredHinge::new(margin).loss_and_grad(&scores, &is_pos);
+        // UFCS for the trait calls: `LossFn` is in scope here, and
+        // `SquaredHinge` implements both traits' `loss_and_grad`.
+        let (ln, gn) =
+            PairwiseLoss::loss_and_grad(&NaiveSquaredHinge::new(margin), &scores, &is_pos);
+        let (lf, gf) = PairwiseLoss::loss_and_grad(&SquaredHinge::new(margin), &scores, &is_pos);
         assert_rel(ln, lf, 1e-6, &format!("case {case} loss"));
         let gscale = gn.iter().fold(1.0_f32, |m, g| m.max(g.abs()));
         for (i, (a, b)) in gn.iter().zip(&gf).enumerate() {
             assert!(
                 (a - b).abs() <= 1e-4 * gscale,
                 "case {case} grad[{i}]: {a} vs {b}"
+            );
+        }
+        // Every sort strategy must reproduce the same kernel output bit
+        // for bit (identical permutation => identical sweep order).
+        let kernel = LossSpec::Hinge { margin }.build().unwrap();
+        let mut outputs = Vec::new();
+        for ws in &mut workspaces {
+            let l = kernel.loss_and_grad(BatchView::new(&scores, &is_pos), ws);
+            outputs.push((l.to_bits(), ws.grad.clone()));
+        }
+        for (strategy, out) in SortStrategy::ALL.iter().zip(&outputs) {
+            assert_eq!(
+                *out, outputs[0],
+                "case {case}: {strategy} diverged from comparison"
             );
         }
     }
@@ -174,30 +199,34 @@ fn prop_gradient_descent_direction_reduces_loss() {
 #[test]
 fn prop_workspace_reuse_equals_fresh() {
     // One LossWorkspace reused across every case must reproduce the
-    // allocating Figure-2 path bit for bit — for each LossFn kernel.
+    // allocating Figure-2 path bit for bit — for each LossFn kernel and
+    // each sort strategy (LinearHinge covers the negatives-first-on-ties
+    // ordering the squared-hinge path never takes).
     use allpairs::losses::LossFn;
-    let mut gen = CaseGen::new(7);
-    let mut ws = LossWorkspace::default();
-    for _ in 0..CASES {
-        let (scores, is_pos, margin) = gen.next_case();
-        for spec in [
-            LossSpec::Hinge { margin },
-            LossSpec::Square { margin },
-            LossSpec::Logistic,
-            LossSpec::LinearHinge { margin },
-        ] {
-            let kernel = spec.build().unwrap();
-            let reused = kernel.loss_and_grad(BatchView::new(&scores, &is_pos), &mut ws);
-            let fresh = kernel.loss_and_grad(
-                BatchView::new(&scores, &is_pos),
-                &mut LossWorkspace::default(),
-            );
-            assert_eq!(reused, fresh, "{spec}");
-            assert_eq!(
-                kernel.loss_only(BatchView::new(&scores, &is_pos), &mut ws),
-                reused,
-                "{spec}: loss_only"
-            );
+    for strategy in SortStrategy::ALL {
+        let mut gen = CaseGen::new(7);
+        let mut ws = LossWorkspace::with_sort_strategy(strategy);
+        for _ in 0..CASES {
+            let (scores, is_pos, margin) = gen.next_case();
+            for spec in [
+                LossSpec::Hinge { margin },
+                LossSpec::Square { margin },
+                LossSpec::Logistic,
+                LossSpec::LinearHinge { margin },
+            ] {
+                let kernel = spec.build().unwrap();
+                let reused = kernel.loss_and_grad(BatchView::new(&scores, &is_pos), &mut ws);
+                let fresh = kernel.loss_and_grad(
+                    BatchView::new(&scores, &is_pos),
+                    &mut LossWorkspace::with_sort_strategy(strategy),
+                );
+                assert_eq!(reused, fresh, "{spec} under {strategy}");
+                assert_eq!(
+                    kernel.loss_only(BatchView::new(&scores, &is_pos), &mut ws),
+                    reused,
+                    "{spec}: loss_only under {strategy}"
+                );
+            }
         }
     }
 }
@@ -246,7 +275,10 @@ fn prop_weighted_hinge_matches_naive_weighted_reference() {
     use allpairs::losses::LossFn;
     let mut gen = CaseGen::new(11);
     let mut rng = Rng::new(0x3e16);
-    let mut ws = LossWorkspace::default();
+    let mut workspaces: Vec<LossWorkspace> = SortStrategy::ALL
+        .iter()
+        .map(|&s| LossWorkspace::with_sort_strategy(s))
+        .collect();
     for case in 0..CASES {
         let (scores, is_pos, margin) = gen.next_case();
         if scores.len() > 400 {
@@ -265,14 +297,27 @@ fn prop_weighted_hinge_matches_naive_weighted_reference() {
             .collect();
         let wh = WeightedSquaredHinge::new(margin);
         let (ln, gn) = wh.loss_and_grad_naive(&scores, &is_pos, &weights);
-        let lf = LossFn::loss_and_grad(
-            &wh,
-            BatchView::weighted(&scores, &is_pos, &weights),
-            &mut ws,
-        );
+        let mut outputs = Vec::new();
+        for ws in &mut workspaces {
+            let lf = LossFn::loss_and_grad(
+                &wh,
+                BatchView::weighted(&scores, &is_pos, &weights),
+                ws,
+            );
+            outputs.push((lf, ws.grad.clone()));
+        }
+        // bit-identical across sort strategies, tolerance vs the oracle
+        for (strategy, out) in SortStrategy::ALL.iter().zip(&outputs) {
+            assert_eq!(
+                (out.0.to_bits(), &out.1),
+                (outputs[0].0.to_bits(), &outputs[0].1),
+                "case {case}: weighted {strategy} diverged from comparison"
+            );
+        }
+        let (lf, gf) = (outputs[0].0, &outputs[0].1);
         assert_rel(ln, lf, 1e-6, &format!("case {case} weighted loss"));
         let gscale = gn.iter().fold(1.0_f32, |m, g| m.max(g.abs()));
-        for (i, (a, b)) in gn.iter().zip(&ws.grad).enumerate() {
+        for (i, (a, b)) in gn.iter().zip(gf.iter()).enumerate() {
             assert!(
                 (a - b).abs() <= 1e-4 * gscale,
                 "case {case} weighted grad[{i}]: {a} vs {b} (scale {gscale})"
@@ -368,6 +413,25 @@ fn assert_differential(scores: &[f32], is_pos: &[f32], margin: f32, ctx: &str) {
     let (lnh, gnh) = NaiveSquaredHinge::new(margin).loss_and_grad(scores, is_pos);
     let (lfh, gfh) = SquaredHinge::new(margin).loss_and_grad(scores, is_pos);
     assert_rel(lnh, lfh, 1e-8, &format!("{ctx}: hinge loss"));
+    // Every sort strategy reproduces the hinge loss and gradient bit for
+    // bit at paper scale (the canonical permutation fixes the f64
+    // accumulation order, so this is exact equality, not a tolerance).
+    {
+        use allpairs::losses::LossFn;
+        let kernel = LossSpec::Hinge { margin }.build().unwrap();
+        let mut reference: Option<(u64, Vec<f32>)> = None;
+        for strategy in SortStrategy::ALL {
+            let mut ws = LossWorkspace::with_sort_strategy(strategy);
+            let l = kernel.loss_and_grad(BatchView::new(scores, is_pos), &mut ws);
+            let out = (l.to_bits(), ws.grad.clone());
+            match &reference {
+                None => reference = Some(out),
+                Some(want) => {
+                    assert_eq!(&out, want, "{ctx}: hinge under {strategy} diverged");
+                }
+            }
+        }
+    }
     let (lns, gns) = NaiveSquare::new(margin).loss_and_grad(scores, is_pos);
     let (lfs, gfs) = Square::new(margin).loss_and_grad(scores, is_pos);
     assert_rel(lns, lfs, 1e-8, &format!("{ctx}: square loss"));

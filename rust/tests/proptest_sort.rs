@@ -1,0 +1,316 @@
+//! Differential sort-correctness layer for the `SortEngine` seam.
+//!
+//! Every strategy — comparison (the `total_cmp` reference), LSD radix
+//! on the monotone u64 key transform, and adaptive run-merge — must
+//! produce the *identical* permutation: ascending by key under
+//! `total_cmp`, then negatives before positives on exact-key ties (when
+//! requested), then index ascending.  The training engine's bit-exact
+//! reproducibility across strategies rests entirely on this invariant,
+//! so these tests pin it on adversarial key distributions (ties, signed
+//! zeros, subnormals, ulp-adjacent magnitudes around 2^24, near- and
+//! reverse-sorted streams) and on adversarial adaptive seeds.
+//!
+//! Like `proptest_losses.rs`, this uses an in-tree case generator (the
+//! `proptest` crate is unavailable offline): many seeded random cases,
+//! shrink-free but wide.
+
+use allpairs::data::Rng;
+use allpairs::losses::sort::{key_bits, MAX_MERGE_RUNS};
+use allpairs::losses::weighted::WeightedSquaredHinge;
+use allpairs::losses::{
+    BatchView, LossFn, LossSpec, LossWorkspace, SortEngine, SortStrategy,
+};
+
+/// Labels with roughly `pos_frac` positives.
+fn labels(n: usize, pos_frac: f64, rng: &mut Rng) -> Vec<f32> {
+    (0..n)
+        .map(|_| if rng.uniform() < pos_frac { 1.0 } else { 0.0 })
+        .collect()
+}
+
+/// The documented canonical order relation, written independently of
+/// the engine internals: `total_cmp`, then class (negatives first when
+/// enabled), then index.
+fn canonical_lt(keys: &[f64], is_pos: &[f32], neg_first: bool, a: u32, b: u32) -> bool {
+    let (a, b) = (a as usize, b as usize);
+    match keys[a].total_cmp(&keys[b]) {
+        std::cmp::Ordering::Less => return true,
+        std::cmp::Ordering::Greater => return false,
+        std::cmp::Ordering::Equal => {}
+    }
+    if neg_first {
+        let (ca, cb) = (is_pos[a] != 0.0, is_pos[b] != 0.0);
+        if ca != cb {
+            return !ca; // the negative (false) comes first
+        }
+    }
+    a < b
+}
+
+/// Assert that `order` is exactly the canonical permutation of `keys`.
+fn assert_canonical(keys: &[f64], is_pos: &[f32], neg_first: bool, order: &[u32], ctx: &str) {
+    assert_eq!(order.len(), keys.len(), "{ctx}: length");
+    let mut seen = vec![false; keys.len()];
+    for &i in order {
+        assert!(!seen[i as usize], "{ctx}: index {i} repeated");
+        seen[i as usize] = true;
+    }
+    for pair in order.windows(2) {
+        assert!(
+            canonical_lt(keys, is_pos, neg_first, pair[0], pair[1]),
+            "{ctx}: order[..] has {} before {} (keys {} vs {})",
+            pair[0],
+            pair[1],
+            keys[pair[0] as usize],
+            keys[pair[1] as usize]
+        );
+    }
+}
+
+/// Run every strategy (adaptive under several adversarial seeds) on one
+/// case and require the identical permutation, which is additionally
+/// validated against the independent order relation above.
+fn check_case(keys: &[f64], is_pos: &[f32], ctx: &str) {
+    let n = keys.len();
+    for neg_first in [false, true] {
+        let ctx = format!("{ctx} (neg_first={neg_first})");
+        let mut reference = Vec::new();
+        SortEngine::new(SortStrategy::Comparison)
+            .order_by_keys(keys, is_pos, neg_first, &mut reference);
+        assert_canonical(keys, is_pos, neg_first, &reference, &ctx);
+
+        let mut order = Vec::new();
+        SortEngine::new(SortStrategy::Radix).order_by_keys(keys, is_pos, neg_first, &mut order);
+        assert_eq!(order, reference, "{ctx}: radix");
+
+        // Adaptive from assorted seeds: fresh (identity), the exact
+        // answer, reversed, rotated, a full shuffle (forces the
+        // radix fallback once runs exceed MAX_MERGE_RUNS), and a
+        // wrong-length seed that must be ignored.
+        let mut seeds: Vec<(&str, Vec<u32>)> = vec![
+            ("identity", (0..n as u32).collect()),
+            ("exact", reference.clone()),
+            ("reversed", reference.iter().rev().copied().collect()),
+        ];
+        if n > 1 {
+            let mut rotated = reference.clone();
+            rotated.rotate_left(n / 2);
+            seeds.push(("rotated", rotated));
+            let mut shuffled: Vec<u32> = (0..n as u32).collect();
+            Rng::new(0xADA7).shuffle(&mut shuffled);
+            seeds.push(("shuffled", shuffled));
+        }
+        for (name, seed) in &seeds {
+            let mut engine = SortEngine::new(SortStrategy::Adaptive);
+            engine.seed_prev(seed);
+            engine.order_by_keys(keys, is_pos, neg_first, &mut order);
+            assert_eq!(order, reference, "{ctx}: adaptive from {name} seed");
+        }
+        let mut engine = SortEngine::new(SortStrategy::Adaptive);
+        let wrong_len: Vec<u32> = (0..n as u32 + 3).collect();
+        engine.seed_prev(&wrong_len); // wrong length: ignored
+        engine.order_by_keys(keys, is_pos, neg_first, &mut order);
+        assert_eq!(order, reference, "{ctx}: adaptive with wrong-length seed");
+    }
+}
+
+#[test]
+fn prop_all_equal_keys_resolve_by_class_then_index() {
+    let mut rng = Rng::new(1);
+    for &value in &[0.0_f64, -0.0, 1.0, -3.5, f64::INFINITY, f64::NAN] {
+        for n in [0usize, 1, 2, 255, 256, 257, 1000] {
+            let keys = vec![value; n];
+            let is_pos = labels(n, 0.3, &mut rng);
+            check_case(&keys, &is_pos, &format!("all-equal {value} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn prop_quantized_heavy_ties() {
+    let mut rng = Rng::new(2);
+    for case in 0..30 {
+        let n = rng.below(1500);
+        let levels = 1 + rng.below(8); // as few as one distinct key
+        let keys: Vec<f64> = (0..n)
+            .map(|_| (rng.below(levels) as f64 - levels as f64 / 2.0) * 0.5)
+            .collect();
+        let is_pos = labels(n, [0.01, 0.1, 0.5][rng.below(3)], &mut rng);
+        check_case(&keys, &is_pos, &format!("quantized case {case} (n={n})"));
+    }
+}
+
+#[test]
+fn prop_near_sorted_and_reverse_sorted() {
+    let mut rng = Rng::new(3);
+    for case in 0..20 {
+        let n = 2 + rng.below(1200);
+        let mut keys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        keys.sort_by(f64::total_cmp);
+        let is_pos = labels(n, 0.2, &mut rng);
+        check_case(&keys, &is_pos, &format!("sorted case {case}"));
+        // a few adjacent transpositions: the adaptive merge regime
+        let swaps = 1 + rng.below(20);
+        for _ in 0..swaps {
+            let i = rng.below(n - 1);
+            keys.swap(i, i + 1);
+        }
+        check_case(&keys, &is_pos, &format!("near-sorted case {case}"));
+        keys.reverse();
+        check_case(&keys, &is_pos, &format!("reverse-sorted case {case}"));
+    }
+}
+
+#[test]
+fn prop_signed_zeros_and_subnormals() {
+    let mut rng = Rng::new(4);
+    let specials = [
+        0.0_f64,
+        -0.0,
+        f64::from_bits(1),             // smallest positive subnormal
+        -f64::from_bits(1),            // smallest negative subnormal
+        f64::from_bits(0x000F_FFFF_FFFF_FFFF), // largest subnormal
+        f64::MIN_POSITIVE,
+        -f64::MIN_POSITIVE,
+        f64::EPSILON,
+        -f64::EPSILON,
+    ];
+    for case in 0..30 {
+        let n = rng.below(800);
+        let keys: Vec<f64> = (0..n).map(|_| specials[rng.below(specials.len())]).collect();
+        let is_pos = labels(n, 0.4, &mut rng);
+        check_case(&keys, &is_pos, &format!("zeros/subnormals case {case}"));
+    }
+    // key_bits itself must separate the signed zeros
+    assert!(key_bits(-0.0) < key_bits(0.0));
+}
+
+#[test]
+fn prop_ulp_adjacent_values_around_2_pow_24() {
+    // The f32 sort-key precision regression family: around 2^24 the
+    // augmented values differ by single f64 ulps once cast through the
+    // hinge-key pipeline; the u64 transform must keep them distinct and
+    // ordered exactly as total_cmp does.
+    let big = 16_777_216.0_f64; // 2^24
+    let mut rng = Rng::new(5);
+    let family: Vec<f64> = (0..6)
+        .flat_map(|k| {
+            let base = big + k as f64;
+            [base, f64::from_bits(base.to_bits() + 1), -base]
+        })
+        .collect();
+    for case in 0..20 {
+        let n = rng.below(600);
+        let keys: Vec<f64> = (0..n).map(|_| family[rng.below(family.len())]).collect();
+        let is_pos = labels(n, 0.15, &mut rng);
+        check_case(&keys, &is_pos, &format!("2^24 family case {case}"));
+    }
+}
+
+#[test]
+fn prop_random_wide_magnitudes() {
+    let mut rng = Rng::new(6);
+    for case in 0..40 {
+        let n = rng.below(2000);
+        let scale = [1e-300, 1e-6, 1.0, 1e6, 1e300][rng.below(5)];
+        let keys: Vec<f64> = (0..n).map(|_| rng.normal() * scale).collect();
+        let is_pos = labels(n, [0.01, 0.3, 0.9][rng.below(3)], &mut rng);
+        check_case(&keys, &is_pos, &format!("wide case {case} (scale {scale})"));
+    }
+}
+
+#[test]
+fn prop_key_bits_is_a_total_cmp_order_isomorphism() {
+    // Random pairs across the full bit space, including NaN payloads:
+    // key_bits(a) < key_bits(b) exactly when a.total_cmp(b) is Less.
+    let mut rng = Rng::new(7);
+    for _ in 0..20_000 {
+        let a = f64::from_bits(
+            ((rng.below(u32::MAX as usize) as u64) << 32) | rng.below(u32::MAX as usize) as u64,
+        );
+        let b = f64::from_bits(
+            ((rng.below(u32::MAX as usize) as u64) << 32) | rng.below(u32::MAX as usize) as u64,
+        );
+        assert_eq!(
+            key_bits(a).cmp(&key_bits(b)),
+            a.total_cmp(&b),
+            "a={a:?} ({:#x}) b={b:?} ({:#x})",
+            a.to_bits(),
+            b.to_bits()
+        );
+    }
+}
+
+#[test]
+fn prop_adaptive_run_threshold_boundary() {
+    // Construct seeds with run counts straddling MAX_MERGE_RUNS so both
+    // the merge path and the radix fallback are exercised on the same
+    // keys, and agree.
+    let n = 4 * MAX_MERGE_RUNS;
+    let mut rng = Rng::new(8);
+    let keys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let is_pos = labels(n, 0.2, &mut rng);
+    let mut reference = Vec::new();
+    SortEngine::new(SortStrategy::Comparison).order_by_keys(&keys, &is_pos, true, &mut reference);
+    for runs_target in [2usize, MAX_MERGE_RUNS - 1, MAX_MERGE_RUNS + 8, n / 2] {
+        // interleave `runs_target` ascending slices of the reference
+        let mut seed = Vec::with_capacity(n);
+        for r in 0..runs_target {
+            seed.extend(reference.iter().skip(r).step_by(runs_target));
+        }
+        let mut engine = SortEngine::new(SortStrategy::Adaptive);
+        engine.seed_prev(&seed);
+        let mut order = Vec::new();
+        engine.order_by_keys(&keys, &is_pos, true, &mut order);
+        assert_eq!(order, reference, "seed with ~{runs_target} runs");
+    }
+}
+
+#[test]
+fn prop_multi_step_adaptive_training_is_bit_identical_to_comparison() {
+    // The end-to-end property the engine relies on: K evolving steps
+    // through the public kernel paths (squared hinge, linear hinge with
+    // its negatives-first ordering, weighted hinge) where the adaptive
+    // workspace carries its previous order from step to step, versus a
+    // from-scratch comparison workspace at every step.  Loss and
+    // gradient must agree bit for bit at each of the K steps.
+    let mut rng = Rng::new(9);
+    for case in 0..6 {
+        let n = 50 + rng.below(500);
+        let mut scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let is_pos = labels(n, [0.05, 0.3][case % 2], &mut rng);
+        let weights: Vec<f32> = (0..n).map(|_| (rng.uniform() * 2.0) as f32).collect();
+        let hinge = LossSpec::Hinge { margin: 1.0 }.build().unwrap();
+        let lhinge = LossSpec::LinearHinge { margin: 1.0 }.build().unwrap();
+        let whinge = WeightedSquaredHinge::new(1.0);
+        let mut adaptive = LossWorkspace::with_sort_strategy(SortStrategy::Adaptive);
+        let mut adaptive_w = LossWorkspace::with_sort_strategy(SortStrategy::Adaptive);
+        for step in 0..5 {
+            let batch = BatchView::new(&scores, &is_pos);
+            let wbatch = BatchView::weighted(&scores, &is_pos, &weights);
+            for (name, kernel) in [("hinge", &hinge), ("lhinge", &lhinge)] {
+                let la = kernel.loss_and_grad(batch, &mut adaptive);
+                let ga = adaptive.grad.clone();
+                let mut fresh = LossWorkspace::with_sort_strategy(SortStrategy::Comparison);
+                let lc = kernel.loss_and_grad(batch, &mut fresh);
+                assert_eq!(
+                    la.to_bits(),
+                    lc.to_bits(),
+                    "case {case} step {step}: {name} loss"
+                );
+                assert_eq!(ga, fresh.grad, "case {case} step {step}: {name} grad");
+            }
+            let la = LossFn::loss_and_grad(&whinge, wbatch, &mut adaptive_w);
+            let ga = adaptive_w.grad.clone();
+            let mut fresh = LossWorkspace::with_sort_strategy(SortStrategy::Comparison);
+            let lc = LossFn::loss_and_grad(&whinge, wbatch, &mut fresh);
+            assert_eq!(la.to_bits(), lc.to_bits(), "case {case} step {step}: whinge");
+            assert_eq!(ga, fresh.grad, "case {case} step {step}: whinge grad");
+            // evolve the scores a little: the next step's keys are
+            // near-sorted relative to the carried adaptive order
+            for s in scores.iter_mut() {
+                *s += (rng.normal() * 0.02) as f32;
+            }
+        }
+    }
+}
