@@ -103,6 +103,14 @@ fn main() -> allpairs::Result<()> {
         output.results.len(),
         t0.elapsed().as_secs_f64() / 60.0
     );
+    if !output.failures.is_empty() {
+        eprintln!(
+            "warning: {} job(s) failed and are missing from the reports; \
+             `allpairs sweep --resume --out {}` retries only those",
+            output.failures.len(),
+            out.display()
+        );
+    }
     println!("\n== Table 2: median selected hyper-parameters ==\n");
     print!("{}", std::fs::read_to_string(out.join("table2.md"))?);
     println!("\n== Figure 3: test AUC (mean ± sd over seeds) ==\n");

@@ -1,7 +1,16 @@
 //! Table 2 + Figure 3 orchestration: generate data, expand the grid,
 //! run the sweep, select, aggregate, and emit reports.
+//!
+//! Crash-resume (DESIGN.md §10): the sweep journal
+//! (`sweep_results.jsonl`) is append-only and flushed per record.  A
+//! fresh sweep *rotates* a leftover journal aside (never truncates it);
+//! a resumed sweep replays it with the lenient loader, repairs a torn
+//! tail, skips every job whose [`Job::id`] already has a record, and
+//! appends the rest.  Because runs are seed-reproducible, an
+//! interrupted-then-resumed sweep yields the same record set as an
+//! uninterrupted one.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -9,10 +18,12 @@ use crate::config::SweepConfig;
 use crate::data::synth;
 use crate::report::figures::write_csv;
 use crate::report::table::{figure3_table, table2};
+use crate::sweep::grid::{self, Job};
 use crate::sweep::runner::JobData;
-use crate::sweep::scheduler::{run_sweep_with, ProgressFn};
+use crate::sweep::scheduler::{run_sweep_opts, JobFailure, ProgressFn, RetryPolicy, SweepOptions};
 use crate::sweep::select::{aggregate, select_per_seed, Cell};
-use crate::sweep::{grid, results, RunResult};
+use crate::sweep::{results, RunResult};
+use crate::util::fsio;
 
 /// Generate (and cache in memory) the shared dataset pools for a config.
 pub fn build_datasets(config: &SweepConfig) -> crate::Result<HashMap<String, JobData>> {
@@ -40,6 +51,20 @@ pub fn build_datasets(config: &SweepConfig) -> crate::Result<HashMap<String, Job
 pub struct SweepOutput {
     pub results: Vec<RunResult>,
     pub cells: Vec<Cell>,
+    /// Jobs that produced no result (already surfaced FAILED via
+    /// progress; callers print a summary so they are never silent).
+    pub failures: Vec<JobFailure>,
+    /// Jobs satisfied from the journal instead of re-run (`--resume`).
+    pub replayed: usize,
+}
+
+/// Orchestration knobs beyond the config.
+#[derive(Debug, Clone, Default)]
+pub struct RunOptions {
+    /// Replay an existing journal and complete only the missing jobs.
+    pub resume: bool,
+    /// Retry policy for transient job failures.
+    pub retry: RetryPolicy,
 }
 
 /// Run the full cross-validation experiment on `config.backend` and
@@ -50,34 +75,104 @@ pub fn run(
     out_dir: &Path,
     progress: Option<ProgressFn>,
 ) -> crate::Result<SweepOutput> {
+    run_with_options(config, out_dir, progress, &RunOptions::default())
+}
+
+/// [`run`] with resume/retry control (the `allpairs sweep --resume`
+/// entry point).
+pub fn run_with_options(
+    config: &SweepConfig,
+    out_dir: &Path,
+    progress: Option<ProgressFn>,
+    options: &RunOptions,
+) -> crate::Result<SweepOutput> {
     std::fs::create_dir_all(out_dir)?;
+    let journal = out_dir.join("sweep_results.jsonl");
+    let mut jobs = grid::expand(config);
+
+    // Replay or rotate an existing journal — never truncate one.
+    let mut prior: Vec<RunResult> = Vec::new();
+    if options.resume {
+        if journal.exists() {
+            let replay = results::repair_journal(&journal)?;
+            if replay.torn_bytes > 0 || replay.missing_newline {
+                eprintln!(
+                    "resume: repaired torn journal tail ({} bytes dropped)",
+                    replay.torn_bytes
+                );
+            }
+            prior = replay.results;
+            let grid_ids: HashSet<String> = jobs.iter().map(|j| j.id()).collect();
+            let known = prior.len();
+            prior.retain(|r| grid_ids.contains(&r.job.id()));
+            if prior.len() < known {
+                eprintln!(
+                    "resume: ignoring {} journal record(s) outside the configured grid",
+                    known - prior.len()
+                );
+            }
+            let done: HashSet<String> = prior.iter().map(|r| r.job.id()).collect();
+            jobs.retain(|j: &Job| !done.contains(&j.id()));
+        }
+    } else if journal.exists() && std::fs::metadata(&journal)?.len() > 0 {
+        let rotated = rotate_path(&journal)?;
+        eprintln!(
+            "note: existing journal rotated to {} (use --resume to continue it)",
+            rotated.display()
+        );
+    }
+    let replayed = prior.len();
+
     let datasets = build_datasets(config)?;
-    let jobs = grid::expand(config);
     // Incremental persistence: each completed run lands in the JSONL
-    // immediately, so a truncated sweep remains analyzable via `report`.
-    let mut writer = results::JsonlWriter::create(out_dir.join("sweep_results.jsonl"))?;
+    // immediately (append mode, flushed per record), so a crashed sweep
+    // remains analyzable via `report` and resumable via `--resume`.
+    let mut writer = results::JsonlWriter::append_to(&journal)?;
     let on_result: crate::sweep::scheduler::OnResultFn = Box::new(move |r| {
         let _ = writer.append(r);
     });
-    let run_results = run_sweep_with(
+    let outcome = run_sweep_opts(
         &config.backend,
         jobs,
         datasets,
-        config.workers,
-        progress,
-        Some(on_result),
+        SweepOptions {
+            workers: config.workers,
+            retry: options.retry,
+            progress,
+            on_result: Some(on_result),
+        },
     )?;
-    let output = summarize(run_results, out_dir)?;
-    Ok(output)
+    let mut all = prior;
+    all.extend(outcome.results);
+    let output = summarize(all, out_dir)?;
+    Ok(SweepOutput {
+        failures: outcome.failures,
+        replayed,
+        ..output
+    })
+}
+
+/// First free `<name>.N.bak` beside `path`, with the rename done.
+fn rotate_path(path: &Path) -> crate::Result<std::path::PathBuf> {
+    for n in 1..10_000u32 {
+        let candidate = path.with_extension(format!("jsonl.{n}.bak"));
+        if !candidate.exists() {
+            std::fs::rename(path, &candidate)?;
+            return Ok(candidate);
+        }
+    }
+    anyhow::bail!("no free rotation slot for {}", path.display())
 }
 
 /// Selection + aggregation + report emission (separated so `report`ing
-/// can re-run from a saved JSONL without re-training).
+/// can re-run from a saved JSONL without re-training).  Report files
+/// are written atomically: a crash mid-summarize leaves the previous
+/// complete reports, never torn ones.
 pub fn summarize(run_results: Vec<RunResult>, out_dir: &Path) -> crate::Result<SweepOutput> {
     let selections = select_per_seed(&run_results);
     let cells = aggregate(&selections);
-    std::fs::write(out_dir.join("table2.md"), table2(&cells))?;
-    std::fs::write(out_dir.join("fig3.md"), figure3_table(&cells))?;
+    fsio::write_atomic(out_dir.join("table2.md"), table2(&cells).as_bytes())?;
+    fsio::write_atomic(out_dir.join("fig3.md"), figure3_table(&cells).as_bytes())?;
     let rows: Vec<Vec<String>> = cells
         .iter()
         .map(|c| {
@@ -99,6 +194,8 @@ pub fn summarize(run_results: Vec<RunResult>, out_dir: &Path) -> crate::Result<S
     Ok(SweepOutput {
         results: run_results,
         cells,
+        failures: Vec::new(),
+        replayed: 0,
     })
 }
 
@@ -125,5 +222,22 @@ mod tests {
             ..Default::default()
         };
         assert!(build_datasets(&config).is_err());
+    }
+
+    #[test]
+    fn rotate_finds_free_slot() {
+        let dir = std::env::temp_dir().join(format!("allpairs_rotate_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sweep_results.jsonl");
+        std::fs::write(&p, b"one\n").unwrap();
+        let r1 = rotate_path(&p).unwrap();
+        assert!(r1.to_string_lossy().ends_with("sweep_results.jsonl.1.bak"));
+        std::fs::write(&p, b"two\n").unwrap();
+        let r2 = rotate_path(&p).unwrap();
+        assert!(r2.to_string_lossy().ends_with("sweep_results.jsonl.2.bak"));
+        assert!(!p.exists());
+        assert_eq!(std::fs::read(&r1).unwrap(), b"one\n");
+        assert_eq!(std::fs::read(&r2).unwrap(), b"two\n");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -343,13 +343,9 @@ pub fn write_json(
         ("quick", Json::Bool(quick)),
         ("records", Json::Arr(records.iter().map(|r| r.to_json()).collect())),
     ]);
-    if let Some(parent) = path.as_ref().parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)?;
-        }
-    }
-    std::fs::write(path, doc.dumps())?;
-    Ok(())
+    // Atomic replace (temp + fsync + rename): a crash mid-bench never
+    // leaves a torn BENCH_train.json for CI to misparse.
+    crate::util::fsio::write_atomic(path, doc.dumps().as_bytes())
 }
 
 #[cfg(test)]

@@ -52,6 +52,10 @@ COMMANDS
       --patience P      early-stop after P stale epochs  [off]
       --sampling MODES  comma-separated batch sampling axis
                         (preserve | rebalance | rebalance:F)
+      --resume          replay an interrupted sweep's journal and run
+                        only the missing jobs (same config + seed =>
+                        same final record set as an uninterrupted run)
+      --retries N       attempts per job for transient errors  [3]
   train             one training run (streaming epoch loop)
       --dataset D --model M --batch B --lr LR
       --imratio R --epochs E --seed S --max-train N
@@ -157,7 +161,7 @@ fn cmd_timing(args: &Args, out: &Path) -> allpairs::Result<()> {
 fn cmd_sweep(args: &Args, artifacts: &Path, out: &Path) -> allpairs::Result<()> {
     args.expect_known(&[
         "artifacts", "out", "backend", "config", "smoke", "workers", "epochs", "patience",
-        "sampling",
+        "sampling", "resume", "retries",
     ])?;
     let mut cfg = match args.get_opt("config") {
         Some(path) => SweepConfig::load(path)?,
@@ -202,12 +206,38 @@ fn cmd_sweep(args: &Args, artifacts: &Path, out: &Path) -> allpairs::Result<()> 
     let progress: allpairs::sweep::scheduler::ProgressFn = Box::new(|done, total, msg| {
         eprintln!("[{done}/{total}] {msg}");
     });
-    let output = cv::run(&cfg, out, Some(progress))?;
+    let mut run_opts = cv::RunOptions {
+        resume: args.flag("resume"),
+        ..cv::RunOptions::default()
+    };
+    run_opts.retry.max_attempts = args.get("retries", run_opts.retry.max_attempts)?;
+    let output = cv::run_with_options(&cfg, out, Some(progress), &run_opts)?;
+    let replayed = if output.replayed > 0 {
+        format!(" ({} replayed from journal)", output.replayed)
+    } else {
+        String::new()
+    };
     println!(
-        "sweep finished: {} results in {:.1}s",
+        "sweep finished: {} results{replayed} in {:.1}s",
         output.results.len(),
         t0.elapsed().as_secs_f64()
     );
+    if !output.failures.is_empty() {
+        eprintln!("{} job(s) FAILED:", output.failures.len());
+        for f in output.failures.iter().take(3) {
+            eprintln!(
+                "  {} ({} attempt{}): {}",
+                f.job_id,
+                f.attempts,
+                if f.attempts == 1 { "" } else { "s" },
+                f.error
+            );
+        }
+        if output.failures.len() > 3 {
+            eprintln!("  ... and {} more", output.failures.len() - 3);
+        }
+        eprintln!("re-run with --resume to retry only the missing jobs");
+    }
     println!("\n== Table 2 (median selected hyper-parameters)\n");
     print!(
         "{}",
@@ -405,7 +435,16 @@ fn cmd_report(args: &Args, out: &Path) -> allpairs::Result<()> {
     let results_path = args
         .get_opt("results")
         .ok_or_else(|| anyhow::anyhow!("--results FILE required"))?;
-    let run_results = results::load_jsonl(results_path)?;
+    // Lenient load (read-only): a journal truncated by a crash is still
+    // fully analyzable from its complete lines.
+    let replay = results::load_jsonl_lenient(&results_path)?;
+    if replay.torn_bytes > 0 {
+        eprintln!(
+            "note: journal has a torn tail ({} bytes ignored); `sweep --resume` repairs it",
+            replay.torn_bytes
+        );
+    }
+    let run_results = replay.results;
     eprintln!("loaded {} results", run_results.len());
     let output = cv::summarize(run_results, out)?;
     println!(

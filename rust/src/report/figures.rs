@@ -13,9 +13,6 @@ pub fn write_csv(
     header: &[&str],
     rows: &[Vec<String>],
 ) -> crate::Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent)?;
-    }
     let mut s = String::new();
     s.push_str(&header.join(","));
     s.push('\n');
@@ -23,8 +20,9 @@ pub fn write_csv(
         s.push_str(&row.join(","));
         s.push('\n');
     }
-    std::fs::write(path, s)?;
-    Ok(())
+    // Atomic replace: a crash mid-write leaves the previous complete
+    // CSV, never a torn one (DESIGN.md §10).
+    crate::util::fsio::write_atomic(path, s.as_bytes())
 }
 
 /// A named (x, y) series for plotting.

@@ -11,10 +11,16 @@
 //! * [`scheduler`] — executes the job list on worker threads; each
 //!   worker connects its own backend from a shared
 //!   [`crate::runtime::BackendSpec`] (the PJRT client is not `Send`).
+//!   Hardened for long sweeps: panicking jobs are isolated behind
+//!   `catch_unwind`, transient errors retried with deterministic
+//!   backoff, and every failure surfaced in a
+//!   [`scheduler::SweepOutcome`] (DESIGN.md §10).
 //! * [`select`] — max-validation-AUC selection per (dataset, imratio,
 //!   loss, seed), then the paper's aggregations: median selected
 //!   hyper-parameters (Table 2) and mean ± sd test AUC (Figure 3).
-//! * [`results`] — result records + JSONL persistence.
+//! * [`results`] — result records + JSONL persistence: an append-only
+//!   journal with a lenient torn-tail loader, the substrate of
+//!   `allpairs sweep --resume`.
 
 pub mod grid;
 pub mod results;

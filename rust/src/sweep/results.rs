@@ -1,4 +1,10 @@
 //! Result records and JSONL persistence.
+//!
+//! The sweep journal (`sweep_results.jsonl`) is the crash-resume
+//! substrate (DESIGN.md §10): one flushed line per completed job, opened
+//! in *append* mode by resumed sweeps, replayed by the lenient loader
+//! which recovers every complete line of a torn file and truncates the
+//! partial tail so appends never concatenate onto garbage.
 
 use std::io::{BufRead, Write};
 use std::path::Path;
@@ -77,12 +83,42 @@ pub struct JsonlWriter {
 }
 
 impl JsonlWriter {
+    /// Create a *new* journal.  Refuses to clobber an existing file —
+    /// restarting a sweep must never destroy the record that could
+    /// resume it; rotate or use [`JsonlWriter::append_to`] instead.
     pub fn create(path: impl AsRef<Path>) -> crate::Result<Self> {
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
         }
+        let file = std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(path.as_ref())
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "journal {} already exists or cannot be created ({e}); \
+                     rotate it or resume with append_to",
+                    path.as_ref().display()
+                )
+            })?;
         Ok(Self {
-            file: std::io::BufWriter::new(std::fs::File::create(path)?),
+            file: std::io::BufWriter::new(file),
+        })
+    }
+
+    /// Open a journal in append mode (created if missing) — the
+    /// `--resume` entry point: prior records are preserved verbatim.
+    pub fn append_to(path: impl AsRef<Path>) -> crate::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(Self {
+            file: std::io::BufWriter::new(
+                std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(path)?,
+            ),
         })
     }
 
@@ -94,21 +130,19 @@ impl JsonlWriter {
     }
 }
 
-/// Append results to a JSONL file.
+/// Write `results` as a complete JSONL file (atomic replace).
 pub fn save_jsonl(path: impl AsRef<Path>, results: &[RunResult]) -> crate::Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let mut buf = String::new();
     for r in results {
-        f.write_all(r.to_json().dumps().as_bytes())?;
-        f.write_all(b"\n")?;
+        buf.push_str(&r.to_json().dumps());
+        buf.push('\n');
     }
-    f.flush()?;
-    Ok(())
+    crate::util::fsio::write_atomic(path, buf.as_bytes())
 }
 
-/// Load results from a JSONL file.
+/// Load results from a JSONL file (strict: any malformed line is an
+/// error).  Use [`load_jsonl_lenient`] to replay a possibly-torn
+/// journal.
 pub fn load_jsonl(path: impl AsRef<Path>) -> crate::Result<Vec<RunResult>> {
     let f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut out = Vec::new();
@@ -120,6 +154,100 @@ pub fn load_jsonl(path: impl AsRef<Path>) -> crate::Result<Vec<RunResult>> {
         out.push(RunResult::from_json(&Json::parse(&line)?)?);
     }
     Ok(out)
+}
+
+/// Outcome of a lenient journal replay.
+#[derive(Debug)]
+pub struct JournalReplay {
+    /// Every record recovered from complete (parseable) lines.
+    pub results: Vec<RunResult>,
+    /// Byte length of the clean prefix: all recovered lines, each
+    /// newline-terminated.  Everything past it is torn tail.
+    pub clean_len: u64,
+    /// Bytes past `clean_len` (0 = the journal was clean).
+    pub torn_bytes: u64,
+    /// The final recovered record parsed but lacked its newline (a
+    /// crash between the write and the `\n`); repair re-terminates it.
+    pub missing_newline: bool,
+}
+
+/// Replay a journal, tolerating a torn final record: every complete
+/// line is recovered; an unparseable *tail* (truncated mid-record by a
+/// crash) is measured, not fatal.  Corruption anywhere but the tail is
+/// still a hard error — that is not what a crash produces.
+pub fn load_jsonl_lenient(path: impl AsRef<Path>) -> crate::Result<JournalReplay> {
+    let bytes = std::fs::read(path.as_ref())?;
+    let mut results = Vec::new();
+    let mut clean_len = 0u64; // end of the last good, terminated line
+    let mut missing_newline = false;
+    let mut offset = 0usize;
+    while offset < bytes.len() {
+        let (line_end, terminated) = match bytes[offset..].iter().position(|&b| b == b'\n') {
+            Some(i) => (offset + i, true),
+            None => (bytes.len(), false),
+        };
+        let raw = &bytes[offset..line_end];
+        let next = if terminated { line_end + 1 } else { line_end };
+        let is_blank = raw.iter().all(|b| b.is_ascii_whitespace());
+        if is_blank {
+            // blank lines are legal padding; they stay in the clean prefix
+            if terminated {
+                clean_len = next as u64;
+            }
+            offset = next;
+            continue;
+        }
+        let parsed = std::str::from_utf8(raw)
+            .map_err(anyhow::Error::from)
+            .and_then(|text| Ok(RunResult::from_json(&Json::parse(text)?)?));
+        match parsed {
+            Ok(r) => {
+                results.push(r);
+                if terminated {
+                    clean_len = next as u64;
+                } else {
+                    // recovered, but the journal ends without '\n':
+                    // appending would concatenate onto this record.
+                    clean_len = line_end as u64;
+                    missing_newline = true;
+                }
+            }
+            Err(e) => {
+                // Only the *final* chunk of the file may be torn.
+                anyhow::ensure!(
+                    next >= bytes.len(),
+                    "corrupt journal line at byte {offset} (not a torn tail): {e}"
+                );
+            }
+        }
+        offset = next;
+    }
+    // In the missing-newline case clean_len reaches the file end, so
+    // torn_bytes is 0: nothing is dropped, only the '\n' restored.
+    Ok(JournalReplay {
+        results,
+        torn_bytes: bytes.len() as u64 - clean_len,
+        clean_len,
+        missing_newline,
+    })
+}
+
+/// Replay `path` leniently and repair it in place for appending: the
+/// torn tail is truncated and a missing final newline restored, so the
+/// next [`JsonlWriter::append_to`] writes a well-formed journal.
+pub fn repair_journal(path: impl AsRef<Path>) -> crate::Result<JournalReplay> {
+    let replay = load_jsonl_lenient(path.as_ref())?;
+    if replay.torn_bytes > 0 || replay.missing_newline {
+        let f = std::fs::OpenOptions::new().write(true).open(path.as_ref())?;
+        f.set_len(replay.clean_len)?;
+        f.sync_all()?;
+        if replay.missing_newline {
+            let mut f = std::fs::OpenOptions::new().append(true).open(path.as_ref())?;
+            f.write_all(b"\n")?;
+            f.sync_all()?;
+        }
+    }
+    Ok(replay)
 }
 
 #[cfg(test)]
@@ -150,9 +278,14 @@ mod tests {
         }
     }
 
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("allpairs_results_{}_{name}", std::process::id()))
+    }
+
     #[test]
     fn jsonl_roundtrip() {
-        let path = std::env::temp_dir().join("allpairs_results_test.jsonl");
+        let path = tmp("roundtrip.jsonl");
+        let _ = std::fs::remove_file(&path);
         let rs = vec![fake(0, 0.9), fake(1, 0.8)];
         save_jsonl(&path, &rs).unwrap();
         let back = load_jsonl(&path).unwrap();
@@ -163,12 +296,100 @@ mod tests {
 
     #[test]
     fn skips_blank_lines() {
-        let path = std::env::temp_dir().join("allpairs_results_blank.jsonl");
+        let path = tmp("blank.jsonl");
         let rs = vec![fake(0, 0.9)];
         save_jsonl(&path, &rs).unwrap();
         let mut text = std::fs::read_to_string(&path).unwrap();
         text.push_str("\n\n");
         std::fs::write(&path, text).unwrap();
         assert_eq!(load_jsonl(&path).unwrap().len(), 1);
+        let replay = load_jsonl_lenient(&path).unwrap();
+        assert_eq!(replay.results.len(), 1);
+        assert_eq!(replay.torn_bytes, 0);
+    }
+
+    #[test]
+    fn create_refuses_to_clobber_and_append_preserves() {
+        let path = tmp("noclobber.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.append(&fake(0, 0.9)).unwrap();
+        w.append(&fake(1, 0.8)).unwrap();
+        drop(w);
+        // a second `create` on the same path must fail, not truncate
+        let err = JsonlWriter::create(&path).unwrap_err().to_string();
+        assert!(err.contains("already exists"), "{err}");
+        assert_eq!(load_jsonl(&path).unwrap().len(), 2, "create clobbered the journal");
+        // append mode extends without touching prior records
+        let before = std::fs::read(&path).unwrap();
+        let mut w = JsonlWriter::append_to(&path).unwrap();
+        w.append(&fake(2, 0.7)).unwrap();
+        drop(w);
+        let after = std::fs::read(&path).unwrap();
+        assert!(after.starts_with(&before), "append rewrote prior bytes");
+        let all = load_jsonl(&path).unwrap();
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[2].job.seed, 2);
+    }
+
+    #[test]
+    fn lenient_loader_recovers_clean_file_fully() {
+        let path = tmp("lenient_clean.jsonl");
+        save_jsonl(&path, &[fake(0, 0.9), fake(1, 0.8)]).unwrap();
+        let replay = load_jsonl_lenient(&path).unwrap();
+        assert_eq!(replay.results.len(), 2);
+        assert_eq!(replay.torn_bytes, 0);
+        assert!(!replay.missing_newline);
+        assert_eq!(replay.clean_len, std::fs::metadata(&path).unwrap().len());
+    }
+
+    #[test]
+    fn lenient_loader_truncates_torn_tail() {
+        let path = tmp("lenient_torn.jsonl");
+        save_jsonl(&path, &[fake(0, 0.9), fake(1, 0.8)]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let keep = bytes.len() - 17; // chop into the final record
+        bytes.truncate(keep);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_jsonl(&path).is_err(), "strict loader must reject the torn line");
+        let replay = repair_journal(&path).unwrap();
+        assert_eq!(replay.results.len(), 1);
+        assert!(replay.torn_bytes > 0);
+        // after repair: strict-loadable, and appendable
+        assert_eq!(load_jsonl(&path).unwrap().len(), 1);
+        let mut w = JsonlWriter::append_to(&path).unwrap();
+        w.append(&fake(5, 0.5)).unwrap();
+        drop(w);
+        let all = load_jsonl(&path).unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[1].job.seed, 5);
+    }
+
+    #[test]
+    fn lenient_loader_restores_missing_final_newline() {
+        let path = tmp("lenient_nonewline.jsonl");
+        save_jsonl(&path, &[fake(0, 0.9), fake(1, 0.8)]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.pop(); // drop only the trailing '\n'
+        std::fs::write(&path, &bytes).unwrap();
+        let replay = repair_journal(&path).unwrap();
+        assert_eq!(replay.results.len(), 2, "unterminated final record is recoverable");
+        assert!(replay.missing_newline);
+        let mut w = JsonlWriter::append_to(&path).unwrap();
+        w.append(&fake(7, 0.6)).unwrap();
+        drop(w);
+        assert_eq!(load_jsonl(&path).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn lenient_loader_rejects_mid_file_corruption() {
+        let path = tmp("lenient_midfile.jsonl");
+        save_jsonl(&path, &[fake(0, 0.9), fake(1, 0.8)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // drop the quotes: an unquoted key is a JSON parse error
+        let corrupted = text.replacen("\"diverged\"", "diverged", 1);
+        std::fs::write(&path, corrupted).unwrap();
+        // first line is broken but the file continues: not a torn tail
+        assert!(load_jsonl_lenient(&path).is_err());
     }
 }

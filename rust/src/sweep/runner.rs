@@ -32,6 +32,62 @@ pub struct JobData {
     pub test: Arc<Dataset>,
 }
 
+/// Failpoint evaluated at the top of every job attempt (see
+/// [`crate::util::failpoint`]): `error` mode exercises the scheduler's
+/// retry path, `panic` mode its panic isolation, `exit` mode a hard
+/// crash for end-to-end `--resume` tests.
+pub const FP_RUN_JOB: &str = "sweep.run_job";
+
+/// A failed job attempt, classified for the retry policy: panics are
+/// bugs (never retried), plain errors may be transient.
+#[derive(Debug, Clone)]
+pub struct JobError {
+    pub message: String,
+    pub panicked: bool,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.panicked {
+            write!(f, "panicked: {}", self.message)
+        } else {
+            f.write_str(&self.message)
+        }
+    }
+}
+
+/// [`run_job`] behind a panic boundary: a panicking job becomes a
+/// reported [`JobError`] instead of unwinding the worker thread (which
+/// would silently lose the job and, if the panic ever crossed a held
+/// lock, poison the shared queue for every other worker).
+pub fn run_job_guarded(backend: &dyn Backend, job: &Job, data: &JobData) -> Result<RunResult, JobError> {
+    let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        crate::util::failpoint::check(FP_RUN_JOB)?;
+        run_job(backend, job, data)
+    }));
+    match attempt {
+        Ok(Ok(result)) => Ok(result),
+        Ok(Err(e)) => Err(JobError {
+            message: format!("{e:#}"),
+            panicked: false,
+        }),
+        Err(payload) => Err(JobError {
+            message: panic_message(payload),
+            panicked: true,
+        }),
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
 /// Run one job to completion on the given backend.
 pub fn run_job(backend: &dyn Backend, job: &Job, data: &JobData) -> crate::Result<RunResult> {
     let t0 = std::time::Instant::now();

@@ -1,4 +1,4 @@
-//! Multi-threaded sweep execution.
+//! Multi-threaded sweep execution, hardened for long-running sweeps.
 //!
 //! Workers receive a [`BackendSpec`] (plain `Send + Sync` data) and
 //! connect their own backend instance: the PJRT client is `Rc`-based
@@ -7,17 +7,27 @@
 //! stream back over a channel so the caller can persist incrementally
 //! and print progress.
 //!
+//! Crash-safety (DESIGN.md §10): every job attempt runs behind a panic
+//! boundary ([`super::runner::run_job_guarded`]), so a panicking job is
+//! reported as a failure while the other workers keep draining the
+//! queue; the queue lock is *recovered*, never unwrapped, so even a
+//! poisoned mutex cannot cascade; transient errors are retried with a
+//! deterministic bounded backoff; and the caller receives a
+//! [`SweepOutcome`] carrying both results and per-job failures —
+//! nothing is silently dropped.
+//!
 //! Memory note: the train pools are shared read-only via `Arc`; each
 //! worker's executor/executable cache holds only the (model, loss,
 //! batch) variants its jobs actually touch.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::Duration;
 
 use super::grid::Job;
 use super::results::RunResult;
-use super::runner::{run_job, JobData};
+use super::runner::{run_job_guarded, JobData};
 use crate::runtime::BackendSpec;
 
 /// Progress callback: (finished, total, last result or error message).
@@ -26,16 +36,93 @@ pub type ProgressFn = Box<dyn FnMut(usize, usize, &str) + Send>;
 /// Per-result callback (e.g. incremental JSONL persistence).
 pub type OnResultFn = Box<dyn FnMut(&RunResult) + Send>;
 
+/// Failpoint evaluated on the collector thread after each result is
+/// recorded (journal append + progress): `exit` mode simulates a crash
+/// with exactly N durable journal records.
+pub const FP_RECORD: &str = "sweep.record";
+
+/// One job that did not produce a result, with the error of its final
+/// attempt.
+#[derive(Debug, Clone)]
+pub struct JobFailure {
+    /// [`Job::id`] of the failed job (or `worker-N` for a worker that
+    /// could not connect its backend).
+    pub job_id: String,
+    /// Error message of the last attempt.
+    pub error: String,
+    /// Attempts made (1 = no retries were possible or allowed).
+    pub attempts: usize,
+    /// The final attempt panicked (panics are never retried).
+    pub panicked: bool,
+}
+
+/// Everything a sweep produced: completed results *and* failures.
+/// Callers decide how loud to be about partial failure; the scheduler
+/// no longer swallows errors when some jobs succeed.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    pub results: Vec<RunResult>,
+    pub failures: Vec<JobFailure>,
+}
+
+/// Bounded retry with deterministic backoff for transient job errors.
+/// Backoff for attempt `k` (1-based) is `base * 2^(k-1)` — deterministic
+/// so reproducibility holds wall-clock-wise too; panics and unknown
+/// datasets are permanent and never retried.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts per job (1 = no retry).
+    pub max_attempts: usize,
+    /// Base backoff before the second attempt.
+    pub base_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff slept *after* failed attempt `attempt` (1-based).
+    pub fn backoff_after(&self, attempt: usize) -> Duration {
+        // cap the shift so a mis-configured policy cannot overflow
+        self.base_backoff * (1u32 << (attempt - 1).min(16) as u32)
+    }
+}
+
+/// Scheduler knobs beyond the job list.
+#[derive(Default)]
+pub struct SweepOptions {
+    pub workers: usize,
+    pub retry: RetryPolicy,
+    pub progress: Option<ProgressFn>,
+    pub on_result: Option<OnResultFn>,
+}
+
 /// Execute `jobs` on `workers` threads.  `datasets` maps dataset name →
-/// shared data.  Failed jobs are reported (not retried) and skipped.
+/// shared data.  Failed jobs are retried per the default policy and
+/// reported in the outcome.
 pub fn run_sweep(
     backend: &BackendSpec,
     jobs: Vec<Job>,
     datasets: HashMap<String, JobData>,
     workers: usize,
     progress: Option<ProgressFn>,
-) -> crate::Result<Vec<RunResult>> {
-    run_sweep_with(backend, jobs, datasets, workers, progress, None)
+) -> crate::Result<SweepOutcome> {
+    run_sweep_opts(
+        backend,
+        jobs,
+        datasets,
+        SweepOptions {
+            workers,
+            progress,
+            ..SweepOptions::default()
+        },
+    )
 }
 
 /// [`run_sweep`] with an additional per-result hook, invoked on the
@@ -45,13 +132,51 @@ pub fn run_sweep_with(
     jobs: Vec<Job>,
     datasets: HashMap<String, JobData>,
     workers: usize,
-    mut progress: Option<ProgressFn>,
-    mut on_result: Option<OnResultFn>,
-) -> crate::Result<Vec<RunResult>> {
+    progress: Option<ProgressFn>,
+    on_result: Option<OnResultFn>,
+) -> crate::Result<SweepOutcome> {
+    run_sweep_opts(
+        backend,
+        jobs,
+        datasets,
+        SweepOptions {
+            workers,
+            progress,
+            on_result,
+            ..SweepOptions::default()
+        },
+    )
+}
+
+/// Lock the queue, recovering from poisoning: the queue itself (a
+/// `VecDeque` of plain data) is always in a consistent state between
+/// `push`/`pop` calls, so a worker that panicked while holding the lock
+/// cannot leave it mid-mutation — recovery is safe, and it keeps one
+/// bad job from cascading into every worker.
+fn lock_queue(queue: &Mutex<VecDeque<Job>>) -> MutexGuard<'_, VecDeque<Job>> {
+    queue.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Full-control entry point: retry policy, progress and persistence
+/// hooks.  Returns `Err` only when *no* job produced a result (total
+/// loss); partial failure is data, in [`SweepOutcome::failures`].
+pub fn run_sweep_opts(
+    backend: &BackendSpec,
+    jobs: Vec<Job>,
+    datasets: HashMap<String, JobData>,
+    options: SweepOptions,
+) -> crate::Result<SweepOutcome> {
+    let SweepOptions {
+        workers,
+        retry,
+        mut progress,
+        mut on_result,
+    } = options;
+    anyhow::ensure!(retry.max_attempts >= 1, "retry.max_attempts must be >= 1");
     let total = jobs.len();
-    let queue = Arc::new(Mutex::new(std::collections::VecDeque::from(jobs)));
+    let queue = Arc::new(Mutex::new(VecDeque::from(jobs)));
     let datasets = Arc::new(datasets);
-    let (tx, rx) = mpsc::channel::<Result<RunResult, String>>();
+    let (tx, rx) = mpsc::channel::<Result<RunResult, JobFailure>>();
     let done = Arc::new(AtomicUsize::new(0));
     let workers = workers.clamp(1, total.max(1));
 
@@ -87,22 +212,51 @@ pub fn run_sweep_with(
                     let backend = match spec.connect() {
                         Ok(b) => b,
                         Err(e) => {
-                            let _ = tx.send(Err(format!("worker {worker_id}: {e}")));
+                            let _ = tx.send(Err(JobFailure {
+                                job_id: format!("worker-{worker_id}"),
+                                error: format!("backend connect failed: {e:#}"),
+                                attempts: 1,
+                                panicked: false,
+                            }));
                             return;
                         }
                     };
                     loop {
-                        let job = {
-                            let mut q = queue.lock().unwrap();
-                            match q.pop_front() {
-                                Some(j) => j,
-                                None => break,
-                            }
+                        let job = match lock_queue(&queue).pop_front() {
+                            Some(j) => j,
+                            None => break,
                         };
                         let outcome = match datasets.get(&job.dataset) {
-                            None => Err(format!("{}: unknown dataset", job.id())),
-                            Some(data) => run_job(backend.as_ref(), &job, data)
-                                .map_err(|e| format!("{}: {e}", job.id())),
+                            // permanent config error: no retry
+                            None => Err(JobFailure {
+                                job_id: job.id(),
+                                error: "unknown dataset".into(),
+                                attempts: 1,
+                                panicked: false,
+                            }),
+                            Some(data) => {
+                                let mut attempt = 1;
+                                loop {
+                                    match run_job_guarded(backend.as_ref(), &job, data) {
+                                        Ok(r) => break Ok(r),
+                                        Err(e) => {
+                                            // panics are bugs, not transients
+                                            let retryable =
+                                                !e.panicked && attempt < retry.max_attempts;
+                                            if !retryable {
+                                                break Err(JobFailure {
+                                                    job_id: job.id(),
+                                                    error: e.to_string(),
+                                                    attempts: attempt,
+                                                    panicked: e.panicked,
+                                                });
+                                            }
+                                            std::thread::sleep(retry.backoff_after(attempt));
+                                            attempt += 1;
+                                        }
+                                    }
+                                }
+                            }
                         };
                         done.fetch_add(1, Ordering::Relaxed);
                         if tx.send(outcome).is_err() {
@@ -116,7 +270,8 @@ pub fn run_sweep_with(
     drop(tx);
 
     let mut results = Vec::with_capacity(total);
-    let mut errors = Vec::new();
+    let mut failures = Vec::new();
+    let mut record_fault = None;
     for outcome in rx {
         let finished = done.load(Ordering::Relaxed);
         match outcome {
@@ -134,22 +289,45 @@ pub fn run_sweep_with(
                     p(finished, total, &msg);
                 }
                 results.push(r);
-            }
-            Err(msg) => {
-                if let Some(p) = progress.as_mut() {
-                    p(finished, total, &format!("FAILED {msg}"));
+                // The crash-simulation hook: hit N here == N results
+                // durably journaled by the on_result hook above.
+                if let Err(e) = crate::util::failpoint::check(FP_RECORD) {
+                    record_fault = Some(e);
+                    break;
                 }
-                errors.push(msg);
+            }
+            Err(f) => {
+                if let Some(p) = progress.as_mut() {
+                    let attempts = if f.attempts > 1 {
+                        format!(" after {} attempts", f.attempts)
+                    } else {
+                        String::new()
+                    };
+                    p(finished, total, &format!("FAILED {}: {}{attempts}", f.job_id, f.error));
+                }
+                failures.push(f);
             }
         }
     }
+    // Stop the workers before joining if the collector bailed early:
+    // dropping the receiver makes every pending send fail, so workers
+    // fall out of their loops instead of blocking forever.
+    drop(rx);
     for h in handles {
         let _ = h.join();
     }
-    if !errors.is_empty() && results.is_empty() {
-        anyhow::bail!("all {} jobs failed; first error: {}", errors.len(), errors[0]);
+    if let Some(e) = record_fault {
+        return Err(e.context("sweep aborted by record failpoint"));
     }
-    Ok(results)
+    if !failures.is_empty() && results.is_empty() && total > 0 {
+        anyhow::bail!(
+            "all {} jobs failed; first error: {}: {}",
+            failures.len(),
+            failures[0].job_id,
+            failures[0].error
+        );
+    }
+    Ok(SweepOutcome { results, failures })
 }
 
 #[cfg(test)]
@@ -157,6 +335,8 @@ mod tests {
     use super::*;
     use crate::data::Dataset;
     use crate::runtime::NativeSpec;
+    use crate::sweep::runner::FP_RUN_JOB;
+    use crate::util::failpoint;
     use std::sync::Arc;
 
     fn tiny_data(dim: usize, n: usize) -> JobData {
@@ -202,21 +382,35 @@ mod tests {
         })
     }
 
+    fn fast_retry(max_attempts: usize) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts,
+            base_backoff: Duration::from_millis(1),
+        }
+    }
+
     #[test]
     fn zero_workers_clamped_and_jobs_complete() {
+        // failpoint state is process-global: any test that drives the
+        // scheduler (and thus hits FP_RUN_JOB) must serialize against
+        // the tests that arm it
+        let _g = failpoint::serial_guard();
         let mut datasets = HashMap::new();
         datasets.insert("toy".to_string(), tiny_data(6, 64));
         let jobs = vec![tiny_job(0), tiny_job(1)];
-        let results = run_sweep(&native_spec(6), jobs, datasets, 0, None).unwrap();
-        assert_eq!(results.len(), 2);
+        let outcome = run_sweep(&native_spec(6), jobs, datasets, 0, None).unwrap();
+        assert_eq!(outcome.results.len(), 2);
+        assert!(outcome.failures.is_empty());
     }
 
     #[test]
     fn unknown_dataset_reports_failure() {
+        let _g = failpoint::serial_guard();
         let mut datasets = HashMap::new();
         datasets.insert("toy".to_string(), tiny_data(6, 64));
         let mut bad = tiny_job(0);
         bad.dataset = "missing".into();
+        let bad_id = bad.id();
         let jobs = vec![bad, tiny_job(1)];
         let failures = Arc::new(AtomicUsize::new(0));
         let seen = failures.clone();
@@ -225,9 +419,12 @@ mod tests {
                 seen.fetch_add(1, Ordering::Relaxed);
             }
         });
-        let results = run_sweep(&native_spec(6), jobs, datasets, 2, Some(progress)).unwrap();
-        // the bad job is reported as FAILED and skipped, the good one completes
-        assert_eq!(results.len(), 1);
+        let outcome = run_sweep(&native_spec(6), jobs, datasets, 2, Some(progress)).unwrap();
+        // the bad job is surfaced as a failure, the good one completes
+        assert_eq!(outcome.results.len(), 1);
+        assert_eq!(outcome.failures.len(), 1);
+        assert_eq!(outcome.failures[0].job_id, bad_id);
+        assert_eq!(outcome.failures[0].attempts, 1, "config errors are not retried");
         assert_eq!(failures.load(Ordering::Relaxed), 1);
     }
 
@@ -236,5 +433,76 @@ mod tests {
         let datasets = HashMap::new(); // nothing registered
         let jobs = vec![tiny_job(0)];
         assert!(run_sweep(&native_spec(6), jobs, datasets, 1, None).is_err());
+    }
+
+    #[test]
+    fn empty_job_list_is_a_clean_noop() {
+        // resume with everything already journaled hits this path
+        let outcome = run_sweep(&native_spec(6), vec![], HashMap::new(), 4, None).unwrap();
+        assert!(outcome.results.is_empty());
+        assert!(outcome.failures.is_empty());
+    }
+
+    #[test]
+    fn transient_errors_are_retried_to_success() {
+        let _g = failpoint::serial_guard();
+        failpoint::arm_str(FP_RUN_JOB, "error@1x2").unwrap();
+        let mut datasets = HashMap::new();
+        datasets.insert("toy".to_string(), tiny_data(6, 64));
+        let outcome = run_sweep_opts(
+            &native_spec(6),
+            vec![tiny_job(0)],
+            datasets,
+            SweepOptions {
+                workers: 1,
+                retry: fast_retry(3),
+                ..SweepOptions::default()
+            },
+        );
+        failpoint::disarm(FP_RUN_JOB);
+        let outcome = outcome.unwrap();
+        // attempts 1 and 2 hit the failpoint; attempt 3 succeeds
+        assert_eq!(outcome.results.len(), 1);
+        assert!(outcome.failures.is_empty());
+        assert_eq!(failpoint::hits(FP_RUN_JOB), 0, "disarmed");
+    }
+
+    #[test]
+    fn exhausted_retries_report_failed_with_attempt_count() {
+        let _g = failpoint::serial_guard();
+        // fires on every one of job 1's three attempts; job 2 (hit 4) runs clean
+        failpoint::arm_str(FP_RUN_JOB, "error@1x3").unwrap();
+        let mut datasets = HashMap::new();
+        datasets.insert("toy".to_string(), tiny_data(6, 64));
+        let outcome = run_sweep_opts(
+            &native_spec(6),
+            vec![tiny_job(0), tiny_job(1)],
+            datasets,
+            SweepOptions {
+                workers: 1,
+                retry: fast_retry(3),
+                ..SweepOptions::default()
+            },
+        );
+        failpoint::disarm(FP_RUN_JOB);
+        let outcome = outcome.unwrap();
+        assert_eq!(outcome.results.len(), 1);
+        assert_eq!(outcome.failures.len(), 1);
+        assert_eq!(outcome.failures[0].attempts, 3);
+        assert!(!outcome.failures[0].panicked);
+        assert!(outcome.failures[0].error.contains("failpoint"));
+    }
+
+    #[test]
+    fn deterministic_backoff_schedule() {
+        let p = RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(50),
+        };
+        assert_eq!(p.backoff_after(1), Duration::from_millis(50));
+        assert_eq!(p.backoff_after(2), Duration::from_millis(100));
+        assert_eq!(p.backoff_after(3), Duration::from_millis(200));
+        // the shift is capped: no overflow panic on silly attempt counts
+        let _ = p.backoff_after(10_000);
     }
 }

@@ -1,30 +1,38 @@
 //! Binary checkpoints of the flat training state.
 //!
-//! Format (little-endian):
+//! Format v2 (little-endian):
 //!
 //! ```text
 //! magic   "APCK"            4 bytes
-//! version u32               = 1
+//! version u32               = 2
 //! count   u32               number of tensors
 //! per tensor:
 //!   rank  u32
 //!   dims  i64 * rank
 //!   data  f32 * prod(dims)
+//! crc32   u32               CRC-32 of every preceding byte
 //! ```
+//!
+//! v1 is the same layout without the CRC footer; [`load`] reads both.
+//! Writes go through [`crate::util::fsio::write_atomic`], so a crash
+//! mid-save leaves the previous checkpoint intact rather than a torn
+//! file; the CRC rejects corruption the rename protocol cannot see
+//! (bit rot, truncation by a foreign tool, bad sectors).
 //!
 //! The tensor order is the manifest's flat `tree_flatten` order, so a
 //! checkpoint written by one run restores exactly into any trainer built
 //! from the same (model, loss) artifacts.
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use crate::runtime::HostTensor;
+use crate::util::crc32::crc32;
 
 const MAGIC: &[u8; 4] = b"APCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// Write a state snapshot to `path`.
+/// Write a state snapshot to `path` (format v2, atomic replace).
 pub fn save(path: impl AsRef<Path>, tensors: &[HostTensor]) -> crate::Result<()> {
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC);
@@ -39,27 +47,46 @@ pub fn save(path: impl AsRef<Path>, tensors: &[HostTensor]) -> crate::Result<()>
             buf.extend_from_slice(&v.to_le_bytes());
         }
     }
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(&buf)?;
-    Ok(())
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    crate::util::fsio::write_atomic(path, &buf)
 }
 
-/// Read a state snapshot from `path`.
+/// Read a state snapshot from `path` (v1 or v2).
 pub fn load(path: impl AsRef<Path>) -> crate::Result<Vec<HostTensor>> {
     let mut bytes = Vec::new();
     std::fs::File::open(path.as_ref())?.read_to_end(&mut bytes)?;
     let mut cursor = 0usize;
     let take = |cursor: &mut usize, n: usize| -> crate::Result<&[u8]> {
-        anyhow::ensure!(*cursor + n <= bytes.len(), "truncated checkpoint");
+        anyhow::ensure!(
+            n <= bytes.len() - *cursor,
+            "truncated checkpoint ({} bytes short)",
+            n - (bytes.len() - *cursor)
+        );
         let s = &bytes[*cursor..*cursor + n];
         *cursor += n;
         Ok(s)
     };
     anyhow::ensure!(take(&mut cursor, 4)? == MAGIC, "bad checkpoint magic");
     let version = u32::from_le_bytes(take(&mut cursor, 4)?.try_into().unwrap());
-    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    let body_len = match version {
+        1 => bytes.len(),
+        2 => {
+            // Verify the CRC footer before trusting any header field.
+            anyhow::ensure!(bytes.len() >= 12 + 4, "truncated checkpoint (no CRC footer)");
+            let body_len = bytes.len() - 4;
+            let stored = u32::from_le_bytes(bytes[body_len..].try_into().unwrap());
+            let actual = crc32(&bytes[..body_len]);
+            anyhow::ensure!(
+                stored == actual,
+                "checkpoint CRC mismatch (stored {stored:08x}, computed {actual:08x}): corrupt file"
+            );
+            body_len
+        }
+        other => anyhow::bail!("unsupported checkpoint version {other}"),
+    };
     let count = u32::from_le_bytes(take(&mut cursor, 4)?.try_into().unwrap()) as usize;
-    let mut tensors = Vec::with_capacity(count);
+    let mut tensors = Vec::with_capacity(count.min(1024));
     for _ in 0..count {
         let rank = u32::from_le_bytes(take(&mut cursor, 4)?.try_into().unwrap()) as usize;
         anyhow::ensure!(rank <= 8, "implausible rank {rank}");
@@ -67,16 +94,35 @@ pub fn load(path: impl AsRef<Path>) -> crate::Result<Vec<HostTensor>> {
         for _ in 0..rank {
             shape.push(i64::from_le_bytes(take(&mut cursor, 8)?.try_into().unwrap()));
         }
-        let elems: i64 = shape.iter().product();
-        anyhow::ensure!(elems >= 0, "negative dims");
-        let raw = take(&mut cursor, elems as usize * 4)?;
+        // Checked header math: adversarial dims must not overflow the
+        // element product or the byte count before the bounds check.
+        let mut elems: u64 = 1;
+        for &d in &shape {
+            anyhow::ensure!(d >= 0, "negative dim {d}");
+            elems = elems
+                .checked_mul(d as u64)
+                .ok_or_else(|| anyhow::anyhow!("tensor element count overflows ({shape:?})"))?;
+        }
+        let byte_len = elems
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("tensor byte count overflows ({shape:?})"))?;
+        // Bound by the remaining payload *before* any conversion or
+        // allocation, so a crafted header cannot trigger one.  (In a v2
+        // file the dims reads could have crossed into the CRC footer.)
+        anyhow::ensure!(cursor <= body_len, "tensor header crosses the CRC footer");
+        anyhow::ensure!(
+            byte_len <= (body_len - cursor) as u64,
+            "tensor claims {byte_len} bytes but only {} remain",
+            body_len - cursor
+        );
+        let raw = take(&mut cursor, byte_len as usize)?;
         let data: Vec<f32> = raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
         tensors.push(HostTensor::new(shape, data));
     }
-    anyhow::ensure!(cursor == bytes.len(), "trailing bytes in checkpoint");
+    anyhow::ensure!(cursor == body_len, "trailing bytes in checkpoint");
     Ok(tensors)
 }
 
@@ -85,18 +131,50 @@ mod tests {
     use super::*;
 
     fn tmp(name: &str) -> std::path::PathBuf {
-        std::env::temp_dir().join(format!("allpairs_ckpt_{name}"))
+        std::env::temp_dir().join(format!("allpairs_ckpt_{}_{name}", std::process::id()))
+    }
+
+    /// Serialize in the pre-CRC v1 layout (what old checkpoints on disk
+    /// look like).
+    fn save_v1(path: &std::path::Path, tensors: &[HostTensor]) {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for t in tensors {
+            buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                buf.extend_from_slice(&d.to_le_bytes());
+            }
+            for &v in &t.data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(path, buf).unwrap();
+    }
+
+    fn sample() -> Vec<HostTensor> {
+        vec![
+            HostTensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            HostTensor::scalar(7.5),
+            HostTensor::new(vec![0], vec![]),
+        ]
     }
 
     #[test]
     fn roundtrip() {
-        let tensors = vec![
-            HostTensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
-            HostTensor::scalar(7.5),
-            HostTensor::new(vec![0], vec![]),
-        ];
+        let tensors = sample();
         let p = tmp("roundtrip.bin");
         save(&p, &tensors).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back, tensors);
+    }
+
+    #[test]
+    fn v1_checkpoints_still_load() {
+        let tensors = sample();
+        let p = tmp("v1.bin");
+        save_v1(&p, &tensors);
         let back = load(&p).unwrap();
         assert_eq!(back, tensors);
     }
@@ -127,5 +205,63 @@ mod tests {
         bytes.push(0);
         std::fs::write(&p, &bytes).unwrap();
         assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let p = tmp("v9.bin");
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&9u32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&p, &buf).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("version 9"), "{err}");
+    }
+
+    #[test]
+    fn rejects_overflowing_header_dims() {
+        // Regression: `shape.iter().product::<i64>()` wrapped on these
+        // dims (2^62 * 4 = 2^64 ≡ 0), so the old loader accepted a
+        // "tensor" claiming zero bytes of data for a 2^62-element shape
+        // — and `elems as usize * 4` could wrap the byte count the same
+        // way.  Checked math must reject both, without panicking.
+        for dims in [
+            vec![0x4000_0000_0000_0000_i64, 4],     // product wraps to 0
+            vec![0x2000_0000_0000_0000_i64, 2, 4],  // likewise, rank 3
+            vec![i64::MAX],                         // byte count overflows
+            vec![1_000_000_000, 1_000_000_000],     // huge but no wrap: bound check
+        ] {
+            let mut buf: Vec<u8> = Vec::new();
+            buf.extend_from_slice(MAGIC);
+            buf.extend_from_slice(&1u32.to_le_bytes()); // v1: no CRC to fix up
+            buf.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+            buf.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for d in &dims {
+                buf.extend_from_slice(&d.to_le_bytes());
+            }
+            buf.extend_from_slice(&[0u8; 16]); // a little "data"
+            let p = tmp("overflow.bin");
+            std::fs::write(&p, &buf).unwrap();
+            let loaded = load(&p);
+            assert!(loaded.is_err(), "crafted dims {dims:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn crc_rejects_every_single_byte_corruption() {
+        let tensors = sample();
+        let p = tmp("bitflip.bin");
+        save(&p, &tensors).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        for i in 0..bytes.len() {
+            let mut corrupt = bytes.clone();
+            corrupt[i] ^= 0x01;
+            std::fs::write(&p, &corrupt).unwrap();
+            assert!(load(&p).is_err(), "flip at byte {i}/{} accepted", bytes.len());
+        }
+        // and the pristine bytes still load
+        std::fs::write(&p, &bytes).unwrap();
+        assert_eq!(load(&p).unwrap(), tensors);
     }
 }

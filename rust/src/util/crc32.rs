@@ -1,0 +1,60 @@
+//! CRC-32 (IEEE 802.3, the zlib/PNG polynomial), table-driven.
+//!
+//! Used as the integrity footer of checkpoint format v2: the
+//! atomic-rename protocol (see [`super::fsio`]) prevents *torn* files,
+//! but not silent corruption at rest (bit rot, bad sectors, truncation
+//! by a foreign tool).  A 4-byte CRC over the whole payload rejects any
+//! single-bit — and overwhelmingly any multi-bit — corruption.
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = make_table();
+
+/// CRC-32 of `data` (init `0xFFFFFFFF`, reflected, final xor).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The canonical CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"allpairs"), crc32(b"allpairs"));
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let base = b"the quick brown fox jumps over the lazy dog".to_vec();
+        let want = crc32(&base);
+        for i in 0..base.len() {
+            for bit in 0..8 {
+                let mut flipped = base.clone();
+                flipped[i] ^= 1 << bit;
+                assert_ne!(crc32(&flipped), want, "flip at byte {i} bit {bit}");
+            }
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Deterministic fault injection for crash-safety tests.
+//!
+//! A *failpoint* is a named site in the code (`failpoint::check("sweep.run_job")?`)
+//! that normally does nothing.  When armed — via the `ALLPAIRS_FAILPOINTS`
+//! environment variable or the test API ([`arm`]) — it counts hits and
+//! *fires* on a chosen hit, in one of three modes:
+//!
+//! * `error` — `check` returns an `Err`, exercising error-handling paths
+//!   (the scheduler's retry logic, for example);
+//! * `panic` — `check` panics, exercising panic isolation
+//!   (`catch_unwind`, poisoned-lock recovery);
+//! * `exit[:code]` — the process exits immediately (default code 86),
+//!   simulating a hard crash / OOM kill for end-to-end resume tests.
+//!
+//! Spec grammar (env var holds `;`-separated specs):
+//!
+//! ```text
+//! name=mode[:code][@after[xTimes]]
+//! ```
+//!
+//! `after` (default 1) is the 1-based hit on which the point first
+//! fires; it then fires for `times` (default 1) consecutive hits and
+//! goes silent.  `sweep.run_job=error@1x2` fails the first two
+//! attempts and lets the third through — exactly the shape a retry
+//! test needs.  Countdowns are keyed on global hit order, so with a
+//! single worker the firing site is fully deterministic; with several
+//! workers the *count* of fires is still exact.
+//!
+//! When nothing has ever been armed, [`check`] is a single relaxed
+//! atomic load — safe to leave in production paths.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Environment variable holding `;`-separated failpoint specs.
+pub const ENV_VAR: &str = "ALLPAIRS_FAILPOINTS";
+
+/// Default process exit code for `exit`-mode fires (distinctive, so CI
+/// can assert the crash was the injected one).
+pub const EXIT_CODE: i32 = 86;
+
+/// What happens when an armed failpoint fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// `check` returns an error.
+    Error,
+    /// `check` panics (unwinds).
+    Panic,
+    /// The process exits with the given code.
+    Exit(i32),
+}
+
+/// One armed failpoint: fires on hits `after ..= after + times - 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailSpec {
+    pub mode: Mode,
+    /// 1-based hit on which the point first fires.
+    pub after: u64,
+    /// Number of consecutive hits that fire (then the point goes silent).
+    pub times: u64,
+}
+
+#[derive(Debug)]
+struct State {
+    spec: FailSpec,
+    hits: u64,
+}
+
+/// Fast path: false until the first arm (env or test API) ever happens.
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> &'static Mutex<HashMap<String, State>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, State>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut map = HashMap::new();
+        if let Ok(env) = std::env::var(ENV_VAR) {
+            match parse_specs(&env) {
+                Ok(specs) => {
+                    for (name, spec) in specs {
+                        map.insert(name, State { spec, hits: 0 });
+                    }
+                }
+                Err(e) => eprintln!("warning: ignoring bad {ENV_VAR}: {e}"),
+            }
+        }
+        if !map.is_empty() {
+            ANY_ARMED.store(true, Ordering::Release);
+        }
+        Mutex::new(map)
+    })
+}
+
+fn lock_registry() -> MutexGuard<'static, HashMap<String, State>> {
+    // A panic-mode fire unwinds while holding no lock, but a panicking
+    // *test* thread may still poison this mutex via an assert between
+    // arm/disarm calls; the map itself is always consistent.
+    registry().lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Parse a `;`-separated spec list (the `ALLPAIRS_FAILPOINTS` grammar).
+pub fn parse_specs(text: &str) -> crate::Result<Vec<(String, FailSpec)>> {
+    let mut out = Vec::new();
+    for item in text.split(';') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        let (name, rhs) = item
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("failpoint spec {item:?}: expected name=mode"))?;
+        out.push((name.trim().to_string(), parse_one(rhs.trim())?));
+    }
+    Ok(out)
+}
+
+fn parse_one(rhs: &str) -> crate::Result<FailSpec> {
+    // rhs = mode[:code][@after[xTimes]] — times lives inside the `@`
+    // suffix so mode names containing `x` (exit) stay unambiguous.
+    let (mode_part, after, times) = match rhs.split_once('@') {
+        None => (rhs, 1, 1),
+        Some((m, suffix)) => {
+            let (a, t) = match suffix.split_once('x') {
+                None => (suffix, None),
+                Some((a, t)) => (a, Some(t)),
+            };
+            let after = a
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("failpoint countdown {a:?}: {e}"))?;
+            let times = match t {
+                None => 1,
+                Some(t) => t
+                    .parse::<u64>()
+                    .map_err(|e| anyhow::anyhow!("failpoint times {t:?}: {e}"))?,
+            };
+            (m, after, times)
+        }
+    };
+    anyhow::ensure!(after >= 1, "failpoint countdown must be >= 1 (1-based hit)");
+    anyhow::ensure!(times >= 1, "failpoint times must be >= 1");
+    let mode = match mode_part.split_once(':') {
+        Some(("exit", code)) => Mode::Exit(
+            code.parse::<i32>()
+                .map_err(|e| anyhow::anyhow!("failpoint exit code {code:?}: {e}"))?,
+        ),
+        None => match mode_part {
+            "error" => Mode::Error,
+            "panic" => Mode::Panic,
+            "exit" => Mode::Exit(EXIT_CODE),
+            other => anyhow::bail!("unknown failpoint mode {other:?} (error | panic | exit[:code])"),
+        },
+        Some(_) => anyhow::bail!("unknown failpoint mode {mode_part:?} (error | panic | exit[:code])"),
+    };
+    Ok(FailSpec { mode, after, times })
+}
+
+/// Arm `name` programmatically (test API).  Resets its hit counter.
+pub fn arm(name: &str, spec: FailSpec) {
+    let mut reg = lock_registry();
+    reg.insert(name.to_string(), State { spec, hits: 0 });
+    ANY_ARMED.store(true, Ordering::Release);
+}
+
+/// Arm from a spec string, e.g. `arm_str("sweep.run_job", "error@1x2")`.
+pub fn arm_str(name: &str, spec: &str) -> crate::Result<()> {
+    arm(name, parse_one(spec)?);
+    Ok(())
+}
+
+/// Disarm `name` (no-op if not armed).
+pub fn disarm(name: &str) {
+    lock_registry().remove(name);
+}
+
+/// Hits recorded for `name` so far (0 if never armed).
+pub fn hits(name: &str) -> u64 {
+    lock_registry().get(name).map(|s| s.hits).unwrap_or(0)
+}
+
+/// Evaluate the failpoint `name`: a no-op branch while disarmed, else
+/// count a hit and fire per the armed [`FailSpec`].
+pub fn check(name: &str) -> crate::Result<()> {
+    if !ANY_ARMED.load(Ordering::Acquire) {
+        return Ok(());
+    }
+    let fired = {
+        let mut reg = lock_registry();
+        match reg.get_mut(name) {
+            None => return Ok(()),
+            Some(state) => {
+                state.hits += 1;
+                let h = state.hits;
+                let s = state.spec;
+                (h >= s.after && h < s.after + s.times).then_some(s.mode)
+            }
+        }
+    };
+    match fired {
+        None => Ok(()),
+        Some(Mode::Error) => Err(anyhow::anyhow!("failpoint {name} fired (injected error)")),
+        Some(Mode::Panic) => panic!("failpoint {name} fired (injected panic)"),
+        Some(Mode::Exit(code)) => {
+            eprintln!("failpoint {name} fired: exiting with code {code} (injected crash)");
+            std::process::exit(code);
+        }
+    }
+}
+
+/// Global serialization lock for tests that arm shared failpoint names.
+/// Failpoint state is process-global; concurrent tests arming the same
+/// site would race on the hit counter.
+pub fn serial_guard() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_is_a_noop() {
+        let _g = serial_guard();
+        assert!(check("fp.never_armed").is_ok());
+        assert_eq!(hits("fp.never_armed"), 0);
+    }
+
+    #[test]
+    fn countdown_fires_on_the_nth_hit_for_t_hits() {
+        let _g = serial_guard();
+        arm_str("fp.count", "error@3x2").unwrap();
+        assert!(check("fp.count").is_ok()); // hit 1
+        assert!(check("fp.count").is_ok()); // hit 2
+        assert!(check("fp.count").is_err()); // hit 3: fires
+        assert!(check("fp.count").is_err()); // hit 4: fires
+        assert!(check("fp.count").is_ok()); // hit 5: exhausted
+        assert_eq!(hits("fp.count"), 5);
+        disarm("fp.count");
+        assert!(check("fp.count").is_ok());
+    }
+
+    #[test]
+    fn panic_mode_unwinds() {
+        let _g = serial_guard();
+        arm_str("fp.panics", "panic").unwrap();
+        let caught = std::panic::catch_unwind(|| {
+            let _ = check("fp.panics");
+        });
+        disarm("fp.panics");
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let specs = parse_specs("a=error; b=panic@4 ;c=exit:7@2x3;d=exit").unwrap();
+        assert_eq!(specs.len(), 4);
+        assert_eq!(
+            specs[0],
+            ("a".into(), FailSpec { mode: Mode::Error, after: 1, times: 1 })
+        );
+        assert_eq!(
+            specs[1],
+            ("b".into(), FailSpec { mode: Mode::Panic, after: 4, times: 1 })
+        );
+        assert_eq!(
+            specs[2],
+            ("c".into(), FailSpec { mode: Mode::Exit(7), after: 2, times: 3 })
+        );
+        assert_eq!(
+            specs[3],
+            ("d".into(), FailSpec { mode: Mode::Exit(EXIT_CODE), after: 1, times: 1 })
+        );
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(parse_specs("nomode").is_err());
+        assert!(parse_specs("a=explode").is_err());
+        assert!(parse_specs("a=error@0").is_err());
+        assert!(parse_specs("a=error@x").is_err());
+        assert!(parse_specs("a=exit:abc").is_err());
+        assert!(parse_specs("a=panic:3").is_err());
+    }
+}

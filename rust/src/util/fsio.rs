@@ -1,0 +1,99 @@
+//! Durable file writes: atomic replace via temp file + fsync + rename.
+//!
+//! The crash-safety argument (DESIGN.md §10): the bytes are first
+//! written to a temporary file *in the target's directory* (same
+//! filesystem, so the rename is atomic), fsynced so the data is on disk
+//! before the name exists, then renamed over the target — POSIX
+//! guarantees readers see either the old complete file or the new
+//! complete file, never a torn mixture.  Finally the directory is
+//! fsynced so the rename itself survives a power cut.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Atomically replace `path` with `bytes`.  On return, either the old
+/// content or the new content is fully on disk — never a torn write.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> crate::Result<()> {
+    let path = path.as_ref();
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    std::fs::create_dir_all(&parent)?;
+    let tmp = parent.join(tmp_name(path));
+    // Scope the handle so it is closed before the rename (Windows
+    // requires it; on Unix it is merely tidy).
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
+    sync_dir(&parent);
+    Ok(())
+}
+
+/// Unique-per-process-and-call temp name beside the target, so
+/// concurrent writers (sweep workers, parallel tests) never collide and
+/// a leftover temp from a crash is identifiable by its prefix.
+fn tmp_name(path: &Path) -> String {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let stem = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "file".into());
+    format!(
+        ".{stem}.tmp.{}.{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+/// Fsync a directory so a completed rename is durable.  Best-effort:
+/// not all platforms/filesystems support directory fsync, and a failure
+/// here never loses data already renamed into place.
+fn sync_dir(dir: &Path) {
+    #[cfg(unix)]
+    {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_replaces() {
+        let dir = std::env::temp_dir().join(format!("allpairs_fsio_{}", std::process::id()));
+        let p = dir.join("nested/out.txt");
+        write_atomic(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        write_atomic(&p, b"second, longer content").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer content");
+        // no temp litter left behind
+        let leftovers: Vec<_> = std::fs::read_dir(p.parent().unwrap())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bare_filename_writes_to_cwd() {
+        let name = format!("allpairs_fsio_bare_{}.txt", std::process::id());
+        write_atomic(&name, b"x").unwrap();
+        assert_eq!(std::fs::read(&name).unwrap(), b"x");
+        let _ = std::fs::remove_file(&name);
+    }
+}

@@ -9,7 +9,14 @@
 //! * [`cli`]   — a small declarative argument parser (clap stand-in).
 //! * [`bench`] — a measured micro-benchmark harness (criterion stand-in)
 //!   used by `cargo bench` targets.
+//! * [`fsio`] — durable file writes (atomic temp + fsync + rename).
+//! * [`crc32`] — CRC-32 integrity footer for binary formats.
+//! * [`failpoint`] — deterministic fault injection (a `fail`-crate
+//!   stand-in) driving the crash-safety test suite.
 
 pub mod bench;
 pub mod cli;
+pub mod crc32;
+pub mod failpoint;
+pub mod fsio;
 pub mod json;

@@ -1,0 +1,278 @@
+//! Crash-safety end to end (DESIGN.md §10): torn-journal recovery at
+//! every byte offset, failpoint-driven scheduler faults (panic
+//! isolation, retry, exhaustion), and the resume invariant — an
+//! interrupted-then-resumed sweep produces the identical record set as
+//! an uninterrupted run of the same seed.
+
+use std::collections::HashMap;
+
+use allpairs::config::SweepConfig;
+use allpairs::coordinator::cv;
+use allpairs::data::synth::{generate, SynthSpec, SYNTH_DATASETS};
+use allpairs::losses::LossSpec;
+use allpairs::runtime::{BackendSpec, NativeSpec};
+use allpairs::sweep::results::{self, RunResult};
+use allpairs::sweep::runner::{JobData, FP_RUN_JOB};
+use allpairs::sweep::scheduler::{run_sweep_opts, RetryPolicy, SweepOptions};
+use allpairs::sweep::Job;
+use allpairs::util::failpoint;
+use std::sync::Arc;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("allpairs_crash_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn fake_result(seed: u32, auc: f64) -> RunResult {
+    RunResult {
+        job: Job {
+            dataset: "synth-pets".into(),
+            imratio: 0.2,
+            loss: "hinge".parse().unwrap(),
+            batch: 50,
+            lr: 0.01,
+            seed,
+            model: "resnet".into(),
+            epochs: 1,
+            patience: None,
+            sampling: "preserve".into(),
+        },
+        best_val_auc: Some(auc),
+        best_epoch: Some(0),
+        test_auc: Some(auc - 0.02),
+        final_train_loss: 0.4,
+        diverged: false,
+        seconds: 1.5,
+        achieved_imratio: 0.199,
+    }
+}
+
+// ---------------------------------------------------------------- journal
+
+#[test]
+fn torn_tail_recovers_at_every_byte_offset() {
+    // Truncate the journal at EVERY byte offset inside the final record
+    // (including the trailing newline): the lenient loader must recover
+    // all complete lines, and after repair the journal must be strict-
+    // loadable and appendable.
+    let dir = tmp_dir("torn_every_offset");
+    let path = dir.join("journal.jsonl");
+    let originals = vec![fake_result(0, 0.9), fake_result(1, 0.8), fake_result(2, 0.7)];
+    results::save_jsonl(&path, &originals).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // start of the final record = one past the second newline
+    let second_nl = bytes
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b == b'\n')
+        .map(|(i, _)| i)
+        .nth(1)
+        .unwrap();
+    let last_start = second_nl + 1;
+    assert!(last_start < bytes.len() - 1);
+
+    for cut in last_start + 1..bytes.len() {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let replay = results::load_jsonl_lenient(&path)
+            .unwrap_or_else(|e| panic!("lenient load failed at cut {cut}: {e}"));
+        if cut == bytes.len() - 1 {
+            // only the '\n' is missing: the record itself is intact
+            assert_eq!(replay.results.len(), 3, "cut {cut}");
+            assert!(replay.missing_newline);
+        } else {
+            assert_eq!(replay.results.len(), 2, "cut {cut}");
+            assert!(replay.torn_bytes > 0, "cut {cut}");
+            // the strict loader must reject the same file
+            assert!(results::load_jsonl(&path).is_err(), "cut {cut}");
+        }
+        for (r, o) in replay.results.iter().zip(&originals) {
+            assert_eq!(r.job.id(), o.job.id(), "cut {cut}");
+        }
+        // repair, then append — the journal must come back well-formed
+        let recovered = results::repair_journal(&path).unwrap().results.len();
+        let mut w = results::JsonlWriter::append_to(&path).unwrap();
+        w.append(&fake_result(9, 0.5)).unwrap();
+        drop(w);
+        let all = results::load_jsonl(&path).unwrap();
+        assert_eq!(all.len(), recovered + 1, "cut {cut}");
+        assert_eq!(all.last().unwrap().job.seed, 9, "cut {cut}");
+    }
+}
+
+// ------------------------------------------------------------- scheduler
+
+fn sweep_data() -> JobData {
+    let spec = SynthSpec {
+        n_train: 300,
+        n_test: 100,
+        ..SYNTH_DATASETS[2] // synth-pets: 2 latent classes, learnable
+    };
+    let (train_pool, test) = generate(&spec, 99);
+    JobData {
+        train_pool: Arc::new(train_pool),
+        test: Arc::new(test),
+    }
+}
+
+fn sweep_job(seed: u32) -> Job {
+    Job {
+        dataset: "synth-pets".into(),
+        imratio: 0.2,
+        loss: "hinge".parse().unwrap(),
+        batch: 50,
+        lr: 0.01,
+        seed,
+        model: "mlp".into(),
+        epochs: 1,
+        patience: None,
+        sampling: "preserve".into(),
+    }
+}
+
+fn sweep_backend() -> BackendSpec {
+    BackendSpec::Native(NativeSpec {
+        input_dim: 16 * 16 * 3,
+        hidden: 4,
+        threads: 1,
+        ..NativeSpec::default()
+    })
+}
+
+#[test]
+fn injected_panic_fails_one_job_and_the_rest_complete() {
+    let _g = failpoint::serial_guard();
+    // 6 jobs on 2 workers; the 3rd job *attempt* panics.  Panic
+    // isolation must confine the damage to that one job while both
+    // workers keep draining the queue.
+    failpoint::arm_str(FP_RUN_JOB, "panic@3").unwrap();
+    let mut datasets = HashMap::new();
+    datasets.insert("synth-pets".to_string(), sweep_data());
+    let jobs: Vec<Job> = (0..6).map(sweep_job).collect();
+    let outcome = run_sweep_opts(
+        &sweep_backend(),
+        jobs,
+        datasets,
+        SweepOptions {
+            workers: 2,
+            retry: RetryPolicy {
+                max_attempts: 3,
+                base_backoff: std::time::Duration::from_millis(1),
+            },
+            ..SweepOptions::default()
+        },
+    );
+    failpoint::disarm(FP_RUN_JOB);
+    let outcome = outcome.unwrap();
+    assert_eq!(outcome.results.len(), 5, "all non-panicking jobs must complete");
+    assert_eq!(outcome.failures.len(), 1);
+    let f = &outcome.failures[0];
+    assert!(f.panicked);
+    assert_eq!(f.attempts, 1, "panics are never retried");
+    assert!(f.error.contains("failpoint"), "{}", f.error);
+    // the failed job is one of the scheduled ids, exactly once
+    let scheduled: Vec<String> = (0..6).map(|s| sweep_job(s).id()).collect();
+    assert!(scheduled.contains(&f.job_id));
+    assert!(!outcome.results.iter().any(|r| r.job.id() == f.job_id));
+}
+
+// ----------------------------------------------------------------- resume
+
+fn micro_config() -> SweepConfig {
+    SweepConfig {
+        datasets: vec!["synth-pets".into()],
+        imratios: vec![0.2],
+        losses: vec![LossSpec::hinge()],
+        batch_sizes: vec![50],
+        seeds: vec![0, 1, 2],
+        epochs: 1,
+        max_train: Some(200),
+        max_lrs: Some(1),
+        workers: 1,
+        backend: sweep_backend(),
+        ..Default::default()
+    }
+}
+
+/// Record set keyed by job id, with the only nondeterministic field
+/// (wall time) zeroed — "bit-identical metrics" in comparable form.
+fn record_set(results: &[RunResult]) -> std::collections::BTreeMap<String, String> {
+    results
+        .iter()
+        .map(|r| {
+            let mut r = r.clone();
+            r.seconds = 0.0;
+            (r.job.id(), r.to_json().dumps())
+        })
+        .collect()
+}
+
+#[test]
+fn interrupted_then_resumed_sweep_matches_uninterrupted_run() {
+    // serialize vs the panic-injection test: failpoint state is
+    // process-global, and this test's sweeps hit the same site
+    let _g = failpoint::serial_guard();
+    let cfg = micro_config();
+    assert_eq!(cfg.n_runs(), 3);
+
+    // Uninterrupted reference run.
+    let out_a = tmp_dir("resume_ref");
+    cv::run(&cfg, &out_a, None).unwrap();
+    let ref_results = results::load_jsonl(out_a.join("sweep_results.jsonl")).unwrap();
+    assert_eq!(ref_results.len(), 3);
+
+    // Simulate a crash: journal holds job 1 complete plus a torn slice
+    // of job 2's record (a partially flushed line).
+    let out_b = tmp_dir("resume_crash");
+    let ref_bytes = std::fs::read(out_a.join("sweep_results.jsonl")).unwrap();
+    let first_nl = ref_bytes.iter().position(|&b| b == b'\n').unwrap();
+    let torn_end = (first_nl + 1 + 40).min(ref_bytes.len());
+    std::fs::write(out_b.join("sweep_results.jsonl"), &ref_bytes[..torn_end]).unwrap();
+
+    // Resume: replays the 1 intact record, repairs the tail, runs the
+    // 2 missing jobs.
+    let output = cv::run_with_options(&cfg, &out_b, None, &cv::RunOptions {
+        resume: true,
+        ..cv::RunOptions::default()
+    })
+    .unwrap();
+    assert_eq!(output.replayed, 1);
+    assert!(output.failures.is_empty());
+    assert_eq!(output.results.len(), 3);
+
+    // The journal is strict-loadable and its record set — keyed by
+    // job.id(), metrics bit-identical — matches the uninterrupted run.
+    let resumed = results::load_jsonl(out_b.join("sweep_results.jsonl")).unwrap();
+    assert_eq!(resumed.len(), 3, "no duplicates, no gaps");
+    assert_eq!(record_set(&resumed), record_set(&ref_results));
+
+    // Resuming a *complete* journal replays everything and appends
+    // nothing: the journal bytes are untouched.
+    let before = std::fs::read(out_b.join("sweep_results.jsonl")).unwrap();
+    let output = cv::run_with_options(&cfg, &out_b, None, &cv::RunOptions {
+        resume: true,
+        ..cv::RunOptions::default()
+    })
+    .unwrap();
+    assert_eq!(output.replayed, 3);
+    assert_eq!(output.results.len(), 3);
+    let after = std::fs::read(out_b.join("sweep_results.jsonl")).unwrap();
+    assert_eq!(before, after, "complete-journal resume must be a pure replay");
+}
+
+#[test]
+fn rerun_without_resume_rotates_never_truncates() {
+    let _g = failpoint::serial_guard();
+    let cfg = micro_config();
+    let out = tmp_dir("rotate");
+    cv::run(&cfg, &out, None).unwrap();
+    let first = std::fs::read(out.join("sweep_results.jsonl")).unwrap();
+    assert!(!first.is_empty());
+    // second run, same dir, no --resume: the old journal must survive
+    cv::run(&cfg, &out, None).unwrap();
+    let rotated = std::fs::read(out.join("sweep_results.jsonl.1.bak")).unwrap();
+    assert_eq!(rotated, first, "rotation must preserve the prior journal verbatim");
+    let second = results::load_jsonl(out.join("sweep_results.jsonl")).unwrap();
+    assert_eq!(second.len(), cfg.n_runs(), "fresh journal, not an append pile-up");
+}

@@ -113,7 +113,9 @@ fn multiworker_sweep_selection_and_persistence() {
     let n_jobs = jobs.len();
     let mut datasets = std::collections::HashMap::new();
     datasets.insert("synth-pets".to_string(), tiny_data());
-    let results_vec = run_sweep(&native_spec(), jobs, datasets, 3, None).unwrap();
+    let outcome = run_sweep(&native_spec(), jobs, datasets, 3, None).unwrap();
+    assert!(outcome.failures.is_empty(), "{:?}", outcome.failures);
+    let results_vec = outcome.results;
     assert_eq!(results_vec.len(), n_jobs);
 
     // selection: one winner per (loss, seed)
