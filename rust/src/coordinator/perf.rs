@@ -1,5 +1,7 @@
 //! The tracked perf trajectory: train-step / loss / AUC benches behind
-//! `allpairs bench`, emitted as machine-readable `BENCH_train.json`.
+//! `allpairs bench`, emitted as machine-readable `BENCH_train.json` —
+//! plus the serving-path benches behind `allpairs bench-serve`
+//! (`BENCH_serve.json`, same record schema and envelope).
 //!
 //! The paper's claim is that the functional all-pairs gradient is fast
 //! enough for *large* batches, so the train step — chunked forward +
@@ -31,7 +33,8 @@ use crate::data::Rng;
 use crate::losses::functional::SquaredHinge;
 use crate::losses::{BatchView, LossFn, LossSpec, LossWorkspace, SortEngine, SortStrategy};
 use crate::metrics::auc;
-use crate::runtime::{Backend, NativeBackend, NativeSpec};
+use crate::runtime::{Backend, ModelExecutor, NativeBackend, NativeSpec};
+use crate::serve::{self, Scorer, ScorerOptions};
 use crate::util::bench::Bench;
 use crate::util::json::Json;
 
@@ -242,6 +245,119 @@ pub fn univariate_lhinge_bound(scores: &[f32], is_pos: &[f32], margin: f64) -> f
     n_neg * pos_sum + n_pos * neg_sum
 }
 
+/// What `allpairs bench-serve` measures (the `BENCH_serve.json`
+/// trajectory): the per-request protocol costs and the end-to-end
+/// scoring round trip through the real channel + micro-batch path.
+#[derive(Debug, Clone)]
+pub struct ServePerfConfig {
+    /// Features per request (default mirrors the serve-scale row).
+    pub dim: usize,
+    /// Hidden units of the benchmarked checkpoint (0 = linear).
+    pub hidden: usize,
+    /// Concurrent in-flight request counts for the round-trip bench.
+    pub batches: Vec<usize>,
+}
+
+impl Default for ServePerfConfig {
+    fn default() -> Self {
+        Self {
+            dim: 768,
+            hidden: 32,
+            batches: vec![1, 64, 1024],
+        }
+    }
+}
+
+/// Run the serve perf suite.  Same envelope and conventions as
+/// [`run`] — records land in `BENCH_serve.json` via [`write_json`]:
+///
+/// * `serve/parse/dD` (n = D) — request-line parse + validation
+/// * `serve/encode` (n = 1) — response encoding
+/// * `serve/score_roundtrip/bB` (n = B) — B requests submitted
+///   concurrently, all replies drained (channel + micro-batch + forward)
+/// * `serve/reload` (n = 1) — checkpoint load + CRC + validate + swap
+pub fn run_serve(cfg: &ServePerfConfig) -> crate::Result<Vec<PerfRecord>> {
+    anyhow::ensure!(
+        cfg.dim > 0 && !cfg.batches.is_empty() && cfg.batches.iter().all(|&b| b > 0),
+        "serve bench needs a positive dim and non-empty positive batches"
+    );
+    let mut bench = Bench::from_env();
+    let mut records = Vec::new();
+    let dim = cfg.dim;
+    let mut rng = Rng::new(0x5E7E ^ dim as u64);
+
+    // The per-request protocol costs, off the scoring thread.
+    let feats: Vec<String> = (0..dim).map(|_| format!("{:.6}", rng.normal())).collect();
+    let line = format!("{{\"id\": 12345, \"features\": [{}]}}", feats.join(", "));
+    let m = bench.run(format!("serve/parse/d{dim}"), || {
+        serve::parse_request(&line).unwrap().features.len()
+    });
+    records.push(record(m, dim, 1));
+    let m = bench.run("serve/encode", || serve::score_response(None, 0.123).len());
+    records.push(record(m, 1, 1));
+
+    // A real (untrained) checkpoint for the end-to-end path.
+    let ckpt = std::env::temp_dir().join(format!(
+        "allpairs_bench_serve_{}.bin",
+        std::process::id()
+    ));
+    {
+        let backend = NativeBackend::new(NativeSpec {
+            input_dim: dim,
+            hidden: cfg.hidden,
+            threads: 1,
+            ..NativeSpec::default()
+        });
+        let model = if cfg.hidden == 0 { "linear" } else { "mlp" };
+        let mut exec = backend.open(model, &LossSpec::hinge(), 1)?;
+        exec.init(0)?;
+        crate::train::checkpoint::save(&ckpt, &exec.state_to_host()?)?;
+    }
+    let max_batch = cfg.batches.iter().copied().max().unwrap_or(1);
+    let scorer = Scorer::spawn(ScorerOptions {
+        max_batch,
+        threads: 1,
+        ..ScorerOptions::new(&ckpt)
+    })?;
+    let rows: Vec<Vec<f32>> = (0..max_batch)
+        .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+    for &b in &cfg.batches {
+        let m = bench.run(format!("serve/score_roundtrip/b{b}"), || {
+            let replies: Vec<_> = rows[..b]
+                .iter()
+                .map(|r| scorer.handle.submit(r.clone()))
+                .collect();
+            replies
+                .into_iter()
+                .map(|rx| rx.recv().unwrap().unwrap())
+                .count()
+        });
+        records.push(record(m, b, 1));
+    }
+    // Hot reload end to end; stats() is the completion barrier.
+    let m = bench.run("serve/reload", || {
+        assert!(scorer.handle.reload());
+        scorer.handle.stats().unwrap().reloads_ok
+    });
+    records.push(record(m, 1, 1));
+    scorer.shutdown();
+    let _ = std::fs::remove_file(&ckpt);
+    Ok(records)
+}
+
+/// The round-trip throughput rows for the `bench-serve` summary:
+/// `(batch, median seconds, rows per second)`.
+pub fn serve_throughput(records: &[PerfRecord]) -> Vec<(usize, f64, f64)> {
+    let mut rows: Vec<(usize, f64, f64)> = records
+        .iter()
+        .filter(|r| r.name.starts_with("serve/score_roundtrip/") && r.median_s > 0.0)
+        .map(|r| (r.n, r.median_s, r.n as f64 / r.median_s))
+        .collect();
+    rows.sort_unstable_by_key(|&(b, ..)| b);
+    rows
+}
+
 fn record(m: &crate::util::bench::Measurement, n: usize, threads: usize) -> PerfRecord {
     PerfRecord {
         name: m.name.clone(),
@@ -446,6 +562,31 @@ mod tests {
             assert!(records.iter().any(|r| r.name == name), "missing {name}");
         }
         assert_eq!(sort_table(&records).len(), 1);
+    }
+
+    #[test]
+    fn tiny_serve_suite_runs_end_to_end() {
+        let cfg = ServePerfConfig {
+            dim: 6,
+            hidden: 2,
+            batches: vec![1, 4],
+        };
+        let records = run_serve(&cfg).unwrap();
+        // parse + encode + two round-trip points + reload
+        assert_eq!(records.len(), 5);
+        for name in [
+            "serve/parse/d6",
+            "serve/encode",
+            "serve/score_roundtrip/b1",
+            "serve/score_roundtrip/b4",
+            "serve/reload",
+        ] {
+            assert!(records.iter().any(|r| r.name == name), "missing {name}");
+        }
+        let rows = serve_throughput(&records);
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].0, rows[1].0), (1, 4), "ascending batch");
+        assert!(rows.iter().all(|&(_, s, rps)| s > 0.0 && rps > 0.0));
     }
 
     #[test]

@@ -17,8 +17,9 @@
 //!   pluggable execution layer ([`runtime`]) with a self-contained
 //!   native backend (default) and a PJRT artifact runtime (feature
 //!   `pjrt`), the training loop ([`train`]), the cross-validation
-//!   hyper-parameter sweep engine ([`sweep`]), reporting ([`report`])
-//!   and experiment orchestration ([`coordinator`]).
+//!   hyper-parameter sweep engine ([`sweep`]), an online scoring
+//!   service ([`serve`]), reporting ([`report`]) and experiment
+//!   orchestration ([`coordinator`]).
 //!
 //! The default build is fully self-contained: `cargo build && cargo test`
 //! need no Python, no artifacts and no network.  With `make artifacts`
@@ -75,6 +76,7 @@ pub mod losses;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sweep;
 pub mod train;
 pub mod util;

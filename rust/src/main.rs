@@ -7,6 +7,10 @@
 //! * `train`           — one training run (debugging / ad-hoc)
 //! * `bench`           — the tracked perf trajectory (train-step /
 //!                       loss / AUC wall times → `BENCH_train.json`)
+//! * `serve`           — online scoring service over a checkpoint
+//!                       (JSONL over TCP/stdin, hot reload)
+//! * `bench-serve`     — serving-path perf trajectory
+//!                       (→ `BENCH_serve.json`)
 //! * `report`          — re-aggregate a saved sweep JSONL
 //! * `artifacts-check` — compile every artifact and smoke-run init
 //!                       (requires the `pjrt` feature)
@@ -26,8 +30,9 @@ use allpairs::data::{Rng, SamplingMode, Split};
 use allpairs::losses::LossSpec;
 use allpairs::report::figures::{ascii_loglog, write_csv};
 use allpairs::runtime::BackendSpec;
+use allpairs::serve;
 use allpairs::sweep::results;
-use allpairs::train::{FitConfig, Trainer};
+use allpairs::train::{checkpoint, FitConfig, Trainer};
 use allpairs::util::cli::Args;
 
 const USAGE: &str = "\
@@ -64,6 +69,26 @@ COMMANDS
                         pairwise specs take "@margin=M"  [hinge]
       --patience P      early-stop after P stale epochs  [off]
       --sampling MODE   preserve | rebalance | rebalance:F  [preserve]
+      --save-checkpoint FILE
+                        save the best (or final) state as a binary
+                        checkpoint for `serve`
+  serve             online scoring service over a trained checkpoint
+      --checkpoint FILE checkpoint to serve (required; arch inferred)
+      --host H          bind address                     [127.0.0.1]
+      --port P          TCP port (0 = OS-assigned)       [0]
+      --port-file FILE  write the bound port (atomic)    [off]
+      --max-batch N     rows folded per forward pass     [1024]
+      --threads T       engine worker threads (0 = all)  [0]
+      --reload-ms MS    checkpoint watch period (0 = no hot reload)
+                        [500]
+      --max-line BYTES  per request line cap             [1048576]
+      --stdin           score JSONL from stdin to stdout and exit
+                        (single-row reference path)
+  bench-serve       serving-path perf trajectory (native backend)
+      --json FILE       output JSON path        [BENCH_serve.json]
+      --dim D           features per request    [768]
+      --hidden H        checkpoint hidden units (0 = linear) [32]
+      --batches LIST    in-flight request counts [1,64,1024]
   bench             train-step/loss/AUC perf trajectory (native backend)
       --json FILE       output JSON path        [BENCH_train.json]
       --sizes LIST      comma-separated n       [10000,100000,1000000]
@@ -96,6 +121,8 @@ fn run() -> allpairs::Result<()> {
         Some("timing") => cmd_timing(&args, &out),
         Some("sweep") => cmd_sweep(&args, &artifacts, &out),
         Some("train") => cmd_train(&args, &artifacts),
+        Some("serve") => cmd_serve(&args),
+        Some("bench-serve") => cmd_bench_serve(&args),
         Some("bench") => cmd_bench(&args),
         Some("report") => cmd_report(&args, &out),
         Some("artifacts-check") => cmd_artifacts_check(&artifacts),
@@ -254,7 +281,7 @@ fn cmd_sweep(args: &Args, artifacts: &Path, out: &Path) -> allpairs::Result<()> 
 fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
     args.expect_known(&[
         "artifacts", "out", "backend", "dataset", "loss", "model", "batch", "lr", "imratio",
-        "epochs", "seed", "max-train", "patience", "sampling",
+        "epochs", "seed", "max-train", "patience", "sampling", "save-checkpoint",
     ])?;
     let dataset = args.get_str("dataset", "synth-cifar");
     // Parsed (and validated) before any data is generated: a typo'd
@@ -331,6 +358,113 @@ fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
     } else if let Some(test_auc) = trainer.eval_auc(&pool.test, &test_indices)? {
         println!("final test AUC: {test_auc:.4}");
     }
+    if let Some(path) = args.get_opt("save-checkpoint") {
+        // The best state is already restored into the trainer above (or
+        // the final state stands, if no epoch produced a val AUC), so
+        // the snapshot is exactly what the run reported on.
+        checkpoint::save(&path, &trainer.state_to_host()?)?;
+        println!("saved checkpoint {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> allpairs::Result<()> {
+    args.expect_known(&[
+        "artifacts", "out", "backend", "checkpoint", "host", "port", "port-file", "max-batch",
+        "threads", "reload-ms", "max-line", "stdin",
+    ])?;
+    let ckpt_path = args
+        .get_opt("checkpoint")
+        .ok_or_else(|| anyhow::anyhow!("--checkpoint FILE required"))?;
+    let max_line: usize = args.get("max-line", serve::DEFAULT_MAX_LINE)?;
+    anyhow::ensure!(max_line > 0, "--max-line must be positive");
+    let scorer = serve::Scorer::spawn(serve::ScorerOptions {
+        max_batch: args.get("max-batch", 1024)?,
+        threads: args.get("threads", 0)?,
+        ..serve::ScorerOptions::new(&ckpt_path)
+    })?;
+    eprintln!(
+        "serve: loaded {ckpt_path} ({} model, dim {}, hidden {})",
+        scorer.info.model, scorer.info.dim, scorer.info.hidden
+    );
+
+    if args.flag("stdin") {
+        let stdin = std::io::stdin().lock();
+        let mut stdout = std::io::stdout().lock();
+        let n = serve::run_stdin(&scorer.handle, stdin, &mut stdout, max_line)?;
+        eprintln!("serve: wrote {n} responses");
+        return Ok(());
+    }
+
+    let reload_ms: u64 = args.get("reload-ms", 500)?;
+    let _watch = if reload_ms > 0 {
+        Some(serve::spawn_reload_watcher(
+            &ckpt_path,
+            std::time::Duration::from_millis(reload_ms),
+            scorer.handle.clone(),
+        )?)
+    } else {
+        None
+    };
+    let host = args.get_str("host", "127.0.0.1");
+    let port: u16 = args.get("port", 0)?;
+    let server = serve::Server::start(
+        &format!("{host}:{port}"),
+        scorer.handle.clone(),
+        serve::ServerOptions { max_line },
+    )?;
+    let addr = server.addr();
+    if let Some(path) = args.get_opt("port-file") {
+        // Atomic publish: a launcher polling the file never reads a
+        // torn port number.
+        allpairs::util::fsio::write_atomic(&path, format!("{}\n", addr.port()).as_bytes())?;
+    }
+    println!("serving on {addr} (checkpoint {ckpt_path})");
+    // Serve until the process is killed; the watcher guard and scorer
+    // stay alive in scope.
+    loop {
+        std::thread::park();
+    }
+}
+
+fn cmd_bench_serve(args: &Args) -> allpairs::Result<()> {
+    args.expect_known(&["artifacts", "out", "backend", "json", "dim", "hidden", "batches"])?;
+    let batches = match args.get_opt("batches") {
+        None => vec![1, 64, 1024],
+        Some(list) => list
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--batches {v:?}: {e}"))
+            })
+            .collect::<allpairs::Result<Vec<usize>>>()?,
+    };
+    let cfg = perf::ServePerfConfig {
+        dim: args.get("dim", 768)?,
+        hidden: args.get("hidden", 32)?,
+        batches,
+    };
+    let quick = allpairs::util::bench::Bench::quick_from_env();
+    eprintln!(
+        "bench-serve: dim {}, hidden {}, batches {:?}{} ...",
+        cfg.dim,
+        cfg.hidden,
+        cfg.batches,
+        if quick { " (quick mode)" } else { "" }
+    );
+    let records = perf::run_serve(&cfg)?;
+    let rows = perf::serve_throughput(&records);
+    if !rows.is_empty() {
+        println!("\nscoring round trip (median):");
+        println!("{:>8} {:>14} {:>12}", "batch", "median_s", "rows/s");
+        for (b, median, rps) in rows {
+            println!("{b:>8} {median:>14.6} {rps:>12.0}");
+        }
+    }
+    let json_path = args.get_str("json", "BENCH_serve.json");
+    perf::write_json(&records, quick, &json_path)?;
+    println!("wrote {json_path} ({} records)", records.len());
     Ok(())
 }
 

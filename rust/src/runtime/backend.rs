@@ -79,6 +79,17 @@ pub trait ModelExecutor {
     /// chunking/padding its substrate needs.
     fn predict(&mut self, x: &[f32], rows: usize) -> crate::Result<Vec<f32>>;
 
+    /// Serving entry point: append the scores for `rows` examples to
+    /// `out` without clearing it.  Semantically identical to
+    /// [`predict`](Self::predict) — same arithmetic, same bits — but
+    /// lets a caller with a long-lived buffer (the serve micro-batcher)
+    /// avoid a per-request allocation.  Backends with an internal score
+    /// buffer should override the default, which delegates to `predict`.
+    fn predict_into(&mut self, x: &[f32], rows: usize, out: &mut Vec<f32>) -> crate::Result<()> {
+        out.extend(self.predict(x, rows)?);
+        Ok(())
+    }
+
     /// Download the training state (parameters first, optimizer slots
     /// after, in a stable order) for checkpointing.
     fn state_to_host(&self) -> crate::Result<Vec<HostTensor>>;

@@ -535,6 +535,21 @@ impl ModelExecutor for NativeExecutor {
         Ok(self.scores.clone())
     }
 
+    fn predict_into(&mut self, x: &[f32], rows: usize, out: &mut Vec<f32>) -> crate::Result<()> {
+        anyhow::ensure!(self.initialized, "executor not initialized; call init()");
+        anyhow::ensure!(
+            x.len() == rows * self.arch.dim(),
+            "x buffer size {} != {}",
+            x.len(),
+            rows * self.arch.dim()
+        );
+        // Same forward as `predict` (identical bits), minus its per-call
+        // Vec: the serve hot path reuses the caller's buffer.
+        self.forward_rows(x, rows);
+        out.extend_from_slice(&self.scores);
+        Ok(())
+    }
+
     fn state_to_host(&self) -> crate::Result<Vec<HostTensor>> {
         anyhow::ensure!(self.initialized, "executor not initialized; call init()");
         let shapes = self.arch.param_shapes();
@@ -821,6 +836,20 @@ mod tests {
         for (i, out) in outputs.iter().enumerate().skip(1) {
             assert_eq!(out, &outputs[0], "strategy {}", SortStrategy::ALL[i]);
         }
+    }
+
+    #[test]
+    fn predict_into_appends_identical_bits() {
+        let backend = NativeBackend::new(spec(8, 4, 1));
+        let mut exec = backend.open("mlp", &hinge(), 4).unwrap();
+        exec.init(3).unwrap();
+        let (x, _, _) = toy_batch(6, 8, 77);
+        let scores = exec.predict(&x, 6).unwrap();
+        let mut out = vec![42.0_f32];
+        exec.predict_into(&x, 6, &mut out).unwrap();
+        assert_eq!(out[0], 42.0, "appends, never clears");
+        assert_eq!(&out[1..], &scores[..], "bit-identical to predict");
+        assert!(exec.predict_into(&x, 7, &mut out).is_err(), "size checked");
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Incremental line framing for the streaming JSONL protocol.
+//!
+//! Sockets deliver arbitrary byte chunks; the framer buffers them and
+//! yields complete `\n`-terminated lines (a trailing `\r` is tolerated,
+//! so `curl`-style CRLF clients work).  Two protections keep one bad
+//! client from hurting the server:
+//!
+//! * a byte cap per line ([`LineFramer::new`]): an over-long line is
+//!   discarded *as it streams in* (bounded memory, however much the
+//!   client sends) and reported as one [`FrameError::TooLong`] when its
+//!   terminating newline finally arrives — the client still receives
+//!   exactly one response for it;
+//! * invalid UTF-8 in a complete line is a [`FrameError::NotUtf8`]
+//!   *value*, not a connection error — later lines parse normally.
+//!
+//! A partial line at EOF (mid-line disconnect) is simply abandoned: no
+//! request line was completed, so no response is owed.  The server
+//! checks [`LineFramer::pending`] only for diagnostics.
+
+/// Default per-line byte cap: 1 MiB holds tens of thousands of decimal
+/// features, far past any real request on this model family.
+pub const DEFAULT_MAX_LINE: usize = 1 << 20;
+
+/// A complete line that cannot become a request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The line exceeded the configured byte cap.
+    TooLong { max: usize },
+    /// The line's bytes are not valid UTF-8.
+    NotUtf8,
+}
+
+impl FrameError {
+    /// Client-safe message for the error response.
+    pub fn message(&self) -> String {
+        match self {
+            FrameError::TooLong { max } => format!("request line exceeds {max} bytes"),
+            FrameError::NotUtf8 => "request line is not valid UTF-8".into(),
+        }
+    }
+}
+
+/// Reassembles `\n`-framed lines from arbitrary byte chunks.
+#[derive(Debug)]
+pub struct LineFramer {
+    buf: Vec<u8>,
+    /// Prefix of `buf` already handed out as lines.
+    consumed: usize,
+    max_line: usize,
+    /// Inside an over-long line: discard bytes until its newline.
+    overflowing: bool,
+}
+
+impl LineFramer {
+    pub fn new(max_line: usize) -> Self {
+        assert!(max_line > 0, "max_line must be positive");
+        Self {
+            buf: Vec::new(),
+            consumed: 0,
+            max_line,
+            overflowing: false,
+        }
+    }
+
+    /// Feed one raw chunk; drain with [`next_line`](Self::next_line).
+    pub fn push(&mut self, chunk: &[u8]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Bytes buffered beyond the last complete line.  Non-zero at EOF
+    /// means a mid-line disconnect (the bytes are abandoned).
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.consumed
+    }
+
+    /// The next complete line, stripped of its `\n` (and a preceding
+    /// `\r`), or `None` until more bytes arrive.
+    pub fn next_line(&mut self) -> Option<Result<String, FrameError>> {
+        match self.buf[self.consumed..].iter().position(|&b| b == b'\n') {
+            Some(off) => {
+                let start = self.consumed;
+                let end = start + off;
+                self.consumed = end + 1;
+                if self.overflowing {
+                    // The over-long line just ended; report it once.
+                    self.overflowing = false;
+                    self.compact();
+                    return Some(Err(FrameError::TooLong { max: self.max_line }));
+                }
+                let mut bytes = &self.buf[start..end];
+                if bytes.last() == Some(&b'\r') {
+                    bytes = &bytes[..bytes.len() - 1];
+                }
+                let line = if bytes.len() > self.max_line {
+                    // Whole over-cap line arrived in one push: the
+                    // streaming discard above never triggered.
+                    Err(FrameError::TooLong { max: self.max_line })
+                } else {
+                    match std::str::from_utf8(bytes) {
+                        Ok(s) => Ok(s.to_string()),
+                        Err(_) => Err(FrameError::NotUtf8),
+                    }
+                };
+                self.compact();
+                Some(line)
+            }
+            None => {
+                if self.pending() > self.max_line {
+                    self.overflowing = true;
+                }
+                if self.overflowing {
+                    // Drop the oversized prefix now — memory stays
+                    // bounded no matter how much the client streams.
+                    self.buf.clear();
+                    self.consumed = 0;
+                }
+                None
+            }
+        }
+    }
+
+    fn compact(&mut self) {
+        if self.consumed == self.buf.len() {
+            self.buf.clear();
+            self.consumed = 0;
+        } else if self.consumed >= 4096 {
+            self.buf.drain(..self.consumed);
+            self.consumed = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(f: &mut LineFramer) -> Vec<Result<String, FrameError>> {
+        std::iter::from_fn(|| f.next_line()).collect()
+    }
+
+    #[test]
+    fn reassembles_lines_across_arbitrary_chunk_boundaries() {
+        let text = b"{\"a\":1}\n{\"b\":2}\r\n\n{\"c\":3}\n";
+        for chunk_size in 1..=text.len() {
+            let mut f = LineFramer::new(64);
+            let mut lines = Vec::new();
+            for chunk in text.chunks(chunk_size) {
+                f.push(chunk);
+                lines.extend(drain(&mut f));
+            }
+            assert_eq!(
+                lines,
+                vec![
+                    Ok("{\"a\":1}".to_string()),
+                    Ok("{\"b\":2}".to_string()),
+                    Ok(String::new()),
+                    Ok("{\"c\":3}".to_string()),
+                ],
+                "chunk size {chunk_size}"
+            );
+            assert_eq!(f.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn overlong_line_reported_once_with_bounded_memory() {
+        let mut f = LineFramer::new(8);
+        f.push(b"0123456789"); // 10 bytes, no newline yet
+        assert_eq!(f.next_line(), None);
+        assert_eq!(f.pending(), 0, "oversized prefix discarded immediately");
+        f.push(b"abcdef"); // still the same line
+        assert_eq!(f.next_line(), None);
+        assert_eq!(f.pending(), 0);
+        f.push(b"end\nok\n");
+        assert_eq!(f.next_line(), Some(Err(FrameError::TooLong { max: 8 })));
+        assert_eq!(f.next_line(), Some(Ok("ok".to_string())));
+        assert_eq!(f.next_line(), None);
+    }
+
+    #[test]
+    fn overlong_line_in_a_single_push_is_still_rejected() {
+        // The newline is already present when the cap is crossed, so
+        // the streaming-discard path never runs — the length check on
+        // the completed line must catch it instead.
+        let mut f = LineFramer::new(8);
+        f.push(b"0123456789abcdef\nok\n");
+        assert_eq!(f.next_line(), Some(Err(FrameError::TooLong { max: 8 })));
+        assert_eq!(f.next_line(), Some(Ok("ok".to_string())));
+    }
+
+    #[test]
+    fn exactly_max_line_bytes_is_accepted() {
+        let mut f = LineFramer::new(8);
+        f.push(b"01234567\n");
+        assert_eq!(f.next_line(), Some(Ok("01234567".to_string())));
+    }
+
+    #[test]
+    fn invalid_utf8_is_a_value_not_a_wedge() {
+        let mut f = LineFramer::new(64);
+        f.push(b"\xff\xfe\n{\"x\":1}\n");
+        assert_eq!(f.next_line(), Some(Err(FrameError::NotUtf8)));
+        assert_eq!(f.next_line(), Some(Ok("{\"x\":1}".to_string())));
+    }
+
+    #[test]
+    fn partial_line_stays_pending() {
+        let mut f = LineFramer::new(64);
+        f.push(b"{\"x\": 1");
+        assert_eq!(f.next_line(), None);
+        assert_eq!(f.pending(), 7, "mid-line disconnect leaves bytes unclaimed");
+    }
+
+    #[test]
+    fn compaction_keeps_long_sessions_bounded() {
+        let mut f = LineFramer::new(64);
+        for i in 0..10_000 {
+            f.push(format!("line{i}\n").as_bytes());
+            assert!(matches!(f.next_line(), Some(Ok(_))));
+            assert_eq!(f.next_line(), None);
+            assert!(f.buf.len() <= 4096 + 64, "buffer grew unboundedly");
+        }
+    }
+}

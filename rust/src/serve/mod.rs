@@ -1,0 +1,38 @@
+//! `allpairs serve` — the online scoring subsystem (DESIGN.md §11).
+//!
+//! A trained checkpoint becomes a long-running scoring service: clients
+//! stream newline-delimited JSON requests over TCP (or stdin) and get
+//! one response line per request line, in order.  Three guarantees
+//! define the subsystem, each carried by one layer here:
+//!
+//! 1. **Batched ≡ single, bit for bit** ([`scorer`]): concurrent
+//!    requests are micro-batched into one forward pass, and because the
+//!    native forward is row-independent — per-row arithmetic is a pure
+//!    function of that row and the parameters, and the engine's chunk
+//!    layout depends only on the row count — a score never depends on
+//!    which other requests shared its batch.
+//! 2. **One ordered response per request line** ([`framing`],
+//!    [`protocol`], [`server`]): malformed JSON, wrong arity, non-f32
+//!    features, over-long lines — all produce structured `error`
+//!    responses in request order; only transport-level EOF/reset ends a
+//!    connection, and a mid-line disconnect abandons the incomplete
+//!    line without disturbing anyone else.
+//! 3. **Atomic hot reload** ([`scorer`] + [`crate::train::checkpoint`]):
+//!    the trainer publishes checkpoints by atomic rename with a CRC
+//!    footer, the watcher only fires on complete publishes, and the
+//!    executor validates a candidate state fully before assigning — so
+//!    the server swaps models between micro-batches or keeps the old
+//!    one, never serves a torn mix.
+
+pub mod framing;
+pub mod protocol;
+pub mod scorer;
+pub mod server;
+
+pub use framing::{FrameError, LineFramer, DEFAULT_MAX_LINE};
+pub use protocol::{error_response, parse_request, score_response, RequestError, ScoreRequest};
+pub use scorer::{
+    infer_model, spawn_reload_watcher, ModelInfo, ScoreHandle, Scorer, ScorerOptions, ServeStats,
+    WatcherGuard, FP_RELOAD,
+};
+pub use server::{run_stdin, Server, ServerOptions};

@@ -1,0 +1,187 @@
+//! The JSONL scoring protocol: request parsing and response encoding
+//! over [`crate::util::json`] (DESIGN.md §11).
+//!
+//! Request (one JSON object per line):
+//!
+//! ```text
+//! {"features": [0.1, -2.5, ...], "id": <any JSON value, optional>}
+//! ```
+//!
+//! Response (one JSON object per line, always):
+//!
+//! ```text
+//! {"id": <echoed, null if absent>, "score": 0.3728193}
+//! {"id": <echoed, null if absent>, "error": "what went wrong"}
+//! ```
+//!
+//! Every complete request line produces exactly one response line, in
+//! request order; a malformed line gets a structured `error` response,
+//! never a dropped response or a connection teardown.  The `id` is
+//! echoed whenever the line parsed far enough to have one, so
+//! pipelining clients can correlate errors too.
+
+use crate::util::json::Json;
+
+/// A parsed, validated scoring request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoreRequest {
+    /// Opaque correlation value, echoed verbatim in the response.
+    pub id: Option<Json>,
+    pub features: Vec<f32>,
+}
+
+/// A request line that failed validation: the echoable id (if the line
+/// parsed far enough to have one) plus a client-safe message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestError {
+    pub id: Option<Json>,
+    pub message: String,
+}
+
+/// Parse one request line.  The feature values are narrowed to `f32`
+/// (the model's score arithmetic) with a finiteness check: a literal
+/// like `1e300` is a finite f64 but an infinite f32, and letting it
+/// through would score garbage silently.  (Non-finite *literals* like
+/// `1e999` never get this far — the JSON parser itself rejects them.)
+pub fn parse_request(line: &str) -> Result<ScoreRequest, RequestError> {
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            return Err(RequestError {
+                id: None,
+                message: format!("invalid JSON: {e:#}"),
+            })
+        }
+    };
+    let id = j.get("id").cloned();
+    let err = |message: String| RequestError {
+        id: id.clone(),
+        message,
+    };
+    if j.as_obj().is_none() {
+        return Err(err("request must be a JSON object".into()));
+    }
+    let Some(feats) = j.get("features") else {
+        return Err(err("missing \"features\"".into()));
+    };
+    let Some(arr) = feats.as_arr() else {
+        return Err(err("\"features\" must be an array of numbers".into()));
+    };
+    let mut features = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let Some(n) = v.as_f64() else {
+            return Err(err(format!("features[{i}] must be a number")));
+        };
+        let f = n as f32;
+        if !f.is_finite() {
+            return Err(err(format!("features[{i}] = {n:e} is not a finite f32")));
+        }
+        features.push(f);
+    }
+    Ok(ScoreRequest { id, features })
+}
+
+fn id_field(id: Option<&Json>) -> Json {
+    id.cloned().unwrap_or(Json::Null)
+}
+
+/// Encode a success response.  The f32 score widens to f64 exactly, and
+/// `dumps` emits the shortest round-tripping decimal — so the client
+/// reads back the score bit for bit.  A non-finite score (a diverged
+/// checkpoint) degrades to a structured error rather than panicking the
+/// writer (`dumps` asserts finiteness).
+pub fn score_response(id: Option<&Json>, score: f32) -> String {
+    if !score.is_finite() {
+        return error_response(id, "model produced a non-finite score");
+    }
+    Json::obj([("id", id_field(id)), ("score", Json::num(score as f64))]).dumps()
+}
+
+/// Encode an error response.
+pub fn error_response(id: Option<&Json>, message: &str) -> String {
+    Json::obj([("id", id_field(id)), ("error", Json::str(message))]).dumps()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_and_id_carrying_requests() {
+        let r = parse_request(r#"{"features": [1.5, -2.0]}"#).unwrap();
+        assert_eq!(r.id, None);
+        assert_eq!(r.features, vec![1.5, -2.0]);
+
+        let r = parse_request(r#"{"id": 7, "features": []}"#).unwrap();
+        assert_eq!(r.id, Some(Json::num(7.0)));
+        assert!(r.features.is_empty());
+
+        let r = parse_request(r#"{"id": "req-1", "features": [0]}"#).unwrap();
+        assert_eq!(r.id, Some(Json::str("req-1")));
+    }
+
+    #[test]
+    fn malformed_lines_get_structured_errors() {
+        for (line, needle) in [
+            ("{\"features\": [1,", "invalid JSON"),
+            ("[1, 2, 3]", "must be a JSON object"),
+            ("{\"id\": 1}", "missing \"features\""),
+            ("{\"features\": 3}", "must be an array"),
+            ("{\"features\": [1, \"x\"]}", "features[1] must be a number"),
+            ("{\"features\": [1e999]}", "invalid JSON"),
+        ] {
+            let e = parse_request(line).unwrap_err();
+            assert!(e.message.contains(needle), "{line}: {}", e.message);
+        }
+    }
+
+    #[test]
+    fn id_is_echoed_even_on_invalid_features() {
+        let e = parse_request(r#"{"id": 42, "features": "nope"}"#).unwrap_err();
+        assert_eq!(e.id, Some(Json::num(42.0)));
+        let resp = error_response(e.id.as_ref(), &e.message);
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(42.0));
+        assert!(j.get("error").is_some());
+    }
+
+    #[test]
+    fn f32_overflowing_features_are_rejected() {
+        // 1e300 is a perfectly finite f64; the narrowing to the model's
+        // f32 rows is where it becomes infinite.
+        let e = parse_request(r#"{"features": [1e300]}"#).unwrap_err();
+        assert!(e.message.contains("finite f32"), "{}", e.message);
+        // but the full finite-f32 range passes
+        let r = parse_request(r#"{"features": [3e38, -3e38, 1e-300]}"#).unwrap();
+        assert_eq!(r.features, vec![3e38, -3e38, 0.0]);
+    }
+
+    #[test]
+    fn score_responses_round_trip_the_f32_bits() {
+        for score in [0.0_f32, -0.0, 0.1, -123.456, 3.4e38, 1.2e-38, 7.0] {
+            let resp = score_response(Some(&Json::str("a")), score);
+            let j = Json::parse(&resp).unwrap();
+            let back = j.get("score").and_then(Json::as_f64).unwrap();
+            assert_eq!(back, score as f64, "score {score} mangled: {resp}");
+            assert_eq!(back as f32, score);
+        }
+    }
+
+    #[test]
+    fn non_finite_scores_degrade_to_errors_not_panics() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let resp = score_response(None, bad);
+            let j = Json::parse(&resp).unwrap();
+            assert!(j.get("error").is_some(), "{resp}");
+            assert!(j.get("score").is_none());
+        }
+    }
+
+    #[test]
+    fn absent_id_echoes_null() {
+        let j = Json::parse(&score_response(None, 1.0)).unwrap();
+        assert_eq!(j.get("id"), Some(&Json::Null));
+        let j = Json::parse(&error_response(None, "m")).unwrap();
+        assert_eq!(j.get("id"), Some(&Json::Null));
+    }
+}

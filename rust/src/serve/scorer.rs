@@ -1,0 +1,573 @@
+//! The scoring core: one thread owns the backend and executor, and
+//! micro-batches concurrent requests into single forward passes.
+//!
+//! Determinism (DESIGN.md §11): the native forward pass is row-
+//! independent — each score is a pure function of its own feature row
+//! and the parameters, and the engine's chunk layout depends only on
+//! the row count — so a request scored inside a 64-row micro-batch
+//! produces the *bit-identical* f32 it would get scored alone.  CI's
+//! serve-smoke job pins this end to end against the offline path.
+//!
+//! Hot reload: a [`Msg::Reload`] makes the scoring thread re-read the
+//! checkpoint between batches.  Safety comes from three layers — the
+//! trainer publishes via atomic rename (never a torn file), the
+//! checkpoint CRC rejects corruption, and the executor's `load_state`
+//! validates arity and shapes *before* assigning — so any failed reload
+//! (missing file, bad CRC, wrong architecture, injected fault) leaves
+//! the previous model serving untouched.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::losses::LossSpec;
+use crate::runtime::{Backend, HostTensor, ModelExecutor, NativeBackend, NativeSpec};
+use crate::train::checkpoint;
+use crate::util::failpoint;
+
+/// Failpoint on the hot-reload path: tests inject a reload failure and
+/// assert the old model keeps serving.
+pub const FP_RELOAD: &str = "serve.reload";
+
+/// Counters exposed by [`ScoreHandle::stats`].  Because the scoring
+/// thread processes messages in order, a `stats()` call also acts as a
+/// barrier: once it returns, every previously submitted request and
+/// reload has been fully processed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Forward passes executed.
+    pub batches: u64,
+    /// Rows scored across all batches.
+    pub rows: u64,
+    /// Largest micro-batch folded into one forward pass.
+    pub max_batch_rows: u64,
+    /// Error replies sent (wrong arity, non-finite score, engine error).
+    pub errors: u64,
+    pub reloads_ok: u64,
+    pub reloads_failed: u64,
+}
+
+/// The architecture a checkpoint implies, recovered from its state-
+/// tensor layout (parameters first, momentum mirror after):
+/// linear = 4 tensors `[dim], [], [dim], []`; MLP = 8 tensors starting
+/// `[h, dim], [h], [h], []`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelInfo {
+    /// Model name as `Backend::open` spells it (`"linear"` | `"mlp"`).
+    pub model: &'static str,
+    pub dim: usize,
+    pub hidden: usize,
+    pub n_state: usize,
+}
+
+impl ModelInfo {
+    /// The backend spec that reproduces this architecture.
+    pub fn native_spec(&self, threads: usize) -> NativeSpec {
+        NativeSpec {
+            input_dim: self.dim,
+            hidden: self.hidden,
+            threads,
+            ..NativeSpec::default()
+        }
+    }
+}
+
+/// Infer the model architecture from a checkpoint's tensors.
+pub fn infer_model(tensors: &[HostTensor]) -> crate::Result<ModelInfo> {
+    let shapes: Vec<&[i64]> = tensors.iter().map(|t| t.shape.as_slice()).collect();
+    let half = shapes.len() / 2;
+    let n_state = shapes.len();
+    if n_state >= 4 && n_state % 2 == 0 && shapes[..half] == shapes[half..] {
+        match &shapes[..half] {
+            &[&[d], &[]] if d > 0 => {
+                return Ok(ModelInfo {
+                    model: "linear",
+                    dim: d as usize,
+                    hidden: 0,
+                    n_state,
+                })
+            }
+            &[&[h, d], &[h1], &[h2], &[]] if h > 0 && d > 0 && h1 == h && h2 == h => {
+                return Ok(ModelInfo {
+                    model: "mlp",
+                    dim: d as usize,
+                    hidden: h as usize,
+                    n_state,
+                })
+            }
+            _ => {}
+        }
+    }
+    anyhow::bail!("unrecognized checkpoint layout {shapes:?} (not a linear or MLP state)")
+}
+
+/// How to build the scoring thread.
+#[derive(Debug, Clone)]
+pub struct ScorerOptions {
+    pub checkpoint: PathBuf,
+    /// Cap on rows folded into one forward pass.
+    pub max_batch: usize,
+    /// Engine worker threads (0 = one per core).
+    pub threads: usize,
+}
+
+impl ScorerOptions {
+    pub fn new(checkpoint: impl Into<PathBuf>) -> Self {
+        Self {
+            checkpoint: checkpoint.into(),
+            max_batch: 1024,
+            threads: 0,
+        }
+    }
+}
+
+struct ScoreJob {
+    features: Vec<f32>,
+    reply: mpsc::Sender<Result<f32, String>>,
+}
+
+enum Msg {
+    Score(ScoreJob),
+    Reload,
+    Stats(mpsc::Sender<ServeStats>),
+}
+
+/// Cheap, cloneable submission endpoint; every connection thread holds
+/// one.  The scoring thread exits when the last handle drops.
+#[derive(Clone)]
+pub struct ScoreHandle {
+    tx: mpsc::Sender<Msg>,
+    row_len: usize,
+}
+
+impl ScoreHandle {
+    /// Features per request (the checkpoint's input dimension).
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// Submit one request and return its reply channel immediately, so
+    /// a connection can pipeline many requests while preserving its own
+    /// response order.
+    pub fn submit(&self, features: Vec<f32>) -> mpsc::Receiver<Result<f32, String>> {
+        let (reply, rx) = mpsc::channel();
+        if let Err(mpsc::SendError(Msg::Score(job))) =
+            self.tx.send(Msg::Score(ScoreJob { features, reply }))
+        {
+            let _ = job.reply.send(Err("scoring engine is shut down".into()));
+        }
+        rx
+    }
+
+    /// Score one request, blocking for the reply.  Used by the `--stdin`
+    /// reference path: each call completes before the next begins, so
+    /// every micro-batch holds exactly one row.
+    pub fn score(&self, features: Vec<f32>) -> Result<f32, String> {
+        self.submit(features)
+            .recv()
+            .unwrap_or_else(|_| Err("scoring engine is shut down".into()))
+    }
+
+    /// Request a checkpoint reload (asynchronous; the outcome lands in
+    /// [`stats`](Self::stats)).  Returns false if the scorer is gone.
+    pub fn reload(&self) -> bool {
+        self.tx.send(Msg::Reload).is_ok()
+    }
+
+    /// Fetch the counters; doubles as a completion barrier for all
+    /// messages sent before it on this handle.
+    pub fn stats(&self) -> Option<ServeStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Stats(tx)).ok()?;
+        rx.recv().ok()
+    }
+}
+
+/// A running scoring thread plus its submission handle.
+pub struct Scorer {
+    pub handle: ScoreHandle,
+    pub info: ModelInfo,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl Scorer {
+    /// Load the checkpoint, infer the architecture, and start the
+    /// scoring thread (fails fast if the state doesn't open).
+    pub fn spawn(opts: ScorerOptions) -> crate::Result<Scorer> {
+        anyhow::ensure!(opts.max_batch >= 1, "max_batch must be >= 1");
+        let tensors = checkpoint::load(&opts.checkpoint)?;
+        let info = infer_model(&tensors)?;
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("allpairs-scorer".into())
+            .spawn(move || scorer_thread(rx, ready_tx, tensors, info, opts))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("scoring thread died during startup"))??;
+        Ok(Scorer {
+            handle: ScoreHandle { tx, row_len: info.dim },
+            info,
+            thread,
+        })
+    }
+
+    /// Drop this struct's handle and join the scoring thread.  Blocks
+    /// until every cloned [`ScoreHandle`] has dropped too.
+    pub fn shutdown(self) {
+        let Scorer { handle, thread, .. } = self;
+        drop(handle);
+        let _ = thread.join();
+    }
+}
+
+fn scorer_thread(
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<crate::Result<()>>,
+    tensors: Vec<HostTensor>,
+    info: ModelInfo,
+    opts: ScorerOptions,
+) {
+    // The executor borrows the backend, so both live (and die) on this
+    // thread: one owner of all model state, no locks on the hot path.
+    // The loss and train-batch size are irrelevant to `predict`; hinge
+    // at batch 1 always opens.
+    let backend = NativeBackend::new(info.native_spec(opts.threads));
+    let mut exec = match backend
+        .open(info.model, &LossSpec::hinge(), 1)
+        .and_then(|mut e| e.load_state(&tensors).map(|()| e))
+    {
+        Ok(exec) => {
+            let _ = ready.send(Ok(()));
+            exec
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    drop(tensors);
+
+    let dim = info.dim;
+    let mut stats = ServeStats::default();
+    let mut xbuf: Vec<f32> = Vec::new();
+    let mut scores: Vec<f32> = Vec::new();
+    let mut replies: Vec<mpsc::Sender<Result<f32, String>>> = Vec::new();
+
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            Msg::Reload => {
+                reload(exec.as_mut(), &opts.checkpoint, &mut stats);
+                continue;
+            }
+            Msg::Stats(tx) => {
+                let _ = tx.send(stats);
+                continue;
+            }
+            Msg::Score(job) => job,
+        };
+
+        // Micro-batch: the blocking head request plus whatever is
+        // already queued, up to max_batch rows.  A control message seen
+        // mid-drain is deferred until after the forward pass, so the
+        // rows already collected complete on the model they arrived
+        // under — a reload never tears an in-flight batch.
+        xbuf.clear();
+        replies.clear();
+        let mut deferred: Option<Msg> = None;
+        enqueue(job, dim, &mut xbuf, &mut replies, &mut stats);
+        while replies.len() < opts.max_batch {
+            match rx.try_recv() {
+                Ok(Msg::Score(job)) => enqueue(job, dim, &mut xbuf, &mut replies, &mut stats),
+                Ok(ctrl) => {
+                    deferred = Some(ctrl);
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+
+        if !replies.is_empty() {
+            let rows = replies.len();
+            scores.clear();
+            match exec.predict_into(&xbuf, rows, &mut scores) {
+                Ok(()) => {
+                    stats.batches += 1;
+                    stats.rows += rows as u64;
+                    stats.max_batch_rows = stats.max_batch_rows.max(rows as u64);
+                    for (reply, &s) in replies.iter().zip(&scores) {
+                        if s.is_finite() {
+                            let _ = reply.send(Ok(s));
+                        } else {
+                            stats.errors += 1;
+                            let _ = reply.send(Err("model produced a non-finite score".into()));
+                        }
+                    }
+                }
+                Err(e) => {
+                    stats.errors += rows as u64;
+                    for reply in &replies {
+                        let _ = reply.send(Err(format!("scoring failed: {e:#}")));
+                    }
+                }
+            }
+        }
+
+        match deferred {
+            Some(Msg::Reload) => reload(exec.as_mut(), &opts.checkpoint, &mut stats),
+            Some(Msg::Stats(tx)) => {
+                let _ = tx.send(stats);
+            }
+            Some(Msg::Score(_)) | None => {}
+        }
+    }
+}
+
+/// Validate and stage one request into the batch buffers.  A wrong-
+/// arity request is answered immediately — it can't join the batch —
+/// without disturbing the rows already staged.
+fn enqueue(
+    job: ScoreJob,
+    dim: usize,
+    xbuf: &mut Vec<f32>,
+    replies: &mut Vec<mpsc::Sender<Result<f32, String>>>,
+    stats: &mut ServeStats,
+) {
+    if job.features.len() == dim {
+        xbuf.extend_from_slice(&job.features);
+        replies.push(job.reply);
+    } else {
+        stats.errors += 1;
+        let _ = job.reply.send(Err(format!(
+            "expected {dim} features, got {}",
+            job.features.len()
+        )));
+    }
+}
+
+/// Attempt a checkpoint reload; on any failure the previous state is
+/// untouched (`load_state` validates before assigning) and the old
+/// model keeps serving.
+fn reload(exec: &mut dyn ModelExecutor, path: &Path, stats: &mut ServeStats) {
+    let outcome = (|| -> crate::Result<()> {
+        failpoint::check(FP_RELOAD)?;
+        let tensors = checkpoint::load(path)?;
+        exec.load_state(&tensors)
+    })();
+    match outcome {
+        Ok(()) => {
+            stats.reloads_ok += 1;
+            eprintln!("serve: reloaded checkpoint {}", path.display());
+        }
+        Err(e) => {
+            stats.reloads_failed += 1;
+            eprintln!("serve: reload failed, keeping the current model: {e:#}");
+        }
+    }
+}
+
+/// Guard for a background reload-watcher thread; dropping it stops the
+/// thread promptly.  A long-lived caller (the CLI) just keeps it in
+/// scope for the process lifetime.
+pub struct WatcherGuard {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for WatcherGuard {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            t.thread().unpark();
+            let _ = t.join();
+        }
+    }
+}
+
+/// Poll `path` every `period` and request a reload on each change.
+/// Built on [`checkpoint::Watcher`], so only complete atomic-rename
+/// publishes trigger (a deleted file never does).
+pub fn spawn_reload_watcher(
+    path: impl Into<PathBuf>,
+    period: Duration,
+    handle: ScoreHandle,
+) -> crate::Result<WatcherGuard> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = stop.clone();
+    let mut watcher = checkpoint::Watcher::new(path);
+    let thread = std::thread::Builder::new()
+        .name("allpairs-reload-watch".into())
+        .spawn(move || {
+            while !flag.load(Ordering::Relaxed) {
+                std::thread::park_timeout(period);
+                if flag.load(Ordering::Relaxed) {
+                    break;
+                }
+                if watcher.poll() && !handle.reload() {
+                    break; // scorer gone: nothing left to notify
+                }
+            }
+        })?;
+    Ok(WatcherGuard {
+        stop,
+        thread: Some(thread),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("allpairs_scorer_{}_{name}", std::process::id()))
+    }
+
+    /// Train-free checkpoint: init an executor and snapshot its state.
+    fn make_checkpoint(path: &Path, seed: u32, dim: usize, hidden: usize) -> Vec<HostTensor> {
+        let backend = NativeBackend::new(NativeSpec {
+            input_dim: dim,
+            hidden,
+            threads: 1,
+            ..NativeSpec::default()
+        });
+        let model = if hidden == 0 { "linear" } else { "mlp" };
+        let mut exec = backend.open(model, &LossSpec::hinge(), 1).unwrap();
+        exec.init(seed).unwrap();
+        let state = exec.state_to_host().unwrap();
+        checkpoint::save(path, &state).unwrap();
+        state
+    }
+
+    #[test]
+    fn infers_linear_and_mlp_layouts() {
+        let p = tmp("infer_linear.bin");
+        make_checkpoint(&p, 0, 5, 0);
+        let info = infer_model(&checkpoint::load(&p).unwrap()).unwrap();
+        assert_eq!(info, ModelInfo { model: "linear", dim: 5, hidden: 0, n_state: 4 });
+
+        let p = tmp("infer_mlp.bin");
+        make_checkpoint(&p, 0, 6, 3);
+        let info = infer_model(&checkpoint::load(&p).unwrap()).unwrap();
+        assert_eq!(info, ModelInfo { model: "mlp", dim: 6, hidden: 3, n_state: 8 });
+    }
+
+    #[test]
+    fn rejects_unrecognizable_layouts() {
+        for tensors in [
+            vec![],
+            vec![HostTensor::vec1(vec![1.0]); 3], // odd arity
+            vec![
+                // momentum half doesn't mirror the params
+                HostTensor::vec1(vec![1.0, 2.0]),
+                HostTensor::scalar(0.0),
+                HostTensor::vec1(vec![1.0]),
+                HostTensor::scalar(0.0),
+            ],
+            vec![HostTensor::new(vec![2, 2, 2], vec![0.0; 8]); 4], // rank 3
+        ] {
+            assert!(infer_model(&tensors).is_err(), "{:?}", tensors.len());
+        }
+    }
+
+    #[test]
+    fn scores_match_the_offline_executor_bit_for_bit() {
+        let p = tmp("roundtrip.bin");
+        let state = make_checkpoint(&p, 7, 4, 2);
+        let scorer = Scorer::spawn(ScorerOptions {
+            max_batch: 8,
+            threads: 1,
+            ..ScorerOptions::new(&p)
+        })
+        .unwrap();
+        assert_eq!(scorer.handle.row_len(), 4);
+
+        // offline reference
+        let backend = NativeBackend::new(scorer.info.native_spec(1));
+        let mut exec = backend.open("mlp", &LossSpec::hinge(), 1).unwrap();
+        exec.load_state(&state).unwrap();
+
+        let mut rng = crate::data::Rng::new(3);
+        for _ in 0..20 {
+            let row: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            let want = exec.predict(&row, 1).unwrap()[0];
+            let got = scorer.handle.score(row).unwrap();
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        let stats = scorer.handle.stats().unwrap();
+        assert_eq!(stats.rows, 20);
+        assert_eq!(stats.errors, 0);
+        scorer.shutdown();
+    }
+
+    #[test]
+    fn wrong_arity_is_an_immediate_structured_error() {
+        let p = tmp("arity.bin");
+        make_checkpoint(&p, 1, 3, 0);
+        let scorer = Scorer::spawn(ScorerOptions::new(&p)).unwrap();
+        let err = scorer.handle.score(vec![1.0; 5]).unwrap_err();
+        assert!(err.contains("expected 3 features, got 5"), "{err}");
+        // and the engine still serves the next valid request
+        assert!(scorer.handle.score(vec![1.0; 3]).is_ok());
+        let stats = scorer.handle.stats().unwrap();
+        assert_eq!((stats.errors, stats.rows), (1, 1));
+        scorer.shutdown();
+    }
+
+    #[test]
+    fn reload_swaps_models_and_failures_keep_the_old_one() {
+        let _guard = failpoint::serial_guard();
+        let p = tmp("reload.bin");
+        make_checkpoint(&p, 10, 4, 0);
+        let scorer = Scorer::spawn(ScorerOptions::new(&p)).unwrap();
+        let row = vec![0.5_f32, -1.0, 2.0, 0.25];
+        let score_a = scorer.handle.score(row.clone()).unwrap();
+
+        // An injected failure mid-reload must not disturb the model.
+        failpoint::arm_str(FP_RELOAD, "error").unwrap();
+        assert!(scorer.handle.reload());
+        let stats = scorer.handle.stats().unwrap();
+        assert_eq!((stats.reloads_ok, stats.reloads_failed), (0, 1));
+        assert_eq!(scorer.handle.score(row.clone()).unwrap(), score_a);
+        failpoint::disarm(FP_RELOAD);
+
+        // A real republish swaps in the new parameters.
+        make_checkpoint(&p, 11, 4, 0);
+        assert!(scorer.handle.reload());
+        let stats = scorer.handle.stats().unwrap();
+        assert_eq!((stats.reloads_ok, stats.reloads_failed), (1, 1));
+        let score_b = scorer.handle.score(row).unwrap();
+        assert_ne!(score_a.to_bits(), score_b.to_bits());
+        scorer.shutdown();
+    }
+
+    #[test]
+    fn watcher_triggers_reload_on_republish() {
+        let p = tmp("watch.bin");
+        make_checkpoint(&p, 20, 3, 0);
+        let scorer = Scorer::spawn(ScorerOptions::new(&p)).unwrap();
+        let guard =
+            spawn_reload_watcher(&p, Duration::from_millis(5), scorer.handle.clone()).unwrap();
+        make_checkpoint(&p, 21, 3, 0);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let stats = scorer.handle.stats().unwrap();
+            if stats.reloads_ok >= 1 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "watcher never fired");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        drop(guard);
+        scorer.shutdown();
+    }
+
+    #[test]
+    fn spawn_fails_fast_on_a_missing_or_corrupt_checkpoint() {
+        let p = tmp("nope.bin");
+        let _ = std::fs::remove_file(&p);
+        assert!(Scorer::spawn(ScorerOptions::new(&p)).is_err());
+        std::fs::write(&p, b"garbage").unwrap();
+        assert!(Scorer::spawn(ScorerOptions::new(&p)).is_err());
+    }
+}

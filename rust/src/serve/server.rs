@@ -1,0 +1,237 @@
+//! The serving front ends: a threaded TCP listener for concurrent
+//! JSONL clients, and a blocking stdin mode that doubles as the
+//! offline reference path.
+//!
+//! Per connection, a reader thread and a writer thread share a FIFO of
+//! pending responses: the reader frames and parses request lines and
+//! enqueues either a ready error response or an in-flight score; the
+//! writer resolves them in order.  That queue is what keeps responses
+//! in request order even though error responses are ready instantly
+//! while earlier scores are still crossing the micro-batcher.
+//!
+//! Failure policy (DESIGN.md §11): a bad line yields a structured
+//! error *response*; only a transport-level event (EOF, reset) ends a
+//! connection, and a mid-line disconnect simply abandons the partial
+//! line — it never completed a request, so no response is owed and the
+//! listener keeps serving everyone else.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use super::framing::{LineFramer, DEFAULT_MAX_LINE};
+use super::protocol::{self, ScoreRequest};
+use super::scorer::ScoreHandle;
+use crate::util::json::Json;
+
+/// Front-end tunables.
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Byte cap per request line (over-long lines get an error
+    /// response, never unbounded buffering).
+    pub max_line: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        Self {
+            max_line: DEFAULT_MAX_LINE,
+        }
+    }
+}
+
+/// One slot of a connection's response FIFO.
+enum Pending {
+    /// Response line already known (request-level error).
+    Ready(String),
+    /// Score in flight through the micro-batcher.
+    InFlight {
+        id: Option<Json>,
+        reply: mpsc::Receiver<Result<f32, String>>,
+    },
+}
+
+/// A listening scoring server; accepts until [`stop`](Server::stop).
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an OS-assigned port) and
+    /// start accepting in a background thread.
+    pub fn start(addr: &str, handle: ScoreHandle, opts: ServerOptions) -> crate::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("allpairs-accept".into())
+            .spawn(move || accept_loop(listener, handle, opts, flag))?;
+        Ok(Server {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address (reports the real port after `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread; connections already
+    /// established drain independently.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    handle: ScoreHandle,
+    opts: ServerOptions,
+    stop: Arc<AtomicBool>,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let handle = handle.clone();
+                let opts = opts.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("allpairs-conn".into())
+                    .spawn(move || handle_connection(stream, handle, opts));
+                if let Err(e) = spawned {
+                    eprintln!("serve: dropping connection (thread spawn failed: {e})");
+                }
+            }
+            Err(e) => eprintln!("serve: accept error: {e}"),
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, handle: ScoreHandle, opts: ServerOptions) {
+    let _ = stream.set_nodelay(true);
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (ptx, prx) = mpsc::channel::<Pending>();
+    let writer = std::thread::Builder::new()
+        .name("allpairs-conn-write".into())
+        .spawn(move || write_loop(write_half, prx));
+    let Ok(writer) = writer else { return };
+    read_loop(stream, &handle, &opts, &ptx);
+    // EOF or reset: close the FIFO so the writer drains what's still in
+    // flight, then exits.
+    drop(ptx);
+    let _ = writer.join();
+}
+
+/// Frame, parse and submit request lines.  Every *complete* line — good
+/// or bad — enqueues exactly one pending response, in arrival order.
+fn read_loop(
+    mut stream: TcpStream,
+    handle: &ScoreHandle,
+    opts: &ServerOptions,
+    ptx: &mpsc::Sender<Pending>,
+) {
+    let mut framer = LineFramer::new(opts.max_line);
+    let mut chunk = [0u8; 8192];
+    loop {
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => return, // EOF; a partial line is abandoned
+            Ok(n) => n,
+            Err(_) => return, // mid-line disconnect / reset
+        };
+        framer.push(&chunk[..n]);
+        while let Some(line) = framer.next_line() {
+            let pending = match line {
+                Err(e) => Pending::Ready(protocol::error_response(None, &e.message())),
+                Ok(line) if line.trim().is_empty() => continue, // keep-alive blank
+                Ok(line) => match protocol::parse_request(&line) {
+                    Ok(ScoreRequest { id, features }) => Pending::InFlight {
+                        id,
+                        reply: handle.submit(features),
+                    },
+                    Err(e) => Pending::Ready(protocol::error_response(e.id.as_ref(), &e.message)),
+                },
+            };
+            if ptx.send(pending).is_err() {
+                return; // writer gone: client closed its read side
+            }
+        }
+    }
+}
+
+/// Resolve the pending FIFO in order and write one JSONL line each.
+fn write_loop(stream: TcpStream, prx: mpsc::Receiver<Pending>) {
+    let mut out = std::io::BufWriter::new(stream);
+    for pending in prx {
+        let line = match pending {
+            Pending::Ready(line) => line,
+            Pending::InFlight { id, reply } => match reply.recv() {
+                Ok(Ok(score)) => protocol::score_response(id.as_ref(), score),
+                Ok(Err(msg)) => protocol::error_response(id.as_ref(), &msg),
+                Err(_) => protocol::error_response(id.as_ref(), "scoring engine is shut down"),
+            },
+        };
+        if out.write_all(line.as_bytes()).is_err()
+            || out.write_all(b"\n").is_err()
+            || out.flush().is_err()
+        {
+            return;
+        }
+    }
+}
+
+/// Offline / reference mode (`allpairs serve --stdin`): read JSONL
+/// requests from `input`, score each as its own single-row forward pass
+/// ([`ScoreHandle::score`] blocks per line), write responses to
+/// `output`, and return how many were written.  The CI serve-smoke job
+/// diffs this against the concurrent TCP path to pin the batched ≡
+/// single bit-identity end to end.
+pub fn run_stdin(
+    handle: &ScoreHandle,
+    mut input: impl Read,
+    output: &mut impl Write,
+    max_line: usize,
+) -> crate::Result<usize> {
+    let mut framer = LineFramer::new(max_line);
+    let mut chunk = [0u8; 8192];
+    let mut n_responses = 0usize;
+    loop {
+        let n = input.read(&mut chunk)?;
+        framer.push(&chunk[..n]);
+        while let Some(line) = framer.next_line() {
+            let response = match line {
+                Err(e) => protocol::error_response(None, &e.message()),
+                Ok(line) if line.trim().is_empty() => continue,
+                Ok(line) => match protocol::parse_request(&line) {
+                    Ok(req) => match handle.score(req.features) {
+                        Ok(s) => protocol::score_response(req.id.as_ref(), s),
+                        Err(msg) => protocol::error_response(req.id.as_ref(), &msg),
+                    },
+                    Err(e) => protocol::error_response(e.id.as_ref(), &e.message),
+                },
+            };
+            writeln!(output, "{response}")?;
+            n_responses += 1;
+        }
+        if n == 0 {
+            break;
+        }
+    }
+    output.flush()?;
+    Ok(n_responses)
+}

@@ -9,10 +9,12 @@
 //! over seeds then reports the *median* selected batch and learning rate
 //! (Table 2) and the *mean ± sd* test AUC (Figure 3).
 
+use std::cmp::Ordering;
 use std::collections::BTreeMap;
 
 use crate::metrics::Summary;
 
+use super::grid::Job;
 use super::results::RunResult;
 
 /// The per-seed winner of one selection group.
@@ -55,7 +57,38 @@ fn cell_key(dataset: &str, imratio: f64, loss: &str) -> (String, i64, String) {
     )
 }
 
+/// Monotone, order-preserving `u64` image of an `f64` — the classic
+/// sign-flip bit transform, consistent with [`f64::total_cmp`].  Lets a
+/// float participate in a totally ordered (`Ord`) tuple key.
+fn f64_order_key(v: f64) -> u64 {
+    let b = v.to_bits() as i64;
+    (if b < 0 { !b } else { b ^ i64::MIN }) as u64
+}
+
+/// Total, order-independent tie-break key over a job's grid coordinates.
+/// On an exact validation-AUC tie the record whose key sorts *first*
+/// wins, whatever order the journal presents the records in.  (Not
+/// `Job::id()`: its `{:.0e}` learning-rate formatting can collide for
+/// distinct grid points, which would make the key non-total.)
+fn tie_key(job: &Job) -> (usize, u64, usize, usize, &str, &str) {
+    (
+        job.batch,
+        f64_order_key(job.lr),
+        job.epochs,
+        job.patience.map_or(0, |p| p.saturating_add(1)),
+        job.sampling.as_str(),
+        job.model.as_str(),
+    )
+}
+
 /// Per-seed max-validation-AUC selection.
+///
+/// Exact ties are broken by [`tie_key`], a total order over the job's
+/// grid coordinates, so the selected model is a pure function of the
+/// record *set* — `sweep --resume` appends completed-last jobs at the
+/// journal tail, and an order-dependent tie-break would let a resumed
+/// run select a different model than the uninterrupted run it must
+/// match (DESIGN.md §10 resume equivalence).
 pub fn select_per_seed(results: &[RunResult]) -> Vec<SeedSelection> {
     let mut best: BTreeMap<(String, i64, String, u32), &RunResult> = BTreeMap::new();
     for r in results {
@@ -68,7 +101,11 @@ pub fn select_per_seed(results: &[RunResult]) -> Vec<SeedSelection> {
         );
         let replace = match best.get(&key) {
             None => true,
-            Some(cur) => val > cur.best_val_auc.unwrap(),
+            Some(cur) => match val.total_cmp(&cur.best_val_auc.unwrap()) {
+                Ordering::Greater => true,
+                Ordering::Less => false,
+                Ordering::Equal => tie_key(&r.job) < tie_key(&cur.job),
+            },
         };
         if replace {
             best.insert(key, r);
@@ -182,6 +219,58 @@ mod tests {
             sel.iter().map(|s| (s.seed, s.batch)).collect();
         assert_eq!(by_seed[&0], 10);
         assert_eq!(by_seed[&1], 500);
+    }
+
+    #[test]
+    fn tied_val_auc_selects_order_independently() {
+        // Three records tied at val AUC 0.9 for seed 0 (plus a control
+        // group at seed 1): whatever order the journal presents them
+        // in — an uninterrupted run, or a resumed run with the
+        // completed-last jobs appended at the tail — the selection must
+        // be identical.  The tie-break is the smallest (batch, lr, ...)
+        // grid key.
+        use crate::data::Rng;
+        let mut rs = vec![
+            result("hinge", 0.1, 500, 0.1, 0, 0.9, 0.81),
+            result("hinge", 0.1, 10, 0.0316, 0, 0.9, 0.82),
+            result("hinge", 0.1, 10, 0.01, 0, 0.9, 0.83), // tie winner
+            result("hinge", 0.1, 100, 0.01, 1, 0.7, 0.65),
+        ];
+        let snapshot = |rs: &[RunResult]| -> Vec<(u32, usize, f64, Option<f64>)> {
+            select_per_seed(rs)
+                .into_iter()
+                .map(|s| (s.seed, s.batch, s.lr, s.test_auc))
+                .collect()
+        };
+        let want = snapshot(&rs);
+        assert_eq!(want.len(), 2);
+        assert_eq!(
+            (want[0].1, want[0].2, want[0].3),
+            (10, 0.01, Some(0.83)),
+            "smallest grid key wins the tie"
+        );
+        let mut rng = Rng::new(42);
+        for round in 0..50 {
+            // Fisher–Yates on the repo Rng: every permutation reachable.
+            for i in (1..rs.len()).rev() {
+                let j = rng.below(i + 1);
+                rs.swap(i, j);
+            }
+            assert_eq!(snapshot(&rs), want, "permutation round {round}");
+        }
+    }
+
+    #[test]
+    fn higher_val_auc_still_beats_any_tie_key() {
+        // The tie-break only applies on *exact* ties: a strictly higher
+        // validation AUC wins regardless of grid position.
+        let rs = vec![
+            result("hinge", 0.1, 10, 0.01, 0, 0.90, 0.80), // smaller key
+            result("hinge", 0.1, 500, 0.1, 0, 0.91, 0.89), // higher AUC
+        ];
+        let sel = select_per_seed(&rs);
+        assert_eq!(sel.len(), 1);
+        assert_eq!((sel[0].batch, sel[0].test_auc), (500, Some(0.89)));
     }
 
     #[test]

@@ -126,6 +126,74 @@ pub fn load(path: impl AsRef<Path>) -> crate::Result<Vec<HostTensor>> {
     Ok(tensors)
 }
 
+// ---------------------------------------------------------------------------
+// Change detection (serve hot-reload)
+// ---------------------------------------------------------------------------
+
+/// Identity stamp of a checkpoint file: length + mtime, plus the inode
+/// on Unix.  [`save`] publishes through `write_atomic` — a fresh temp
+/// file renamed over the path — so every publish lands on a new inode
+/// (the temp is created while the old file still exists), making
+/// back-to-back saves distinguishable even inside one mtime granule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FileStamp {
+    len: u64,
+    mtime: Option<std::time::SystemTime>,
+    #[cfg(unix)]
+    ino: u64,
+}
+
+/// The stamp of `path`, or `None` while the file is missing/unreadable.
+pub fn stamp(path: &Path) -> Option<FileStamp> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some(FileStamp {
+        len: meta.len(),
+        mtime: meta.modified().ok(),
+        #[cfg(unix)]
+        ino: std::os::unix::fs::MetadataExt::ino(&meta),
+    })
+}
+
+/// Polling change watcher over one checkpoint path — the serve
+/// hot-reload trigger.  Each [`poll`](Watcher::poll) is one `stat`;
+/// it reports `true` when the file's stamp changed since the last
+/// observation.  A *missing* file is never a change: the atomic-rename
+/// publish is the only transition the watcher reacts to, so a reader
+/// that acts on `true` always finds a complete (CRC-checkable) file.
+#[derive(Debug)]
+pub struct Watcher {
+    path: std::path::PathBuf,
+    last: Option<FileStamp>,
+}
+
+impl Watcher {
+    /// Prime the watcher with the current stamp: only *subsequent*
+    /// publishes count as changes.
+    pub fn new(path: impl Into<std::path::PathBuf>) -> Self {
+        let path = path.into();
+        let last = stamp(&path);
+        Watcher { path, last }
+    }
+
+    /// The watched path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// One observation: `true` iff the file exists and its stamp
+    /// differs from the previously observed one.
+    pub fn poll(&mut self) -> bool {
+        match stamp(&self.path) {
+            None => false,
+            Some(cur) => {
+                let changed = self.last != Some(cur);
+                self.last = Some(cur);
+                changed
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +314,38 @@ mod tests {
             let loaded = load(&p);
             assert!(loaded.is_err(), "crafted dims {dims:?} must be rejected");
         }
+    }
+
+    #[test]
+    fn watcher_detects_each_atomic_republish() {
+        let p = tmp("watch.bin");
+        let _ = std::fs::remove_file(&p);
+        let mut w = Watcher::new(&p);
+        assert_eq!(w.path(), p.as_path());
+        assert!(!w.poll(), "missing file is not a change");
+        save(&p, &sample()).unwrap();
+        assert!(w.poll(), "first publish detected");
+        assert!(!w.poll(), "stamp unchanged, no re-trigger");
+        // Identical bytes republished: still a change — write_atomic
+        // lands every publish on a fresh inode.
+        save(&p, &sample()).unwrap();
+        assert!(w.poll(), "republish of identical bytes detected");
+        assert!(!w.poll());
+    }
+
+    #[test]
+    fn watcher_primes_on_an_existing_checkpoint() {
+        let p = tmp("watch_primed.bin");
+        save(&p, &sample()).unwrap();
+        let mut w = Watcher::new(&p);
+        assert!(!w.poll(), "the pre-existing checkpoint is the baseline");
+        save(&p, &[HostTensor::scalar(1.0)]).unwrap();
+        assert!(w.poll());
+        // Deleting the file is not a change; restoring it is.
+        std::fs::remove_file(&p).unwrap();
+        assert!(!w.poll(), "missing file: keep serving the old model");
+        save(&p, &sample()).unwrap();
+        assert!(w.poll());
     }
 
     #[test]

@@ -34,7 +34,12 @@ impl Json {
 
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
-            if n >= 0.0 && n.fract() == 0.0 {
+            // Only integers that an f64 represents *exactly* are
+            // accepted: above 2^53 consecutive integers collide, and a
+            // plain `as usize` cast saturates huge floats (1e300 →
+            // usize::MAX) — both silent corruptions, not conversions.
+            if n >= 0.0 && n.fract() == 0.0 && n < 9_007_199_254_740_992.0 && n <= usize::MAX as f64
+            {
                 Some(n as usize)
             } else {
                 None
@@ -317,6 +322,15 @@ fn parse_number(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
     let n: f64 = text
         .parse()
         .map_err(|e| anyhow::anyhow!("bad number {text:?}: {e}"))?;
+    // `f64::from_str` saturates overflowing literals to ±inf instead of
+    // erroring, which would violate this module's "non-finite numbers
+    // are errors" contract — and `dumps()` asserts on non-finite, so an
+    // accepted `1e999` would turn a later serialization into a panic.
+    // (Underflow to 0.0 or a subnormal is fine: still finite.)
+    anyhow::ensure!(
+        n.is_finite(),
+        "number {text:?} overflows f64 (JSON numbers must be finite)"
+    );
     Ok(Json::Num(n))
 }
 
@@ -373,6 +387,83 @@ mod tests {
         for bad in ["{", "[1,", "\"unterminated", "1 2", "{'a':1}", "nul", ""] {
             assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
         }
+    }
+
+    #[test]
+    fn overflowing_number_literals_are_rejected() {
+        // Regression: `f64::from_str` saturates these to ±inf, so the
+        // parser used to accept them as Num(inf) — and dumps() would
+        // then panic on its is_finite assert.  One malformed line must
+        // be a parse error, never a later panic.
+        for bad in ["1e999", "-1e999", "1e308001", "[1, 2e999]", r#"{"x": -3e999}"#] {
+            let err = Json::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("finite"), "{bad:?}: {err}");
+        }
+        // Underflow is not overflow: subnormals flush toward 0.0 and
+        // stay finite — accepted.
+        assert_eq!(Json::parse("1e-999").unwrap(), Json::Num(0.0));
+        assert_eq!(Json::parse("-1e-999").unwrap(), Json::Num(-0.0));
+        // Near-max finite literals still parse.
+        assert_eq!(Json::parse("1e308").unwrap(), Json::Num(1e308));
+    }
+
+    #[test]
+    fn parse_dumps_roundtrip_property() {
+        // Property: any value the parser accepts serializes to a string
+        // the parser accepts again, equal to the original value — in
+        // particular dumps() can never hit its non-finite assert on
+        // parsed input.  Hand-rolled generator on the repo Rng.
+        use crate::data::Rng;
+        let mut rng = Rng::new(0x15C4_1EAF);
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.uniform() < 0.5),
+                2 => {
+                    // numbers across the whole finite exponent range
+                    let exp = rng.below(613) as i32 - 306;
+                    Json::Num(rng.normal() * 10f64.powi(exp))
+                }
+                3 => {
+                    const ALPHABET: [char; 7] = ['a', 'é', '"', '\\', '\n', '\u{1}', 'π'];
+                    let len = rng.below(8);
+                    Json::Str((0..len).map(|_| ALPHABET[rng.below(7)]).collect())
+                }
+                4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(4))
+                        .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        for _ in 0..500 {
+            let v = gen(&mut rng, 3);
+            let text = v.dumps();
+            let back = Json::parse(&text).unwrap_or_else(|e| panic!("reparse {text:?}: {e}"));
+            // -0.0 == 0.0 under PartialEq, and integer-styled output
+            // (write! as i64) drops the sign of -0.0 — value equality
+            // is the contract, not bit equality.
+            assert_eq!(back, v, "through {text:?}");
+        }
+    }
+
+    #[test]
+    fn as_usize_rejects_inexact_and_out_of_range() {
+        // 2^53 - 1 is the largest integer every neighbor of which f64
+        // still represents exactly; at 2^53 consecutive integers start
+        // to collide, so conversion would silently misrepresent.
+        assert_eq!(Json::Num(9_007_199_254_740_991.0).as_usize(), Some(9_007_199_254_740_991));
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_usize(), None); // 2^53
+        // 2^53 + 1 is not representable: the literal rounds to 2^53,
+        // which the exact-range check rejects all the same.
+        assert_eq!(Json::Num(9_007_199_254_740_993.0).as_usize(), None);
+        assert_eq!(Json::Num(usize::MAX as f64).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None, "used to saturate to usize::MAX");
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(1.5).as_usize(), None);
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::parse("4294967296").unwrap().as_usize(), Some(1 << 32));
     }
 
     #[test]

@@ -262,6 +262,54 @@ fn interrupted_then_resumed_sweep_matches_uninterrupted_run() {
 }
 
 #[test]
+fn resumed_journal_order_cannot_change_tied_selection() {
+    // `sweep --resume` appends the previously-missing jobs at the
+    // journal tail, so a resumed journal presents the same record SET
+    // in a different ORDER than the uninterrupted run.  With exact
+    // validation-AUC ties, an order-dependent tie-break would then
+    // select (and report) a different model.  Write the same tied
+    // records in uninterrupted order and in a resumed order, round-trip
+    // both through the real journal, and require identical selection.
+    let dir = tmp_dir("tied_selection");
+    let mut a = fake_result(0, 0.9);
+    a.job.batch = 10;
+    a.test_auc = Some(0.83);
+    let mut b = fake_result(0, 0.9);
+    b.job.batch = 100;
+    b.test_auc = Some(0.71);
+    let mut c = fake_result(0, 0.9);
+    c.job.lr = 0.1;
+    c.test_auc = Some(0.64);
+    let control = fake_result(1, 0.8);
+
+    let uninterrupted = vec![a.clone(), b.clone(), c.clone(), control.clone()];
+    // crash after b; resume replays {b} then appends the rest last
+    let resumed = vec![b, control, a, c];
+
+    let select_via_journal = |name: &str, records: &[RunResult]| {
+        let path = dir.join(name);
+        results::save_jsonl(&path, records).unwrap();
+        let loaded = results::load_jsonl(&path).unwrap();
+        allpairs::sweep::select::select_per_seed(&loaded)
+            .into_iter()
+            .map(|s| (s.seed, s.batch, s.lr, s.test_auc))
+            .collect::<Vec<_>>()
+    };
+    let want = select_via_journal("uninterrupted.jsonl", &uninterrupted);
+    assert_eq!(want.len(), 2);
+    assert_eq!(
+        (want[0].1, want[0].3),
+        (10, Some(0.83)),
+        "smallest grid key wins the tie"
+    );
+    assert_eq!(
+        select_via_journal("resumed.jsonl", &resumed),
+        want,
+        "selection must be a pure function of the record set"
+    );
+}
+
+#[test]
 fn rerun_without_resume_rotates_never_truncates() {
     let _g = failpoint::serial_guard();
     let cfg = micro_config();

@@ -1,0 +1,393 @@
+//! Serve-path integration tests (DESIGN.md §11): concurrent TCP
+//! clients get bit-identical micro-batched scores, every complete
+//! request line gets exactly one ordered response (malformed input
+//! included), mid-line disconnects are harmless, and hot reload under
+//! load swaps whole models only.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use allpairs::data::Rng;
+use allpairs::losses::LossSpec;
+use allpairs::runtime::{Backend, HostTensor, ModelExecutor, NativeBackend, NativeSpec};
+use allpairs::serve::{
+    run_stdin, spawn_reload_watcher, Scorer, ScorerOptions, Server, ServerOptions, FP_RELOAD,
+};
+use allpairs::train::checkpoint;
+use allpairs::util::failpoint;
+use allpairs::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("allpairs_serve_{}_{name}", std::process::id()))
+}
+
+/// Init an executor at `seed` and publish its state as a checkpoint.
+fn make_checkpoint(path: &Path, seed: u32, dim: usize, hidden: usize) -> Vec<HostTensor> {
+    let backend = NativeBackend::new(NativeSpec {
+        input_dim: dim,
+        hidden,
+        threads: 1,
+        ..NativeSpec::default()
+    });
+    let model = if hidden == 0 { "linear" } else { "mlp" };
+    let mut exec = backend.open(model, &LossSpec::hinge(), 1).unwrap();
+    exec.init(seed).unwrap();
+    let state = exec.state_to_host().unwrap();
+    checkpoint::save(path, &state).unwrap();
+    state
+}
+
+/// Offline single-row scores for `rows` under `state` — the reference
+/// the served scores must match bit for bit.
+fn offline_scores(state: &[HostTensor], dim: usize, hidden: usize, rows: &[Vec<f32>]) -> Vec<f32> {
+    let backend = NativeBackend::new(NativeSpec {
+        input_dim: dim,
+        hidden,
+        threads: 1,
+        ..NativeSpec::default()
+    });
+    let model = if hidden == 0 { "linear" } else { "mlp" };
+    let mut exec = backend.open(model, &LossSpec::hinge(), 1).unwrap();
+    exec.load_state(state).unwrap();
+    rows.iter().map(|r| exec.predict(r, 1).unwrap()[0]).collect()
+}
+
+fn request_line(id: usize, row: &[f32]) -> String {
+    let feats: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+    format!("{{\"id\": {id}, \"features\": [{}]}}", feats.join(", "))
+}
+
+/// `(id, Ok(score) | Err(message))` from a response line.
+fn parse_response(line: &str) -> (Json, Result<f64, String>) {
+    let j = Json::parse(line).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"));
+    let id = j.get("id").cloned().expect("response carries an id");
+    match j.get("score").and_then(Json::as_f64) {
+        Some(s) => (id, Ok(s)),
+        None => {
+            let msg = j.get("error").and_then(Json::as_str).expect("score or error");
+            (id, Err(msg.to_string()))
+        }
+    }
+}
+
+fn rand_row(rng: &mut Rng, dim: usize) -> Vec<f32> {
+    (0..dim).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn stdin_mode_answers_every_complete_line_in_order() {
+    let p = tmp("stdin.bin");
+    let state = make_checkpoint(&p, 3, 4, 2);
+    let scorer = Scorer::spawn(ScorerOptions::new(&p)).unwrap();
+
+    let row = vec![0.5_f32, -1.25, 2.0, 0.75];
+    let want = offline_scores(&state, 4, 2, std::slice::from_ref(&row))[0];
+    let input = format!(
+        "{}\n{}\n{}\n{}\n{}\n\n{}\n",
+        request_line(1, &row),
+        "{\"id\": 2, \"features\": [1,", // malformed JSON
+        "{\"id\": 3, \"features\": [1.0]}", // wrong arity
+        "{\"id\": 4, \"features\": [1e999]}", // non-finite literal
+        "{\"id\": 5, \"features\": [1e300, 0, 0, 0]}", // overflows f32
+        request_line(6, &row),
+    );
+    let mut output = Vec::new();
+    let n = run_stdin(&scorer.handle, input.as_bytes(), &mut output, 1 << 16).unwrap();
+    assert_eq!(n, 6, "one response per complete line, blank skipped");
+
+    let lines: Vec<String> = String::from_utf8(output)
+        .unwrap()
+        .lines()
+        .map(str::to_string)
+        .collect();
+    assert_eq!(lines.len(), 6);
+    let responses: Vec<(Json, Result<f64, String>)> =
+        lines.iter().map(|l| parse_response(l.as_str())).collect();
+
+    assert_eq!(responses[0].0, Json::num(1.0));
+    assert_eq!(responses[0].1, Ok(want as f64), "bit-faithful score");
+    // Malformed JSON: no id to echo, structured error, no skipped line.
+    assert_eq!(responses[1].0, Json::Null);
+    assert!(responses[1].1.as_ref().unwrap_err().contains("invalid JSON"));
+    assert_eq!(responses[2].0, Json::num(3.0));
+    assert!(responses[2].1.as_ref().unwrap_err().contains("expected 4 features"));
+    // 1e999 dies in the JSON parser itself (finiteness is a parse
+    // error), so its id is unreachable — but the response still comes.
+    assert_eq!(responses[3].0, Json::Null);
+    assert!(responses[3].1.as_ref().unwrap_err().contains("invalid JSON"));
+    assert_eq!(responses[4].0, Json::num(5.0));
+    assert!(responses[4].1.as_ref().unwrap_err().contains("finite f32"));
+    assert_eq!(responses[5].0, Json::num(6.0));
+    assert_eq!(responses[5].1, Ok(want as f64), "still serving after the garbage");
+
+    let stats = scorer.handle.stats().unwrap();
+    assert_eq!(stats.rows, 2, "only the two valid requests reached the model");
+    scorer.shutdown();
+}
+
+#[test]
+fn concurrent_tcp_clients_get_bit_identical_micro_batched_scores() {
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 25;
+    const DIM: usize = 16;
+    let p = tmp("tcp.bin");
+    let state = make_checkpoint(&p, 5, DIM, 4);
+    let scorer = Scorer::spawn(ScorerOptions {
+        max_batch: 64,
+        threads: 1,
+        ..ScorerOptions::new(&p)
+    })
+    .unwrap();
+    let server =
+        Server::start("127.0.0.1:0", scorer.handle.clone(), ServerOptions::default()).unwrap();
+    let addr = server.addr();
+
+    // Deterministic per-thread request rows + their offline reference.
+    let rows: Vec<Vec<Vec<f32>>> = (0..THREADS)
+        .map(|t| {
+            let mut rng = Rng::new(0xC0FFEE ^ t as u64);
+            (0..PER_THREAD).map(|_| rand_row(&mut rng, DIM)).collect()
+        })
+        .collect();
+    let want: Vec<Vec<f32>> = rows
+        .iter()
+        .map(|rs| offline_scores(&state, DIM, 4, rs))
+        .collect();
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let rows = rows[t].clone();
+            std::thread::spawn(move || -> Vec<(Json, Result<f64, String>)> {
+                let mut conn = TcpStream::connect(addr).unwrap();
+                // Pipeline every request before reading a single reply:
+                // responses must come back in submission order anyway.
+                for (i, row) in rows.iter().enumerate() {
+                    writeln!(conn, "{}", request_line(t * 1000 + i, row)).unwrap();
+                }
+                let mut reader = BufReader::new(conn);
+                (0..rows.len())
+                    .map(|_| {
+                        let mut line = String::new();
+                        reader.read_line(&mut line).unwrap();
+                        parse_response(line.trim_end())
+                    })
+                    .collect()
+            })
+        })
+        .collect();
+
+    for (t, w) in workers.into_iter().enumerate() {
+        let responses = w.join().unwrap();
+        for (i, (id, outcome)) in responses.into_iter().enumerate() {
+            assert_eq!(id, Json::num((t * 1000 + i) as f64), "order within connection");
+            let got = outcome.unwrap_or_else(|e| panic!("thread {t} req {i}: {e}"));
+            assert_eq!(
+                (got as f32).to_bits(),
+                want[t][i].to_bits(),
+                "micro-batched score must be bit-identical to the offline pass"
+            );
+        }
+    }
+    let stats = scorer.handle.stats().unwrap();
+    assert_eq!(stats.rows, (THREADS * PER_THREAD) as u64);
+    assert_eq!(stats.errors, 0);
+    assert!(stats.batches >= 1 && stats.max_batch_rows >= 1, "{stats:?}");
+    server.stop();
+    scorer.shutdown();
+}
+
+#[test]
+fn malformed_lines_and_midline_disconnects_leave_the_server_serving() {
+    let p = tmp("robust.bin");
+    let state = make_checkpoint(&p, 9, 3, 0);
+    let scorer = Scorer::spawn(ScorerOptions::new(&p)).unwrap();
+    let server = Server::start(
+        "127.0.0.1:0",
+        scorer.handle.clone(),
+        ServerOptions { max_line: 128 },
+    )
+    .unwrap();
+    let addr = server.addr();
+    let row = vec![1.0_f32, -2.0, 0.5];
+    let want = offline_scores(&state, 3, 0, std::slice::from_ref(&row))[0] as f64;
+
+    // Connection A: a mix of garbage and valid lines — one ordered
+    // response each, the connection stays up throughout.
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let burst = format!(
+        "not json at all\n{}\n{{\"id\": 2, \"features\": \"x\"}}\n{}\n{}\n",
+        request_line(1, &row),
+        "x".repeat(300), // over the 128-byte line cap
+        request_line(3, &row),
+    );
+    conn.write_all(burst.as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut read_one = || {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        parse_response(line.trim_end())
+    };
+    let r = read_one();
+    assert!(r.1.unwrap_err().contains("invalid JSON"));
+    let r = read_one();
+    assert_eq!((r.0, r.1), (Json::num(1.0), Ok(want)));
+    let r = read_one();
+    assert_eq!(r.0, Json::num(2.0), "id echoed on a validation error");
+    assert!(r.1.unwrap_err().contains("must be an array"));
+    let r = read_one();
+    assert!(r.1.unwrap_err().contains("exceeds 128 bytes"));
+    let r = read_one();
+    assert_eq!((r.0, r.1), (Json::num(3.0), Ok(want)));
+
+    // Connection B: dies mid-line.  No response owed, nobody else hurt.
+    let mut dead = TcpStream::connect(addr).unwrap();
+    write!(dead, "{{\"id\": 99, \"features\": [0.1, ").unwrap();
+    drop(dead);
+
+    // Connection A (still open) and a fresh connection C both serve.
+    writeln!(conn, "{}", request_line(4, &row)).unwrap();
+    let r = read_one();
+    assert_eq!((r.0, r.1), (Json::num(4.0), Ok(want)));
+    let mut fresh = TcpStream::connect(addr).unwrap();
+    writeln!(fresh, "{}", request_line(5, &row)).unwrap();
+    let mut fresh_reader = BufReader::new(fresh);
+    let mut line = String::new();
+    fresh_reader.read_line(&mut line).unwrap();
+    let r = parse_response(line.trim_end());
+    assert_eq!((r.0, r.1), (Json::num(5.0), Ok(want)));
+
+    // Close every client before shutdown: the per-connection threads
+    // hold ScoreHandle clones until their sockets reach EOF.
+    drop(read_one);
+    drop(reader);
+    drop(conn);
+    drop(fresh_reader);
+    server.stop();
+    scorer.shutdown();
+}
+
+#[test]
+fn hot_reload_under_load_swaps_whole_models_only() {
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 50;
+    const DIM: usize = 8;
+    let p = tmp("reload_load.bin");
+    let state_a = make_checkpoint(&p, 1, DIM, 2);
+    let scorer = Scorer::spawn(ScorerOptions {
+        max_batch: 32,
+        threads: 1,
+        ..ScorerOptions::new(&p)
+    })
+    .unwrap();
+    let watch = spawn_reload_watcher(&p, Duration::from_millis(2), scorer.handle.clone()).unwrap();
+    let server =
+        Server::start("127.0.0.1:0", scorer.handle.clone(), ServerOptions::default()).unwrap();
+    let addr = server.addr();
+
+    // One fixed row per thread; precompute its score under both models.
+    let rows: Vec<Vec<f32>> = (0..THREADS)
+        .map(|t| {
+            let mut rng = Rng::new(0xAB ^ t as u64);
+            rand_row(&mut rng, DIM)
+        })
+        .collect();
+    let want_a = offline_scores(&state_a, DIM, 2, &rows);
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let row = rows[t].clone();
+            std::thread::spawn(move || -> Vec<f64> {
+                let mut conn = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                (0..PER_THREAD)
+                    .map(|i| {
+                        writeln!(conn, "{}", request_line(i, &row)).unwrap();
+                        let mut line = String::new();
+                        reader.read_line(&mut line).unwrap();
+                        let (id, outcome) = parse_response(line.trim_end());
+                        assert_eq!(id, Json::num(i as f64));
+                        outcome.unwrap()
+                    })
+                    .collect()
+            })
+        })
+        .collect();
+
+    // Republish the checkpoint mid-stream; the watcher hot-swaps it.
+    std::thread::sleep(Duration::from_millis(10));
+    let state_b = make_checkpoint(&p, 2, DIM, 2);
+    let want_b = offline_scores(&state_b, DIM, 2, &rows);
+
+    for (t, w) in workers.into_iter().enumerate() {
+        let scores = w.join().unwrap();
+        assert_eq!(scores.len(), PER_THREAD, "no dropped responses across the swap");
+        let (a, b) = (want_a[t] as f64, want_b[t] as f64);
+        for (i, s) in scores.iter().enumerate() {
+            assert!(
+                *s == a || *s == b,
+                "thread {t} response {i}: {s} is neither model A ({a}) nor model B ({b}) — \
+                 a torn parameter mix"
+            );
+        }
+    }
+    // The swap itself must have happened (and only cleanly).
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = scorer.handle.stats().unwrap();
+        if stats.reloads_ok >= 1 {
+            assert_eq!(stats.reloads_failed, 0);
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "reload never observed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    server.stop();
+    drop(watch);
+    scorer.shutdown();
+}
+
+#[test]
+fn injected_reload_failure_keeps_the_old_model_on_the_wire() {
+    let _guard = failpoint::serial_guard();
+    const DIM: usize = 5;
+    let p = tmp("reload_fail.bin");
+    let state_a = make_checkpoint(&p, 30, DIM, 0);
+    let scorer = Scorer::spawn(ScorerOptions::new(&p)).unwrap();
+    let server =
+        Server::start("127.0.0.1:0", scorer.handle.clone(), ServerOptions::default()).unwrap();
+    let row = vec![0.25_f32; DIM];
+    let want_a = offline_scores(&state_a, DIM, 0, std::slice::from_ref(&row))[0] as f64;
+
+    let mut conn = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut score_once = |id: usize| {
+        writeln!(conn, "{}", request_line(id, &row)).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        parse_response(line.trim_end()).1.unwrap()
+    };
+    assert_eq!(score_once(0), want_a);
+
+    // A failed reload (injected) must leave model A serving.
+    failpoint::arm_str(FP_RELOAD, "error").unwrap();
+    assert!(scorer.handle.reload());
+    let stats = scorer.handle.stats().unwrap();
+    assert_eq!((stats.reloads_ok, stats.reloads_failed), (0, 1));
+    assert_eq!(score_once(1), want_a, "old model still on the wire");
+    failpoint::disarm(FP_RELOAD);
+
+    // With the failpoint gone the same republish goes through.
+    let state_b = make_checkpoint(&p, 31, DIM, 0);
+    let want_b = offline_scores(&state_b, DIM, 0, std::slice::from_ref(&row))[0] as f64;
+    assert!(scorer.handle.reload());
+    scorer.handle.stats().unwrap(); // barrier: reload applied
+    assert_eq!(score_once(2), want_b);
+
+    drop(score_once);
+    drop(reader);
+    drop(conn);
+    server.stop();
+    scorer.shutdown();
+}
