@@ -1,0 +1,536 @@
+//! The rule engine: lex a file, carve out `#[cfg(test)]` regions,
+//! collect `lint:allow` suppressions, then match every in-scope rule's
+//! token patterns and report what survives.
+//!
+//! Suppression contract: `// lint:allow(rule-name): reason` silences
+//! `rule-name` on the comment's own line and on the line directly
+//! below it — so both trailing comments and own-line comments work.
+//! The reason is mandatory; a reasonless or unknown-rule `lint:allow`
+//! is itself a finding ([`super::rules::ALLOW_NEEDS_REASON`]), so
+//! suppressions can never silently rot into a baseline.
+
+use super::lexer::{lex, TokKind, Token};
+use super::rules::{all_rules, rule_named, Pat, Rule, ALLOW_NEEDS_REASON};
+
+/// One lint finding, formatted `file:line:col [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// 1-based column, counted in characters (multi-byte aware).
+    pub col: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}:{} [{}] {}",
+            self.path, self.line, self.col, self.rule, self.message
+        )
+    }
+}
+
+/// Is `rel_path` test code by location?  Integration tests, their
+/// fixtures and bench/example-support trees under a `tests/` directory
+/// are exempt from every rule, like `#[cfg(test)]` modules.
+pub fn is_test_path(rel_path: &str) -> bool {
+    rel_path.starts_with("tests/") || rel_path.contains("/tests/")
+}
+
+/// Lint one file's source.  `rel_path` is `/`-normalized and is only
+/// used for rule scoping — it does not need to exist on disk (the
+/// fixture tests feed synthetic paths).
+pub fn lint_source(rel_path: &str, src: &str) -> Vec<Finding> {
+    if is_test_path(rel_path) {
+        return Vec::new();
+    }
+    let tokens = lex(src);
+    let lines = LineIndex::new(src);
+    let test_regions = test_regions(&tokens, src);
+    let in_test = |byte: usize| test_regions.iter().any(|&(s, e)| byte >= s && byte < e);
+
+    let mut findings = Vec::new();
+
+    // Pass 1: suppressions (and the meta-rule) from comment content.
+    let mut allows: Vec<(&'static str, usize)> = Vec::new();
+    for tok in &tokens {
+        if !matches!(tok.kind, TokKind::LineComment | TokKind::BlockComment) {
+            continue;
+        }
+        let Some(spec) = allow_comment_body(tok, src) else {
+            continue;
+        };
+        let (line, col) = lines.locate(tok.start);
+        if in_test(tok.start) {
+            continue; // test code is exempt, suppressions included
+        }
+        match parse_allow(spec) {
+            Ok((rule, _reason)) => {
+                // Valid: silences `rule` on this line and the next.
+                allows.push((rule.name, line));
+                allows.push((rule.name, line + 1));
+            }
+            Err(problem) => findings.push(Finding {
+                path: rel_path.to_string(),
+                line,
+                col,
+                rule: ALLOW_NEEDS_REASON,
+                message: problem,
+            }),
+        }
+    }
+
+    // Pass 2: token patterns over the comment-stripped stream.
+    let code: Vec<&Token> = tokens
+        .iter()
+        .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+        .collect();
+    for rule in all_rules() {
+        if rule.patterns.is_empty() || !rule.scope.contains(rel_path) {
+            continue;
+        }
+        for pattern in rule.patterns {
+            for window in code.windows(pattern.len()) {
+                if !pattern_matches(pattern, window, src) {
+                    continue;
+                }
+                let at = window[0].start;
+                if in_test(at) {
+                    continue;
+                }
+                let (line, col) = lines.locate(at);
+                if allows.contains(&(rule.name, line)) {
+                    continue;
+                }
+                findings.push(Finding {
+                    path: rel_path.to_string(),
+                    line,
+                    col,
+                    rule: rule.name,
+                    message: rule.message.to_string(),
+                });
+            }
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    findings
+}
+
+/// Lint every `.rs` file under `root`, in sorted path order.  Skips
+/// build output (`target/`), vendored code, and `.git`; `tests/`
+/// subtrees are walked but exempted by [`is_test_path`].
+pub fn run_lint(root: &std::path::Path) -> crate::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("lint: read {}: {e}", path.display()))?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &std::path::Path, out: &mut Vec<std::path::PathBuf>) -> crate::Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("lint: walk {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow::anyhow!("lint: walk {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name == "target" || name == "vendor" || name == ".git" || name == "node_modules" {
+                continue;
+            }
+            collect_rs_files(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn pattern_matches(pattern: &[Pat], window: &[&Token], src: &str) -> bool {
+    pattern.iter().zip(window).all(|(pat, tok)| match pat {
+        Pat::Ident(name) => tok.kind == TokKind::Ident && tok.text(src) == *name,
+        Pat::AnyIdent(names) => tok.kind == TokKind::Ident && names.contains(&tok.text(src)),
+        Pat::Punct(c) => tok.kind == TokKind::Punct && tok.text(src).starts_with(*c),
+    })
+}
+
+/// If `tok` is a comment whose content *is* a `lint:allow` directive,
+/// return the text after `lint:allow` (starting at `(`).  Prose that
+/// merely mentions `lint:allow(...)` mid-sentence is not a directive.
+fn allow_comment_body<'s>(tok: &Token, src: &'s str) -> Option<&'s str> {
+    let mut body = tok.text(src);
+    if tok.kind == TokKind::LineComment {
+        body = body.trim_start_matches('/').trim_start_matches('!');
+    } else {
+        body = body
+            .trim_start_matches('/')
+            .trim_start_matches('*')
+            .trim_start_matches('!')
+            .trim_end_matches('/')
+            .trim_end_matches('*');
+    }
+    body.trim().strip_prefix("lint:allow")
+}
+
+/// Parse `(rule-name): reason` → the rule and its reason, or a
+/// human-readable description of what is wrong.
+fn parse_allow(spec: &str) -> Result<(&'static Rule, &str), String> {
+    let inner = spec
+        .strip_prefix('(')
+        .and_then(|s| s.split_once(')'))
+        .ok_or_else(|| "malformed suppression: write `lint:allow(rule): reason`".to_string())?;
+    let (name, rest) = (inner.0.trim(), inner.1);
+    let rule = rule_named(name).ok_or_else(|| {
+        let known: Vec<&str> = all_rules().iter().map(|r| r.name).collect();
+        format!("`lint:allow({name})` names an unknown rule (known: {})", known.join(", "))
+    })?;
+    let reason = rest.trim().strip_prefix(':').map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        return Err(format!(
+            "suppression without a reason: write `lint:allow({name}): why this site is safe`"
+        ));
+    }
+    Ok((rule, reason))
+}
+
+/// Byte ranges covered by `#[cfg(test)]` items (usually `mod tests`).
+/// The range starts at the attribute's `#` and ends after the item's
+/// closing `}` (or `;` for brace-less items), so everything inside an
+/// exempted module — including nested attributes — is exempt.
+fn test_regions(tokens: &[Token], src: &str) -> Vec<(usize, usize)> {
+    let code: Vec<&Token> = tokens
+        .iter()
+        .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+        .collect();
+    let mut regions = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        if !is_attr_start(&code, i, src) {
+            i += 1;
+            continue;
+        }
+        let attr_start = code[i].start;
+        let Some(attr_end) = matching_bracket(&code, i + 1, '[', ']', src) else {
+            break; // malformed attribute: nothing more to find
+        };
+        if !attr_mentions_cfg_test(&code[i + 2..attr_end], src) {
+            i = attr_end + 1;
+            continue;
+        }
+        // Skip any further attributes between #[cfg(test)] and the item.
+        let mut j = attr_end + 1;
+        while is_attr_start(&code, j, src) {
+            match matching_bracket(&code, j + 1, '[', ']', src) {
+                Some(end) => j = end + 1,
+                None => return regions,
+            }
+        }
+        // The item runs to its first top-level `{...}` block, or to a
+        // `;` if none opens first (e.g. `#[cfg(test)] use ...;`).
+        let mut depth = 0usize;
+        let mut item_end = None;
+        for (k, tok) in code.iter().enumerate().skip(j) {
+            if tok.kind != TokKind::Punct {
+                continue;
+            }
+            match tok.text(src).chars().next() {
+                Some('{') | Some('(') | Some('[') => depth += 1,
+                Some('}') | Some(')') | Some(']') => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 && tok.text(src).starts_with('}') {
+                        item_end = Some((k, tok.end));
+                        break;
+                    }
+                }
+                Some(';') if depth == 0 => {
+                    item_end = Some((k, tok.end));
+                    break;
+                }
+                _ => {}
+            }
+        }
+        match item_end {
+            Some((k, end_byte)) => {
+                regions.push((attr_start, end_byte));
+                i = k + 1;
+            }
+            None => {
+                // Unterminated item: exempt to EOF.
+                regions.push((attr_start, src.len()));
+                break;
+            }
+        }
+    }
+    regions
+}
+
+fn is_attr_start(code: &[&Token], i: usize, src: &str) -> bool {
+    code.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text(src) == "#")
+        && code.get(i + 1).is_some_and(|t| t.kind == TokKind::Punct && t.text(src) == "[")
+}
+
+/// Index of the token closing the bracket opened at `open_idx`.
+fn matching_bracket(
+    code: &[&Token],
+    open_idx: usize,
+    open: char,
+    close: char,
+    src: &str,
+) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, tok) in code.iter().enumerate().skip(open_idx) {
+        if tok.kind != TokKind::Punct {
+            continue;
+        }
+        let c = tok.text(src).chars().next()?;
+        if c == open {
+            depth += 1;
+        } else if c == close {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Do the attribute's inner tokens contain both `cfg` and `test`?
+/// Loose on purpose: `#[cfg(test)]` and `#[cfg(all(test, ...))]` both
+/// count, and a false positive only widens an exemption (conservative
+/// in the safe direction for an attribute that names `test`).
+fn attr_mentions_cfg_test(inner: &[&Token], src: &str) -> bool {
+    let has = |name: &str| {
+        inner
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && t.text(src) == name)
+    };
+    has("cfg") && has("test")
+}
+
+/// Line-start index for byte→(line, col) conversion; columns count
+/// characters, so a finding after multi-byte UTF-8 still points at the
+/// column an editor shows.
+struct LineIndex<'s> {
+    src: &'s str,
+    starts: Vec<usize>,
+}
+
+impl<'s> LineIndex<'s> {
+    fn new(src: &'s str) -> Self {
+        let mut starts = vec![0usize];
+        for (i, b) in src.bytes().enumerate() {
+            if b == b'\n' {
+                starts.push(i + 1);
+            }
+        }
+        Self { src, starts }
+    }
+
+    fn locate(&self, byte: usize) -> (usize, usize) {
+        let line = match self.starts.binary_search(&byte) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        let col = self.src[self.starts[line]..byte].chars().count() + 1;
+        (line + 1, col)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn find(path: &str, src: &str) -> Vec<(usize, usize, &'static str)> {
+        lint_source(path, src)
+            .into_iter()
+            .map(|f| (f.line, f.col, f.rule))
+            .collect()
+    }
+
+    #[test]
+    fn fires_with_exact_line_and_col() {
+        let src = "fn kernel(y: f64) -> f32 {\n    y as f32\n}\n";
+        let got = find("src/losses/fake.rs", src);
+        assert_eq!(got, vec![(2, 7, "float-narrowing-in-kernel")]);
+    }
+
+    #[test]
+    fn out_of_scope_paths_are_silent() {
+        let src = "fn f(y: f64) -> f32 { y as f32 }\n";
+        assert!(find("src/metrics/auc.rs", src).is_empty());
+    }
+
+    #[test]
+    fn string_and_comment_content_never_fires() {
+        let src = concat!(
+            "// as f32 in a comment\n",
+            "/* HashMap in /* a nested */ comment */\n",
+            "const S: &str = \"Instant::now as f32\";\n",
+            "const R: &str = r#\"std::fs::write('a') HashMap\"#;\n",
+        );
+        assert!(find("src/losses/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_module_is_exempt() {
+        let src = concat!(
+            "pub fn prod(y: f64) -> f32 {\n    y as f32\n}\n",
+            "#[cfg(test)]\nmod tests {\n",
+            "    fn helper(y: f64) -> f32 { y as f32 }\n",
+            "    use std::collections::HashMap;\n",
+            "}\n",
+        );
+        let got = find("src/losses/fake.rs", src);
+        assert_eq!(got, vec![(2, 7, "float-narrowing-in-kernel")], "only the non-test cast");
+    }
+
+    #[test]
+    fn code_after_a_test_module_is_linted_again() {
+        let src = concat!(
+            "#[cfg(test)]\nmod tests {\n    fn h(y: f64) -> f32 { y as f32 }\n}\n",
+            "pub fn prod(y: f64) -> f32 {\n    y as f32\n}\n",
+        );
+        let got = find("src/losses/fake.rs", src);
+        assert_eq!(got, vec![(6, 7, "float-narrowing-in-kernel")]);
+    }
+
+    #[test]
+    fn trailing_allow_with_reason_suppresses() {
+        let src = concat!(
+            "fn f(y: f64) -> f32 {\n",
+            "    y as f32 // lint:allow(float-narrowing-in-kernel): final store\n",
+            "}\n",
+        );
+        assert!(find("src/losses/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn preceding_line_allow_suppresses() {
+        let src = concat!(
+            "fn f(y: f64) -> f32 {\n",
+            "    // lint:allow(float-narrowing-in-kernel): final store\n",
+            "    y as f32\n}\n",
+        );
+        assert!(find("src/losses/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_does_not_leak_past_the_next_line() {
+        let src = concat!(
+            "fn f(a: f64, b: f64) -> (f32, f32) {\n",
+            "    // lint:allow(float-narrowing-in-kernel): only the next line\n",
+            "    let x = a as f32;\n",
+            "    let y = b as f32;\n",
+            "    (x, y)\n}\n",
+        );
+        let got = find("src/losses/fake.rs", src);
+        assert_eq!(got, vec![(4, 15, "float-narrowing-in-kernel")]);
+    }
+
+    #[test]
+    fn allow_for_a_different_rule_does_not_suppress() {
+        let src = "fn f(y: f64) -> f32 {\n    y as f32 // lint:allow(lock-unwrap): wrong rule\n}\n";
+        let got = find("src/losses/fake.rs", src);
+        assert_eq!(got, vec![(2, 7, "float-narrowing-in-kernel")]);
+    }
+
+    #[test]
+    fn reasonless_allow_is_a_finding() {
+        let src = "// lint:allow(float-narrowing-in-kernel)\nfn f() {}\n";
+        let got = find("src/anything.rs", src);
+        assert_eq!(got, vec![(1, 1, ALLOW_NEEDS_REASON)]);
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_a_finding() {
+        let src = "// lint:allow(made-up-rule): sounds legit\nfn f() {}\n";
+        let got = find("src/anything.rs", src);
+        assert_eq!(got, vec![(1, 1, ALLOW_NEEDS_REASON)]);
+        let msg = &lint_source("src/anything.rs", src)[0].message;
+        assert!(msg.contains("made-up-rule"), "{msg}");
+    }
+
+    #[test]
+    fn prose_mentioning_lint_allow_is_not_a_directive() {
+        let src = "//! Suppress with `// lint:allow(rule): reason` comments.\nfn f() {}\n";
+        assert!(find("src/anything.rs", src).is_empty());
+    }
+
+    #[test]
+    fn multibyte_utf8_columns_are_character_accurate() {
+        // "é" is 2 bytes, 1 character: a byte-counting column would be 16.
+        let src = "fn f() { let é = x as f32; }\n";
+        let got = find("src/losses/fake.rs", src);
+        assert_eq!(got, vec![(1, 20, "float-narrowing-in-kernel")]);
+    }
+
+    #[test]
+    fn lifetime_tick_does_not_derail_later_matches() {
+        let src = "fn f<'a>(y: &'a f64) -> f32 {\n    *y as f32\n}\n";
+        let got = find("src/losses/fake.rs", src);
+        assert_eq!(got, vec![(2, 8, "float-narrowing-in-kernel")]);
+    }
+
+    #[test]
+    fn every_invariant_rule_pattern_fires_somewhere() {
+        let cases: &[(&str, &str, &str)] = &[
+            ("float-narrowing-in-kernel", "src/losses/x.rs", "let k = y as f32;"),
+            ("nondeterministic-iteration", "src/runtime/x.rs", "let m = HashMap::new();"),
+            ("nondeterministic-iteration", "src/coordinator/x.rs", "let s: HashSet<u32>;"),
+            ("raw-durable-write", "src/report/x.rs", "std::fs::write(p, b)?;"),
+            ("raw-durable-write", "src/report/x.rs", "let f = File::create(p)?;"),
+            ("lock-unwrap", "src/anywhere.rs", "let g = m.lock().unwrap();"),
+            ("wallclock-in-kernel", "src/runtime/x.rs", "let t = Instant::now();"),
+            ("wallclock-in-kernel", "src/losses/x.rs", "let t: SystemTime;"),
+            ("unchecked-cast-in-parse", "src/util/json.rs", "let n = x as usize;"),
+            ("unchecked-cast-in-parse", "src/train/checkpoint.rs", "let n = d as u64;"),
+        ];
+        for (rule, path, src) in cases {
+            let got = lint_source(path, src);
+            assert!(
+                got.iter().any(|f| f.rule == *rule),
+                "{rule} did not fire on {src:?} at {path}: {got:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fsio_itself_may_create_files() {
+        let src = "let f = std::fs::File::create(&tmp)?;";
+        assert!(find("rust/src/util/fsio.rs", src).is_empty());
+        assert_eq!(find("rust/src/util/bench.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn tests_directories_are_exempt_wholesale() {
+        let src = "std::fs::write(p, b).unwrap(); let m = HashMap::new();";
+        assert!(find("tests/crash_safety.rs", src).is_empty());
+        assert!(find("rust/tests/fixtures/lint/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn findings_sort_by_position() {
+        let src = "fn f(m: &M) {\n    let t = Instant::now();\n    let h = HashMap::new();\n}\n";
+        let got = find("src/runtime/x.rs", src);
+        assert_eq!(
+            got,
+            vec![(2, 13, "wallclock-in-kernel"), (3, 13, "nondeterministic-iteration")]
+        );
+    }
+}

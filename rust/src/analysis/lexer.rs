@@ -1,0 +1,460 @@
+//! A minimal Rust lexer with byte-accurate spans.
+//!
+//! The rule engine ([`super::engine`]) matches invariants over *token*
+//! sequences, never raw text, so the lexer's whole job is to classify
+//! the tricky regions correctly: a raw string containing `as f32` must
+//! never look like a cast, `'a'` (char) must not be confused with `'a`
+//! (lifetime), and block comments nest.  It is deliberately lossy about
+//! everything the rules never inspect — keywords are just identifiers,
+//! numeric suffixes are part of the number — and it never fails: any
+//! byte it cannot classify becomes a one-byte punctuation token, so a
+//! half-written file still lints.
+
+/// Token classes, at the granularity the rule engine needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`as`, `HashMap`, `r#ident`).
+    Ident,
+    /// Lifetime (`'a`, `'static`, `'_`).
+    Lifetime,
+    /// Character or byte literal (`'x'`, `'\n'`, `b'x'`).
+    CharLit,
+    /// String or byte-string literal (`"..."`, `b"..."`).
+    StrLit,
+    /// Raw (byte-)string literal (`r"..."`, `r#"..."#`, `br#"..."#`).
+    RawStrLit,
+    /// Numeric literal, including suffix (`1e-3`, `0x1F`, `1.0_f64`).
+    NumLit,
+    /// Line comment, including doc comments (`//`, `///`, `//!`).
+    LineComment,
+    /// Block comment, nested (`/* /* */ */`, `/** */`).
+    BlockComment,
+    /// Any other single character (`:`, `.`, `(`, ...).
+    Punct,
+}
+
+/// One token with its half-open byte span into the source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Token {
+    pub kind: TokKind,
+    /// Byte offset of the first byte.
+    pub start: usize,
+    /// Byte offset one past the last byte.
+    pub end: usize,
+}
+
+impl Token {
+    /// The token's text within `src` (the string it was lexed from).
+    pub fn text<'s>(&self, src: &'s str) -> &'s str {
+        &src[self.start..self.end]
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Lex `src` into a complete token stream (whitespace dropped, comments
+/// kept — the engine reads `lint:allow` suppressions out of them).
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer { src, pos: 0 }.run()
+}
+
+struct Lexer<'s> {
+    src: &'s str,
+    pos: usize,
+}
+
+impl<'s> Lexer<'s> {
+    fn run(mut self) -> Vec<Token> {
+        let mut out = Vec::new();
+        while let Some(c) = self.peek() {
+            if c.is_whitespace() {
+                self.bump(c);
+                continue;
+            }
+            let start = self.pos;
+            let kind = self.next_kind(c);
+            debug_assert!(self.pos > start, "lexer must always advance");
+            out.push(Token {
+                kind,
+                start,
+                end: self.pos,
+            });
+        }
+        out
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.src[self.pos..].chars().next()
+    }
+
+    fn peek_at(&self, byte_offset: usize) -> Option<char> {
+        self.src.get(self.pos + byte_offset..)?.chars().next()
+    }
+
+    fn bump(&mut self, c: char) {
+        self.pos += c.len_utf8();
+    }
+
+    /// Consume one token starting with `c`; returns its kind with
+    /// `self.pos` advanced past it.
+    fn next_kind(&mut self, c: char) -> TokKind {
+        match c {
+            '/' if self.peek_at(1) == Some('/') => self.line_comment(),
+            '/' if self.peek_at(1) == Some('*') => self.block_comment(),
+            '"' => self.string(),
+            '\'' => self.char_or_lifetime(),
+            'b' | 'r' if self.literal_prefix() => self.prefixed_literal(),
+            _ if is_ident_start(c) => self.ident(),
+            _ if c.is_ascii_digit() => self.number(),
+            _ => {
+                self.bump(c);
+                TokKind::Punct
+            }
+        }
+    }
+
+    /// Does the `b`/`r` at the cursor start a string/char literal
+    /// (`b"`, `b'`, `br#"`, `r"`, `r#"`) rather than an identifier?
+    /// `r#ident` (raw identifier) is *not* a literal prefix.
+    fn literal_prefix(&self) -> bool {
+        let rest = &self.src[self.pos..];
+        let raw_after = |p: &str| {
+            rest.strip_prefix(p)
+                .is_some_and(|r| r.trim_start_matches('#').starts_with('"'))
+        };
+        match rest.chars().next() {
+            Some('b') => rest.starts_with("b\"") || rest.starts_with("b'") || raw_after("br"),
+            Some('r') => raw_after("r"),
+            _ => false,
+        }
+    }
+
+    /// A literal known to start with `b"`, `b'`, `r`/`br` + hashes + `"`.
+    fn prefixed_literal(&mut self) -> TokKind {
+        if self.src[self.pos..].starts_with("b\"") {
+            self.bump('b');
+            return self.string();
+        }
+        if self.src[self.pos..].starts_with("b'") {
+            self.bump('b');
+            // a byte literal is always a char, never a lifetime
+            self.bump('\'');
+            self.char_body();
+            return TokKind::CharLit;
+        }
+        // raw string: [b] r #* " ... " #*
+        if self.peek() == Some('b') {
+            self.bump('b');
+        }
+        self.bump('r');
+        let mut hashes = 0usize;
+        while self.peek() == Some('#') {
+            self.bump('#');
+            hashes += 1;
+        }
+        self.bump('"'); // literal_prefix guaranteed it
+        loop {
+            match self.peek() {
+                None => break, // unterminated: run to EOF
+                Some('"') => {
+                    self.bump('"');
+                    let tail = &self.src[self.pos..];
+                    let closing = tail.chars().take_while(|&h| h == '#').count();
+                    if closing >= hashes {
+                        self.pos += hashes; // '#' is one byte
+                        break;
+                    }
+                }
+                Some(other) => self.bump(other),
+            }
+        }
+        TokKind::RawStrLit
+    }
+
+    fn line_comment(&mut self) -> TokKind {
+        while let Some(c) = self.peek() {
+            if c == '\n' {
+                break;
+            }
+            self.bump(c);
+        }
+        TokKind::LineComment
+    }
+
+    fn block_comment(&mut self) -> TokKind {
+        self.bump('/');
+        self.bump('*');
+        let mut depth = 1usize;
+        while depth > 0 {
+            if self.src[self.pos..].starts_with("/*") {
+                self.pos += 2;
+                depth += 1;
+            } else if self.src[self.pos..].starts_with("*/") {
+                self.pos += 2;
+                depth -= 1;
+            } else if let Some(c) = self.peek() {
+                self.bump(c);
+            } else {
+                break; // unterminated
+            }
+        }
+        TokKind::BlockComment
+    }
+
+    fn string(&mut self) -> TokKind {
+        self.bump('"');
+        while let Some(c) = self.peek() {
+            self.bump(c);
+            match c {
+                '"' => break,
+                '\\' => {
+                    if let Some(esc) = self.peek() {
+                        self.bump(esc);
+                    }
+                }
+                _ => {}
+            }
+        }
+        TokKind::StrLit
+    }
+
+    /// Disambiguate `'a'` / `'\n'` / `'é'` (char literals) from `'a` /
+    /// `'static` / `'_` (lifetimes).  A quote, one non-escape char and a
+    /// closing quote is a char literal; a quote followed by an escape is
+    /// always a char literal; anything else is a lifetime.
+    fn char_or_lifetime(&mut self) -> TokKind {
+        self.bump('\'');
+        match self.peek() {
+            Some('\\') => {
+                self.char_body();
+                TokKind::CharLit
+            }
+            Some(c) => {
+                let close_at = c.len_utf8();
+                if self.peek_at(close_at) == Some('\'') {
+                    self.bump(c);
+                    self.bump('\'');
+                    TokKind::CharLit
+                } else {
+                    // lifetime: consume the identifier part, if any
+                    while let Some(i) = self.peek() {
+                        if is_ident_continue(i) {
+                            self.bump(i);
+                        } else {
+                            break;
+                        }
+                    }
+                    TokKind::Lifetime
+                }
+            }
+            None => TokKind::Lifetime, // stray quote at EOF
+        }
+    }
+
+    /// Body of a char literal after the opening quote, cursor past the
+    /// closing quote on exit (handles `\n`, `\\`, `\u{1F600}`).
+    fn char_body(&mut self) {
+        while let Some(c) = self.peek() {
+            self.bump(c);
+            match c {
+                '\'' => break,
+                '\\' => {
+                    if let Some(esc) = self.peek() {
+                        self.bump(esc);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn ident(&mut self) -> TokKind {
+        // raw identifier prefix (`r#match`): literal_prefix() already
+        // ruled out raw strings, so an `r#` here is an identifier
+        if self.src[self.pos..].starts_with("r#") {
+            self.pos += 2;
+        }
+        while let Some(c) = self.peek() {
+            if is_ident_continue(c) {
+                self.bump(c);
+            } else {
+                break;
+            }
+        }
+        TokKind::Ident
+    }
+
+    /// Numbers including `0x1F`, `1_000`, `1e-3`, `1.5f32`; a trailing
+    /// `.` that is not followed by a digit (ranges, method calls) is
+    /// left for the next token.
+    fn number(&mut self) -> TokKind {
+        self.number_part();
+        if self.peek() == Some('.') {
+            if let Some(d) = self.peek_at(1) {
+                if d.is_ascii_digit() {
+                    self.bump('.');
+                    self.number_part();
+                }
+            }
+        }
+        TokKind::NumLit
+    }
+
+    fn number_part(&mut self) {
+        let mut prev = '\0';
+        while let Some(c) = self.peek() {
+            if is_ident_continue(c) {
+                self.bump(c);
+                prev = c;
+            } else if (c == '+' || c == '-')
+                && (prev == 'e' || prev == 'E')
+                && self.peek_at(1).is_some_and(|d| d.is_ascii_digit())
+            {
+                self.bump(c);
+                prev = c;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, &str)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text(src))).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        assert_eq!(
+            kinds("let x = y as f32;"),
+            vec![
+                (TokKind::Ident, "let"),
+                (TokKind::Ident, "x"),
+                (TokKind::Punct, "="),
+                (TokKind::Ident, "y"),
+                (TokKind::Ident, "as"),
+                (TokKind::Ident, "f32"),
+                (TokKind::Punct, ";"),
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_hide_their_content() {
+        let toks = kinds(r#"let s = "y as f32"; t"#);
+        assert_eq!(toks[3], (TokKind::StrLit, r#""y as f32""#));
+        assert_eq!(toks[5], (TokKind::Ident, "t"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_and_quotes() {
+        let src = r###"r#"contains "as f32" quoted"# after"###;
+        let toks = kinds(src);
+        assert_eq!(toks[0].0, TokKind::RawStrLit);
+        assert_eq!(toks[0].1, r###"r#"contains "as f32" quoted"#"###);
+        assert_eq!(toks[1], (TokKind::Ident, "after"));
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let toks = kinds(r##"b"as f32" br#"HashMap"# b'x' end"##);
+        assert_eq!(toks[0].0, TokKind::StrLit);
+        assert_eq!(toks[1].0, TokKind::RawStrLit);
+        assert_eq!(toks[2].0, TokKind::CharLit);
+        assert_eq!(toks[3], (TokKind::Ident, "end"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = kinds("x<'a> = 'a'; '\\n' 'static '_");
+        let lifetimes: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Lifetime)
+            .map(|(_, t)| *t)
+            .collect();
+        let chars: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::CharLit)
+            .map(|(_, t)| *t)
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'static", "'_"]);
+        assert_eq!(chars, vec!["'a'", "'\\n'"]);
+    }
+
+    #[test]
+    fn multibyte_char_literal() {
+        let toks = kinds("let c = 'é'; x");
+        assert_eq!(toks[3], (TokKind::CharLit, "'é'"));
+        assert_eq!(toks[5], (TokKind::Ident, "x"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = kinds("a /* outer /* HashMap */ still comment */ b");
+        assert_eq!(toks[0], (TokKind::Ident, "a"));
+        assert_eq!(toks[1].0, TokKind::BlockComment);
+        assert_eq!(toks[2], (TokKind::Ident, "b"));
+    }
+
+    #[test]
+    fn line_comments_stop_at_newline() {
+        let toks = kinds("a // as f32 HashMap\nb");
+        assert_eq!(toks[0], (TokKind::Ident, "a"));
+        assert_eq!(toks[1], (TokKind::LineComment, "// as f32 HashMap"));
+        assert_eq!(toks[2], (TokKind::Ident, "b"));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges_or_methods() {
+        let toks = kinds("0..n 1.max(2) 1.5e-3_f64 0x1F");
+        assert_eq!(toks[0], (TokKind::NumLit, "0"));
+        assert_eq!(toks[1], (TokKind::Punct, "."));
+        assert_eq!(toks[2], (TokKind::Punct, "."));
+        assert_eq!(toks[3], (TokKind::Ident, "n"));
+        assert_eq!(toks[4], (TokKind::NumLit, "1"));
+        assert_eq!(toks[6], (TokKind::Ident, "max"));
+        let nums: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::NumLit)
+            .map(|(_, t)| *t)
+            .collect();
+        assert!(nums.contains(&"1.5e-3_f64"), "{nums:?}");
+        assert!(nums.contains(&"0x1F"), "{nums:?}");
+    }
+
+    #[test]
+    fn raw_identifier_is_not_a_raw_string() {
+        let toks = kinds("r#match r#\"raw\"#");
+        assert_eq!(toks[0], (TokKind::Ident, "r#match"));
+        assert_eq!(toks[1].0, TokKind::RawStrLit);
+    }
+
+    #[test]
+    fn spans_are_byte_accurate_around_multibyte() {
+        let src = "é as f32";
+        let toks = lex(src);
+        assert_eq!(toks[0].text(src), "é");
+        assert_eq!(toks[1].text(src), "as");
+        assert_eq!(toks[1].start, 3, "é is 2 bytes + 1 space");
+        assert_eq!(toks[2].text(src), "f32");
+    }
+
+    #[test]
+    fn unterminated_inputs_do_not_hang_or_panic() {
+        for src in ["\"open", "/* open /* nested", "r#\"open", "'", "b'"] {
+            let toks = lex(src);
+            assert!(!toks.is_empty(), "{src:?}");
+            assert_eq!(toks.last().unwrap().end, src.len());
+        }
+    }
+}

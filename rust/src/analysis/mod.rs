@@ -1,0 +1,32 @@
+//! `allpairs-lint`: an in-repo static-analysis pass that turns this
+//! repo's shipped-bug postmortems into enforced invariants.
+//!
+//! The tool is deliberately small and dependency-free (the vendored-shim
+//! policy applies to dev tooling too): a minimal Rust lexer with
+//! byte-accurate spans ([`lexer`]), a catalog of path-scoped token-pattern
+//! rules ([`rules`]), and an engine ([`engine`]) that applies them with
+//! two escape hatches:
+//!
+//! - `#[cfg(test)]` items and `tests/` subtrees are exempt — test code
+//!   may use HashMap, raw writes, wall clocks freely;
+//! - an inline suppression comment silences one rule on its own line and
+//!   the line below, and **must** carry a reason:
+//!
+//!   ```text
+//!   // lint:allow(float-narrowing-in-kernel): f64 sweep ends here; final grad store is f32
+//!   ```
+//!
+//!   A reasonless or unknown-rule suppression is itself a finding
+//!   (`lint-allow-needs-reason`), so nothing can be grandfathered
+//!   silently.
+//!
+//! Run it as `allpairs lint [--root DIR]`; exit status is nonzero when
+//! any finding is reported, which is what the CI lint job keys on.
+//! DESIGN.md §12 maps each rule to the bug class that motivates it.
+
+pub mod engine;
+pub mod lexer;
+pub mod rules;
+
+pub use engine::{lint_source, run_lint, Finding};
+pub use rules::{all_rules, Rule};

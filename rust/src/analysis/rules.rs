@@ -1,0 +1,224 @@
+//! The invariant catalog: every rule is derived from a bug this repo
+//! actually shipped (or the determinism argument that prevents one).
+//! DESIGN.md §12 maps each rule to its motivation.
+//!
+//! Rules are *lexical*: a pattern is a short sequence of identifier /
+//! punctuation tokens matched over the comment-stripped token stream,
+//! scoped to the paths where the invariant holds.  That buys zero
+//! dependencies and self-linting at the cost of type awareness — which
+//! is why every rule's message names the escape hatch: a
+//! `lint:allow(rule): reason` suppression, with the reason mandatory.
+
+/// One element of a token pattern.
+#[derive(Debug, Clone, Copy)]
+pub enum Pat {
+    /// An identifier with exactly this text.
+    Ident(&'static str),
+    /// An identifier matching any of these texts.
+    AnyIdent(&'static [&'static str]),
+    /// A single punctuation character.
+    Punct(char),
+}
+
+/// Where a rule applies, matched against the `/`-normalized relative
+/// path of each file.
+#[derive(Debug, Clone, Copy)]
+pub enum Scope {
+    /// Every linted file.
+    All,
+    /// Every linted file except those matching one of the markers.
+    AllExcept(&'static [&'static str]),
+    /// Only files matching one of the markers.
+    Paths(&'static [&'static str]),
+}
+
+impl Scope {
+    /// A marker ending in `.rs` matches as a path suffix; any other
+    /// marker matches as a substring (directory prefixes like
+    /// `src/losses/`), so scoping works whether the scan root is the
+    /// repo root or the crate root.
+    fn marker_matches(path: &str, marker: &str) -> bool {
+        if marker.ends_with(".rs") {
+            path.ends_with(marker)
+        } else {
+            path.contains(marker)
+        }
+    }
+
+    pub fn contains(&self, path: &str) -> bool {
+        match self {
+            Scope::All => true,
+            Scope::AllExcept(markers) => !markers.iter().any(|m| Self::marker_matches(path, m)),
+            Scope::Paths(markers) => markers.iter().any(|m| Self::marker_matches(path, m)),
+        }
+    }
+}
+
+/// A lint rule: name, scope, and the token patterns that fire it.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    /// Stable kebab-case id, used in findings and `lint:allow(...)`.
+    pub name: &'static str,
+    /// One-line description for `allpairs lint --list-rules`.
+    pub summary: &'static str,
+    /// Finding message: what is wrong and what to do instead.
+    pub message: &'static str,
+    pub scope: Scope,
+    pub patterns: &'static [&'static [Pat]],
+}
+
+/// The meta-rule: a `lint:allow` comment whose reason is missing/empty,
+/// or which names an unknown rule.  Implemented by the engine (it fires
+/// on comment *content*, not code tokens), listed here so it shows up
+/// in `--list-rules` and DESIGN.md stays the single catalog.
+pub const ALLOW_NEEDS_REASON: &str = "lint-allow-needs-reason";
+
+/// Every rule, in reporting order.
+pub fn all_rules() -> &'static [Rule] {
+    use Pat::{AnyIdent, Ident, Punct};
+    const RULES: &[Rule] = &[
+        Rule {
+            name: "float-narrowing-in-kernel",
+            summary: "no `as f32` on loss-kernel computation paths (PR 4 sort-key bug)",
+            message: "`as f32` in a loss kernel: sweep and key math must stay f64 \
+                      (an f32 sort key silently dropped near-margin pairs, PR 4); \
+                      narrow only at the final store, with `lint:allow` + reason",
+            scope: Scope::Paths(&["src/losses/"]),
+            patterns: &[&[Ident("as"), Ident("f32")]],
+        },
+        Rule {
+            name: "nondeterministic-iteration",
+            summary: "no HashMap/HashSet on deterministic paths (hash order leaks)",
+            message: "HashMap/HashSet on a deterministic path: hash iteration order \
+                      can leak into results; use BTreeMap/BTreeSet or sorted keys \
+                      (membership-only lookups need `lint:allow` + reason)",
+            scope: Scope::Paths(&[
+                "src/losses/",
+                "src/runtime/",
+                "src/coordinator/",
+                "src/sweep/select.rs",
+            ]),
+            patterns: &[&[AnyIdent(&["HashMap", "HashSet"])]],
+        },
+        Rule {
+            name: "raw-durable-write",
+            summary: "durable writes go through util::fsio, never std::fs directly",
+            message: "raw durable write: a crash here leaves a torn file; route the \
+                      write through util::fsio::write_atomic (temp + fsync + rename, \
+                      DESIGN.md \u{a7}10)",
+            scope: Scope::AllExcept(&["src/util/fsio.rs"]),
+            patterns: &[
+                &[Ident("fs"), Punct(':'), Punct(':'), Ident("write")],
+                &[Ident("File"), Punct(':'), Punct(':'), Ident("create")],
+            ],
+        },
+        Rule {
+            name: "lock-unwrap",
+            summary: "no .lock().unwrap(): recover poisoned mutexes (PR 7 scheduler rule)",
+            message: ".lock().unwrap() turns one panicking thread into a poison \
+                      cascade; recover the guard (unwrap_or_else(|p| p.into_inner())) \
+                      or propagate an error",
+            scope: Scope::All,
+            patterns: &[&[
+                Punct('.'),
+                Ident("lock"),
+                Punct('('),
+                Punct(')'),
+                Punct('.'),
+                Ident("unwrap"),
+            ]],
+        },
+        Rule {
+            name: "wallclock-in-kernel",
+            summary: "no wall-clock reads in deterministic engine/loss code",
+            message: "wall-clock read on a deterministic engine/loss path: timing \
+                      belongs to the coordinator/bench layer, never inside code \
+                      pinned bit-exact across thread counts (DESIGN.md \u{a7}7)",
+            scope: Scope::Paths(&["src/losses/", "src/runtime/"]),
+            patterns: &[
+                &[Ident("Instant"), Punct(':'), Punct(':'), Ident("now")],
+                &[Ident("SystemTime")],
+            ],
+        },
+        Rule {
+            name: "unchecked-cast-in-parse",
+            summary: "no bare `as usize`/`as u64` when parsing untrusted input (PR 7)",
+            message: "integer cast while parsing untrusted input: a crafted length \
+                      can wrap or saturate (PR 7 checkpoint-header overflow); use \
+                      checked math / try_into, or `lint:allow` + a safety argument",
+            scope: Scope::Paths(&[
+                "src/train/checkpoint.rs",
+                "src/util/json.rs",
+                "src/serve/protocol.rs",
+                "src/serve/framing.rs",
+            ]),
+            patterns: &[&[Ident("as"), AnyIdent(&["usize", "u64"])]],
+        },
+        Rule {
+            name: ALLOW_NEEDS_REASON,
+            summary: "every lint:allow carries a reason and names a real rule",
+            message: "suppression without a reason: write \
+                      `// lint:allow(rule): why this site is safe`",
+            scope: Scope::All,
+            patterns: &[], // implemented by the engine over comment content
+        },
+    ];
+    RULES
+}
+
+/// Look up a rule by name (used to validate `lint:allow(...)` targets).
+pub fn rule_named(name: &str) -> Option<&'static Rule> {
+    all_rules().iter().find(|r| r.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_kebab_case() {
+        let rules = all_rules();
+        assert!(rules.len() >= 7, "six invariant rules + the meta-rule");
+        for (i, r) in rules.iter().enumerate() {
+            assert!(
+                r.name
+                    .chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'),
+                "{} is not kebab-case",
+                r.name
+            );
+            assert!(!r.summary.is_empty() && !r.message.is_empty());
+            for other in &rules[i + 1..] {
+                assert_ne!(r.name, other.name);
+            }
+        }
+    }
+
+    #[test]
+    fn scope_markers_match_from_any_root() {
+        let scope = Scope::Paths(&["src/losses/", "src/sweep/select.rs"]);
+        // crate-root relative
+        assert!(scope.contains("src/losses/functional.rs"));
+        assert!(scope.contains("src/sweep/select.rs"));
+        // repo-root relative
+        assert!(scope.contains("rust/src/losses/functional.rs"));
+        assert!(scope.contains("rust/src/sweep/select.rs"));
+        // out of scope
+        assert!(!scope.contains("src/sweep/scheduler.rs"));
+        assert!(!scope.contains("src/metrics/auc.rs"));
+    }
+
+    #[test]
+    fn all_except_excludes_only_the_markers() {
+        let scope = Scope::AllExcept(&["src/util/fsio.rs"]);
+        assert!(!scope.contains("rust/src/util/fsio.rs"));
+        assert!(scope.contains("rust/src/util/bench.rs"));
+        assert!(scope.contains("src/config.rs"));
+    }
+
+    #[test]
+    fn meta_rule_is_registered() {
+        assert!(rule_named(ALLOW_NEEDS_REASON).is_some());
+        assert!(rule_named("no-such-rule").is_none());
+    }
+}

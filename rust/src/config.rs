@@ -238,8 +238,7 @@ impl SweepConfig {
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
-        std::fs::write(path, self.to_json().dumps())?;
-        Ok(())
+        crate::util::fsio::write_atomic(path, self.to_json().dumps().as_bytes())
     }
 
     /// Drop losses the configured backend cannot run (the `aucm` LIBAUC

@@ -10,7 +10,7 @@
 //! interrupted-then-resumed sweep yields the same record set as an
 //! uninterrupted one.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -26,8 +26,8 @@ use crate::sweep::{results, RunResult};
 use crate::util::fsio;
 
 /// Generate (and cache in memory) the shared dataset pools for a config.
-pub fn build_datasets(config: &SweepConfig) -> crate::Result<HashMap<String, JobData>> {
-    let mut map = HashMap::new();
+pub fn build_datasets(config: &SweepConfig) -> crate::Result<BTreeMap<String, JobData>> {
+    let mut map = BTreeMap::new();
     for name in &config.datasets {
         let mut spec = synth::spec_by_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}"))?;
@@ -102,7 +102,7 @@ pub fn run_with_options(
                 );
             }
             prior = replay.results;
-            let grid_ids: HashSet<String> = jobs.iter().map(|j| j.id()).collect();
+            let grid_ids: BTreeSet<String> = jobs.iter().map(|j| j.id()).collect();
             let known = prior.len();
             prior.retain(|r| grid_ids.contains(&r.job.id()));
             if prior.len() < known {
@@ -111,7 +111,7 @@ pub fn run_with_options(
                     known - prior.len()
                 );
             }
-            let done: HashSet<String> = prior.iter().map(|r| r.job.id()).collect();
+            let done: BTreeSet<String> = prior.iter().map(|r| r.job.id()).collect();
             jobs.retain(|j: &Job| !done.contains(&j.id()));
         }
     } else if journal.exists() && std::fs::metadata(&journal)?.len() > 0 {

@@ -18,8 +18,9 @@
 //!   native backend (default) and a PJRT artifact runtime (feature
 //!   `pjrt`), the training loop ([`train`]), the cross-validation
 //!   hyper-parameter sweep engine ([`sweep`]), an online scoring
-//!   service ([`serve`]), reporting ([`report`]) and experiment
-//!   orchestration ([`coordinator`]).
+//!   service ([`serve`]), reporting ([`report`]), experiment
+//!   orchestration ([`coordinator`]) and an in-repo invariant linter
+//!   ([`analysis`], `allpairs lint`).
 //!
 //! The default build is fully self-contained: `cargo build && cargo test`
 //! need no Python, no artifacts and no network.  With `make artifacts`
@@ -69,6 +70,7 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -74,8 +74,10 @@ impl LossFn for Square {
             .extend(batch.scores.iter().zip(batch.is_pos).map(|(&y, &p)| {
                 let y = y as f64;
                 if p != 0.0 {
+                    // lint:allow(float-narrowing-in-kernel): f64 math ends here; grad is f32
                     (-2.0 * (n_neg * (m - y) + s_neg)) as f32
                 } else {
+                    // lint:allow(float-narrowing-in-kernel): f64 math ends here; grad is f32
                     (2.0 * n_pos * y + b_pos) as f32
                 }
             }));
@@ -164,6 +166,7 @@ impl LossFn for SquaredHinge {
             } else {
                 loss += a * y * y + b * y + c;
                 // dL/dyk = 2 [ a_k (m + yk) - t_k ]
+                // lint:allow(float-narrowing-in-kernel): f64 sweep ends here; grad store is f32
                 ws.grad[i] = (2.0 * (a * (m + y) - t)) as f32;
             }
         }
@@ -175,6 +178,7 @@ impl LossFn for SquaredHinge {
             let y = batch.scores[i] as f64;
             if batch.is_pos[i] != 0.0 {
                 // dL/dyj = -2 [ N_j (m - yj) + T_j ]
+                // lint:allow(float-narrowing-in-kernel): f64 sweep ends here; grad store is f32
                 ws.grad[i] = (-2.0 * (n_cnt * (m - y) + t_sum)) as f32;
             } else {
                 n_cnt += 1.0;

@@ -85,6 +85,7 @@ impl PairwiseLoss for NaiveLinearHinge {
                 }
             }
         }
+        // lint:allow(float-narrowing-in-kernel): pairs accumulated in f64; final grad store is f32
         (loss, grad.into_iter().map(|g| g as f32).collect())
     }
 }
@@ -118,6 +119,7 @@ impl LossFn for LinearHinge {
                 c_sum += m - y;
             } else {
                 loss += a_cnt * y + c_sum;
+                // lint:allow(float-narrowing-in-kernel): pair counts are exact in f32 up to 2^24
                 ws.grad[i] = a_cnt as f32; // subgradient: count of active positives
             }
         }
@@ -126,6 +128,7 @@ impl LossFn for LinearHinge {
         for &i in ws.order.iter().rev() {
             let i = i as usize;
             if batch.is_pos[i] != 0.0 {
+                // lint:allow(float-narrowing-in-kernel): pair counts are exact in f32 up to 2^24
                 ws.grad[i] = -(n_cnt as f32);
             } else {
                 n_cnt += 1.0;

@@ -33,6 +33,7 @@ impl LossFn for Logistic {
                 loss += log1p_exp_neg(z);
                 // d/ds log(1+exp(-ys)) = -y sigmoid(-ys)
                 let sig = 1.0 / (1.0 + z.exp());
+                // lint:allow(float-narrowing-in-kernel): f64 math ends here; grad is f32
                 (-y * sig) as f32
             }));
         loss

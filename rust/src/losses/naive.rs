@@ -57,6 +57,7 @@ impl PairwiseLoss for NaiveSquaredHinge {
                 }
             }
         }
+        // lint:allow(float-narrowing-in-kernel): pairs accumulated in f64; final grad store is f32
         (loss, grad.into_iter().map(|g| g as f32).collect())
     }
 }
@@ -102,6 +103,7 @@ impl PairwiseLoss for NaiveSquare {
                 grad[k] += 2.0 * d;
             }
         }
+        // lint:allow(float-narrowing-in-kernel): pairs accumulated in f64; final grad store is f32
         (loss, grad.into_iter().map(|g| g as f32).collect())
     }
 }

@@ -84,6 +84,7 @@ impl WeightedSquaredHinge {
                 grad[k] += w * 2.0 * d;
             }
         }
+        // lint:allow(float-narrowing-in-kernel): pairs accumulated in f64; final grad store is f32
         (loss, grad.into_iter().map(|g| g as f32).collect())
     }
 }
@@ -128,6 +129,7 @@ impl LossFn for WeightedSquaredHinge {
                 t += w * y;
             } else {
                 loss += w * (a * y * y + b * y + c);
+                // lint:allow(float-narrowing-in-kernel): f64 sweep ends here; grad store is f32
                 grad[i] = (w * 2.0 * (a * (m + y) - t)) as f32;
             }
         }
@@ -138,6 +140,7 @@ impl LossFn for WeightedSquaredHinge {
             let y = batch.scores[i] as f64;
             let w = weights[i] as f64;
             if batch.is_pos[i] != 0.0 {
+                // lint:allow(float-narrowing-in-kernel): f64 sweep ends here; grad store is f32
                 grad[i] = (-w * 2.0 * (n_w * (m - y) + t_w)) as f32;
             } else {
                 n_w += w;
@@ -225,7 +228,9 @@ pub fn fill_class_balanced(is_pos: &[f32], out: &mut Vec<f32>) {
     let n = is_pos.len() as f64;
     let n_pos = is_pos.iter().filter(|&&p| p != 0.0).count() as f64;
     let n_neg = n - n_pos;
+    // lint:allow(float-narrowing-in-kernel): class weights are f32 model inputs, derived in f64
     let w_pos = (n / (2.0 * n_pos.max(1.0))) as f32;
+    // lint:allow(float-narrowing-in-kernel): class weights are f32 model inputs, derived in f64
     let w_neg = (n / (2.0 * n_neg.max(1.0))) as f32;
     out.clear();
     out.extend(is_pos.iter().map(|&p| if p != 0.0 { w_pos } else { w_neg }));

@@ -99,6 +99,11 @@ COMMANDS
       (ALLPAIRS_BENCH_QUICK=1 shrinks the iteration budget, not sizes)
   report            re-aggregate a saved results file
       --results FILE    sweep_results.jsonl path
+  lint              in-repo invariant linter (DESIGN.md \u{a7}12)
+      --root DIR        tree to lint                 [.]
+      --list-rules      print the rule catalog and exit
+      (exit is nonzero when any finding is reported; suppress a site
+       with `// lint:allow(rule): reason` — the reason is mandatory)
   artifacts-check   compile every artifact, smoke-run the inits (pjrt)
 ";
 
@@ -125,6 +130,7 @@ fn run() -> allpairs::Result<()> {
         Some("bench-serve") => cmd_bench_serve(&args),
         Some("bench") => cmd_bench(&args),
         Some("report") => cmd_report(&args, &out),
+        Some("lint") => cmd_lint(&args),
         Some("artifacts-check") => cmd_artifacts_check(&artifacts),
         Some(other) => anyhow::bail!("unknown command {other:?}\n\n{USAGE}"),
         None => {
@@ -586,6 +592,26 @@ fn cmd_report(args: &Args, out: &Path) -> allpairs::Result<()> {
         output.cells.len(),
         out.display()
     );
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> allpairs::Result<()> {
+    args.expect_known(&["artifacts", "out", "backend", "root", "list-rules"])?;
+    if args.flag("list-rules") {
+        for rule in allpairs::analysis::all_rules() {
+            println!("{:28} {}", rule.name, rule.summary);
+        }
+        return Ok(());
+    }
+    let root = PathBuf::from(args.get_str("root", "."));
+    let findings = allpairs::analysis::run_lint(&root)?;
+    for finding in &findings {
+        println!("{finding}");
+    }
+    if !findings.is_empty() {
+        anyhow::bail!("lint: {} finding(s)", findings.len());
+    }
+    eprintln!("lint: clean");
     Ok(())
 }
 

@@ -19,7 +19,7 @@
 //! see DESIGN.md §4 for why serialized protos are rejected here.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
 
@@ -50,7 +50,7 @@ pub fn tensor_from_literal(lit: &Literal) -> crate::Result<HostTensor> {
 pub struct Runtime {
     client: PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    cache: RefCell<BTreeMap<String, Rc<PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
@@ -61,7 +61,7 @@ impl Runtime {
         Ok(Self {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
         })
     }
 

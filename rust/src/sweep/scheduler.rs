@@ -20,7 +20,7 @@
 //! worker's executor/executable cache holds only the (model, loss,
 //! batch) variants its jobs actually touch.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::time::Duration;
@@ -109,7 +109,7 @@ pub struct SweepOptions {
 pub fn run_sweep(
     backend: &BackendSpec,
     jobs: Vec<Job>,
-    datasets: HashMap<String, JobData>,
+    datasets: BTreeMap<String, JobData>,
     workers: usize,
     progress: Option<ProgressFn>,
 ) -> crate::Result<SweepOutcome> {
@@ -130,7 +130,7 @@ pub fn run_sweep(
 pub fn run_sweep_with(
     backend: &BackendSpec,
     jobs: Vec<Job>,
-    datasets: HashMap<String, JobData>,
+    datasets: BTreeMap<String, JobData>,
     workers: usize,
     progress: Option<ProgressFn>,
     on_result: Option<OnResultFn>,
@@ -163,7 +163,7 @@ fn lock_queue(queue: &Mutex<VecDeque<Job>>) -> MutexGuard<'_, VecDeque<Job>> {
 pub fn run_sweep_opts(
     backend: &BackendSpec,
     jobs: Vec<Job>,
-    datasets: HashMap<String, JobData>,
+    datasets: BTreeMap<String, JobData>,
     options: SweepOptions,
 ) -> crate::Result<SweepOutcome> {
     let SweepOptions {
@@ -395,7 +395,7 @@ mod tests {
         // scheduler (and thus hits FP_RUN_JOB) must serialize against
         // the tests that arm it
         let _g = failpoint::serial_guard();
-        let mut datasets = HashMap::new();
+        let mut datasets = BTreeMap::new();
         datasets.insert("toy".to_string(), tiny_data(6, 64));
         let jobs = vec![tiny_job(0), tiny_job(1)];
         let outcome = run_sweep(&native_spec(6), jobs, datasets, 0, None).unwrap();
@@ -406,7 +406,7 @@ mod tests {
     #[test]
     fn unknown_dataset_reports_failure() {
         let _g = failpoint::serial_guard();
-        let mut datasets = HashMap::new();
+        let mut datasets = BTreeMap::new();
         datasets.insert("toy".to_string(), tiny_data(6, 64));
         let mut bad = tiny_job(0);
         bad.dataset = "missing".into();
@@ -430,7 +430,7 @@ mod tests {
 
     #[test]
     fn all_failed_is_an_error() {
-        let datasets = HashMap::new(); // nothing registered
+        let datasets = BTreeMap::new(); // nothing registered
         let jobs = vec![tiny_job(0)];
         assert!(run_sweep(&native_spec(6), jobs, datasets, 1, None).is_err());
     }
@@ -438,7 +438,7 @@ mod tests {
     #[test]
     fn empty_job_list_is_a_clean_noop() {
         // resume with everything already journaled hits this path
-        let outcome = run_sweep(&native_spec(6), vec![], HashMap::new(), 4, None).unwrap();
+        let outcome = run_sweep(&native_spec(6), vec![], BTreeMap::new(), 4, None).unwrap();
         assert!(outcome.results.is_empty());
         assert!(outcome.failures.is_empty());
     }
@@ -447,7 +447,7 @@ mod tests {
     fn transient_errors_are_retried_to_success() {
         let _g = failpoint::serial_guard();
         failpoint::arm_str(FP_RUN_JOB, "error@1x2").unwrap();
-        let mut datasets = HashMap::new();
+        let mut datasets = BTreeMap::new();
         datasets.insert("toy".to_string(), tiny_data(6, 64));
         let outcome = run_sweep_opts(
             &native_spec(6),
@@ -472,7 +472,7 @@ mod tests {
         let _g = failpoint::serial_guard();
         // fires on every one of job 1's three attempts; job 2 (hit 4) runs clean
         failpoint::arm_str(FP_RUN_JOB, "error@1x3").unwrap();
-        let mut datasets = HashMap::new();
+        let mut datasets = BTreeMap::new();
         datasets.insert("toy".to_string(), tiny_data(6, 64));
         let outcome = run_sweep_opts(
             &native_spec(6),

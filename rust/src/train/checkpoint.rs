@@ -85,9 +85,11 @@ pub fn load(path: impl AsRef<Path>) -> crate::Result<Vec<HostTensor>> {
         }
         other => anyhow::bail!("unsupported checkpoint version {other}"),
     };
+    // lint:allow(unchecked-cast-in-parse): u32 -> usize is a widening cast on every target we build
     let count = u32::from_le_bytes(take(&mut cursor, 4)?.try_into().unwrap()) as usize;
     let mut tensors = Vec::with_capacity(count.min(1024));
     for _ in 0..count {
+        // lint:allow(unchecked-cast-in-parse): u32 -> usize widening; rank is bounds-checked below
         let rank = u32::from_le_bytes(take(&mut cursor, 4)?.try_into().unwrap()) as usize;
         anyhow::ensure!(rank <= 8, "implausible rank {rank}");
         let mut shape = Vec::with_capacity(rank);
@@ -100,6 +102,7 @@ pub fn load(path: impl AsRef<Path>) -> crate::Result<Vec<HostTensor>> {
         for &d in &shape {
             anyhow::ensure!(d >= 0, "negative dim {d}");
             elems = elems
+                // lint:allow(unchecked-cast-in-parse): d >= 0 ensured on the line above
                 .checked_mul(d as u64)
                 .ok_or_else(|| anyhow::anyhow!("tensor element count overflows ({shape:?})"))?;
         }
@@ -111,10 +114,12 @@ pub fn load(path: impl AsRef<Path>) -> crate::Result<Vec<HostTensor>> {
         // file the dims reads could have crossed into the CRC footer.)
         anyhow::ensure!(cursor <= body_len, "tensor header crosses the CRC footer");
         anyhow::ensure!(
+            // lint:allow(unchecked-cast-in-parse): usize -> u64 widening; cursor <= body_len above
             byte_len <= (body_len - cursor) as u64,
             "tensor claims {byte_len} bytes but only {} remain",
             body_len - cursor
         );
+        // lint:allow(unchecked-cast-in-parse): byte_len <= remaining payload ensured just above
         let raw = take(&mut cursor, byte_len as usize)?;
         let data: Vec<f32> = raw
             .chunks_exact(4)

@@ -149,10 +149,9 @@ impl Bench {
     }
 
     /// Write results as CSV (used by EXPERIMENTS.md bookkeeping).
+    /// Atomic replace: a crash mid-write can never leave a torn CSV
+    /// next to a BENCH json that claims the run completed.
     pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
-        if let Some(parent) = path.as_ref().parent() {
-            std::fs::create_dir_all(parent)?;
-        }
         let mut s = String::from("name,iters,median_s,mean_s,min_s\n");
         for m in &self.results {
             s.push_str(&format!(
@@ -164,7 +163,7 @@ impl Bench {
                 m.min.as_secs_f64()
             ));
         }
-        std::fs::write(path, s)?;
+        crate::util::fsio::write_atomic(path.as_ref(), s.as_bytes())?;
         Ok(())
     }
 }

@@ -40,6 +40,7 @@ impl Json {
             // usize::MAX) — both silent corruptions, not conversions.
             if n >= 0.0 && n.fract() == 0.0 && n < 9_007_199_254_740_992.0 && n <= usize::MAX as f64
             {
+                // lint:allow(unchecked-cast-in-parse): exact-integer range proven just above
                 Some(n as usize)
             } else {
                 None

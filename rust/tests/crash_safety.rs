@@ -4,7 +4,7 @@
 //! interrupted-then-resumed sweep produces the identical record set as
 //! an uninterrupted run of the same seed.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::cv;
@@ -147,7 +147,7 @@ fn injected_panic_fails_one_job_and_the_rest_complete() {
     // isolation must confine the damage to that one job while both
     // workers keep draining the queue.
     failpoint::arm_str(FP_RUN_JOB, "panic@3").unwrap();
-    let mut datasets = HashMap::new();
+    let mut datasets = BTreeMap::new();
     datasets.insert("synth-pets".to_string(), sweep_data());
     let jobs: Vec<Job> = (0..6).map(sweep_job).collect();
     let outcome = run_sweep_opts(

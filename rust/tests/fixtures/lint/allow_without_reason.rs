@@ -1,0 +1,11 @@
+// Fixture: suppressions that do not carry a reason, or that name an
+// unknown rule, are themselves findings (lint-allow-needs-reason).
+pub fn bad_allows(grad: f64) -> f32 {
+    // lint:allow(float-narrowing-in-kernel)
+    let a = grad as f32;
+    // lint:allow(float-narrowing-in-kernel):
+    let b = grad as f32;
+    // lint:allow(no-such-rule): confidently wrong
+    let c = grad as f32;
+    a + b + c
+}

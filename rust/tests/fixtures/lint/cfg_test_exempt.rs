@@ -1,0 +1,18 @@
+// Fixture: everything inside a #[cfg(test)] item is exempt, including
+// nested attributes and multiple would-be findings.
+pub fn production(x: f64) -> f64 {
+    x * 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn helper_may_do_anything() {
+        let narrowed = 1.25_f64 as f32;
+        let mut m = HashMap::new();
+        m.insert("k", narrowed);
+        std::fs::write("/tmp/scratch", b"test scratch").unwrap();
+    }
+}

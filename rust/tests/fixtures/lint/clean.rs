@@ -1,0 +1,26 @@
+// Fixture: kernel-style code written to the house rules — f64 math
+// end to end, ordered containers, recovered locks.  Zero findings
+// expected even under the strictest scope (src/losses/).
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+pub fn sweep(scores: &[f64], margin: f64) -> f64 {
+    let mut acc = 0.0_f64;
+    for &y in scores {
+        acc += (margin - y).max(0.0);
+    }
+    acc
+}
+
+pub fn ordered_tally(ids: &[u32]) -> BTreeMap<u32, usize> {
+    let mut seen = BTreeMap::new();
+    for &id in ids {
+        *seen.entry(id).or_insert(0) += 1;
+    }
+    seen
+}
+
+pub fn drain(queue: &Mutex<Vec<u64>>) -> Vec<u64> {
+    let mut guard = queue.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    std::mem::take(&mut *guard)
+}

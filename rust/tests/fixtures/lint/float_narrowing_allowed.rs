@@ -1,0 +1,6 @@
+// Fixture: the same narrow is silent when the suppression carries a
+// reason — and only on the line it covers.
+pub fn final_store(grad: f64) -> f32 {
+    // lint:allow(float-narrowing-in-kernel): f64 sweep ends here; grad store is f32
+    grad as f32
+}

@@ -1,0 +1,6 @@
+// Fixture: `as f32` on a kernel computation path must fire
+// float-narrowing-in-kernel when linted under src/losses/.
+pub fn sweep_key(score: f64, margin: f64) -> f32 {
+    let key = margin - score;
+    key as f32
+}

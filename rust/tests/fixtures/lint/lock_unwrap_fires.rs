@@ -1,0 +1,7 @@
+// Fixture: .lock().unwrap() must fire lock-unwrap anywhere in the tree.
+use std::sync::Mutex;
+
+pub fn drain(queue: &Mutex<Vec<u64>>) -> Vec<u64> {
+    let mut guard = queue.lock().unwrap();
+    std::mem::take(&mut *guard)
+}

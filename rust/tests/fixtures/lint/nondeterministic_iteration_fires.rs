@@ -1,0 +1,11 @@
+// Fixture: HashMap/HashSet on a deterministic path must fire
+// nondeterministic-iteration.
+use std::collections::HashMap;
+
+pub fn tally(ids: &[u32]) -> usize {
+    let mut seen: HashMap<u32, usize> = HashMap::new();
+    for &id in ids {
+        *seen.entry(id).or_insert(0) += 1;
+    }
+    seen.len()
+}

@@ -1,0 +1,6 @@
+// Fixture: raw std::fs durable writes must fire raw-durable-write.
+pub fn persist(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    std::fs::write(path, bytes)?;
+    let _sidecar = std::fs::File::create(path.with_extension("meta"))?;
+    Ok(())
+}

@@ -1,0 +1,12 @@
+// Regression fixture: the PR 4 bug pattern.  Hinge sort keys were
+// narrowed to f32 before sorting; near-margin pairs whose f64 keys
+// differed only below f32 precision collapsed to equal keys and the
+// sweep silently dropped their contribution.  The linter must flag the
+// narrowing on the key path.
+pub fn build_keys(scores: &[f64], margin: f64, keys: &mut Vec<f32>) {
+    keys.clear();
+    for &y in scores {
+        keys.push((margin - y) as f32);
+    }
+    keys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

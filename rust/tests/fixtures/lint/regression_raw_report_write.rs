@@ -1,0 +1,7 @@
+// Regression fixture: the PR 7 bug pattern.  Sweep reports were
+// written with a single std::fs::write; a crash mid-write left a torn
+// half-report that a resume then trusted.  The linter must flag the
+// raw write so it is routed through util::fsio::write_atomic.
+pub fn save_report(path: &std::path::Path, json: &str) -> std::io::Result<()> {
+    std::fs::write(path, json)
+}

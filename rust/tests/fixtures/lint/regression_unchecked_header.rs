@@ -1,0 +1,11 @@
+// Regression fixture: the PR 7 bug pattern.  Checkpoint-header tensor
+// dims were multiplied as usize without overflow checks; a crafted
+// header could wrap the byte count past a bounds check and trigger a
+// huge allocation.  The linter must flag the bare casts in parse code.
+pub fn payload_len(dims: &[i64]) -> usize {
+    let mut elems = 1usize;
+    for &d in dims {
+        elems *= d as usize;
+    }
+    elems * 4
+}

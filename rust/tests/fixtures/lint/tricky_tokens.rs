@@ -1,0 +1,17 @@
+// Fixture: lexer stress — none of the rule-pattern text below is real
+// code until the last function, which must be the only finding.
+pub fn decoys<'a>(tag: &'a str) -> String {
+    // as f32 in a line comment is not code
+    /* HashMap inside /* a nested */ block comment */
+    let plain = "string mentioning Instant::now and as f32";
+    let raw = r#"raw string: std::fs::write("x") and .lock().unwrap()"#;
+    let byte_str = b"as f32 in a byte string";
+    let ch = 'a'; // char literal, not a lifetime
+    let escaped = '\''; // escaped char, still not a lifetime
+    let unicode = "π ≈ 3.14159; naïve café"; // multi-byte before the finding
+    format!("{tag}{plain}{raw}{ch}{escaped}{unicode}{:?}", byte_str)
+}
+
+pub fn real_finding(score: f64) -> f32 {
+    score as f32
+}

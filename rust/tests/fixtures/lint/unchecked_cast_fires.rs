@@ -1,0 +1,6 @@
+// Fixture: bare integer casts while parsing untrusted input must fire
+// unchecked-cast-in-parse when linted under a parse-path file name.
+pub fn read_len(header: &[u8]) -> usize {
+    let raw = i64::from_le_bytes(header[..8].try_into().unwrap());
+    raw as usize
+}

@@ -1,0 +1,7 @@
+// Fixture: wall-clock reads in deterministic engine code must fire
+// wallclock-in-kernel (both patterns).
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> (Instant, SystemTime) {
+    (Instant::now(), SystemTime::now())
+}

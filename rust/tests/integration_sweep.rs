@@ -111,7 +111,7 @@ fn multiworker_sweep_selection_and_persistence() {
         tiny_job("logistic", 100, 0),
     ];
     let n_jobs = jobs.len();
-    let mut datasets = std::collections::HashMap::new();
+    let mut datasets = std::collections::BTreeMap::new();
     datasets.insert("synth-pets".to_string(), tiny_data());
     let outcome = run_sweep(&native_spec(), jobs, datasets, 3, None).unwrap();
     assert!(outcome.failures.is_empty(), "{:?}", outcome.failures);

@@ -1,0 +1,216 @@
+//! Integration tests for `allpairs lint` (the in-repo invariant
+//! linter, DESIGN.md §12): every rule fires on its fixture, the escape
+//! hatches behave, the tricky-token lexer cases hold, the historical
+//! bug patterns are caught, and the repo itself lints clean.
+//!
+//! Fixtures live in `tests/fixtures/lint/` and are never compiled;
+//! each is linted under a *synthetic* in-scope path, because rule
+//! scoping keys on the relative path, not the file's real location.
+
+use std::path::Path;
+
+use allpairs::analysis::{all_rules, lint_source, run_lint, Finding};
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/lint")
+        .join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+fn lint_fixture(name: &str, as_path: &str) -> Vec<Finding> {
+    lint_source(as_path, &fixture(name))
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// --- each rule fires on its fixture -----------------------------------
+
+#[test]
+fn float_narrowing_fires_in_losses() {
+    let got = lint_fixture("float_narrowing_fires.rs", "src/losses/fixture.rs");
+    assert_eq!(rules_of(&got), vec!["float-narrowing-in-kernel"]);
+    assert_eq!((got[0].line, got[0].col), (5, 9));
+}
+
+#[test]
+fn float_narrowing_is_path_scoped() {
+    let got = lint_fixture("float_narrowing_fires.rs", "src/metrics/fixture.rs");
+    assert!(got.is_empty(), "out of scope, must not fire: {got:?}");
+}
+
+#[test]
+fn nondeterministic_iteration_fires() {
+    for path in ["src/losses/f.rs", "src/runtime/f.rs", "src/coordinator/f.rs"] {
+        let got = lint_fixture("nondeterministic_iteration_fires.rs", path);
+        assert_eq!(got.len(), 3, "use + two ctor mentions at {path}: {got:?}");
+        assert!(got.iter().all(|f| f.rule == "nondeterministic-iteration"));
+    }
+}
+
+#[test]
+fn raw_durable_write_fires() {
+    let got = lint_fixture("raw_durable_write_fires.rs", "src/report/fixture.rs");
+    assert_eq!(
+        rules_of(&got),
+        vec!["raw-durable-write", "raw-durable-write"],
+        "fs::write and File::create: {got:?}"
+    );
+}
+
+#[test]
+fn raw_durable_write_exempts_fsio() {
+    let got = lint_fixture("raw_durable_write_fires.rs", "src/util/fsio.rs");
+    assert!(got.is_empty(), "fsio is the one place raw writes live: {got:?}");
+}
+
+#[test]
+fn lock_unwrap_fires_anywhere() {
+    let got = lint_fixture("lock_unwrap_fires.rs", "src/made/up/path.rs");
+    assert_eq!(rules_of(&got), vec!["lock-unwrap"]);
+    assert_eq!((got[0].line, got[0].col), (5, 26));
+}
+
+#[test]
+fn wallclock_fires_in_engine_paths() {
+    let got = lint_fixture("wallclock_fires.rs", "src/runtime/fixture.rs");
+    assert_eq!(got.len(), 3, "SystemTime import + Instant::now + SystemTime::now: {got:?}");
+    assert!(got.iter().all(|f| f.rule == "wallclock-in-kernel"));
+    // ...but timing the coordinator/bench layer is fine.
+    assert!(lint_fixture("wallclock_fires.rs", "src/util/bench.rs").is_empty());
+}
+
+#[test]
+fn unchecked_cast_fires_in_parse_paths() {
+    let got = lint_fixture("unchecked_cast_fires.rs", "src/serve/protocol.rs");
+    assert_eq!(rules_of(&got), vec!["unchecked-cast-in-parse"]);
+    assert_eq!((got[0].line, got[0].col), (5, 9));
+}
+
+// --- escape hatches ----------------------------------------------------
+
+#[test]
+fn reasoned_allow_suppresses() {
+    let got = lint_fixture("float_narrowing_allowed.rs", "src/losses/fixture.rs");
+    assert!(got.is_empty(), "reasoned allow must silence the narrow: {got:?}");
+}
+
+#[test]
+fn cfg_test_module_is_exempt() {
+    let got = lint_fixture("cfg_test_exempt.rs", "src/losses/fixture.rs");
+    assert!(got.is_empty(), "#[cfg(test)] content is exempt: {got:?}");
+}
+
+#[test]
+fn clean_kernel_code_has_no_findings() {
+    let got = lint_fixture("clean.rs", "src/losses/clean.rs");
+    assert!(got.is_empty(), "house-style code must lint clean: {got:?}");
+}
+
+#[test]
+fn reasonless_and_unknown_allows_are_findings() {
+    // Under a neutral path only the meta-rule fires: one finding per
+    // bad suppression (no reason, empty reason, unknown rule).
+    let got = lint_fixture("allow_without_reason.rs", "src/util/other.rs");
+    assert_eq!(
+        rules_of(&got),
+        vec!["lint-allow-needs-reason"; 3],
+        "three bad suppressions: {got:?}"
+    );
+    assert_eq!(
+        got.iter().map(|f| f.line).collect::<Vec<_>>(),
+        vec![4, 6, 8]
+    );
+}
+
+#[test]
+fn bad_allows_do_not_suppress() {
+    // Under a kernel path the same fixture also reports the narrows the
+    // bad suppressions failed to cover — nothing grandfathers silently.
+    let got = lint_fixture("allow_without_reason.rs", "src/losses/fixture.rs");
+    let narrows = got
+        .iter()
+        .filter(|f| f.rule == "float-narrowing-in-kernel")
+        .count();
+    assert_eq!(narrows, 3, "each bad allow leaves its cast exposed: {got:?}");
+    assert_eq!(got.len(), 6);
+}
+
+// --- tricky tokens ------------------------------------------------------
+
+#[test]
+fn tricky_tokens_produce_exactly_one_finding() {
+    let got = lint_fixture("tricky_tokens.rs", "src/losses/tricky.rs");
+    assert_eq!(
+        rules_of(&got),
+        vec!["float-narrowing-in-kernel"],
+        "decoys in strings/comments/chars must not fire: {got:?}"
+    );
+    assert_eq!((got[0].line, got[0].col), (16, 11), "span after multi-byte text: {got:?}");
+}
+
+// --- historical bug regressions (the patterns that motivated the rules) -
+
+#[test]
+fn regression_f32_sort_key_is_caught() {
+    let got = lint_fixture("regression_f32_sort_key.rs", "src/losses/sort_keys.rs");
+    assert_eq!(rules_of(&got), vec!["float-narrowing-in-kernel"]);
+    assert_eq!((got[0].line, got[0].col), (9, 32));
+}
+
+#[test]
+fn regression_unchecked_header_is_caught() {
+    let got = lint_fixture("regression_unchecked_header.rs", "src/train/checkpoint.rs");
+    assert_eq!(rules_of(&got), vec!["unchecked-cast-in-parse"]);
+    assert_eq!((got[0].line, got[0].col), (8, 20));
+}
+
+#[test]
+fn regression_raw_report_write_is_caught() {
+    let got = lint_fixture("regression_raw_report_write.rs", "src/report/summary.rs");
+    assert_eq!(rules_of(&got), vec!["raw-durable-write"]);
+    assert_eq!((got[0].line, got[0].col), (6, 10));
+}
+
+// --- the repo itself ----------------------------------------------------
+
+#[test]
+fn repo_lints_clean() {
+    let findings = run_lint(Path::new(env!("CARGO_MANIFEST_DIR"))).unwrap();
+    assert!(
+        findings.is_empty(),
+        "the tree must lint clean (no silent baseline):\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn finding_display_format_is_stable() {
+    let got = lint_fixture("lock_unwrap_fires.rs", "src/sweep/queue.rs");
+    assert_eq!(
+        got[0].to_string(),
+        "src/sweep/queue.rs:5:26 [lock-unwrap] ".to_string() + got[0].message.as_str()
+    );
+}
+
+#[test]
+fn rule_catalog_is_complete() {
+    let names: Vec<&str> = all_rules().iter().map(|r| r.name).collect();
+    for expected in [
+        "float-narrowing-in-kernel",
+        "nondeterministic-iteration",
+        "raw-durable-write",
+        "lock-unwrap",
+        "wallclock-in-kernel",
+        "unchecked-cast-in-parse",
+        "lint-allow-needs-reason",
+    ] {
+        assert!(names.contains(&expected), "missing rule {expected}");
+    }
+}
