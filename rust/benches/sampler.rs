@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
         let mut p = vec![0.0f32; bs];
         let mut q = vec![0.0f32; bs];
         bench.run(format!("batch_fill/epoch_bs{bs}"), || {
-            let plan = BatchPlan::new(&indices, bs, &mut rng);
+            let plan = BatchPlan::new(&indices, bs, &mut rng).unwrap();
             let mut iter = plan.iter(&train);
             let mut total = 0usize;
             while let Some(c) = iter.fill_next(&mut x, &mut p, &mut q) {
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
             let mut x = vec![0.0f32; bs * row];
             let mut p = vec![0.0f32; bs];
             let mut q = vec![0.0f32; bs];
-            let mut sampler = EpochSampler::new(&train, &indices, bs, mode);
+            let mut sampler = EpochSampler::new(&train.y, &indices, bs, mode)?;
             bench.run(format!("stratified_fill/{label}_epoch_bs{bs}"), || {
                 let plan = sampler.epoch_plan(&mut rng);
                 let mut iter = plan.iter(&train);

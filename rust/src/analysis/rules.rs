@@ -151,6 +151,10 @@ pub fn all_rules() -> &'static [Rule] {
                 "src/util/json.rs",
                 "src/serve/protocol.rs",
                 "src/serve/framing.rs",
+                // Shard headers are untrusted bytes off disk, exactly
+                // like checkpoint headers (`raw-durable-write` already
+                // covers shard/ through its AllExcept scope).
+                "src/data/shard/",
             ]),
             patterns: &[&[Ident("as"), AnyIdent(&["usize", "u64"])]],
         },

@@ -50,6 +50,15 @@ pub struct PerfConfig {
     pub dim: usize,
     /// Key counts for the competitive sort table (empty = skip it).
     pub sort_sizes: Vec<usize>,
+    /// Row counts for the out-of-core shard suite (empty = skip it):
+    /// store write, coalesced sequential read, and one full stratified
+    /// epoch through the double-buffered prefetch path
+    /// (`shard/{write,read_seq,epoch_fill}/nN`).
+    pub shard_sizes: Vec<usize>,
+    /// Push the sort table to n = 10⁸ with keys *streamed from a shard
+    /// store* rather than generated resident (`allpairs bench --huge`).
+    /// Off by default: needs ~3 GB RAM and ~1 GB of scratch disk.
+    pub huge_sort: bool,
 }
 
 impl Default for PerfConfig {
@@ -59,6 +68,8 @@ impl Default for PerfConfig {
             threads: vec![1, 8],
             dim: 32,
             sort_sizes: vec![100_000, 1_000_000, 10_000_000],
+            shard_sizes: vec![100_000, 1_000_000],
+            huge_sort: false,
         }
     }
 }
@@ -152,34 +163,60 @@ pub fn run(cfg: &PerfConfig) -> crate::Result<Vec<PerfRecord>> {
     // strategy against the comparison reference and the O(n) no-sort
     // floor, on the exact hinge keys the kernels sort.
     for &n in &cfg.sort_sizes {
-        sort_suite(&mut bench, &mut records, n)?;
+        let (scores, is_pos) = sort_bench_data(n);
+        sort_suite_on(&mut bench, &mut records, n, &scores, &is_pos)?;
+    }
+
+    // The out-of-core I/O path (DESIGN.md §13).
+    for &n in &cfg.shard_sizes {
+        shard_suite(&mut bench, &mut records, n, cfg.dim)?;
+    }
+
+    // n = 10⁸ sort table, fed from disk instead of resident vectors.
+    if cfg.huge_sort {
+        huge_sort_suite(&mut bench, &mut records)?;
     }
     Ok(records)
 }
 
-/// One size of the competitive sort table.  The permutations of all
-/// three strategies are asserted identical at full bench scale before
-/// any timing — the same invariant `tests/proptest_sort.rs` pins on
-/// adversarial distributions, checked here on the real 10⁷-key layout.
-fn sort_suite(bench: &mut Bench, records: &mut Vec<PerfRecord>, n: usize) -> crate::Result<()> {
+/// Scores + positive mask for the sort table, deterministic in `n`.
+fn sort_bench_data(n: usize) -> (Vec<f32>, Vec<f32>) {
     let mut rng = Rng::new(0x50B7 ^ n as u64);
     let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
     let is_pos: Vec<f32> = (0..n)
         .map(|_| if rng.uniform() < 0.1 { 1.0 } else { 0.0 })
         .collect();
+    (scores, is_pos)
+}
+
+/// One size of the competitive sort table over caller-provided data
+/// (resident for the standard sizes, streamed back out of a shard
+/// store for `--huge`).  The permutations of all three strategies are
+/// asserted identical at full bench scale before any timing — the same
+/// invariant `tests/proptest_sort.rs` pins on adversarial
+/// distributions, checked here on the real full-scale key layout.
+fn sort_suite_on(
+    bench: &mut Bench,
+    records: &mut Vec<PerfRecord>,
+    n: usize,
+    scores: &[f32],
+    is_pos: &[f32],
+) -> crate::Result<()> {
+    anyhow::ensure!(scores.len() == n && is_pos.len() == n, "sort suite: data/size mismatch");
+    let mut rng = Rng::new(0x57A1E ^ n as u64);
     // the augmented-value keys of `fill_hinge_order` at margin 1
     let keys: Vec<f64> = scores
         .iter()
-        .zip(&is_pos)
+        .zip(is_pos)
         .map(|(&y, &p)| if p != 0.0 { y as f64 } else { y as f64 + 1.0 })
         .collect();
 
     // Reference permutation (untimed) + full-scale differential check.
     let mut reference = Vec::new();
-    SortEngine::new(SortStrategy::Comparison).order_by_keys(&keys, &is_pos, false, &mut reference);
+    SortEngine::new(SortStrategy::Comparison).order_by_keys(&keys, is_pos, false, &mut reference);
     let mut order = Vec::new();
     for strategy in [SortStrategy::Radix, SortStrategy::Adaptive] {
-        SortEngine::new(strategy).order_by_keys(&keys, &is_pos, false, &mut order);
+        SortEngine::new(strategy).order_by_keys(&keys, is_pos, false, &mut order);
         anyhow::ensure!(
             order == reference,
             "{strategy} permutation diverged from the comparison reference at n={n}"
@@ -202,7 +239,7 @@ fn sort_suite(bench: &mut Bench, records: &mut Vec<PerfRecord>, n: usize) -> cra
     for strategy in [SortStrategy::Comparison, SortStrategy::Radix] {
         let mut engine = SortEngine::new(strategy);
         let m = bench.run(format!("sort/{strategy}/n{n}"), || {
-            engine.order_by_keys(&keys, &is_pos, false, &mut order);
+            engine.order_by_keys(&keys, is_pos, false, &mut order);
             order.len()
         });
         records.push(record(m, n, 1));
@@ -210,17 +247,117 @@ fn sort_suite(bench: &mut Bench, records: &mut Vec<PerfRecord>, n: usize) -> cra
     let mut engine = SortEngine::new(SortStrategy::Adaptive);
     let m = bench.run(format!("sort/adaptive/n{n}"), || {
         engine.seed_prev(&stale);
-        engine.order_by_keys(&keys, &is_pos, false, &mut order);
+        engine.order_by_keys(&keys, is_pos, false, &mut order);
         order.len()
     });
     records.push(record(m, n, 1));
 
     // The no-sort floor: the O(n) univariate bound needs no ordering.
     let m = bench.run(format!("sort/nosort_lhinge/n{n}"), || {
-        univariate_lhinge_bound(&scores, &is_pos, 1.0)
+        univariate_lhinge_bound(scores, is_pos, 1.0)
     });
     records.push(record(m, n, 1));
     Ok(())
+}
+
+/// The out-of-core I/O suite at one row count: store write, coalesced
+/// sequential read, and one full stratified epoch streamed through the
+/// double-buffered prefetch path (each timed `epoch_fill` iteration is
+/// a complete epoch, prefetch thread spawn included).
+fn shard_suite(
+    bench: &mut Bench,
+    records: &mut Vec<PerfRecord>,
+    n: usize,
+    dim: usize,
+) -> crate::Result<()> {
+    use crate::data::dataset::Dataset;
+    use crate::data::{DatasetSource, EpochSampler, SamplingMode, ShardedDataset};
+
+    let mut rng = Rng::new(0x5AA2D ^ n as u64);
+    let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..n)
+        .map(|_| if rng.uniform() < 0.1 { 1.0 } else { 0.0 })
+        .collect();
+    let d = Dataset::new(x, y, 0, dim);
+    let dir = std::env::temp_dir().join(format!(
+        "allpairs_bench_shard_{}_{n}",
+        std::process::id()
+    ));
+    let n_shards = 4.min(n);
+
+    // Each timed iteration rebuilds the whole store (atomic publishes
+    // and CRC streaming included — the real `allpairs shard` cost).
+    let m = bench.run(format!("shard/write/n{n}"), || {
+        crate::data::shard::write_store(&dir, &d, n_shards).unwrap().n_rows
+    });
+    records.push(record(m, n, 1));
+    drop(d);
+
+    let store = ShardedDataset::open(&dir)?;
+    let indices: Vec<u32> = (0..n as u32).collect();
+    let chunk_rows = 4096.min(n);
+    let mut buf = vec![0.0f32; chunk_rows * dim];
+    let m = bench.run(format!("shard/read_seq/n{n}"), || {
+        let mut total = 0usize;
+        for chunk in indices.chunks(chunk_rows) {
+            store.fetch_rows(chunk, &mut buf[..chunk.len() * dim]).unwrap();
+            total += chunk.len();
+        }
+        total
+    });
+    records.push(record(m, n, 1));
+
+    let batch = 1024.min(n);
+    let mut sampler =
+        EpochSampler::new(store.labels(), &indices, batch, SamplingMode::Preserve)?;
+    let mut epoch_rng = Rng::new(1);
+    let (mut bx, mut bp, mut bq) =
+        (vec![0.0f32; batch * dim], vec![0.0f32; batch], vec![0.0f32; batch]);
+    let m = bench.run(format!("shard/epoch_fill/n{n}"), || {
+        let plan = sampler.epoch_plan(&mut epoch_rng);
+        let mut fill = store.batches(&plan).unwrap();
+        let mut total = 0usize;
+        while let Some(count) = fill.fill_next(&mut bx, &mut bp, &mut bq).unwrap() {
+            total += count;
+        }
+        total
+    });
+    records.push(record(m, n, 1));
+
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+/// The `--huge` sort table: n = 10⁸ hinge keys whose scores and labels
+/// round-trip through a 7-shard store first, so the headline number is
+/// produced from disk-fed data no resident generator could hold next
+/// to the sort scratch.  ~3 GB RAM (keys + permutations), ~1 GB disk.
+fn huge_sort_suite(bench: &mut Bench, records: &mut Vec<PerfRecord>) -> crate::Result<()> {
+    use crate::data::dataset::Dataset;
+    use crate::data::{DatasetSource, ShardedDataset};
+
+    const N: usize = 100_000_000;
+    let dir = std::env::temp_dir().join(format!("allpairs_bench_huge_{}", std::process::id()));
+    {
+        let (scores, is_pos) = sort_bench_data(N);
+        let d = Dataset::new(scores, is_pos, 0, 1);
+        crate::data::shard::write_store(&dir, &d, 7)?;
+    } // resident copy dropped before the read-back
+
+    let store = ShardedDataset::open(&dir)?;
+    anyhow::ensure!(store.len() == N, "huge store row count");
+    let mut scores = vec![0.0f32; N];
+    let indices: Vec<u32> = (0..N as u32).collect();
+    for chunk_start in (0..N).step_by(1 << 20) {
+        let chunk = &indices[chunk_start..(chunk_start + (1 << 20)).min(N)];
+        store.fetch_rows(chunk, &mut scores[chunk_start..chunk_start + chunk.len()])?;
+    }
+    let is_pos = store.labels().to_vec();
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    sort_suite_on(bench, records, N, &scores, &is_pos)
 }
 
 /// The univariate linear-hinge *upper bound* of Lyu & Ying (arXiv
@@ -551,14 +688,21 @@ mod tests {
             threads: vec![1],
             dim: 4,
             sort_sizes: vec![300],
+            shard_sizes: vec![200],
+            huge_sort: false,
         };
         let records = run(&cfg).unwrap();
-        // train_step + loss + auc, then the four-strategy sort suite
-        assert_eq!(records.len(), 7);
+        // train_step + loss + auc, the four-strategy sort suite, then
+        // the three-record shard suite
+        assert_eq!(records.len(), 10);
         assert!(records.iter().all(|r| r.min_s >= 0.0 && r.median_s >= r.min_s));
         assert!(records.iter().any(|r| r.name == "train_step/hinge/n500/t1"));
         for strategy in ["comparison", "radix", "adaptive", "nosort_lhinge"] {
             let name = format!("sort/{strategy}/n300");
+            assert!(records.iter().any(|r| r.name == name), "missing {name}");
+        }
+        for suite in ["write", "read_seq", "epoch_fill"] {
+            let name = format!("shard/{suite}/n200");
             assert!(records.iter().any(|r| r.name == name), "missing {name}");
         }
         assert_eq!(sort_table(&records).len(), 1);

@@ -16,6 +16,8 @@ pub mod dataset;
 pub mod features;
 pub mod rng;
 pub mod sampler;
+pub mod shard;
+pub mod source;
 pub mod stream;
 pub mod synth;
 
@@ -23,5 +25,7 @@ pub use dataset::{Dataset, Split};
 pub use features::FeatureSpec;
 pub use rng::Rng;
 pub use sampler::{BatchIter, BatchPlan};
+pub use shard::ShardedDataset;
+pub use source::{BatchFill, DatasetSource};
 pub use stream::{EpochSampler, SamplingMode};
 pub use synth::{SynthSpec, SYNTH_DATASETS};

@@ -26,19 +26,32 @@ pub struct BatchPlan {
 impl BatchPlan {
     /// Shuffle `indices` (a view into `dataset`) into batches of
     /// `batch_size`.
-    pub fn new(indices: &[u32], batch_size: usize, rng: &mut Rng) -> Self {
-        assert!(batch_size > 0);
+    ///
+    /// Errors (structured, not a panic — these come straight from user
+    /// configuration): `batch_size == 0`, or an empty index slice.
+    pub fn new(indices: &[u32], batch_size: usize, rng: &mut Rng) -> crate::Result<Self> {
+        anyhow::ensure!(batch_size > 0, "batch plan: batch size must be positive (got 0)");
+        anyhow::ensure!(
+            !indices.is_empty(),
+            "batch plan: empty index set — nothing to train on"
+        );
         let mut order = indices.to_vec();
         rng.shuffle(&mut order);
-        Self { order, batch_size }
+        Ok(Self { order, batch_size })
     }
 
     /// Wrap an explicit epoch order into a plan.  Batch `b` spans
     /// `order[b*batch_size ..]`, so any short batch must be the last —
     /// which is how [`crate::data::stream::EpochSampler`] builds them.
-    pub fn from_order(order: Vec<u32>, batch_size: usize) -> Self {
-        assert!(batch_size > 0);
-        Self { order, batch_size }
+    ///
+    /// Same structured errors as [`BatchPlan::new`].
+    pub fn from_order(order: Vec<u32>, batch_size: usize) -> crate::Result<Self> {
+        anyhow::ensure!(batch_size > 0, "batch plan: batch size must be positive (got 0)");
+        anyhow::ensure!(
+            !order.is_empty(),
+            "batch plan: empty epoch order — nothing to train on"
+        );
+        Ok(Self { order, batch_size })
     }
 
     /// The flat epoch order (batches are consecutive `batch_size` runs).
@@ -124,7 +137,7 @@ mod tests {
     fn epoch_covers_every_example_once() {
         let d = toy(25);
         let indices: Vec<u32> = (0..25).collect();
-        let plan = BatchPlan::new(&indices, 8, &mut Rng::new(0));
+        let plan = BatchPlan::new(&indices, 8, &mut Rng::new(0)).unwrap();
         assert_eq!(plan.n_batches(), 4);
         let mut seen = vec![0usize; 25];
         let (mut x, mut p, mut q) = (vec![0.0; 16], vec![0.0; 8], vec![0.0; 8]);
@@ -146,7 +159,7 @@ mod tests {
     fn masks_are_complementary_and_padded() {
         let d = toy(10);
         let indices: Vec<u32> = (0..10).collect();
-        let plan = BatchPlan::new(&indices, 8, &mut Rng::new(1));
+        let plan = BatchPlan::new(&indices, 8, &mut Rng::new(1)).unwrap();
         let (mut x, mut p, mut q) = (vec![0.0; 16], vec![0.0; 8], vec![0.0; 8]);
         let mut it = plan.iter(&d);
         let c1 = it.fill_next(&mut x, &mut p, &mut q).unwrap();
@@ -167,18 +180,51 @@ mod tests {
     #[test]
     fn shuffle_differs_by_seed_but_is_deterministic() {
         let indices: Vec<u32> = (0..100).collect();
-        let a = BatchPlan::new(&indices, 10, &mut Rng::new(2));
-        let b = BatchPlan::new(&indices, 10, &mut Rng::new(2));
-        let c = BatchPlan::new(&indices, 10, &mut Rng::new(3));
+        let a = BatchPlan::new(&indices, 10, &mut Rng::new(2)).unwrap();
+        let b = BatchPlan::new(&indices, 10, &mut Rng::new(2)).unwrap();
+        let c = BatchPlan::new(&indices, 10, &mut Rng::new(3)).unwrap();
         assert_eq!(a.order, b.order);
         assert_ne!(a.order, c.order);
+    }
+
+    #[test]
+    fn zero_batch_size_is_a_structured_error() {
+        let indices: Vec<u32> = (0..10).collect();
+        let err = BatchPlan::new(&indices, 0, &mut Rng::new(0)).unwrap_err();
+        assert!(err.to_string().contains("batch size"), "{err}");
+        let err = BatchPlan::from_order(indices, 0).unwrap_err();
+        assert!(err.to_string().contains("batch size"), "{err}");
+    }
+
+    #[test]
+    fn empty_index_set_is_a_structured_error() {
+        let err = BatchPlan::new(&[], 8, &mut Rng::new(0)).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+        let err = BatchPlan::from_order(Vec::new(), 8).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn batch_size_larger_than_n_yields_one_ragged_batch() {
+        let d = toy(5);
+        let indices: Vec<u32> = (0..5).collect();
+        let plan = BatchPlan::new(&indices, 64, &mut Rng::new(6)).unwrap();
+        assert_eq!(plan.n_batches(), 1);
+        let (mut x, mut p, mut q) = (vec![0.0; 128], vec![0.0; 64], vec![0.0; 64]);
+        let mut it = plan.iter(&d);
+        assert_eq!(it.fill_next(&mut x, &mut p, &mut q), Some(5));
+        for i in 5..64 {
+            assert_eq!(p[i], 0.0);
+            assert_eq!(q[i], 0.0);
+        }
+        assert!(it.fill_next(&mut x, &mut p, &mut q).is_none());
     }
 
     #[test]
     fn subset_sampling_respects_index_view() {
         let d = toy(50);
         let indices: Vec<u32> = (40..50).collect();
-        let plan = BatchPlan::new(&indices, 4, &mut Rng::new(4));
+        let plan = BatchPlan::new(&indices, 4, &mut Rng::new(4)).unwrap();
         let (mut x, mut p, mut q) = (vec![0.0; 8], vec![0.0; 4], vec![0.0; 4]);
         let mut it = plan.iter(&d);
         while let Some(count) = it.fill_next(&mut x, &mut p, &mut q) {

@@ -1,0 +1,392 @@
+//! Binary shard file format v1.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "APSD"
+//! 4       4     u32 version (= 1)
+//! 8       4     u32 n_rows        rows in this shard
+//! 12      4     u32 hw            image side (0 = flat rows)
+//! 16      4     u32 channels      channels (row_len = hw*hw*channels, or channels when hw = 0)
+//! 20      4n·r  f32 features      row-major, raw IEEE-754 bits
+//! 20+4nr  4n    f32 labels        1.0 positive / 0.0 negative
+//! end-4   4     u32 CRC-32        over every preceding byte (util/crc32)
+//! ```
+//!
+//! Reading discipline (the PR 7 checkpoint rule): the CRC footer is
+//! verified over the *whole* file — streamed, never fully resident —
+//! **before** any header field is trusted, so a corrupted row count
+//! can never size an allocation or a bounds check.  All header → size
+//! arithmetic is overflow-checked.  Files are published only via
+//! `util/fsio::write_atomic`.
+
+use std::fs::File;
+use std::io::Read;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use super::{as_u64, as_usize};
+use crate::data::dataset::Dataset;
+use crate::util::crc32::Crc32;
+
+pub const MAGIC: [u8; 4] = *b"APSD";
+pub const VERSION: u32 = 1;
+/// magic + version + n_rows + hw + channels.
+pub const HEADER_LEN: usize = 20;
+/// CRC-32 footer.
+pub const FOOTER_LEN: usize = 4;
+
+/// Streaming-verify chunk size (bounds peak memory during open).
+const VERIFY_CHUNK: usize = 1 << 20;
+
+/// Parsed, validated shard header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardHeader {
+    pub n_rows: usize,
+    pub hw: usize,
+    pub channels: usize,
+}
+
+impl ShardHeader {
+    /// Flat feature length of one row (same rule as [`Dataset::row_len`]).
+    pub fn row_len(&self) -> usize {
+        if self.hw == 0 {
+            self.channels
+        } else {
+            self.hw * self.hw * self.channels
+        }
+    }
+
+    fn label_offset(&self) -> u64 {
+        as_u64(HEADER_LEN) + 4 * as_u64(self.n_rows) * as_u64(self.row_len())
+    }
+}
+
+/// Serialize rows `rows` of `d` as one shard file body (header +
+/// features + labels + CRC footer).
+pub fn encode_shard(d: &Dataset, rows: Range<usize>) -> crate::Result<Vec<u8>> {
+    anyhow::ensure!(!rows.is_empty(), "shard encode: empty row range {rows:?}");
+    anyhow::ensure!(
+        rows.end <= d.len(),
+        "shard encode: row range {rows:?} exceeds dataset of {} rows",
+        d.len()
+    );
+    let n = rows.len();
+    let row = d.row_len();
+    let n32 = u32::try_from(n).context("shard encode: row count exceeds u32")?;
+    let hw32 = u32::try_from(d.hw).context("shard encode: hw exceeds u32")?;
+    let ch32 = u32::try_from(d.channels).context("shard encode: channels exceeds u32")?;
+
+    let mut buf = Vec::with_capacity(HEADER_LEN + 4 * n * (row + 1) + FOOTER_LEN);
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&n32.to_le_bytes());
+    buf.extend_from_slice(&hw32.to_le_bytes());
+    buf.extend_from_slice(&ch32.to_le_bytes());
+    for &v in &d.x[rows.start * row..rows.end * row] {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for &v in &d.y[rows] {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    let crc = {
+        let mut c = Crc32::new();
+        c.update(&buf);
+        c.finish()
+    };
+    buf.extend_from_slice(&crc.to_le_bytes());
+    Ok(buf)
+}
+
+/// Encode rows `rows` of `d` and publish them atomically at `path`.
+pub fn write_shard(path: &Path, d: &Dataset, rows: Range<usize>) -> crate::Result<()> {
+    let bytes = encode_shard(d, rows)?;
+    crate::util::fsio::write_atomic(path, &bytes)
+}
+
+/// An open, fully CRC-verified shard file.  Row reads go through
+/// positioned IO (`pread`), so a `ShardFile` is shareable across
+/// threads behind an `Arc` with no seek state.
+#[derive(Debug)]
+pub struct ShardFile {
+    file: File,
+    header: ShardHeader,
+    path: PathBuf,
+}
+
+impl ShardFile {
+    /// Open `path`, stream the whole file through CRC-32, and only
+    /// after the footer matches parse and validate the header.
+    pub fn open(path: &Path) -> crate::Result<ShardFile> {
+        let mut file =
+            File::open(path).with_context(|| format!("open shard {}", path.display()))?;
+        let total = file
+            .metadata()
+            .with_context(|| format!("stat shard {}", path.display()))?
+            .len();
+        anyhow::ensure!(
+            total >= as_u64(HEADER_LEN + FOOTER_LEN),
+            "shard {}: file too short ({total} bytes)",
+            path.display()
+        );
+
+        // Pass 1: stream everything before the footer through the CRC,
+        // capturing the header bytes on the way.
+        let body_len = total - as_u64(FOOTER_LEN);
+        let mut crc = Crc32::new();
+        let mut header_bytes = [0u8; HEADER_LEN];
+        let mut captured = 0usize;
+        let chunk_len = usize::try_from(body_len.min(as_u64(VERIFY_CHUNK)))
+            .expect("bounded by VERIFY_CHUNK");
+        let mut chunk = vec![0u8; chunk_len];
+        let mut remaining = body_len;
+        while remaining > 0 {
+            let want = usize::try_from(remaining.min(as_u64(chunk.len())))
+                .expect("bounded by chunk length");
+            file.read_exact(&mut chunk[..want])
+                .with_context(|| format!("shard {}: truncated mid-body", path.display()))?;
+            crc.update(&chunk[..want]);
+            if captured < HEADER_LEN {
+                let take = want.min(HEADER_LEN - captured);
+                header_bytes[captured..captured + take].copy_from_slice(&chunk[..take]);
+                captured += take;
+            }
+            remaining -= as_u64(want);
+        }
+        let mut footer = [0u8; FOOTER_LEN];
+        file.read_exact(&mut footer)
+            .with_context(|| format!("shard {}: truncated footer", path.display()))?;
+        let stored = u32::from_le_bytes(footer);
+        anyhow::ensure!(
+            stored == crc.finish(),
+            "shard {}: CRC mismatch (stored {stored:#010x}, computed {:#010x}) — corrupt or torn file",
+            path.display(),
+            crc.finish()
+        );
+
+        // Pass 2: the bytes are authentic; now the header may be parsed.
+        let header = parse_header(&header_bytes, total)
+            .with_context(|| format!("shard {}: invalid header", path.display()))?;
+        Ok(ShardFile { file, header, path: path.to_path_buf() })
+    }
+
+    pub fn header(&self) -> &ShardHeader {
+        &self.header
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read the `count` consecutive rows starting at local row
+    /// `first` into `out` (`count * row_len` f32), bit-exactly.
+    pub fn read_rows_at(&self, first: usize, count: usize, out: &mut [f32]) -> crate::Result<()> {
+        let row = self.header.row_len();
+        anyhow::ensure!(
+            first + count <= self.header.n_rows,
+            "shard {}: rows {first}..{} out of range (shard has {})",
+            self.path.display(),
+            first + count,
+            self.header.n_rows
+        );
+        anyhow::ensure!(
+            out.len() == count * row,
+            "shard {}: output buffer holds {} f32, need {}",
+            self.path.display(),
+            out.len(),
+            count * row
+        );
+        if count == 0 {
+            return Ok(());
+        }
+        let offset = as_u64(HEADER_LEN) + 4 * as_u64(first) * as_u64(row);
+        let mut bytes = vec![0u8; 4 * count * row];
+        read_at(&self.file, &mut bytes, offset)
+            .with_context(|| format!("shard {}: row read failed", self.path.display()))?;
+        for (dst, src) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+            *dst = f32::from_le_bytes(src.try_into().expect("chunks_exact(4)"));
+        }
+        Ok(())
+    }
+
+    /// Read the full label vector of this shard.
+    pub fn read_labels(&self) -> crate::Result<Vec<f32>> {
+        let n = self.header.n_rows;
+        let mut bytes = vec![0u8; 4 * n];
+        read_at(&self.file, &mut bytes, self.header.label_offset())
+            .with_context(|| format!("shard {}: label read failed", self.path.display()))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|src| f32::from_le_bytes(src.try_into().expect("chunks_exact(4)")))
+            .collect())
+    }
+
+    /// Materialize the whole shard as a resident [`Dataset`] (used by
+    /// store validation and round-trip tests; training streams instead).
+    pub fn load_dataset(&self) -> crate::Result<Dataset> {
+        let n = self.header.n_rows;
+        let row = self.header.row_len();
+        let mut x = vec![0.0f32; n * row];
+        self.read_rows_at(0, n, &mut x)?;
+        let y = self.read_labels()?;
+        Ok(Dataset::new(x, y, self.header.hw, self.header.channels))
+    }
+}
+
+/// Parse and validate a header whose bytes have already passed the CRC.
+/// `total` is the real (trusted) file length; every size implied by the
+/// header must agree with it, under overflow-checked arithmetic.
+fn parse_header(bytes: &[u8; HEADER_LEN], total: u64) -> crate::Result<ShardHeader> {
+    anyhow::ensure!(bytes[..4] == MAGIC, "bad magic (not a shard file)");
+    let field = |i: usize| {
+        u32::from_le_bytes(bytes[4 + 4 * i..8 + 4 * i].try_into().expect("header slice"))
+    };
+    let version = field(0);
+    anyhow::ensure!(version == VERSION, "unsupported shard version {version} (expected {VERSION})");
+    let header = ShardHeader {
+        n_rows: as_usize(field(1)),
+        hw: as_usize(field(2)),
+        channels: as_usize(field(3)),
+    };
+    anyhow::ensure!(header.n_rows > 0, "shard declares zero rows");
+    let row_len = if header.hw == 0 {
+        header.channels
+    } else {
+        header
+            .hw
+            .checked_mul(header.hw)
+            .and_then(|s| s.checked_mul(header.channels))
+            .ok_or_else(|| anyhow::anyhow!("hw/channels overflow row length"))?
+    };
+    anyhow::ensure!(row_len > 0, "shard declares zero-length rows");
+    let elems = as_u64(header.n_rows)
+        .checked_mul(as_u64(row_len))
+        .ok_or_else(|| anyhow::anyhow!("n_rows × row_len overflows"))?;
+    let expect = elems
+        .checked_add(as_u64(header.n_rows))
+        .and_then(|e| e.checked_mul(4))
+        .and_then(|b| b.checked_add(as_u64(HEADER_LEN + FOOTER_LEN)))
+        .ok_or_else(|| anyhow::anyhow!("declared sizes overflow file length"))?;
+    anyhow::ensure!(
+        expect == total,
+        "declared sizes imply {expect} bytes but file has {total}"
+    );
+    Ok(header)
+}
+
+/// Positioned read at `offset` without touching shared seek state.
+#[cfg(unix)]
+fn read_at(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, offset)
+}
+
+#[cfg(windows)]
+fn read_at(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::os::windows::fs::FileExt;
+    let mut done = 0usize;
+    while done < buf.len() {
+        let n = file.seek_read(&mut buf[done..], offset + as_u64(done))?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "seek_read hit EOF",
+            ));
+        }
+        done += n;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, dim: usize) -> Dataset {
+        let y: Vec<f32> = (0..n).map(|i| if i % 4 == 0 { 1.0 } else { 0.0 }).collect();
+        let x: Vec<f32> = (0..n * dim).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        Dataset::new(x, y, 0, dim)
+    }
+
+    fn write_tmp(name: &str, bytes: &[u8]) -> PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "allpairs_format_{}_{name}.bin",
+            std::process::id()
+        ));
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn encode_open_round_trip_is_bit_exact() {
+        let d = toy(13, 3);
+        let bytes = encode_shard(&d, 2..11).unwrap();
+        let path = write_tmp("roundtrip", &bytes);
+        let shard = ShardFile::open(&path).unwrap();
+        assert_eq!(
+            *shard.header(),
+            ShardHeader { n_rows: 9, hw: 0, channels: 3 }
+        );
+        let loaded = shard.load_dataset().unwrap();
+        for i in 0..9 {
+            assert_eq!(loaded.y[i].to_bits(), d.y[2 + i].to_bits());
+            for k in 0..3 {
+                assert_eq!(loaded.row(i)[k].to_bits(), d.row(2 + i)[k].to_bits());
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn partial_row_reads_match_full_reads() {
+        let d = toy(20, 5);
+        let path = write_tmp("partial", &encode_shard(&d, 0..20).unwrap());
+        let shard = ShardFile::open(&path).unwrap();
+        let mut out = vec![0.0f32; 4 * 5];
+        shard.read_rows_at(7, 4, &mut out).unwrap();
+        for i in 0..4 {
+            for k in 0..5 {
+                assert_eq!(out[i * 5 + k].to_bits(), d.row(7 + i)[k].to_bits());
+            }
+        }
+        assert!(shard.read_rows_at(18, 3, &mut out[..15]).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_short_and_doctored_files() {
+        let d = toy(6, 2);
+        let good = encode_shard(&d, 0..6).unwrap();
+
+        let short = write_tmp("short", &good[..HEADER_LEN]);
+        assert!(ShardFile::open(&short).is_err());
+
+        // Re-stamp a wrong magic WITH a valid CRC: must still be
+        // rejected (by the header parse, after the CRC passes).
+        let mut doctored = good.clone();
+        doctored[..4].copy_from_slice(b"NOPE");
+        let crc = crate::util::crc32::crc32(&doctored[..doctored.len() - 4]);
+        let len = doctored.len();
+        doctored[len - 4..].copy_from_slice(&crc.to_le_bytes());
+        let bad_magic = write_tmp("badmagic", &doctored);
+        assert!(ShardFile::open(&bad_magic).is_err());
+
+        // Truncation (torn write simulation) is caught by the CRC.
+        let torn = write_tmp("torn", &good[..good.len() - 9]);
+        assert!(ShardFile::open(&torn).is_err());
+
+        for p in [short, bad_magic, torn] {
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn encode_rejects_bad_ranges() {
+        let d = toy(5, 2);
+        assert!(encode_shard(&d, 3..3).is_err());
+        assert!(encode_shard(&d, 2..6).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! Shard store manifest: `manifest.json` at the store root.
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "n_rows": 2000, "hw": 0, "channels": 32,
+//!   "shards": [
+//!     {"file": "shard-00000.bin", "rows": 667, "pos": 66, "neg": 601},
+//!     ...
+//!   ]
+//! }
+//! ```
+//!
+//! Shards hold *contiguous* logical row ranges in listing order, so
+//! logical row `i` lives in the shard whose cumulative row count
+//! covers `i`.  Per-shard pos/neg counts let tooling reason about
+//! stratification without opening any shard.  The manifest is written
+//! **last** (shards first) via `write_atomic`, making it the commit
+//! point of store construction; loading cross-validates every internal
+//! sum before anything else trusts the numbers.
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::util::json::Json;
+
+pub const MANIFEST_NAME: &str = "manifest.json";
+pub const SCHEMA: usize = 1;
+
+/// One shard's entry in the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMeta {
+    /// File name relative to the store directory.
+    pub file: String,
+    pub rows: usize,
+    pub pos: usize,
+    pub neg: usize,
+}
+
+/// Parsed, internally-consistent store manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub n_rows: usize,
+    pub hw: usize,
+    pub channels: usize,
+    pub shards: Vec<ShardMeta>,
+}
+
+impl Manifest {
+    /// Flat feature length of one row (same rule as `Dataset::row_len`).
+    pub fn row_len(&self) -> usize {
+        if self.hw == 0 {
+            self.channels
+        } else {
+            self.hw * self.hw * self.channels
+        }
+    }
+
+    pub fn n_pos(&self) -> usize {
+        self.shards.iter().map(|s| s.pos).sum()
+    }
+
+    pub fn n_neg(&self) -> usize {
+        self.shards.iter().map(|s| s.neg).sum()
+    }
+
+    /// Logical first row of each shard, in listing order.
+    pub fn shard_starts(&self) -> Vec<usize> {
+        let mut starts = Vec::with_capacity(self.shards.len());
+        let mut acc = 0usize;
+        for s in &self.shards {
+            starts.push(acc);
+            acc += s.rows;
+        }
+        starts
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("schema", Json::num(SCHEMA as f64)),
+            ("n_rows", Json::num(self.n_rows as f64)),
+            ("hw", Json::num(self.hw as f64)),
+            ("channels", Json::num(self.channels as f64)),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            Json::obj([
+                                ("file", Json::str(s.file.clone())),
+                                ("rows", Json::num(s.rows as f64)),
+                                ("pos", Json::num(s.pos as f64)),
+                                ("neg", Json::num(s.neg as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> crate::Result<Manifest> {
+        let usize_field = |j: &Json, key: &str| -> crate::Result<usize> {
+            j.req(key)?
+                .as_usize()
+                .with_context(|| format!("manifest: `{key}` must be a non-negative integer"))
+        };
+        let schema = usize_field(doc, "schema")?;
+        anyhow::ensure!(
+            schema == SCHEMA,
+            "manifest: unsupported schema {schema} (expected {SCHEMA})"
+        );
+        let mut shards = Vec::new();
+        for (i, entry) in doc
+            .req("shards")?
+            .as_arr()
+            .context("manifest: `shards` must be an array")?
+            .iter()
+            .enumerate()
+        {
+            let file = entry
+                .req("file")?
+                .as_str()
+                .context("manifest: shard `file` must be a string")?
+                .to_string();
+            anyhow::ensure!(!file.is_empty(), "manifest: shard {i} has an empty file name");
+            shards.push(ShardMeta {
+                file,
+                rows: usize_field(entry, "rows")?,
+                pos: usize_field(entry, "pos")?,
+                neg: usize_field(entry, "neg")?,
+            });
+        }
+        let m = Manifest {
+            n_rows: usize_field(doc, "n_rows")?,
+            hw: usize_field(doc, "hw")?,
+            channels: usize_field(doc, "channels")?,
+            shards,
+        };
+        m.check()?;
+        Ok(m)
+    }
+
+    /// Internal consistency: non-empty, per-shard pos+neg = rows,
+    /// no empty shards, row sum matches the store total.
+    fn check(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.shards.is_empty(), "manifest: store has no shards");
+        anyhow::ensure!(
+            self.row_len() > 0,
+            "manifest: zero-length rows (hw {} channels {})",
+            self.hw,
+            self.channels
+        );
+        let mut sum = 0usize;
+        for (i, s) in self.shards.iter().enumerate() {
+            anyhow::ensure!(s.rows > 0, "manifest: shard {i} ({}) is empty", s.file);
+            anyhow::ensure!(
+                s.pos + s.neg == s.rows,
+                "manifest: shard {i} ({}) counts {} pos + {} neg != {} rows",
+                s.file,
+                s.pos,
+                s.neg,
+                s.rows
+            );
+            sum += s.rows;
+        }
+        anyhow::ensure!(
+            sum == self.n_rows,
+            "manifest: shard rows sum to {sum} but store declares {}",
+            self.n_rows
+        );
+        Ok(())
+    }
+
+    /// Atomically publish the manifest at `dir/manifest.json`.
+    pub fn save(&self, dir: &Path) -> crate::Result<()> {
+        crate::util::fsio::write_atomic(&dir.join(MANIFEST_NAME), self.to_json().dumps().as_bytes())
+    }
+
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        let doc = Json::parse(&text).with_context(|| format!("parse manifest {}", path.display()))?;
+        Self::from_json(&doc).with_context(|| format!("validate manifest {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            n_rows: 10,
+            hw: 0,
+            channels: 3,
+            shards: vec![
+                ShardMeta { file: "shard-00000.bin".into(), rows: 4, pos: 1, neg: 3 },
+                ShardMeta { file: "shard-00001.bin".into(), rows: 6, pos: 2, neg: 4 },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let m = sample();
+        let text = m.to_json().dumps();
+        let back = Manifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.shard_starts(), vec![0, 4]);
+        assert_eq!(back.n_pos(), 3);
+        assert_eq!(back.n_neg(), 7);
+    }
+
+    #[test]
+    fn inconsistent_manifests_are_rejected() {
+        let mut bad_sum = sample();
+        bad_sum.n_rows = 11;
+        assert!(Manifest::from_json(&bad_sum.to_json()).is_err());
+
+        let mut bad_counts = sample();
+        bad_counts.shards[0].pos = 2;
+        assert!(Manifest::from_json(&bad_counts.to_json()).is_err());
+
+        let mut empty_shard = sample();
+        empty_shard.shards[1].rows = 0;
+        empty_shard.shards[1].pos = 0;
+        empty_shard.shards[1].neg = 0;
+        empty_shard.n_rows = 4;
+        assert!(Manifest::from_json(&empty_shard.to_json()).is_err());
+
+        let mut wrong_schema = sample().to_json();
+        if let Json::Obj(map) = &mut wrong_schema {
+            map.insert("schema".into(), Json::num(2.0));
+        }
+        assert!(Manifest::from_json(&wrong_schema).is_err());
+    }
+}

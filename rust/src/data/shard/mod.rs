@@ -1,0 +1,47 @@
+//! Out-of-core sharded dataset store (DESIGN.md §13).
+//!
+//! A *shard store* is a directory holding the feature matrix of one
+//! logical [`crate::data::Dataset`] split across contiguous binary
+//! shard files ([`format`]), described by a JSON manifest
+//! ([`manifest`]).  [`ShardedDataset`] ([`reader`]) opens a store,
+//! keeps only the labels resident, and streams feature rows from disk
+//! through a double-buffered background prefetch thread — implementing
+//! [`crate::data::DatasetSource`] so `Trainer::fit_stream` trains on
+//! n ≫ RAM **bit-identically** to resident training on the same
+//! logical data (pinned by `tests/shard.rs`).
+//!
+//! Durability follows the repo-wide rules: every file is published via
+//! `util/fsio::write_atomic` (shards first, manifest last as the
+//! commit point) and carries a CRC-32 footer that is verified *before*
+//! any header field is trusted — the PR 7 checkpoint discipline,
+//! enforced over this directory by `allpairs lint`
+//! (`raw-durable-write`, `unchecked-cast-in-parse`).
+
+pub mod format;
+pub mod manifest;
+pub mod reader;
+pub mod store;
+
+pub use format::{ShardFile, ShardHeader};
+pub use manifest::{Manifest, ShardMeta, MANIFEST_NAME};
+pub use reader::ShardedDataset;
+pub use store::{validate_store, write_store, StoreCheck};
+
+// The two lossless casts the subsystem needs, funneled through named
+// helpers so `unchecked-cast-in-parse` findings stay at exactly two
+// reasoned sites instead of one per call.
+
+/// `usize → u64`, for file offsets and size arithmetic.
+#[inline]
+pub(crate) fn as_u64(v: usize) -> u64 {
+    // lint:allow(unchecked-cast-in-parse): usize -> u64 widens losslessly on every supported target (no 128-bit usize)
+    v as u64
+}
+
+/// `u32 → usize`, for row indices and header fields that have already
+/// been range-validated against the CRC-checked file length.
+#[inline]
+pub(crate) fn as_usize(v: u32) -> usize {
+    // lint:allow(unchecked-cast-in-parse): u32 -> usize widens losslessly (rust_pallas has no 16-bit targets)
+    v as usize
+}

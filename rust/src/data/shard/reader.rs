@@ -1,0 +1,415 @@
+//! Out-of-core reader: [`ShardedDataset`] implements
+//! [`DatasetSource`] over a shard store directory.
+//!
+//! Residency split: **labels live in memory** (read once at open, in
+//! logical row order — n × 4 bytes), **features stay on disk** and are
+//! fetched per batch.  Because epoch-order construction
+//! ([`crate::data::EpochSampler`]) consumes only labels + RNG, the
+//! epoch order over a sharded store is byte-for-byte the order the
+//! resident dataset would produce — the heart of the bit-identity
+//! contract (DESIGN.md §13).
+//!
+//! Batch delivery is double-buffered: a background thread walks the
+//! epoch order ahead of the trainer, filling one of
+//! [`PREFETCH_DEPTH`] recycled feature buffers per batch via
+//! positioned reads (`pread` — shard files are never seeked, so one
+//! open handle serves both the trainer thread and the prefetcher).
+//! The consumer copies the prefetched bits verbatim and computes the
+//! `is_pos`/`is_neg` masks from the resident labels; prefetching can
+//! change *when* IO happens, never *what* a batch contains.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Context;
+
+use super::format::ShardFile;
+use super::manifest::Manifest;
+use super::as_usize;
+use crate::data::sampler::BatchPlan;
+use crate::data::source::{BatchFill, DatasetSource};
+
+/// Number of in-flight batch buffers (the trainer consumes one while
+/// the prefetcher fills the other).
+pub const PREFETCH_DEPTH: usize = 2;
+
+/// Immutable shard lookup table, shared with the prefetch thread.
+#[derive(Debug)]
+struct ShardTable {
+    shards: Vec<ShardFile>,
+    /// Logical first row of each shard (ascending, starts[0] == 0).
+    starts: Vec<usize>,
+    n: usize,
+    row_len: usize,
+}
+
+impl ShardTable {
+    /// Map a logical row to (shard index, local row).
+    fn locate(&self, i: usize) -> (usize, usize) {
+        debug_assert!(i < self.n);
+        let s = self.starts.partition_point(|&st| st <= i) - 1;
+        (s, i - self.starts[s])
+    }
+
+    /// Copy the rows at `indices` into `out`, bit-exactly, coalescing
+    /// runs of consecutive logical indices within one shard into a
+    /// single positioned read.
+    fn fetch_rows(&self, indices: &[u32], out: &mut [f32]) -> crate::Result<()> {
+        let row = self.row_len;
+        anyhow::ensure!(
+            out.len() == indices.len() * row,
+            "fetch_rows: output buffer holds {} f32, need {} ({} rows × {} features)",
+            out.len(),
+            indices.len() * row,
+            indices.len(),
+            row
+        );
+        let mut slot = 0usize;
+        while slot < indices.len() {
+            let i = as_usize(indices[slot]);
+            anyhow::ensure!(i < self.n, "fetch_rows: index {i} out of range for {} rows", self.n);
+            let (s, local) = self.locate(i);
+            let shard_rows = self.shards[s].header().n_rows;
+            let mut run = 1usize;
+            while slot + run < indices.len()
+                && local + run < shard_rows
+                && as_usize(indices[slot + run]) == i + run
+            {
+                run += 1;
+            }
+            self.shards[s].read_rows_at(local, run, &mut out[slot * row..(slot + run) * row])?;
+            slot += run;
+        }
+        Ok(())
+    }
+}
+
+/// A shard store opened for training: resident labels, on-disk
+/// features, prefetched batches.
+#[derive(Debug)]
+pub struct ShardedDataset {
+    table: Arc<ShardTable>,
+    labels: Vec<f32>,
+    hw: usize,
+    channels: usize,
+    dir: PathBuf,
+}
+
+impl ShardedDataset {
+    /// Open the store at `dir`: load + validate the manifest, open
+    /// every shard (full streaming CRC verification), cross-check each
+    /// header against the manifest, and read all labels resident.
+    pub fn open(dir: &Path) -> crate::Result<ShardedDataset> {
+        let manifest = Manifest::load(dir)?;
+        let mut shards = Vec::with_capacity(manifest.shards.len());
+        let mut labels = Vec::with_capacity(manifest.n_rows);
+        for (i, meta) in manifest.shards.iter().enumerate() {
+            let shard = ShardFile::open(&dir.join(&meta.file))
+                .with_context(|| format!("store {}: shard {i} ({})", dir.display(), meta.file))?;
+            let h = shard.header();
+            anyhow::ensure!(
+                h.n_rows == meta.rows && h.hw == manifest.hw && h.channels == manifest.channels,
+                "store {}: shard {i} ({}) header disagrees with manifest",
+                dir.display(),
+                meta.file
+            );
+            labels.extend_from_slice(&shard.read_labels()?);
+            shards.push(shard);
+        }
+        Ok(ShardedDataset {
+            table: Arc::new(ShardTable {
+                starts: manifest.shard_starts(),
+                n: manifest.n_rows,
+                row_len: manifest.row_len(),
+                shards,
+            }),
+            labels,
+            hw: manifest.hw,
+            channels: manifest.channels,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.table.shards.len()
+    }
+
+    pub fn n_pos(&self) -> usize {
+        self.labels.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn hw(&self) -> usize {
+        self.hw
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+}
+
+impl DatasetSource for ShardedDataset {
+    fn len(&self) -> usize {
+        self.table.n
+    }
+
+    fn row_len(&self) -> usize {
+        self.table.row_len
+    }
+
+    fn labels(&self) -> &[f32] {
+        &self.labels
+    }
+
+    fn fetch_rows(&self, indices: &[u32], out: &mut [f32]) -> crate::Result<()> {
+        self.table.fetch_rows(indices, out)
+    }
+
+    fn batches<'a>(&'a self, plan: &'a BatchPlan) -> crate::Result<Box<dyn BatchFill + 'a>> {
+        Ok(Box::new(ShardedFill::start(
+            Arc::clone(&self.table),
+            plan,
+            &self.labels,
+        )?))
+    }
+}
+
+/// One prefetched batch: the feature buffer (padding already zeroed)
+/// and its real row count.
+struct PrefetchBatch {
+    x: Vec<f32>,
+    count: usize,
+}
+
+/// Double-buffered batch filler over a shard table.
+struct ShardedFill<'a> {
+    plan: &'a BatchPlan,
+    labels: &'a [f32],
+    row_len: usize,
+    next_batch: usize,
+    rx: Option<Receiver<crate::Result<PrefetchBatch>>>,
+    /// Buffer-recycle channel back to the worker; dropped first on
+    /// teardown so a blocked worker wakes and exits.
+    pool: Option<Sender<Vec<f32>>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl<'a> ShardedFill<'a> {
+    fn start(
+        table: Arc<ShardTable>,
+        plan: &'a BatchPlan,
+        labels: &'a [f32],
+    ) -> crate::Result<ShardedFill<'a>> {
+        let order: Vec<u32> = plan.order().to_vec();
+        let bs = plan.batch_size();
+        let row = table.row_len;
+        let (tx, rx) = sync_channel::<crate::Result<PrefetchBatch>>(PREFETCH_DEPTH);
+        let (pool_tx, pool_rx) = channel::<Vec<f32>>();
+        for _ in 0..PREFETCH_DEPTH {
+            let _ = pool_tx.send(vec![0.0f32; bs * row]);
+        }
+        let worker = std::thread::Builder::new()
+            .name("allpairs-shard-prefetch".into())
+            .spawn(move || {
+                let n_batches = order.len().div_ceil(bs);
+                for b in 0..n_batches {
+                    // Wait for a recycled buffer; a closed pool means
+                    // the consumer is gone — stop quietly.
+                    let Ok(mut buf) = pool_rx.recv() else { return };
+                    let start = b * bs;
+                    let end = (start + bs).min(order.len());
+                    let count = end - start;
+                    let msg = match table.fetch_rows(&order[start..end], &mut buf[..count * row]) {
+                        Ok(()) => {
+                            buf[count * row..].fill(0.0);
+                            Ok(PrefetchBatch { x: buf, count })
+                        }
+                        Err(e) => Err(e),
+                    };
+                    let failed = msg.is_err();
+                    if tx.send(msg).is_err() || failed {
+                        return;
+                    }
+                }
+            })
+            .context("spawn shard prefetch thread")?;
+        Ok(ShardedFill {
+            plan,
+            labels,
+            row_len: row,
+            next_batch: 0,
+            rx: Some(rx),
+            pool: Some(pool_tx),
+            worker: Some(worker),
+        })
+    }
+}
+
+impl BatchFill for ShardedFill<'_> {
+    fn fill_next(
+        &mut self,
+        x: &mut [f32],
+        is_pos: &mut [f32],
+        is_neg: &mut [f32],
+    ) -> crate::Result<Option<usize>> {
+        let bs = self.plan.batch_size();
+        let row = self.row_len;
+        assert_eq!(x.len(), bs * row, "x buffer size");
+        assert_eq!(is_pos.len(), bs);
+        assert_eq!(is_neg.len(), bs);
+        let order = self.plan.order();
+        let start = self.next_batch * bs;
+        if start >= order.len() {
+            return Ok(None);
+        }
+        let rx = self.rx.as_ref().expect("receiver lives until drop");
+        let batch = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("shard prefetch thread exited unexpectedly"))??;
+        self.next_batch += 1;
+        let end = (start + bs).min(order.len());
+        let count = end - start;
+        anyhow::ensure!(
+            batch.count == count,
+            "shard prefetch desync: received {} rows for a {count}-row batch",
+            batch.count
+        );
+        // Features arrive bit-exact from disk; masks come from the
+        // resident labels, exactly as the resident BatchIter computes
+        // them.
+        x.copy_from_slice(&batch.x);
+        for (slot, &idx) in order[start..end].iter().enumerate() {
+            let pos = self.labels[as_usize(idx)] != 0.0;
+            is_pos[slot] = if pos { 1.0 } else { 0.0 };
+            is_neg[slot] = if pos { 0.0 } else { 1.0 };
+        }
+        is_pos[count..].fill(0.0);
+        is_neg[count..].fill(0.0);
+        if let Some(pool) = &self.pool {
+            let _ = pool.send(batch.x);
+        }
+        Ok(Some(count))
+    }
+}
+
+impl Drop for ShardedFill<'_> {
+    fn drop(&mut self) {
+        // Closing both channels wakes the worker from whichever recv or
+        // send it is blocked on; then the join cannot hang.
+        self.pool.take();
+        self.rx.take();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::data::rng::Rng;
+    use crate::data::shard::store::write_store;
+    use crate::data::stream::{EpochSampler, SamplingMode};
+
+    fn toy(n: usize, dim: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| if i % 4 == 0 { 1.0 } else { 0.0 }).collect();
+        Dataset::new(x, y, 0, dim)
+    }
+
+    fn store(name: &str, d: &Dataset, k: usize) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "allpairs_reader_{}_{name}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        write_store(&dir, d, k).unwrap();
+        dir
+    }
+
+    #[test]
+    fn open_exposes_resident_labels_in_logical_order() {
+        let d = toy(17, 3, 1);
+        let dir = store("labels", &d, 4);
+        let s = ShardedDataset::open(&dir).unwrap();
+        assert_eq!(s.len(), 17);
+        assert_eq!(s.row_len(), 3);
+        assert_eq!(s.n_shards(), 4);
+        let got: Vec<u32> = s.labels().iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = d.y.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fetch_rows_matches_resident_in_any_order() {
+        let d = toy(29, 5, 2);
+        let dir = store("fetch", &d, 3);
+        let s = ShardedDataset::open(&dir).unwrap();
+        // Mix of runs, shard-boundary crossings and jumps.
+        let indices: Vec<u32> = vec![0, 1, 2, 9, 10, 11, 28, 5, 4, 20, 21, 22, 23, 24];
+        let mut got = vec![0.0f32; indices.len() * 5];
+        let mut want = vec![0.0f32; indices.len() * 5];
+        s.fetch_rows(&indices, &mut got).unwrap();
+        d.fetch_rows(&indices, &mut want).unwrap();
+        let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, wb);
+        assert!(s.fetch_rows(&[29], &mut got[..5]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prefetched_epoch_is_bit_identical_to_resident_epoch() {
+        let d = toy(41, 4, 3);
+        let dir = store("epoch", &d, 3);
+        let s = ShardedDataset::open(&dir).unwrap();
+        let indices: Vec<u32> = (0..41).collect();
+        for mode in [SamplingMode::Preserve, SamplingMode::Rebalance { pos_fraction: 0.5 }] {
+            let mut sa = EpochSampler::new(&d.y, &indices, 8, mode).unwrap();
+            let mut sb = EpochSampler::new(s.labels(), &indices, 8, mode).unwrap();
+            let plan_a = sa.epoch_plan(&mut Rng::new(7));
+            let plan_b = sb.epoch_plan(&mut Rng::new(7));
+            assert_eq!(plan_a.order(), plan_b.order());
+            let (mut x1, mut p1, mut q1) = (vec![0.0; 32], vec![0.0; 8], vec![0.0; 8]);
+            let (mut x2, mut p2, mut q2) = (vec![0.0; 32], vec![0.0; 8], vec![0.0; 8]);
+            let mut fa = DatasetSource::batches(&d, &plan_a).unwrap();
+            let mut fb = s.batches(&plan_b).unwrap();
+            loop {
+                let a = fa.fill_next(&mut x1, &mut p1, &mut q1).unwrap();
+                let b = fb.fill_next(&mut x2, &mut p2, &mut q2).unwrap();
+                assert_eq!(a, b);
+                let xb1: Vec<u32> = x1.iter().map(|v| v.to_bits()).collect();
+                let xb2: Vec<u32> = x2.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(xb1, xb2);
+                assert_eq!(p1, p2);
+                assert_eq!(q1, q2);
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dropping_a_filler_mid_epoch_does_not_hang() {
+        let d = toy(64, 2, 4);
+        let dir = store("drop", &d, 2);
+        let s = ShardedDataset::open(&dir).unwrap();
+        let indices: Vec<u32> = (0..64).collect();
+        let plan = BatchPlan::new(&indices, 8, &mut Rng::new(0)).unwrap();
+        let mut fill = s.batches(&plan).unwrap();
+        let (mut x, mut p, mut q) = (vec![0.0; 16], vec![0.0; 8], vec![0.0; 8]);
+        fill.fill_next(&mut x, &mut p, &mut q).unwrap();
+        drop(fill); // worker still has batches queued; Drop must join cleanly
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,199 @@
+//! Shard store construction and validation.
+//!
+//! [`write_store`] splits a resident [`Dataset`] into `k` shard files
+//! of *contiguous* logical row ranges whose lengths differ by at most
+//! one (the first `n mod k` shards get the extra row), then publishes
+//! the manifest last — the commit point.  A crash mid-build leaves
+//! either no manifest (store does not exist yet) or a complete,
+//! CRC-valid store; never a half-store that loads.
+//!
+//! [`validate_store`] is the `allpairs shard --validate` entry point:
+//! it re-opens every shard (full streaming CRC), cross-checks each
+//! header against the manifest, and recounts labels against the
+//! per-shard pos/neg declarations.
+
+use std::ops::Range;
+use std::path::Path;
+
+use anyhow::Context;
+
+use super::format::{write_shard, ShardFile};
+use super::manifest::{Manifest, ShardMeta};
+use crate::data::dataset::Dataset;
+
+/// Split `0..n` into `k` contiguous ranges with sizes differing by at
+/// most one row (first `n mod k` ranges get the extra).
+pub fn shard_ranges(n: usize, k: usize) -> Vec<Range<usize>> {
+    assert!(k >= 1 && k <= n, "shard_ranges({n}, {k})");
+    let base = n / k;
+    let extra = n % k;
+    let mut ranges = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        ranges.push(start..start + len);
+        start += len;
+    }
+    ranges
+}
+
+/// Canonical shard file name for shard index `i`.
+pub fn shard_file_name(i: usize) -> String {
+    format!("shard-{i:05}.bin")
+}
+
+/// Write `d` as an `n_shards`-file store under `dir` (created if
+/// needed).  Returns the published manifest.
+pub fn write_store(dir: &Path, d: &Dataset, n_shards: usize) -> crate::Result<Manifest> {
+    anyhow::ensure!(n_shards >= 1, "shard store: need at least one shard");
+    anyhow::ensure!(!d.is_empty(), "shard store: dataset is empty");
+    anyhow::ensure!(
+        n_shards <= d.len(),
+        "shard store: {n_shards} shards for only {} rows (shards may not be empty)",
+        d.len()
+    );
+    std::fs::create_dir_all(dir).with_context(|| format!("create store dir {}", dir.display()))?;
+    let mut shards = Vec::with_capacity(n_shards);
+    for (i, range) in shard_ranges(d.len(), n_shards).into_iter().enumerate() {
+        let file = shard_file_name(i);
+        let pos = d.y[range.clone()].iter().filter(|&&v| v != 0.0).count();
+        let meta = ShardMeta { file, rows: range.len(), pos, neg: range.len() - pos };
+        write_shard(&dir.join(&meta.file), d, range)
+            .with_context(|| format!("write shard {}", meta.file))?;
+        shards.push(meta);
+    }
+    let manifest = Manifest { n_rows: d.len(), hw: d.hw, channels: d.channels, shards };
+    manifest.save(dir)?;
+    Ok(manifest)
+}
+
+/// Summary returned by a successful [`validate_store`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreCheck {
+    pub n_rows: usize,
+    pub n_shards: usize,
+    pub n_pos: usize,
+    pub n_neg: usize,
+}
+
+/// Fully validate the store at `dir`: manifest consistency, per-shard
+/// CRC over every byte, header ↔ manifest agreement, and a recount of
+/// the label vector against the declared pos/neg split.
+pub fn validate_store(dir: &Path) -> crate::Result<StoreCheck> {
+    let manifest = Manifest::load(dir)?;
+    for (i, meta) in manifest.shards.iter().enumerate() {
+        let shard = ShardFile::open(&dir.join(&meta.file))
+            .with_context(|| format!("shard {i} ({})", meta.file))?;
+        let h = shard.header();
+        anyhow::ensure!(
+            h.n_rows == meta.rows && h.hw == manifest.hw && h.channels == manifest.channels,
+            "shard {i} ({}): header (rows {} hw {} channels {}) disagrees with manifest (rows {} hw {} channels {})",
+            meta.file,
+            h.n_rows,
+            h.hw,
+            h.channels,
+            meta.rows,
+            manifest.hw,
+            manifest.channels
+        );
+        let labels = shard.read_labels()?;
+        let pos = labels.iter().filter(|&&v| v != 0.0).count();
+        anyhow::ensure!(
+            pos == meta.pos,
+            "shard {i} ({}): {} positive labels on disk, manifest declares {}",
+            meta.file,
+            pos,
+            meta.pos
+        );
+    }
+    Ok(StoreCheck {
+        n_rows: manifest.n_rows,
+        n_shards: manifest.shards.len(),
+        n_pos: manifest.n_pos(),
+        n_neg: manifest.n_neg(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use std::path::PathBuf;
+
+    fn toy(n: usize, dim: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        // Deterministic label pattern: every third row positive.
+        let y: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        Dataset::new(x, y, 0, dim)
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("allpairs_store_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn ranges_are_contiguous_and_balanced() {
+        for (n, k) in [(10, 1), (10, 3), (101, 7), (7, 7)] {
+            let ranges = shard_ranges(n, k);
+            assert_eq!(ranges.len(), k);
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges[k - 1].end, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+                assert!(w[0].len() >= w[1].len());
+                assert!(w[0].len() - w[1].len() <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn write_then_validate_succeeds() {
+        let d = toy(23, 4, 1);
+        let dir = tmp("ok");
+        let manifest = write_store(&dir, &d, 3).unwrap();
+        assert_eq!(manifest.n_rows, 23);
+        assert_eq!(manifest.shards.len(), 3);
+        let check = validate_store(&dir).unwrap();
+        assert_eq!(check.n_rows, 23);
+        assert_eq!(check.n_shards, 3);
+        assert_eq!(check.n_pos, d.n_pos());
+        assert_eq!(check.n_pos + check.n_neg, 23);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_catches_missing_and_mismatched_shards() {
+        let d = toy(12, 2, 2);
+        let dir = tmp("bad");
+        write_store(&dir, &d, 2).unwrap();
+
+        // Missing shard file.
+        let victim = dir.join(shard_file_name(1));
+        let bytes = std::fs::read(&victim).unwrap();
+        std::fs::remove_file(&victim).unwrap();
+        assert!(validate_store(&dir).is_err());
+        std::fs::write(&victim, &bytes).unwrap();
+        validate_store(&dir).unwrap();
+
+        // Shard swapped in from a different dataset: CRC passes, but
+        // the label recount disagrees with the manifest — `other` is
+        // all-positive while rows 6..12 of `d` are 1/3 positive.
+        let other = Dataset::new(vec![0.5; 12], vec![1.0; 6], 0, 2);
+        crate::data::shard::format::write_shard(&victim, &other, 0..6).unwrap();
+        assert!(validate_store(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_store_rejects_degenerate_configs() {
+        let d = toy(3, 2, 3);
+        let dir = tmp("degenerate");
+        assert!(write_store(&dir, &d, 0).is_err());
+        assert!(write_store(&dir, &d, 4).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,216 @@
+//! The `DatasetSource` seam: one trait that resident ([`Dataset`]) and
+//! out-of-core ([`crate::data::shard::ShardedDataset`]) data implement,
+//! so [`crate::data::EpochSampler`], `Trainer::fit_stream` and the
+//! sweep runner drive either without caring where the feature bytes
+//! live.
+//!
+//! The contract that makes the seam safe (DESIGN.md §13):
+//!
+//! * **labels are always resident** — [`DatasetSource::labels`] returns
+//!   the full label vector in logical row order (n × 4 bytes, small
+//!   even at n = 10⁸), so epoch-order construction is byte-for-byte the
+//!   same computation on every source;
+//! * **rows are bit-exact** — [`DatasetSource::fetch_rows`] returns the
+//!   exact f32 bits of the logical dataset's rows, wherever they are
+//!   stored (an f32 survives a raw little-endian round trip unchanged);
+//! * **batching may buffer, never transform** —
+//!   [`DatasetSource::batches`] is free to prefetch on background
+//!   threads; buffering affects timing only, never the bytes a batch
+//!   delivers.
+//!
+//! Together with the deterministic parallel engine (DESIGN.md §7)
+//! these make training on any source bit-identical to training on the
+//! resident `Dataset` holding the same logical data, at every thread
+//! count — pinned by `tests/shard.rs`.
+
+use std::sync::Arc;
+
+use super::dataset::Dataset;
+use super::sampler::{BatchIter, BatchPlan};
+
+/// Batch-buffer filler for one epoch plan (the streaming hot loop).
+///
+/// Mirrors [`BatchIter::fill_next`] but is fallible: an out-of-core
+/// source surfaces IO errors here as structured errors instead of
+/// panicking mid-epoch.
+pub trait BatchFill {
+    /// Fill `x` (`batch_size * row_len`), `is_pos`, `is_neg`
+    /// (`batch_size`) for the next batch.  Returns the number of real
+    /// (non-padding) rows, or `None` when the epoch is exhausted.
+    /// Padding rows are zeroed in all three buffers.
+    fn fill_next(
+        &mut self,
+        x: &mut [f32],
+        is_pos: &mut [f32],
+        is_neg: &mut [f32],
+    ) -> crate::Result<Option<usize>>;
+}
+
+/// A logical dataset the training loop can stream from.
+pub trait DatasetSource {
+    /// Number of logical rows.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat feature length of one row.
+    fn row_len(&self) -> usize;
+
+    /// The resident label vector (1.0 positive / 0.0 negative), in
+    /// logical row order, length [`DatasetSource::len`].
+    fn labels(&self) -> &[f32];
+
+    /// Copy the rows at `indices` (in the given order) into `out`,
+    /// which must hold exactly `indices.len() * row_len()` f32 values.
+    /// The copy is bit-exact.
+    fn fetch_rows(&self, indices: &[u32], out: &mut [f32]) -> crate::Result<()>;
+
+    /// Open a batch filler over `plan`.  Out-of-core sources start
+    /// prefetching here.
+    fn batches<'a>(&'a self, plan: &'a BatchPlan) -> crate::Result<Box<dyn BatchFill + 'a>>;
+}
+
+/// Shared ownership forwards to the inner source, so an `&Arc<Dataset>`
+/// (the sweep runner's shared test set) is a `&dyn DatasetSource` too —
+/// deref and unsizing coercions do not chain, so without this impl
+/// every `Arc` call site would need an explicit `&**`.
+impl<T: DatasetSource> DatasetSource for Arc<T> {
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+
+    fn row_len(&self) -> usize {
+        (**self).row_len()
+    }
+
+    fn labels(&self) -> &[f32] {
+        (**self).labels()
+    }
+
+    fn fetch_rows(&self, indices: &[u32], out: &mut [f32]) -> crate::Result<()> {
+        (**self).fetch_rows(indices, out)
+    }
+
+    fn batches<'a>(&'a self, plan: &'a BatchPlan) -> crate::Result<Box<dyn BatchFill + 'a>> {
+        (**self).batches(plan)
+    }
+}
+
+/// Resident filler: a zero-cost wrapper over the existing in-memory
+/// [`BatchIter`], which cannot fail.
+struct ResidentFill<'a> {
+    iter: BatchIter<'a>,
+}
+
+impl BatchFill for ResidentFill<'_> {
+    fn fill_next(
+        &mut self,
+        x: &mut [f32],
+        is_pos: &mut [f32],
+        is_neg: &mut [f32],
+    ) -> crate::Result<Option<usize>> {
+        Ok(self.iter.fill_next(x, is_pos, is_neg))
+    }
+}
+
+impl DatasetSource for Dataset {
+    fn len(&self) -> usize {
+        Dataset::len(self)
+    }
+
+    fn row_len(&self) -> usize {
+        Dataset::row_len(self)
+    }
+
+    fn labels(&self) -> &[f32] {
+        &self.y
+    }
+
+    fn fetch_rows(&self, indices: &[u32], out: &mut [f32]) -> crate::Result<()> {
+        let row = Dataset::row_len(self);
+        anyhow::ensure!(
+            out.len() == indices.len() * row,
+            "fetch_rows: output buffer holds {} f32, need {} ({} rows × {} features)",
+            out.len(),
+            indices.len() * row,
+            indices.len(),
+            row
+        );
+        for (slot, &idx) in indices.iter().enumerate() {
+            let i = idx as usize;
+            anyhow::ensure!(
+                i < Dataset::len(self),
+                "fetch_rows: index {i} out of range for {} rows",
+                Dataset::len(self)
+            );
+            out[slot * row..(slot + 1) * row].copy_from_slice(self.row(i));
+        }
+        Ok(())
+    }
+
+    fn batches<'a>(&'a self, plan: &'a BatchPlan) -> crate::Result<Box<dyn BatchFill + 'a>> {
+        Ok(Box::new(ResidentFill {
+            iter: plan.iter(self),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn toy(n: usize) -> Dataset {
+        let y: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        let x: Vec<f32> = (0..n * 2).map(|i| i as f32).collect();
+        Dataset::new(x, y, 0, 2)
+    }
+
+    #[test]
+    fn resident_fetch_rows_is_bit_exact() {
+        let d = toy(10);
+        let mut out = vec![0.0f32; 3 * 2];
+        d.fetch_rows(&[7, 0, 9], &mut out).unwrap();
+        for (slot, &idx) in [7usize, 0, 9].iter().enumerate() {
+            for k in 0..2 {
+                assert_eq!(out[slot * 2 + k].to_bits(), d.row(idx)[k].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn resident_fetch_rows_rejects_bad_buffer_and_index() {
+        let d = toy(4);
+        let mut small = vec![0.0f32; 3];
+        assert!(d.fetch_rows(&[0, 1], &mut small).is_err());
+        let mut out = vec![0.0f32; 2];
+        assert!(d.fetch_rows(&[4], &mut out).is_err());
+    }
+
+    #[test]
+    fn resident_batches_match_batch_iter() {
+        let d = toy(11);
+        let indices: Vec<u32> = (0..11).collect();
+        let plan = BatchPlan::new(&indices, 4, &mut Rng::new(5)).unwrap();
+        let (mut x1, mut p1, mut q1) = (vec![0.0; 8], vec![0.0; 4], vec![0.0; 4]);
+        let (mut x2, mut p2, mut q2) = (vec![0.0; 8], vec![0.0; 4], vec![0.0; 4]);
+        let mut direct = plan.iter(&d);
+        let mut seam = DatasetSource::batches(&d, &plan).unwrap();
+        loop {
+            let a = direct.fill_next(&mut x1, &mut p1, &mut q1);
+            let b = seam.fill_next(&mut x2, &mut p2, &mut q2).unwrap();
+            assert_eq!(a, b);
+            assert_eq!(
+                x1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                x2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(p1, p2);
+            assert_eq!(q1, q2);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+}

@@ -22,7 +22,6 @@
 //! all randomness is drawn from the caller's [`Rng`], so a run is
 //! bit-reproducible from its seed.
 
-use super::dataset::Dataset;
 use super::rng::Rng;
 use super::sampler::BatchPlan;
 
@@ -94,19 +93,48 @@ pub struct EpochSampler {
 }
 
 impl EpochSampler {
-    /// Partition `indices` (a view into `dataset`) by class.
-    pub fn new(dataset: &Dataset, indices: &[u32], batch_size: usize, mode: SamplingMode) -> Self {
-        assert!(batch_size > 0, "batch size must be positive");
+    /// Partition `indices` (a view into the dataset whose label vector
+    /// is `labels`) by class.
+    ///
+    /// Taking labels rather than a `Dataset` lets any
+    /// [`crate::data::DatasetSource`] — resident or sharded — drive the
+    /// sampler with the same bits: epoch orders depend only on labels
+    /// and the caller's RNG (DESIGN.md §13).
+    ///
+    /// Errors (structured, not a panic — all reachable from user
+    /// configuration): `batch_size == 0`, an empty index slice, an
+    /// index out of range for `labels`, or a `Rebalance` fraction
+    /// outside (0, 1).
+    pub fn new(
+        labels: &[f32],
+        indices: &[u32],
+        batch_size: usize,
+        mode: SamplingMode,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            batch_size > 0,
+            "epoch sampler: batch size must be positive (got 0)"
+        );
+        anyhow::ensure!(
+            !indices.is_empty(),
+            "epoch sampler: empty index set — nothing to train on"
+        );
         if let SamplingMode::Rebalance { pos_fraction } = mode {
-            assert!(
+            anyhow::ensure!(
                 pos_fraction > 0.0 && pos_fraction < 1.0,
-                "pos_fraction in (0,1)"
+                "epoch sampler: rebalance positive fraction must be in (0, 1), got {pos_fraction}"
             );
         }
         let mut pos = Vec::new();
         let mut neg = Vec::new();
         for &i in indices {
-            if dataset.y[i as usize] != 0.0 {
+            let label = labels.get(i as usize).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "epoch sampler: index {i} out of range for {} labels",
+                    labels.len()
+                )
+            })?;
+            if *label != 0.0 {
                 pos.push(i);
             } else {
                 neg.push(i);
@@ -116,14 +144,14 @@ impl EpochSampler {
         // Start the cursor exhausted: the first draw reshuffles, so the
         // cycle order never leaks the dataset's example order.
         let pos_cursor = pos_cycle.len();
-        Self {
+        Ok(Self {
             pos,
             neg,
             batch_size,
             mode,
             pos_cycle,
             pos_cursor,
-        }
+        })
     }
 
     pub fn n_pos(&self) -> usize {
@@ -186,7 +214,11 @@ impl EpochSampler {
             SamplingMode::Preserve => self.preserve_order(rng),
             SamplingMode::Rebalance { pos_fraction } => self.rebalance_order(pos_fraction, rng),
         };
+        // Both order builders emit at least one index per constructor
+        // invariant (non-empty index set, positive batch size), so the
+        // plan guards cannot trip here.
         BatchPlan::from_order(order, self.batch_size)
+            .expect("sampler invariants guarantee a valid plan")
     }
 
     /// Shuffle each class, then interleave proportionally (a Bresenham
@@ -248,6 +280,7 @@ impl EpochSampler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::dataset::Dataset;
 
     /// `n` examples, positive iff `i < n_pos` (feature 0 encodes `i`).
     fn toy(n: usize, n_pos: usize) -> Dataset {
@@ -297,7 +330,7 @@ mod tests {
     fn preserve_covers_every_example_once_with_even_positives() {
         let d = toy(103, 13);
         let indices: Vec<u32> = (0..103).collect();
-        let mut sampler = EpochSampler::new(&d, &indices, 10, SamplingMode::Preserve);
+        let mut sampler = EpochSampler::new(&d.y, &indices, 10, SamplingMode::Preserve).unwrap();
         assert_eq!(sampler.n_batches(), 11);
         let plan = sampler.epoch_plan(&mut Rng::new(1));
         let comps = batch_compositions(&d, &plan, 10);
@@ -319,7 +352,7 @@ mod tests {
     fn preserve_epoch_is_a_permutation() {
         let d = toy(50, 20);
         let indices: Vec<u32> = (0..50).collect();
-        let mut sampler = EpochSampler::new(&d, &indices, 7, SamplingMode::Preserve);
+        let mut sampler = EpochSampler::new(&d.y, &indices, 7, SamplingMode::Preserve).unwrap();
         let plan = sampler.epoch_plan(&mut Rng::new(2));
         let mut order = plan.order().to_vec();
         order.sort_unstable();
@@ -331,11 +364,12 @@ mod tests {
         let d = toy(1000, 10); // 1% positive
         let indices: Vec<u32> = (0..1000).collect();
         let mut sampler = EpochSampler::new(
-            &d,
+            &d.y,
             &indices,
             100,
             SamplingMode::Rebalance { pos_fraction: 0.5 },
-        );
+        )
+        .unwrap();
         // 990 negatives at 50 per batch -> 20 batches
         assert_eq!(sampler.n_batches(), 20);
         let plan = sampler.epoch_plan(&mut Rng::new(3));
@@ -354,11 +388,12 @@ mod tests {
         let d = toy(200, 8);
         let indices: Vec<u32> = (0..200).collect();
         let mut sampler = EpochSampler::new(
-            &d,
+            &d.y,
             &indices,
             32,
             SamplingMode::Rebalance { pos_fraction: 0.25 },
-        );
+        )
+        .unwrap();
         let plan = sampler.epoch_plan(&mut Rng::new(4));
         let positives: Vec<u32> = plan
             .order()
@@ -380,11 +415,12 @@ mod tests {
         let d = toy(107, 7);
         let indices: Vec<u32> = (0..107).collect();
         let mut sampler = EpochSampler::new(
-            &d,
+            &d.y,
             &indices,
             20,
             SamplingMode::Rebalance { pos_fraction: 0.2 },
-        );
+        )
+        .unwrap();
         // quota 4 pos + 16 neg; 100 negatives -> 6 full + 1 short batch
         assert_eq!(sampler.n_batches(), 7);
         let plan = sampler.epoch_plan(&mut Rng::new(5));
@@ -405,11 +441,12 @@ mod tests {
         let d = toy(73, 3); // 3 positives, 70 negatives
         let indices: Vec<u32> = (0..73).collect();
         let mut sampler = EpochSampler::new(
-            &d,
+            &d.y,
             &indices,
             8,
             SamplingMode::Rebalance { pos_fraction: 0.05 },
-        );
+        )
+        .unwrap();
         // quota 1 pos + 7 neg; 70 negatives -> 10 batches
         assert_eq!(sampler.n_batches(), 10);
         let plan = sampler.epoch_plan(&mut Rng::new(11));
@@ -427,21 +464,23 @@ mod tests {
         let all_neg = toy(30, 0);
         let indices: Vec<u32> = (0..30).collect();
         let mut s = EpochSampler::new(
-            &all_neg,
+            &all_neg.y,
             &indices,
             8,
             SamplingMode::Rebalance { pos_fraction: 0.5 },
-        );
+        )
+        .unwrap();
         assert_eq!(s.effective_mode(), SamplingMode::Preserve);
         let plan = s.epoch_plan(&mut Rng::new(6));
         assert_eq!(plan.order().len(), 30);
 
         let mut tiny_batch = EpochSampler::new(
-            &toy(10, 5),
+            &toy(10, 5).y,
             &(0..10).collect::<Vec<u32>>(),
             1,
             SamplingMode::Rebalance { pos_fraction: 0.5 },
-        );
+        )
+        .unwrap();
         assert_eq!(tiny_batch.effective_mode(), SamplingMode::Preserve);
         assert_eq!(tiny_batch.epoch_plan(&mut Rng::new(7)).order().len(), 10);
     }
@@ -454,8 +493,8 @@ mod tests {
             SamplingMode::Preserve,
             SamplingMode::Rebalance { pos_fraction: 0.5 },
         ] {
-            let mut a = EpochSampler::new(&d, &indices, 8, mode);
-            let mut b = EpochSampler::new(&d, &indices, 8, mode);
+            let mut a = EpochSampler::new(&d.y, &indices, 8, mode).unwrap();
+            let mut b = EpochSampler::new(&d.y, &indices, 8, mode).unwrap();
             let mut rng_a = Rng::new(9);
             let mut rng_b = Rng::new(9);
             let a1 = a.epoch_plan(&mut rng_a).order().to_vec();
@@ -467,15 +506,55 @@ mod tests {
     }
 
     #[test]
+    fn bad_configs_are_structured_errors_not_panics() {
+        let d = toy(10, 3);
+        let indices: Vec<u32> = (0..10).collect();
+        let err = EpochSampler::new(&d.y, &indices, 0, SamplingMode::Preserve).unwrap_err();
+        assert!(err.to_string().contains("batch size"), "{err}");
+        let err = EpochSampler::new(&d.y, &[], 4, SamplingMode::Preserve).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+        let err = EpochSampler::new(&d.y, &[10], 4, SamplingMode::Preserve).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let err = EpochSampler::new(
+            &d.y,
+            &indices,
+            4,
+            SamplingMode::Rebalance { pos_fraction: 1.0 },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("(0, 1)"), "{err}");
+    }
+
+    #[test]
+    fn batch_size_larger_than_subset_yields_one_ragged_batch() {
+        let d = toy(9, 3);
+        let indices: Vec<u32> = (0..9).collect();
+        for mode in [
+            SamplingMode::Preserve,
+            SamplingMode::Rebalance { pos_fraction: 0.5 },
+        ] {
+            let mut sampler = EpochSampler::new(&d.y, &indices, 32, mode).unwrap();
+            let plan = sampler.epoch_plan(&mut Rng::new(12));
+            assert_eq!(plan.batch_size(), 32);
+            assert_eq!(plan.n_batches(), 1);
+            let comps = batch_compositions(&d, &plan, 32);
+            assert_eq!(comps.len(), 1);
+            let (pos, neg) = comps[0];
+            assert!(pos >= 1 && pos + neg <= 32);
+        }
+    }
+
+    #[test]
     fn subset_view_respected() {
         let d = toy(100, 50);
         let indices: Vec<u32> = (40..80).collect();
         let mut sampler = EpochSampler::new(
-            &d,
+            &d.y,
             &indices,
             16,
             SamplingMode::Rebalance { pos_fraction: 0.5 },
-        );
+        )
+        .unwrap();
         assert_eq!(sampler.n_pos(), 10); // 40..50 positive
         assert_eq!(sampler.n_neg(), 30);
         let plan = sampler.epoch_plan(&mut Rng::new(10));

@@ -13,7 +13,9 @@
 //!   `logistic`, `aucm`).
 //! * **L3 (this crate, run time)** — everything that runs: native Rust
 //!   implementations of the paper's algorithms ([`losses`]), ROC/AUC
-//!   metrics ([`metrics`]), synthetic data substrates ([`data`]), a
+//!   metrics ([`metrics`]), synthetic data substrates ([`data`])
+//!   with an out-of-core shard store for n ≫ RAM ([`data::shard`],
+//!   bit-identical to resident training), a
 //!   pluggable execution layer ([`runtime`]) with a self-contained
 //!   native backend (default) and a PJRT artifact runtime (feature
 //!   `pjrt`), the training loop ([`train`]), the cross-validation

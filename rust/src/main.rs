@@ -26,7 +26,7 @@ use std::path::{Path, PathBuf};
 
 use allpairs::config::SweepConfig;
 use allpairs::coordinator::{cv, perf, timing};
-use allpairs::data::{Rng, SamplingMode, Split};
+use allpairs::data::{shard, DatasetSource, Rng, SamplingMode, Split};
 use allpairs::losses::LossSpec;
 use allpairs::report::figures::{ascii_loglog, write_csv};
 use allpairs::runtime::BackendSpec;
@@ -72,6 +72,18 @@ COMMANDS
       --save-checkpoint FILE
                         save the best (or final) state as a binary
                         checkpoint for `serve`
+      --shards DIR      stream features out-of-core from a shard store
+                        built by `allpairs shard` (bit-identical to the
+                        resident run on the same logical data)
+  shard             build or validate an out-of-core shard store
+      --dir DIR         store directory to build (required unless
+                        --validate)
+      --dataset D --imratio R --seed S --max-train N
+                        same data pipeline as `train` (a store built
+                        with seed S matches `train --seed S` exactly)
+      --shards K        number of shard files       [4]
+      --validate DIR    fully re-verify an existing store (manifest,
+                        per-shard CRC, label counts) and exit
   serve             online scoring service over a trained checkpoint
       --checkpoint FILE checkpoint to serve (required; arch inferred)
       --host H          bind address                     [127.0.0.1]
@@ -96,6 +108,12 @@ COMMANDS
       --dim D           features per row        [32]
       --sort-sizes LIST competitive sort-table n (0 to skip)
                         [100000,1000000,10000000]
+      --shard-sizes LIST
+                        out-of-core shard store n (0 to skip)
+                        [100000,1000000]
+      --huge            push the sort table to n = 1e8, streamed from a
+                        temporary shard store (needs ~3 GB RAM + ~1 GB
+                        disk; ignores the quick budget's size caps)
       (ALLPAIRS_BENCH_QUICK=1 shrinks the iteration budget, not sizes)
   report            re-aggregate a saved results file
       --results FILE    sweep_results.jsonl path
@@ -126,6 +144,7 @@ fn run() -> allpairs::Result<()> {
         Some("timing") => cmd_timing(&args, &out),
         Some("sweep") => cmd_sweep(&args, &artifacts, &out),
         Some("train") => cmd_train(&args, &artifacts),
+        Some("shard") => cmd_shard(&args),
         Some("serve") => cmd_serve(&args),
         Some("bench-serve") => cmd_bench_serve(&args),
         Some("bench") => cmd_bench(&args),
@@ -287,7 +306,7 @@ fn cmd_sweep(args: &Args, artifacts: &Path, out: &Path) -> allpairs::Result<()> 
 fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
     args.expect_known(&[
         "artifacts", "out", "backend", "dataset", "loss", "model", "batch", "lr", "imratio",
-        "epochs", "seed", "max-train", "patience", "sampling", "save-checkpoint",
+        "epochs", "seed", "max-train", "patience", "sampling", "save-checkpoint", "shards",
     ])?;
     let dataset = args.get_str("dataset", "synth-cifar");
     // Parsed (and validated) before any data is generated: a typo'd
@@ -310,13 +329,37 @@ fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
     };
     let data = cv::build_datasets(&cfg)?;
     let pool = &data[&dataset];
-    let mut rng = Rng::new(seed as u64 + 1);
-    let train = pool.train_pool.imbalance(imratio, &mut rng);
-    let split = Split::stratified(&train.y, 0.2, &mut rng);
+    // Forked RNG streams, drawn unconditionally in a fixed order so the
+    // resident and --shards paths see identical split/epoch randomness
+    // (`allpairs shard` consumes the same fork(1) when imbalancing).
+    let mut data_rng = Rng::new(seed as u64 + 1);
+    let mut imbalance_rng = data_rng.fork(1);
+    let mut split_rng = data_rng.fork(2);
+    let mut epoch_rng = data_rng.fork(3);
+    let resident;
+    let sharded;
+    let source: &dyn DatasetSource = match args.get_opt("shards") {
+        Some(dir) => {
+            let store = shard::ShardedDataset::open(Path::new(&dir))?;
+            eprintln!(
+                "shards: streaming {} rows from {} shard file(s) in {dir}",
+                store.len(),
+                store.n_shards()
+            );
+            sharded = store;
+            &sharded
+        }
+        None => {
+            resident = pool.train_pool.imbalance(imratio, &mut imbalance_rng);
+            &resident
+        }
+    };
+    let split = Split::stratified(source.labels(), 0.2, &mut split_rng);
+    let n_pos = source.labels().iter().filter(|&&v| v != 0.0).count();
     eprintln!(
         "train: {} examples ({:.4} positive), subtrain {} / validation {}",
-        train.len(),
-        train.pos_fraction(),
+        source.len(),
+        n_pos as f64 / source.len().max(1) as f64,
         split.subtrain.len(),
         split.validation.len()
     );
@@ -331,11 +374,11 @@ fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
         seed,
     };
     let outcome = trainer.fit_stream(
-        &train,
+        source,
         &split.subtrain,
         &split.validation,
         &fit_cfg,
-        &mut rng,
+        &mut epoch_rng,
     )?;
     for r in &outcome.history.records {
         println!(
@@ -371,6 +414,51 @@ fn cmd_train(args: &Args, artifacts: &Path) -> allpairs::Result<()> {
         checkpoint::save(&path, &trainer.state_to_host()?)?;
         println!("saved checkpoint {path}");
     }
+    Ok(())
+}
+
+fn cmd_shard(args: &Args) -> allpairs::Result<()> {
+    args.expect_known(&[
+        "artifacts", "out", "backend", "dir", "dataset", "imratio", "seed", "max-train",
+        "shards", "validate",
+    ])?;
+    if let Some(dir) = args.get_opt("validate") {
+        let check = shard::validate_store(Path::new(&dir))?;
+        println!(
+            "store OK: {} rows in {} shard(s), {} positive / {} negative",
+            check.n_rows, check.n_shards, check.n_pos, check.n_neg
+        );
+        return Ok(());
+    }
+    let dir = args
+        .get_opt("dir")
+        .ok_or_else(|| anyhow::anyhow!("--dir DIR required (or --validate DIR)"))?;
+    let dataset = args.get_str("dataset", "synth-cifar");
+    let imratio: f64 = args.get("imratio", 0.1)?;
+    let seed: u32 = args.get("seed", 0)?;
+    let max_train: Option<usize> = args.get_opt("max-train").map(|v| v.parse()).transpose()?;
+    let n_shards: usize = args.get("shards", 4)?;
+
+    let cfg = SweepConfig {
+        datasets: vec![dataset.clone()],
+        max_train,
+        ..Default::default()
+    };
+    let data = cv::build_datasets(&cfg)?;
+    let pool = &data[&dataset];
+    // Same forked stream `train` uses for its resident imbalance, so
+    // `shard --seed S` + `train --shards --seed S` reproduce
+    // `train --seed S` bit-for-bit.
+    let mut data_rng = Rng::new(seed as u64 + 1);
+    let train = pool.train_pool.imbalance(imratio, &mut data_rng.fork(1));
+    let manifest = shard::write_store(Path::new(&dir), &train, n_shards)?;
+    println!(
+        "wrote {} rows ({} positive / {} negative) as {} shard(s) in {dir}",
+        manifest.n_rows,
+        manifest.n_pos(),
+        manifest.n_neg(),
+        manifest.shards.len()
+    );
     Ok(())
 }
 
@@ -484,6 +572,8 @@ fn cmd_bench(args: &Args) -> allpairs::Result<()> {
         "threads",
         "dim",
         "sort-sizes",
+        "shard-sizes",
+        "huge",
     ])?;
     let parse_list = |name: &str, default: &[usize]| -> allpairs::Result<Vec<usize>> {
         match args.get_opt(name) {
@@ -498,14 +588,19 @@ fn cmd_bench(args: &Args) -> allpairs::Result<()> {
                 .collect(),
         }
     };
-    // `--sort-sizes 0` skips the sort suite entirely (zeros are dropped).
+    // `--sort-sizes 0` skips the sort suite entirely (zeros are dropped);
+    // `--shard-sizes 0` likewise skips the out-of-core suite.
     let mut sort_sizes = parse_list("sort-sizes", &[100_000, 1_000_000, 10_000_000])?;
     sort_sizes.retain(|&n| n > 0);
+    let mut shard_sizes = parse_list("shard-sizes", &[100_000, 1_000_000])?;
+    shard_sizes.retain(|&n| n > 0);
     let cfg = perf::PerfConfig {
         sizes: parse_list("sizes", &[10_000, 100_000, 1_000_000])?,
         threads: parse_list("threads", &[1, 8])?,
         dim: args.get("dim", 32)?,
         sort_sizes,
+        shard_sizes,
+        huge_sort: args.flag("huge"),
     };
     anyhow::ensure!(
         !cfg.sizes.is_empty() && !cfg.threads.is_empty() && cfg.dim > 0,
@@ -519,11 +614,13 @@ fn cmd_bench(args: &Args) -> allpairs::Result<()> {
     );
     let quick = allpairs::util::bench::Bench::quick_from_env();
     eprintln!(
-        "bench: train-step/loss/AUC at n {:?}, threads {:?}, dim {}, sort n {:?}{} ...",
+        "bench: train-step/loss/AUC at n {:?}, threads {:?}, dim {}, sort n {:?}, shard n {:?}{}{} ...",
         cfg.sizes,
         cfg.threads,
         cfg.dim,
         cfg.sort_sizes,
+        cfg.shard_sizes,
+        if cfg.huge_sort { ", huge sort n=1e8" } else { "" },
         if quick { " (quick mode)" } else { "" }
     );
     let records = perf::run(&cfg)?;

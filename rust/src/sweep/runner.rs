@@ -13,6 +13,11 @@
 //!    tracking, early stopping after `job.patience` stale epochs;
 //! 4. restore the best checkpoint and evaluate **test** AUC on the
 //!    balanced test set.
+//!
+//! The trainer consumes data through the [`crate::data::DatasetSource`]
+//! seam, so this protocol runs unchanged over an out-of-core
+//! [`crate::data::ShardedDataset`] (DESIGN.md §13) — `&Dataset` here is
+//! just the resident implementation of that seam.
 
 use std::sync::Arc;
 

@@ -24,7 +24,7 @@
 //! from its seed at *any* thread count — the worker count is a pure
 //! speed knob, never a result knob (`tests/proptest_engine.rs`).
 
-use crate::data::{BatchPlan, Dataset, EpochSampler, Rng, SamplingMode};
+use crate::data::{BatchPlan, DatasetSource, EpochSampler, Rng, SamplingMode};
 use crate::losses::LossSpec;
 use crate::metrics::auc;
 use crate::runtime::{Backend, HostTensor, ModelExecutor};
@@ -137,17 +137,19 @@ impl<'b> Trainer<'b> {
         self.exec.init(seed)
     }
 
-    /// One pass over a prepared epoch plan.
+    /// One pass over a prepared epoch plan.  `source` may be resident
+    /// or out-of-core ([`DatasetSource`]); the loss/gradient bits are
+    /// identical either way (DESIGN.md §13).
     pub fn train_plan(
         &mut self,
-        dataset: &Dataset,
+        source: &dyn DatasetSource,
         plan: &BatchPlan,
         lr: f32,
     ) -> crate::Result<EpochStats> {
         anyhow::ensure!(
-            dataset.row_len() == self.row_len,
+            source.row_len() == self.row_len,
             "dataset row length {} != executor {}",
-            dataset.row_len(),
+            source.row_len(),
             self.row_len
         );
         anyhow::ensure!(
@@ -156,12 +158,12 @@ impl<'b> Trainer<'b> {
             plan.batch_size(),
             self.batch
         );
-        let mut iter = plan.iter(dataset);
+        let mut iter = source.batches(plan)?;
         let mut total_loss = 0.0;
         let mut n_batches = 0;
         let mut n_examples = 0;
         while let Some(count) =
-            iter.fill_next(&mut self.buf_x, &mut self.buf_pos, &mut self.buf_neg)
+            iter.fill_next(&mut self.buf_x, &mut self.buf_pos, &mut self.buf_neg)?
         {
             total_loss += self
                 .exec
@@ -180,43 +182,51 @@ impl<'b> Trainer<'b> {
         })
     }
 
-    /// One plainly-shuffled epoch over `indices` of `dataset`.
+    /// One plainly-shuffled epoch over `indices` of `source`.
     pub fn train_epoch(
         &mut self,
-        dataset: &Dataset,
+        source: &dyn DatasetSource,
         indices: &[u32],
         lr: f32,
         rng: &mut Rng,
     ) -> crate::Result<EpochStats> {
-        let plan = BatchPlan::new(indices, self.batch, rng);
-        self.train_plan(dataset, &plan, lr)
+        let plan = BatchPlan::new(indices, self.batch, rng)?;
+        self.train_plan(source, &plan, lr)
     }
 
-    /// Predict scores for `indices` of `dataset`.
+    /// Predict scores for `indices` of `source`.
     ///
     /// The gather is chunked so host memory stays bounded regardless of
     /// the evaluation-set size (the executor handles any further
-    /// chunking/padding its substrate needs).
-    pub fn predict(&mut self, dataset: &Dataset, indices: &[u32]) -> crate::Result<Vec<f32>> {
+    /// chunking/padding its substrate needs); an out-of-core source
+    /// reads each chunk straight from its shards.
+    pub fn predict(
+        &mut self,
+        source: &dyn DatasetSource,
+        indices: &[u32],
+    ) -> crate::Result<Vec<f32>> {
         const GATHER_ROWS: usize = 1024;
-        let row = dataset.row_len();
+        let row = source.row_len();
         anyhow::ensure!(row == self.row_len, "row length mismatch");
         let mut scores = Vec::with_capacity(indices.len());
-        let mut x = Vec::with_capacity(indices.len().min(GATHER_ROWS) * row);
+        let mut x = vec![0.0f32; indices.len().min(GATHER_ROWS) * row];
         for chunk in indices.chunks(GATHER_ROWS) {
-            x.clear();
-            for &idx in chunk {
-                x.extend_from_slice(dataset.row(idx as usize));
-            }
-            scores.extend(self.exec.predict(&x, chunk.len())?);
+            let buf = &mut x[..chunk.len() * row];
+            source.fetch_rows(chunk, buf)?;
+            scores.extend(self.exec.predict(buf, chunk.len())?);
         }
         Ok(scores)
     }
 
-    /// AUC of predictions over `indices` against the dataset labels.
-    pub fn eval_auc(&mut self, dataset: &Dataset, indices: &[u32]) -> crate::Result<Option<f64>> {
-        let scores = self.predict(dataset, indices)?;
-        let labels: Vec<f32> = indices.iter().map(|&i| dataset.y[i as usize]).collect();
+    /// AUC of predictions over `indices` against the source labels.
+    pub fn eval_auc(
+        &mut self,
+        source: &dyn DatasetSource,
+        indices: &[u32],
+    ) -> crate::Result<Option<f64>> {
+        let scores = self.predict(source, indices)?;
+        let all = source.labels();
+        let labels: Vec<f32> = indices.iter().map(|&i| all[i as usize]).collect();
         Ok(auc(&scores, &labels))
     }
 
@@ -229,20 +239,20 @@ impl<'b> Trainer<'b> {
     /// when evaluating test metrics (the paper's protocol).
     pub fn fit_stream(
         &mut self,
-        dataset: &Dataset,
+        source: &dyn DatasetSource,
         subtrain: &[u32],
         validation: &[u32],
         cfg: &FitConfig,
         rng: &mut Rng,
     ) -> crate::Result<FitOutcome> {
         anyhow::ensure!(
-            dataset.row_len() == self.row_len,
+            source.row_len() == self.row_len,
             "dataset row length {} != executor {}",
-            dataset.row_len(),
+            source.row_len(),
             self.row_len
         );
         self.init(cfg.seed)?;
-        let mut sampler = EpochSampler::new(dataset, subtrain, self.batch, cfg.sampling);
+        let mut sampler = EpochSampler::new(source.labels(), subtrain, self.batch, cfg.sampling)?;
         let mut history = History::new();
         let mut best: Option<BestState> = None;
         let mut stopped_early = false;
@@ -250,7 +260,7 @@ impl<'b> Trainer<'b> {
         for epoch in 0..cfg.epochs {
             let t0 = std::time::Instant::now();
             let plan = sampler.epoch_plan(rng);
-            let stats = self.train_plan(dataset, &plan, cfg.lr)?;
+            let stats = self.train_plan(source, &plan, cfg.lr)?;
             if !stats.mean_loss.is_finite() {
                 diverged = true;
                 history.push(EpochRecord {
@@ -264,7 +274,7 @@ impl<'b> Trainer<'b> {
             let val_auc = if validation.is_empty() {
                 None
             } else {
-                self.eval_auc(dataset, validation)?
+                self.eval_auc(source, validation)?
             };
             if let Some(v) = val_auc {
                 let improved = best.as_ref().map(|b| v > b.val_auc).unwrap_or(true);
@@ -303,7 +313,7 @@ impl<'b> Trainer<'b> {
     #[allow(clippy::too_many_arguments)]
     pub fn fit(
         &mut self,
-        dataset: &Dataset,
+        source: &dyn DatasetSource,
         subtrain: &[u32],
         validation: &[u32],
         lr: f32,
@@ -319,7 +329,7 @@ impl<'b> Trainer<'b> {
             seed,
         };
         Ok(self
-            .fit_stream(dataset, subtrain, validation, &cfg, rng)?
+            .fit_stream(source, subtrain, validation, &cfg, rng)?
             .history)
     }
 
@@ -337,6 +347,7 @@ impl<'b> Trainer<'b> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::Dataset;
     use crate::runtime::{BackendSpec, NativeSpec};
 
     fn hinge() -> LossSpec {

@@ -26,11 +26,44 @@ static TABLE: [u32; 256] = make_table();
 
 /// CRC-32 of `data` (init `0xFFFFFFFF`, reflected, final xor).
 pub fn crc32(data: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in data {
-        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    let mut c = Crc32::new();
+    c.update(data);
+    c.finish()
+}
+
+/// Incremental CRC-32 with the same parameters as [`crc32`]: feeding a
+/// byte stream chunk by chunk through [`Crc32::update`] yields exactly
+/// the one-shot digest of the concatenation.
+///
+/// Needed by the shard reader (`data/shard`), which must verify the
+/// footer of multi-gigabyte files without holding them in memory.
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Self { state: 0xFFFF_FFFF }
     }
-    c ^ 0xFFFF_FFFF
+
+    pub fn update(&mut self, data: &[u8]) {
+        let mut c = self.state;
+        for &b in data {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 #[cfg(test)]
@@ -43,6 +76,23 @@ mod tests {
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
         assert_eq!(crc32(b"allpairs"), crc32(b"allpairs"));
+    }
+
+    #[test]
+    fn incremental_matches_one_shot_at_every_split() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let want = crc32(&data);
+        for split in [0, 1, 7, 499, 999, 1000] {
+            let mut c = Crc32::new();
+            c.update(&data[..split]);
+            c.update(&data[split..]);
+            assert_eq!(c.finish(), want, "split at {split}");
+        }
+        let mut byte_at_a_time = Crc32::new();
+        for b in &data {
+            byte_at_a_time.update(std::slice::from_ref(b));
+        }
+        assert_eq!(byte_at_a_time.finish(), want);
     }
 
     #[test]

@@ -1,0 +1,9 @@
+// Regression fixture: the shard-header bug pattern.  ShardFile header
+// fields (n_rows, hw, channels) are untrusted little-endian bytes off
+// disk; multiplying bare-cast values can wrap the declared body size
+// past the length check that follows (see data/shard/format.rs).
+pub fn body_len(header: &[u8]) -> usize {
+    let n_rows = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+    let row_len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    n_rows * row_len * 4
+}

@@ -168,6 +168,23 @@ fn regression_unchecked_header_is_caught() {
 }
 
 #[test]
+fn regression_shard_header_cast_is_caught() {
+    // The shard-format analogue of the PR 7 checkpoint-header bug:
+    // bare casts on header fields read straight off disk.  The rule is
+    // path-scoped over src/data/shard/, so the same fixture under a
+    // neighbouring data/ path must stay silent.
+    let got = lint_fixture("regression_shard_header_cast.rs", "src/data/shard/format.rs");
+    assert_eq!(
+        rules_of(&got),
+        vec!["unchecked-cast-in-parse", "unchecked-cast-in-parse"]
+    );
+    assert_eq!((got[0].line, got[0].col), (6, 70));
+    assert_eq!((got[1].line, got[1].col), (7, 72));
+    let out = lint_fixture("regression_shard_header_cast.rs", "src/data/stream.rs");
+    assert!(out.is_empty(), "out of scope, must not fire: {out:?}");
+}
+
+#[test]
 fn regression_raw_report_write_is_caught() {
     let got = lint_fixture("regression_raw_report_write.rs", "src/report/summary.rs");
     assert_eq!(rules_of(&got), vec!["raw-durable-write"]);

@@ -1,0 +1,261 @@
+//! Out-of-core shard store (DESIGN.md §13): format round-trip
+//! properties across shapes, exhaustive corruption rejection, and the
+//! headline differential — training from a shard store is
+//! bit-identical to resident training at every thread count and every
+//! shard count, including counts that do not divide n.
+
+use std::path::{Path, PathBuf};
+
+use allpairs::data::dataset::Dataset;
+use allpairs::data::shard::{validate_store, write_store, ShardFile, ShardedDataset};
+use allpairs::data::{features, DatasetSource, FeatureSpec, Rng, SamplingMode, Split};
+use allpairs::losses::LossSpec;
+use allpairs::runtime::{BackendSpec, HostTensor, NativeSpec};
+use allpairs::train::{FitConfig, FitOutcome, Trainer};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("allpairs_shard_it_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn random_dataset(n: usize, hw: usize, channels: usize, seed: u64) -> Dataset {
+    let row = if hw == 0 { channels } else { hw * hw * channels };
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..n * row).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..n)
+        .map(|_| if rng.uniform() < 0.3 { 1.0 } else { 0.0 })
+        .collect();
+    Dataset::new(x, y, hw, channels)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+// --- round-trip properties ---------------------------------------------
+
+#[test]
+fn store_round_trip_is_bit_exact_across_shapes() {
+    // Flat feature vectors (hw = 0) and image-shaped rows (hw != 0),
+    // shard counts that do and do not divide n, k == n singleton
+    // shards, and a single-shard store.
+    for (case, (n, hw, channels, k)) in [
+        (23usize, 0usize, 4usize, 3usize),
+        (16, 2, 3, 5),
+        (7, 0, 2, 7),
+        (101, 0, 3, 7),
+        (12, 0, 5, 1),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let d = random_dataset(n, hw, channels, 0xF00D + case as u64);
+        let dir = tmp(&format!("roundtrip_{case}"));
+        let manifest = write_store(&dir, &d, k).unwrap();
+        assert_eq!(manifest.n_rows, n);
+        assert_eq!(manifest.shards.len(), k);
+        assert_eq!(manifest.n_pos(), d.n_pos());
+
+        let s = ShardedDataset::open(&dir).unwrap();
+        assert_eq!((s.len(), s.row_len()), (d.len(), d.row_len()));
+        assert_eq!((s.hw(), s.channels()), (hw, channels));
+        assert_eq!(bits(s.labels()), bits(&d.y), "labels, case {case}");
+
+        // Every row, fetched in one call: bit-exact feature recovery.
+        let indices: Vec<u32> = (0..n as u32).collect();
+        let mut got = vec![0.0f32; n * d.row_len()];
+        s.fetch_rows(&indices, &mut got).unwrap();
+        assert_eq!(bits(&got), bits(&d.x), "features, case {case}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+// --- corruption rejection ----------------------------------------------
+
+#[test]
+fn every_flipped_byte_is_rejected_before_the_header_is_trusted() {
+    // Flip each byte of a shard file in turn — header, body and footer
+    // alike — and require both the direct open and the store validation
+    // to fail.  The CRC streams over header + body *before* any header
+    // field is parsed, so even a flip that fabricates a plausible
+    // n_rows never reaches the allocation it tries to inflate.
+    let d = random_dataset(5, 0, 3, 0xC0FFEE);
+    let dir = tmp("corruption");
+    write_store(&dir, &d, 1).unwrap();
+    let victim = dir.join("shard-00000.bin");
+    let pristine = std::fs::read(&victim).unwrap();
+    // 20-byte header + 5×3 features + 5 labels (4 bytes each) + CRC
+    assert_eq!(pristine.len(), 20 + 5 * 3 * 4 + 5 * 4 + 4);
+
+    for i in 0..pristine.len() {
+        let mut doctored = pristine.clone();
+        doctored[i] ^= 0x01;
+        std::fs::write(&victim, &doctored).unwrap();
+        assert!(
+            ShardFile::open(&victim).is_err(),
+            "byte {i}: flipped shard must not open"
+        );
+        assert!(
+            validate_store(&dir).is_err(),
+            "byte {i}: flipped store must not validate"
+        );
+    }
+
+    // Restored, the store loads again and the data is intact.
+    std::fs::write(&victim, &pristine).unwrap();
+    validate_store(&dir).unwrap();
+    let s = ShardedDataset::open(&dir).unwrap();
+    let indices: Vec<u32> = (0..5).collect();
+    let mut got = vec![0.0f32; 15];
+    s.fetch_rows(&indices, &mut got).unwrap();
+    assert_eq!(bits(&got), bits(&d.x));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// --- the headline differential -----------------------------------------
+
+fn fit_once(
+    source: &dyn DatasetSource,
+    dim: usize,
+    threads: usize,
+    sampling: SamplingMode,
+) -> (FitOutcome, Vec<HostTensor>) {
+    // Split and epoch RNG are seeded identically per call; only the
+    // data source (and the thread count) varies between runs.
+    let split = Split::stratified(source.labels(), 0.2, &mut Rng::new(5));
+    let backend = BackendSpec::Native(NativeSpec {
+        input_dim: dim,
+        hidden: 8,
+        threads,
+        ..NativeSpec::default()
+    })
+    .connect()
+    .unwrap();
+    let mut trainer = Trainer::new(backend.as_ref(), "mlp", &LossSpec::hinge(), 32).unwrap();
+    let cfg = FitConfig {
+        lr: 0.05,
+        epochs: 3,
+        patience: None,
+        sampling,
+        seed: 3,
+    };
+    let outcome = trainer
+        .fit_stream(
+            source,
+            &split.subtrain,
+            &split.validation,
+            &cfg,
+            &mut Rng::new(99),
+        )
+        .unwrap();
+    let state = trainer.state_to_host().unwrap();
+    (outcome, state)
+}
+
+fn assert_identical(
+    (a, sa): &(FitOutcome, Vec<HostTensor>),
+    (b, sb): &(FitOutcome, Vec<HostTensor>),
+    label: &str,
+) {
+    assert_eq!(a.history.len(), b.history.len(), "{label}: epoch count");
+    for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
+        assert_eq!(ra.epoch, rb.epoch, "{label}");
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{label}: epoch {} train loss",
+            ra.epoch
+        );
+        assert_eq!(
+            ra.val_auc.map(f64::to_bits),
+            rb.val_auc.map(f64::to_bits),
+            "{label}: epoch {} val AUC",
+            ra.epoch
+        );
+    }
+    match (&a.best, &b.best) {
+        (Some(ba), Some(bb)) => {
+            assert_eq!(ba.epoch, bb.epoch, "{label}: best epoch");
+            assert_eq!(
+                ba.val_auc.to_bits(),
+                bb.val_auc.to_bits(),
+                "{label}: best val AUC"
+            );
+            assert_eq!(ba.state, bb.state, "{label}: best state tensors");
+        }
+        (None, None) => {}
+        _ => panic!("{label}: one run has a best checkpoint, the other does not"),
+    }
+    assert_eq!(sa, sb, "{label}: final state tensors");
+}
+
+#[test]
+fn sharded_training_is_bit_identical_to_resident() {
+    // n = 101 is deliberately coprime with every shard count tested, so
+    // both the ragged final shard and ragged final batches are in play.
+    let spec = FeatureSpec {
+        pos_frac: 0.3,
+        ..Default::default()
+    };
+    let d = features::generate(&spec, 101, &mut Rng::new(11));
+    assert_eq!(d.len(), 101);
+    let baseline = fit_once(&d, spec.dim, 1, SamplingMode::Preserve);
+    assert!(!baseline.0.history.records.is_empty());
+
+    for threads in [1usize, 8] {
+        // Thread count is a pure speed knob on resident data too.
+        let resident = fit_once(&d, spec.dim, threads, SamplingMode::Preserve);
+        assert_identical(&resident, &baseline, &format!("resident t{threads}"));
+
+        for n_shards in [1usize, 3, 7] {
+            let dir = tmp(&format!("diff_t{threads}_k{n_shards}"));
+            write_store(&dir, &d, n_shards).unwrap();
+            let sharded_source = ShardedDataset::open(&dir).unwrap();
+            let sharded = fit_once(&sharded_source, spec.dim, threads, SamplingMode::Preserve);
+            assert_identical(
+                &sharded,
+                &baseline,
+                &format!("sharded t{threads} k{n_shards}"),
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+#[test]
+fn sharded_training_matches_resident_under_rebalance() {
+    // The oversampling path stresses repeated indices inside one epoch
+    // order (the same row fetched from disk more than once per epoch).
+    let spec = FeatureSpec {
+        pos_frac: 0.3,
+        ..Default::default()
+    };
+    let d = features::generate(&spec, 101, &mut Rng::new(12));
+    let mode = SamplingMode::Rebalance { pos_fraction: 0.5 };
+    let resident = fit_once(&d, spec.dim, 1, mode);
+
+    let dir = tmp("diff_rebalance");
+    write_store(&dir, &d, 3).unwrap();
+    let source = ShardedDataset::open(&dir).unwrap();
+    let sharded = fit_once(&source, spec.dim, 1, mode);
+    assert_identical(&sharded, &resident, "rebalance k3");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn validate_store_reports_the_manifest_totals() {
+    let d = random_dataset(31, 0, 2, 0xBEEF);
+    let dir = tmp("totals");
+    write_store(&dir, &d, 4).unwrap();
+    let check = validate_store(&dir).unwrap();
+    assert_eq!(check.n_rows, 31);
+    assert_eq!(check.n_shards, 4);
+    assert_eq!(check.n_pos, d.n_pos());
+    assert_eq!(check.n_pos + check.n_neg, 31);
+    // A store is self-describing: no manifest, no store.
+    std::fs::remove_file(dir.join("manifest.json")).unwrap();
+    assert!(validate_store(&dir).is_err());
+    assert!(ShardedDataset::open(Path::new(&dir)).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
